@@ -1,0 +1,63 @@
+//! Quickstart: schedule and co-execute one GEMM on a simulated testbed.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the 60-second tour: build the simulated `mach2` testbed
+//! (AMD EPYC 7413 + RTX 3090 + RTX 2080 Ti from the paper's Table 1),
+//! run the Predict phase (profiling microbenchmarks), POAS-plan the
+//! paper's i1 input (30K×30K×30K), execute it co-scheduled, and compare
+//! with running the same workload on the XPU alone.
+
+use poas::baselines;
+use poas::config::presets;
+use poas::coordinator::Pipeline;
+use poas::report::pct;
+use poas::workload::GemmSize;
+
+fn main() {
+    // 1. A simulated testbed (the paper's mach2). Seed = "independent
+    //    run" identity; the paper averages 3 of these.
+    let machine = presets::mach2();
+    println!("testbed: {}", machine.name);
+
+    // 2. Predict: profile the machine (square-GEMM sweep + memory
+    //    microbenchmark, §4.1.2) and fit the linear performance model.
+    let mut pipeline = Pipeline::for_simulated_machine(&machine, 42);
+    for d in &pipeline.model.devices {
+        println!(
+            "  profiled {:>10}: {:6.2} Tops, bw {:5.1} GB/s",
+            d.name,
+            d.rate_tops(),
+            d.bw / 1e9
+        );
+    }
+
+    // 3. Optimize + Adapt + Schedule: the paper's i1 input, 50 reps.
+    let size = GemmSize::new(30_000, 30_000, 30_000);
+    let reps = 50;
+    let result = pipeline.run_sim(size, reps);
+
+    println!("\nPOAS split for {size}:");
+    for (i, share) in result.plan.shares().iter().enumerate() {
+        println!(
+            "  {:>10}: {} ({} rows)",
+            pipeline.model.devices[i].name,
+            pct(*share),
+            result.plan.assignments[i].rows
+        );
+    }
+    println!(
+        "\nco-executed makespan: {:.2}s ({} reps)",
+        result.makespan, reps
+    );
+
+    // 4. Compare against the fastest single device (Table 7's headline).
+    let xpu_alone = baselines::standalone(&mut pipeline.sim, 2, size, reps).makespan;
+    println!("XPU standalone:       {xpu_alone:.2}s");
+    println!(
+        "speedup from ALP co-execution: {:.2}x",
+        xpu_alone / result.makespan
+    );
+}

@@ -1,0 +1,120 @@
+"""AOT pipeline: lower the L2 tile functions to HLO-text artifacts.
+
+Run once at build time (`make artifacts`); Python never appears on the
+request path. For every (device-class function, square tile size) in the
+menu this emits one shape-specialized HLO text file plus a manifest the
+Rust runtime parses to discover the artifact menu.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+The square-tile menu is not an arbitrary choice: the paper's Adapt phase
+(§4.3) decomposes every device's share into *square* sub-matrix products
+because profiling only measured square GEMMs. Our artifact menu is the
+exact same contract — the set of square shapes both profiling and real
+workloads run — so the Adapt decomposition maps 1:1 onto compiled
+executables.
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+if __package__ in (None, ""):  # allow `python compile/aot.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from compile import model  # type: ignore
+else:
+    from . import model
+
+# Square tile sizes compiled ahead of time. 128/256 are MXU-aligned
+# production tiles; 64 exists for small edge workloads and fast tests.
+TILE_SIZES = (64, 128, 256)
+
+MANIFEST_NAME = "manifest.txt"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_name(fn_name: str, t: int) -> str:
+    return f"gemm_{fn_name}_{t}"
+
+
+def inputs_fingerprint() -> str:
+    """Hash of the python sources that feed the artifacts (staleness check)."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for rel in ("aot.py", "model.py", os.path.join("kernels", "gemm.py"),
+                os.path.join("kernels", "ref.py")):
+        with open(os.path.join(base, rel), "rb") as f:
+            h.update(f.read())
+    h.update(repr(TILE_SIZES).encode())
+    return h.hexdigest()[:16]
+
+
+def build(out_dir: str, tile_sizes=TILE_SIZES, force: bool = False) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    fp = inputs_fingerprint()
+    fp_path = os.path.join(out_dir, "fingerprint.txt")
+    manifest_path = os.path.join(out_dir, MANIFEST_NAME)
+    if (not force and os.path.exists(fp_path) and os.path.exists(manifest_path)
+            and open(fp_path).read().strip() == fp):
+        print(f"artifacts up to date (fingerprint {fp}); nothing to do")
+        return []
+
+    rows = []
+    for fn_name, (fn, n_in) in model.MODEL_FNS.items():
+        for t in tile_sizes:
+            name = artifact_name(fn_name, t)
+            specs = model.input_specs(fn_name, t, t, t)
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            # manifest row: name kind m n k n_inputs file
+            rows.append((name, fn_name, t, t, t, n_in, fname))
+            print(f"  lowered {name}: {len(text)} chars")
+
+    with open(manifest_path, "w") as f:
+        f.write("# name kind m n k n_inputs file\n")
+        for r in rows:
+            f.write(" ".join(str(x) for x in r) + "\n")
+    with open(fp_path, "w") as f:
+        f.write(fp + "\n")
+    print(f"wrote {len(rows)} artifacts + manifest to {out_dir}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--tiles", default=",".join(map(str, TILE_SIZES)),
+                    help="comma-separated square tile sizes")
+    ap.add_argument("--force", action="store_true",
+                    help="rebuild even if fingerprint matches")
+    args = ap.parse_args()
+    tiles = tuple(int(t) for t in args.tiles.split(","))
+    # --out may name the manifest file (legacy Makefile contract) or a dir.
+    out = args.out
+    if out.endswith(".hlo.txt"):
+        out = os.path.dirname(out)
+    build(out, tiles, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""L1 — Pallas tiled GEMM kernels.
+
+The paper's compute hot-spot is the GEMM each device executes on its share
+of the work. The paper drives cuBLAS on CUDA/tensor cores; here the same
+hot-spot is expressed as a Pallas kernel tiled for the TPU memory
+hierarchy (see DESIGN.md §Hardware-Adaptation):
+
+  * the grid walks (m/bm, n/bn, k/bk) output-stationary, k innermost;
+  * A/B blocks are staged HBM→VMEM by the BlockSpec index maps (the role
+    threadblock shared-memory staging plays in the paper's CUDA mental
+    model);
+  * the inner `jnp.dot` maps onto the MXU systolic array; the mixed
+    precision variant feeds it bfloat16 operands with f32 accumulation
+    (the MXU-native analogue of tensor-core HMMA);
+  * a VMEM scratch accumulator keeps the running C block on-chip across
+    the k steps, so each C block is written to HBM exactly once.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+the Rust runtime executes. Correctness is pinned to ``ref.py`` by
+``python/tests``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# Default block shape. 128 matches both the MXU systolic array dimension
+# (128x128) and the lane width (128), so full blocks saturate the MXU.
+DEFAULT_BLOCK = 128
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= `target`.
+
+    Pallas interpret mode (and real Mosaic) is simplest and fastest when
+    the grid tiles the array exactly; rather than masking partial blocks
+    we shrink the block to a divisor. The AOT artifact menu only contains
+    power-of-two sizes, so in production this always returns `target`.
+    """
+    if dim <= 0:
+        raise ValueError(f"dimension must be positive, got {dim}")
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    """Output-stationary tiled matmul body.
+
+    Grid = (m/bm, n/bn, k/bk) with k the innermost (fastest varying)
+    dimension. The accumulator lives in VMEM scratch for the duration of
+    one (i, j) output block.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # One MXU pass: (bm, bk) x (bk, bn) -> (bm, bn), f32 accumulate.
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _matmul_acc_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, k_steps: int):
+    """Like `_matmul_kernel` but seeds the accumulator with C_in."""
+    @pl.when(pl.program_id(2) == 0)
+    def _seed_acc():
+        acc_ref[...] = c_ref[...].astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _common_specs(m, n, k, bm, bn, bk):
+    grid = (m // bm, n // bn, k // bk)
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    return grid, a_spec, b_spec, o_spec
+
+
+def gemm(a, b, *, block_m=DEFAULT_BLOCK, block_n=DEFAULT_BLOCK,
+         block_k=DEFAULT_BLOCK, compute_dtype=None):
+    """Tiled GEMM: C_f32 = A @ B.
+
+    `compute_dtype` selects the MXU input precision: None keeps the input
+    dtype (f32 path — paper's CUDA cores / CPU), `jnp.bfloat16` is the
+    low-precision path (paper's tensor cores). Accumulation is always f32.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: A is {a.shape}, B is {b.shape}")
+    if compute_dtype is not None:
+        a = a.astype(compute_dtype)
+        b = b.astype(compute_dtype)
+
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    grid, a_spec, b_spec, o_spec = _common_specs(m, n, k, bm, bn, bk)
+
+    kernel = functools.partial(_matmul_kernel, k_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(a, b)
+
+
+def gemm_acc(a, b, c_in, *, block_m=DEFAULT_BLOCK, block_n=DEFAULT_BLOCK,
+             block_k=DEFAULT_BLOCK, compute_dtype=None):
+    """Tiled accumulating GEMM: C_f32 = A @ B + C_in."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: A is {a.shape}, B is {b.shape}")
+    if c_in.shape != (m, n):
+        raise ValueError(f"C_in shape {c_in.shape} != ({m}, {n})")
+    if compute_dtype is not None:
+        a = a.astype(compute_dtype)
+        b = b.astype(compute_dtype)
+
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    grid, a_spec, b_spec, o_spec = _common_specs(m, n, k, bm, bn, bk)
+    c_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+
+    kernel = functools.partial(_matmul_acc_kernel, k_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[a_spec, b_spec, c_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(a, b, c_in)
+
+
+def gemm_f32(a, b, **kw):
+    """FP32 GEMM (paper's CPU / CUDA-core path)."""
+    return gemm(a, b, compute_dtype=None, **kw)
+
+
+def gemm_bf16(a, b, **kw):
+    """bf16-in / f32-accumulate GEMM (paper's tensor-core / XPU path)."""
+    return gemm(a, b, compute_dtype=jnp.bfloat16, **kw)
+
+
+def gemm_acc_f32(a, b, c_in, **kw):
+    return gemm_acc(a, b, c_in, compute_dtype=None, **kw)
+
+
+def gemm_acc_bf16(a, b, c_in, **kw):
+    return gemm_acc(a, b, c_in, compute_dtype=jnp.bfloat16, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Static performance-structure estimates (used by tests and DESIGN.md §Perf).
+# interpret=True gives CPU-numpy timings, which say nothing about TPU
+# performance — what we *can* reason about statically is the VMEM working
+# set and the arithmetic intensity of the chosen block shape.
+# ---------------------------------------------------------------------------
+
+def vmem_bytes(bm, bn, bk, in_dtype_bytes=4, acc_dtype_bytes=4,
+               double_buffered=True):
+    """VMEM working-set estimate for one grid step.
+
+    A block (bm,bk) + B block (bk,bn) + accumulator (bm,bn) + output block
+    (bm,bn). With double buffering the A/B staging buffers are doubled
+    (Pallas pipelines the HBM→VMEM copy of step i+1 over the compute of
+    step i).
+    """
+    ab = (bm * bk + bk * bn) * in_dtype_bytes
+    if double_buffered:
+        ab *= 2
+    acc = bm * bn * acc_dtype_bytes
+    out = bm * bn * acc_dtype_bytes
+    return ab + acc + out
+
+
+def arithmetic_intensity(bm, bn, bk, in_dtype_bytes=4):
+    """FLOPs per HBM byte for one (bm,bn) output block over the full k loop.
+
+    Per k step: 2*bm*bn*bk FLOPs; HBM traffic: A and B blocks (the C block
+    is written once per (i,j), amortized to ~0 for large k/bk).
+    """
+    flops = 2.0 * bm * bn * bk
+    bytes_moved = (bm * bk + bk * bn) * in_dtype_bytes
+    return flops / bytes_moved

@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for the Pallas GEMM kernels.
+
+These are the ground truth the pytest/hypothesis suites compare the
+Pallas kernels (and the lowered HLO artifacts) against. They are kept
+intentionally trivial — one jnp expression per oracle — so there is no
+room for a shared bug between kernel and reference.
+"""
+
+import jax.numpy as jnp
+
+
+def gemm_f32(a, b):
+    """FP32 GEMM: C = A @ B, all operands f32.
+
+    Models the paper's CPU (MKL/BLIS) and GPU (cuBLAS CUDA-core) path.
+    """
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def gemm_bf16(a, b):
+    """Mixed-precision GEMM: C_f32 = A_bf16 @ B_bf16.
+
+    Models the paper's XPU (tensor-core) path: low-precision multiply with
+    wider accumulate. On NVIDIA tensor cores the paper used FP16 in / FP16
+    out; on the TPU MXU the native low-precision input type is bfloat16
+    with f32 accumulation, so that is the adaptation used here (see
+    DESIGN.md §Hardware-Adaptation).
+    """
+    a16 = a.astype(jnp.bfloat16)
+    b16 = b.astype(jnp.bfloat16)
+    return jnp.matmul(a16, b16, preferred_element_type=jnp.float32)
+
+
+def gemm_acc_f32(a, b, c_in):
+    """Accumulating FP32 GEMM: C = A @ B + C_in.
+
+    Used by the runtime when a k-split schedule produces multiple partial
+    products targeting the same C tile.
+    """
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32) + c_in
+
+
+def gemm_acc_bf16(a, b, c_in):
+    """Accumulating mixed-precision GEMM: C = A_bf16 @ B_bf16 + C_in."""
+    a16 = a.astype(jnp.bfloat16)
+    b16 = b.astype(jnp.bfloat16)
+    return jnp.matmul(a16, b16, preferred_element_type=jnp.float32) + c_in

@@ -1,0 +1,65 @@
+"""L2 — the jax compute graph per simulated device class.
+
+The paper's hgemms assigns each device a sub-product C_tile = A_tile @
+B_tile computed by the device's native library (MKL/BLIS on CPU, cuBLAS
+FP32 on CUDA cores, cuBLAS FP16 on tensor cores). Here each device class
+maps to a jax function that calls the L1 Pallas kernel with the matching
+precision; `aot.py` lowers one HLO artifact per (function, tile shape)
+and the Rust runtime executes them from the L3 hot path.
+
+Device-class mapping (DESIGN.md §Hardware-Adaptation):
+
+  cpu / gpu  -> `tile_f32`     (FP32 multiply, FP32 accumulate)
+  xpu        -> `tile_bf16`    (bf16 multiply, f32 accumulate — the MXU
+                                analogue of tensor-core HMMA)
+  *_acc      -> accumulating variants for k-split schedules.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm as kernels
+
+
+def tile_f32(a, b):
+    """FP32 tile product — the CPU / CUDA-core device class."""
+    return (kernels.gemm_f32(a, b),)
+
+
+def tile_bf16(a, b):
+    """bf16->f32 tile product — the XPU (tensor-core) device class."""
+    return (kernels.gemm_bf16(a, b),)
+
+
+def tile_acc_f32(a, b, c_in):
+    """FP32 tile product accumulated into an existing C tile."""
+    return (kernels.gemm_acc_f32(a, b, c_in),)
+
+
+def tile_acc_bf16(a, b, c_in):
+    """bf16 tile product accumulated into an existing C tile."""
+    return (kernels.gemm_acc_bf16(a, b, c_in),)
+
+
+# Registry consumed by aot.py: name -> (fn, n_inputs).
+# Each entry is lowered once per tile size in the artifact menu.
+MODEL_FNS = {
+    "f32": (tile_f32, 2),
+    "bf16": (tile_bf16, 2),
+    "acc_f32": (tile_acc_f32, 3),
+    "acc_bf16": (tile_acc_bf16, 3),
+}
+
+
+def input_specs(name, m, n, k):
+    """ShapeDtypeStructs for the inputs of MODEL_FNS[name] at tile (m,n,k).
+
+    All artifacts take f32 inputs at the interface: the bf16 cast happens
+    *inside* the graph (as it does inside cuBLAS HGEMM in the paper), so
+    the Rust runtime only ever marshals f32 buffers.
+    """
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    c = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    _, n_in = MODEL_FNS[name]
+    return (a, b) if n_in == 2 else (a, b, c)

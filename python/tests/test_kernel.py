@@ -1,0 +1,198 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE numerics signal of the whole stack: every HLO artifact
+the Rust runtime executes is a lowering of these kernels, so if the
+kernel matches ref.py here, the artifacts are pinned too (test_aot.py
+closes the loop on the lowered text itself).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm as G
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0x90A5)  # "POAS"
+
+
+def rand(m, n, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return (rng.standard_normal((m, n)) * scale).astype(np.float32)
+
+
+# f32 Pallas accumulates in f32 like the oracle; tolerance is tight.
+F32_TOL = dict(rtol=1e-5, atol=1e-5)
+# bf16 multiply has ~8 mantissa bits; relative tolerance must be loose.
+BF16_TOL = dict(rtol=5e-2, atol=5e-2)
+
+
+class TestGemmF32:
+    @pytest.mark.parametrize("m,n,k", [
+        (8, 8, 8), (16, 8, 32), (64, 64, 64), (128, 128, 128),
+        (256, 128, 64), (8, 128, 8), (1, 1, 1), (1, 128, 1),
+        (127, 65, 33),  # odd sizes force non-target block divisors
+    ])
+    def test_matches_ref(self, m, n, k):
+        a, b = rand(m, k), rand(k, n)
+        np.testing.assert_allclose(
+            G.gemm_f32(a, b), ref.gemm_f32(a, b), **F32_TOL)
+
+    def test_explicit_blocks(self):
+        a, b = rand(64, 96), rand(96, 32)
+        out = G.gemm_f32(a, b, block_m=16, block_n=16, block_k=32)
+        np.testing.assert_allclose(out, ref.gemm_f32(a, b), **F32_TOL)
+
+    def test_identity(self):
+        a = rand(32, 32)
+        np.testing.assert_allclose(
+            G.gemm_f32(a, np.eye(32, dtype=np.float32)), a, **F32_TOL)
+
+    def test_zeros(self):
+        a = rand(16, 16)
+        z = np.zeros((16, 16), np.float32)
+        np.testing.assert_allclose(G.gemm_f32(a, z), z, **F32_TOL)
+
+    def test_contraction_mismatch_raises(self):
+        with pytest.raises(ValueError, match="contraction mismatch"):
+            G.gemm_f32(rand(8, 9), rand(8, 8))
+
+    def test_output_dtype_f32(self):
+        out = G.gemm_f32(rand(8, 8), rand(8, 8))
+        assert out.dtype == np.float32
+
+
+class TestGemmBf16:
+    @pytest.mark.parametrize("m,n,k", [
+        (8, 8, 8), (64, 64, 64), (128, 128, 128), (32, 128, 64),
+    ])
+    def test_matches_ref(self, m, n, k):
+        a, b = rand(m, k), rand(k, n)
+        np.testing.assert_allclose(
+            G.gemm_bf16(a, b), ref.gemm_bf16(a, b), **F32_TOL)
+
+    def test_close_to_f32_truth(self):
+        # The bf16 path approximates the f32 product (tensor-core analogy:
+        # HGEMM approximates SGEMM). Error must be bf16-sized, not garbage.
+        a, b = rand(64, 64), rand(64, 64)
+        np.testing.assert_allclose(
+            G.gemm_bf16(a, b), a.astype(np.float64) @ b.astype(np.float64),
+            **BF16_TOL)
+
+    def test_accumulation_is_f32(self):
+        # Summing k=4096 ones would overflow a bf16 accumulator's 8-bit
+        # mantissa (max exact integer 256); f32 accumulate is exact here.
+        k = 4096
+        a = np.ones((8, k), np.float32)
+        b = np.ones((k, 8), np.float32)
+        out = np.asarray(G.gemm_bf16(a, b))
+        np.testing.assert_array_equal(out, np.full((8, 8), k, np.float32))
+
+
+class TestGemmAcc:
+    @pytest.mark.parametrize("m,n,k", [(8, 8, 8), (64, 32, 128)])
+    def test_acc_f32(self, m, n, k):
+        a, b, c = rand(m, k), rand(k, n), rand(m, n)
+        np.testing.assert_allclose(
+            G.gemm_acc_f32(a, b, c), ref.gemm_acc_f32(a, b, c), **F32_TOL)
+
+    @pytest.mark.parametrize("m,n,k", [(8, 8, 8), (64, 32, 128)])
+    def test_acc_bf16(self, m, n, k):
+        a, b, c = rand(m, k), rand(k, n), rand(m, n)
+        np.testing.assert_allclose(
+            G.gemm_acc_bf16(a, b, c), ref.gemm_acc_bf16(a, b, c), **F32_TOL)
+
+    def test_acc_zero_cin_equals_plain(self):
+        a, b = rand(32, 16), rand(16, 32)
+        z = np.zeros((32, 32), np.float32)
+        np.testing.assert_allclose(
+            G.gemm_acc_f32(a, b, z), G.gemm_f32(a, b), **F32_TOL)
+
+    def test_k_split_sum_equals_full(self):
+        # The runtime's k-split contract: gemm(A1,B1) then acc(A2,B2,·)
+        # must equal gemm over the concatenated k dimension.
+        a, b = rand(16, 64), rand(64, 16)
+        part = G.gemm_f32(a[:, :32], b[:32, :])
+        full = G.gemm_acc_f32(a[:, 32:], b[32:, :], part)
+        np.testing.assert_allclose(full, ref.gemm_f32(a, b),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_cin_shape_mismatch_raises(self):
+        with pytest.raises(ValueError, match="C_in shape"):
+            G.gemm_acc_f32(rand(8, 8), rand(8, 8), rand(4, 4))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: arbitrary shapes/blocks/dtypes against the oracle.
+# ---------------------------------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=96)
+blocks = st.sampled_from([8, 16, 32, 128])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, k=dims, bm=blocks, bn=blocks, bk=blocks,
+       seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_f32_any_shape(m, n, k, bm, bn, bk, seed):
+    a, b = rand(m, k, seed=seed), rand(k, n, seed=seed + 1)
+    out = G.gemm_f32(a, b, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(out, ref.gemm_f32(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, n=dims, k=dims, seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_bf16_any_shape(m, n, k, seed):
+    a, b = rand(m, k, seed=seed), rand(k, n, seed=seed + 1)
+    np.testing.assert_allclose(
+        G.gemm_bf16(a, b), ref.gemm_bf16(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, n=dims, k=dims, seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_acc_any_shape(m, n, k, seed):
+    a, b = rand(m, k, seed=seed), rand(k, n, seed=seed + 1)
+    c = rand(m, n, seed=seed + 2)
+    np.testing.assert_allclose(
+        G.gemm_acc_f32(a, b, c), ref.gemm_acc_f32(a, b, c),
+        rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.sampled_from([1e-6, 1e-3, 1.0, 1e3, 1e6]),
+       seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_f32_scale_robust(scale, seed):
+    # Relative accuracy should be scale invariant for the f32 path.
+    a, b = rand(32, 32, scale=scale, seed=seed), rand(32, 32, scale=scale,
+                                                      seed=seed + 1)
+    np.testing.assert_allclose(G.gemm_f32(a, b), ref.gemm_f32(a, b),
+                               rtol=1e-4, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Static performance-structure checks (DESIGN.md §Perf, L1 targets).
+# ---------------------------------------------------------------------------
+
+class TestPerfStructure:
+    def test_default_block_vmem_fits(self):
+        # 128^3 f32 blocks with double buffering must fit in a 16 MiB VMEM
+        # with plenty of headroom for the pipeline.
+        assert G.vmem_bytes(128, 128, 128) < 1 << 20  # < 1 MiB
+
+    def test_256_block_vmem_fits(self):
+        assert G.vmem_bytes(256, 256, 256) < 4 << 20
+
+    def test_arithmetic_intensity_above_mxu_ridge(self):
+        # TPU-class ridge point is ~100 FLOP/byte (HBM). 128-tiles are
+        # compute bound; that is the point of the block choice.
+        assert G.arithmetic_intensity(128, 128, 128) >= 32
+        assert G.arithmetic_intensity(256, 256, 256) >= 64
+
+    def test_pick_block_divides(self):
+        for dim in (1, 7, 64, 96, 127, 128, 1000):
+            b = G._pick_block(dim, 128)
+            assert dim % b == 0 and 1 <= b <= min(dim, 128)
+
+    def test_pick_block_exact_for_menu(self):
+        for t in (64, 128, 256):
+            assert G._pick_block(t, 128) == min(t, 128)

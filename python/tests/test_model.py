@@ -1,0 +1,61 @@
+"""L2 model: shapes, registry consistency, and numerics of the tile fns."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(m, n, seed=0):
+    return np.random.default_rng(seed).standard_normal((m, n)).astype(np.float32)
+
+
+class TestRegistry:
+    def test_all_fns_present(self):
+        assert set(model.MODEL_FNS) == {"f32", "bf16", "acc_f32", "acc_bf16"}
+
+    @pytest.mark.parametrize("name", list(model.MODEL_FNS))
+    def test_input_specs_match_arity(self, name):
+        specs = model.input_specs(name, 16, 16, 16)
+        _, n_in = model.MODEL_FNS[name]
+        assert len(specs) == n_in
+
+    @pytest.mark.parametrize("name", list(model.MODEL_FNS))
+    def test_input_specs_all_f32(self, name):
+        # Runtime contract: rust only marshals f32 buffers; bf16 casts
+        # live inside the graph.
+        for s in model.input_specs(name, 8, 8, 8):
+            assert s.dtype == np.float32
+
+    def test_input_specs_shapes(self):
+        a, b = model.input_specs("f32", 3, 5, 7)
+        assert a.shape == (3, 7) and b.shape == (7, 5)
+        a, b, c = model.input_specs("acc_f32", 3, 5, 7)
+        assert c.shape == (3, 5)
+
+
+class TestTileFns:
+    @pytest.mark.parametrize("name,refn", [
+        ("f32", ref.gemm_f32), ("bf16", ref.gemm_bf16)])
+    def test_two_arg_fns_match_ref(self, name, refn):
+        fn, _ = model.MODEL_FNS[name]
+        a, b = rand(32, 16, 1), rand(16, 32, 2)
+        (out,) = fn(a, b)
+        np.testing.assert_allclose(out, refn(a, b), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("name,refn", [
+        ("acc_f32", ref.gemm_acc_f32), ("acc_bf16", ref.gemm_acc_bf16)])
+    def test_three_arg_fns_match_ref(self, name, refn):
+        fn, _ = model.MODEL_FNS[name]
+        a, b, c = rand(32, 16, 1), rand(16, 32, 2), rand(32, 32, 3)
+        (out,) = fn(a, b, c)
+        np.testing.assert_allclose(out, refn(a, b, c), rtol=1e-4, atol=1e-4)
+
+    def test_returns_tuple(self):
+        # aot.py lowers with return_tuple=True; fns must already return
+        # 1-tuples so the rust side can unwrap with to_tuple1().
+        for name, (fn, n_in) in model.MODEL_FNS.items():
+            args = [rand(8, 8, i) for i in range(n_in)]
+            out = fn(*args)
+            assert isinstance(out, tuple) and len(out) == 1, name

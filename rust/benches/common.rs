@@ -1,0 +1,75 @@
+//! Shared helpers for the table/figure regenerators.
+//!
+//! Every bench follows the paper's §5.1.2 protocol: each input runs
+//! `PAPER_REPS` (50) repetitions, and reported values average
+//! `PAPER_RUNS` (3) independent runs (here: 3 simulator seeds).
+
+#![allow(dead_code)]
+
+use poas::baselines;
+use poas::config::MachineConfig;
+use poas::coordinator::{Pipeline, RunResult};
+use poas::sim::ExecOutcome;
+use poas::workload::GemmSize;
+
+/// Seeds of the "3 independent runs".
+pub const SEEDS: [u64; 3] = [0, 1, 2];
+
+/// Paper repetition count.
+pub const REPS: u32 = 50;
+
+/// Reduced repetitions for the heavier sweeps (keeps bench wall-clock
+/// sane; scaling is linear, verified by `reps_scale_compute_time`).
+pub const FAST_REPS: u32 = 10;
+
+/// One averaged co-execution: mean makespan + the last run's details.
+pub struct AveragedRun {
+    pub mean_makespan: f64,
+    pub runs: Vec<RunResult>,
+}
+
+/// Run the full POAS pipeline on `cfg` for each seed.
+pub fn poas_runs(cfg: &MachineConfig, size: GemmSize, reps: u32) -> AveragedRun {
+    let runs: Vec<RunResult> = SEEDS
+        .iter()
+        .map(|&seed| {
+            let mut p = Pipeline::for_simulated_machine(cfg, seed);
+            p.run_sim(size, reps)
+        })
+        .collect();
+    let mean_makespan = runs.iter().map(|r| r.makespan).sum::<f64>() / runs.len() as f64;
+    AveragedRun {
+        mean_makespan,
+        runs,
+    }
+}
+
+/// Mean standalone makespan for one device across the seeds.
+pub fn standalone_mean(cfg: &MachineConfig, dev: usize, size: GemmSize, reps: u32) -> f64 {
+    SEEDS
+        .iter()
+        .map(|&seed| {
+            let mut p = Pipeline::for_simulated_machine(cfg, seed);
+            baselines::standalone(&mut p.sim, dev, size, reps).makespan
+        })
+        .sum::<f64>()
+        / SEEDS.len() as f64
+}
+
+/// Per-device measured compute and copy seconds from an outcome.
+pub fn measured(outcome: &ExecOutcome, dev: usize) -> (f64, f64) {
+    let tl = &outcome.timelines[dev];
+    (tl.compute_s, tl.h2d_s + tl.d2h_s)
+}
+
+/// Simple timing harness for perf benches: median over `iters` runs.
+pub fn time_median<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    samples[samples.len() / 2]
+}

@@ -1,0 +1,48 @@
+//! Regenerates **Figures 3 and 4**: execution time of each Table 3 input
+//! on mach1 (Fig. 3) and mach2 (Fig. 4) — standalone CPU/GPU/XPU bars
+//! against the hgemms co-execution bar.
+//!
+//! The CPU bar dwarfs everything (the paper plots it clipped); the chart
+//! here therefore also prints the numeric values.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{poas_runs, standalone_mean, FAST_REPS};
+use poas::config::presets;
+use poas::report::BarChart;
+use poas::workload::paper_inputs;
+
+fn main() {
+    for (fig, cfg) in [(3, presets::mach1()), (4, presets::mach2())] {
+        let mut chart = BarChart::new(
+            &format!(
+                "Figure {fig} — execution time per input on {} ({} reps)",
+                cfg.name, FAST_REPS
+            ),
+            "seconds",
+        );
+        for inp in paper_inputs() {
+            let co = poas_runs(&cfg, inp.size, FAST_REPS).mean_makespan;
+            let cpu = standalone_mean(&cfg, 0, inp.size, FAST_REPS);
+            let gpu = standalone_mean(&cfg, 1, inp.size, FAST_REPS);
+            let xpu = standalone_mean(&cfg, 2, inp.size, FAST_REPS);
+            chart.group(
+                inp.id,
+                &[
+                    ("cpu", cpu),
+                    ("gpu", gpu),
+                    ("xpu", xpu),
+                    ("hgemms", co),
+                ],
+            );
+            assert!(co < xpu, "{}: co-execution must beat the XPU", inp.id);
+        }
+        chart.print(60);
+        println!();
+    }
+    println!(
+        "paper reference: hgemms is the lowest bar for every input on both \
+         machines; CPU bars are off-scale (hundreds of seconds on mach1)."
+    );
+}

@@ -1,0 +1,116 @@
+//! L3 hot-path microbenchmarks (§Perf in EXPERIMENTS.md).
+//!
+//! The POAS claim is that the framework's own overhead is negligible
+//! next to the workload: the whole predict-optimize-adapt chain must
+//! cost well under a millisecond per GEMM call, and the simulator must
+//! process work orders fast enough to sweep the full evaluation.
+//!
+//! Hand-rolled harness (offline build has no criterion): median of N
+//! timed runs, printed as a table. Keep the measured numbers in sync
+//! with EXPERIMENTS.md §Perf.
+
+#[path = "common.rs"]
+mod common;
+
+use common::time_median;
+use poas::adapt::{ops_to_mnk, AdaptOptions};
+use poas::config::presets;
+use poas::coordinator::Pipeline;
+use poas::optimize::problem::{BusModel, SplitProblem};
+use poas::predict::PerfModel;
+use poas::report::Table;
+use poas::schedule::{build_plan, static_sched::rules_from_config, PlanOptions};
+use poas::sim::SimMachine;
+use poas::workload::GemmSize;
+
+fn main() {
+    let cfg = presets::mach1();
+    let pipeline = Pipeline::for_simulated_machine(&cfg, 0);
+    let model = pipeline.model.clone();
+    let rules = rules_from_config(&cfg);
+    let size = GemmSize::square(30_000);
+
+    let mut rows: Vec<[String; 3]> = Vec::new();
+    let add = |rows: &mut Vec<[String; 3]>, name: &str, iters: usize, f: &mut dyn FnMut()| {
+        let t = time_median(iters, f);
+        rows.push([
+            name.to_string(),
+            if t >= 1e-3 {
+                format!("{:.3} ms", t * 1e3)
+            } else {
+                format!("{:.1} µs", t * 1e6)
+            },
+            format!("{:.0}", 1.0 / t),
+        ]);
+        t
+    };
+
+    // 1. LP solve (the Optimize phase's core).
+    let problem = SplitProblem {
+        devices: model.model_inputs(),
+        size,
+        bus: BusModel::SharedPriority,
+        row_integral: false,
+    };
+    add(&mut rows, "LP solve (3 devices + epigraph)", 200, &mut || {
+        problem.solve().unwrap();
+    });
+
+    // 2. MILP (row-integral) solve.
+    let milp = SplitProblem {
+        row_integral: true,
+        ..problem.clone()
+    };
+    add(&mut rows, "MILP solve (row-integral)", 50, &mut || {
+        milp.solve().unwrap();
+    });
+
+    // 3. ops_to_mnk (Adapt phase).
+    let split = problem.solve().unwrap();
+    let priorities: Vec<u32> = model.devices.iter().map(|d| d.priority).collect();
+    add(&mut rows, "ops_to_mnk (adapt, i1)", 200, &mut || {
+        ops_to_mnk(&split, size, &rules, &priorities, &AdaptOptions::default()).unwrap();
+    });
+
+    // 4. Full plan build (predict model -> executable plan).
+    add(&mut rows, "full plan build (optimize+adapt)", 100, &mut || {
+        build_plan(&model, size, &rules, &PlanOptions::default()).unwrap();
+    });
+
+    // 5. Simulator: one 50-rep co-execution of i1.
+    let plan = build_plan(&model, size, &rules, &PlanOptions::default()).unwrap();
+    let order = plan.to_work_order(50);
+    let mut sim = SimMachine::new(&cfg, 1);
+    let t_exec = time_median(20, || {
+        sim.execute(&order);
+    });
+    let calls: usize = order
+        .items
+        .iter()
+        .map(|i| i.subproducts.len() * 50)
+        .sum();
+    rows.push([
+        "simulate 50-rep i1 co-execution".to_string(),
+        format!("{:.3} ms", t_exec * 1e3),
+        format!("{:.0} device-calls/s", calls as f64 / t_exec),
+    ]);
+
+    // 6. Profile-file parse (startup path).
+    let text = model.to_text();
+    add(&mut rows, "perf-model text parse", 500, &mut || {
+        PerfModel::from_text(&text).unwrap();
+    });
+
+    let mut table = Table::new(
+        "L3 hot-path latencies (median)",
+        &["operation", "median", "per-sec"],
+    );
+    for r in &rows {
+        table.row(r);
+    }
+    table.print();
+    println!(
+        "\ntargets (EXPERIMENTS.md §Perf): plan build < 1 ms; simulator \
+         >= 1e5 device-calls/s; parse < 50 µs."
+    );
+}

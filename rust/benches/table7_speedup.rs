@@ -1,0 +1,37 @@
+//! Regenerates **Table 7**: speedup of hgemms co-execution with respect
+//! to standalone execution on each device, per input and machine.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{poas_runs, standalone_mean, FAST_REPS};
+use poas::config::presets;
+use poas::report::Table;
+use poas::workload::paper_inputs;
+
+fn main() {
+    let machines = [presets::mach1(), presets::mach2()];
+    let mut table = Table::new(
+        "Table 7 — speedup of hgemms vs standalone execution",
+        &[
+            "input", "m1 CPU", "m1 GPU", "m1 XPU", "m2 CPU", "m2 GPU", "m2 XPU",
+        ],
+    );
+    for inp in paper_inputs() {
+        let mut cells = vec![inp.id.to_string()];
+        for cfg in &machines {
+            let co = poas_runs(cfg, inp.size, FAST_REPS).mean_makespan;
+            for dev in 0..3 {
+                let alone = standalone_mean(cfg, dev, inp.size, FAST_REPS);
+                cells.push(format!("{:.2}x", alone / co));
+            }
+        }
+        table.row(&cells);
+    }
+    table.print();
+    println!(
+        "\npaper reference (Table 7): mach1 CPU 261-353x, GPU 7.0-9.5x, \
+         XPU 1.14-1.28x; mach2 CPU 34.7-40.2x, GPU 2.30-2.58x, XPU 1.29-1.45x.\n\
+         (simulated testbed; shape — ordering and rough factors — is the target)"
+    );
+}

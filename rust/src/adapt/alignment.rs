@@ -1,0 +1,187 @@
+//! Hardware adjustments (paper §4.3.2): tensor-core alignment and row
+//! rebalancing.
+//!
+//! Tensor cores only run at full rate when `m % 8 == 0 && k % 8 == 0`
+//! (paper footnote 1). The `ops_to_mnk` algorithm therefore shaves the
+//! XPU's row count down to the alignment boundary — and because every C
+//! row must still be computed, the shaved rows are handed to the next
+//! fastest device (the paper notes the shifted amount is "barely
+//! noticeable since the size reduction is tiny compared to the global
+//! size").
+
+/// Per-device adapt-phase rules (public hardware documentation — not
+/// hidden performance state: cuBLAS alignment restrictions and cache
+/// sizes come from datasheets, as in the paper).
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptRules {
+    /// Row-count alignment for full-rate operation (8 on XPU, 1 else).
+    pub align: u64,
+    /// Smallest profiled sub-product op count.
+    pub ops_lo: f64,
+    /// Largest profiled sub-product op count (cache-fit bound on CPUs).
+    pub ops_hi: f64,
+}
+
+impl AdaptRules {
+    /// Unconstrained rules (align 1, unbounded tile size).
+    pub fn none() -> Self {
+        AdaptRules {
+            align: 1,
+            ops_lo: 0.0,
+            ops_hi: f64::INFINITY,
+        }
+    }
+}
+
+/// Align each device's row count: rows are rounded *down* to the
+/// device's alignment, and freed rows are reassigned to the device with
+/// the highest `fallback_rank` (typically the fastest unaligned device).
+///
+/// * `rows[i]` — rows assigned by the data adjustment step;
+/// * `rules[i].align` — alignment of device `i`;
+/// * `fallback_rank[i]` — preference order for absorbing leftovers
+///   (higher = preferred); devices with `align > 1` never absorb.
+///
+/// Returns the adjusted row vector; total row count is preserved.
+pub fn align_rows(rows: &[u64], rules: &[AdaptRules], fallback_rank: &[u32]) -> Vec<u64> {
+    assert_eq!(rows.len(), rules.len());
+    assert_eq!(rows.len(), fallback_rank.len());
+    let mut out = rows.to_vec();
+    let mut freed = 0u64;
+    for (i, r) in out.iter_mut().enumerate() {
+        let a = rules[i].align.max(1);
+        let rem = *r % a;
+        if rem != 0 {
+            *r -= rem;
+            freed += rem;
+        }
+    }
+    if freed > 0 {
+        // Absorber: highest rank among devices that accept any row count.
+        let absorber = (0..out.len())
+            .filter(|&i| rules[i].align <= 1)
+            .max_by_key(|&i| fallback_rank[i]);
+        match absorber {
+            Some(i) => out[i] += freed,
+            None => {
+                // Every device is aligned: give the freed rows to the
+                // highest-ranked device anyway (they run at reduced rate
+                // for the remainder stripe — still correct).
+                let i = (0..out.len()).max_by_key(|&i| fallback_rank[i]).unwrap();
+                out[i] += freed;
+            }
+        }
+    }
+    out
+}
+
+/// Split `total_rows` proportionally to `ops[i]`, exactly conserving the
+/// total via the largest-remainder method (the data adjustment of
+/// §4.3.1: `m = ops / (n*k)` per device, made integral).
+pub fn ops_to_rows(ops: &[f64], total_rows: u64) -> Vec<u64> {
+    let sum: f64 = ops.iter().sum();
+    if sum <= 0.0 {
+        let mut out = vec![0u64; ops.len()];
+        if !out.is_empty() {
+            out[0] = total_rows;
+        }
+        return out;
+    }
+    let exact: Vec<f64> = ops
+        .iter()
+        .map(|o| (o / sum) * total_rows as f64)
+        .collect();
+    let mut rows: Vec<u64> = exact.iter().map(|e| e.floor() as u64).collect();
+    let assigned: u64 = rows.iter().sum();
+    let mut leftover = total_rows - assigned;
+    // Largest fractional parts first; ties by index for determinism.
+    let mut order: Vec<usize> = (0..ops.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = exact[a] - exact[a].floor();
+        let fb = exact[b] - exact[b].floor();
+        fb.total_cmp(&fa).then(a.cmp(&b))
+    });
+    for i in order {
+        if leftover == 0 {
+            break;
+        }
+        rows[i] += 1;
+        leftover -= 1;
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(aligns: &[u64]) -> Vec<AdaptRules> {
+        aligns
+            .iter()
+            .map(|&a| AdaptRules {
+                align: a,
+                ops_lo: 0.0,
+                ops_hi: f64::INFINITY,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ops_to_rows_conserves_total() {
+        let rows = ops_to_rows(&[0.0032, 0.2126, 0.7842], 30_000);
+        assert_eq!(rows.iter().sum::<u64>(), 30_000);
+        // Proportions approximately honored.
+        assert!((rows[2] as f64 - 0.7842 * 30_000.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn ops_to_rows_zero_sum_fallback() {
+        let rows = ops_to_rows(&[0.0, 0.0], 10);
+        assert_eq!(rows.iter().sum::<u64>(), 10);
+    }
+
+    #[test]
+    fn ops_to_rows_exact_split() {
+        let rows = ops_to_rows(&[1.0, 1.0], 10);
+        assert_eq!(rows, vec![5, 5]);
+    }
+
+    #[test]
+    fn align_shaves_and_rebalances() {
+        // XPU (align 8) has 23077 rows -> 23072; 5 rows go to the GPU.
+        let rows = vec![96, 6827, 23_077];
+        let r = rules(&[1, 1, 8]);
+        let out = align_rows(&rows, &r, &[0, 1, 2]);
+        assert_eq!(out[2] % 8, 0);
+        assert_eq!(out.iter().sum::<u64>(), rows.iter().sum::<u64>());
+        assert_eq!(out[2], 23_072);
+        assert_eq!(out[1], 6827 + 5);
+    }
+
+    #[test]
+    fn aligned_input_untouched() {
+        let rows = vec![100, 6800, 23_072];
+        let r = rules(&[1, 1, 8]);
+        let out = align_rows(&rows, &r, &[0, 1, 2]);
+        assert_eq!(out, rows);
+    }
+
+    #[test]
+    fn all_aligned_devices_still_conserve() {
+        let rows = vec![13, 27];
+        let r = rules(&[8, 8]);
+        let out = align_rows(&rows, &r, &[1, 2]);
+        assert_eq!(out.iter().sum::<u64>(), 40);
+        // device 1 (higher rank) absorbs.
+        assert_eq!(out[0], 8);
+        assert_eq!(out[1], 32);
+    }
+
+    #[test]
+    fn zero_rows_stay_zero() {
+        let rows = vec![0, 0, 16];
+        let r = rules(&[1, 1, 8]);
+        let out = align_rows(&rows, &r, &[0, 1, 2]);
+        assert_eq!(out, vec![0, 0, 16]);
+    }
+}

@@ -1,0 +1,298 @@
+//! The Adapt phase: `ops_to_mnk` (paper §4.3).
+//!
+//! The optimizer outputs an op count per device; the scheduler needs
+//! concrete matrix dimensions. `ops_to_mnk` performs the two adjustment
+//! families the paper describes:
+//!
+//! * **data adjustments** (§4.3.1) — map ops to whole C rows (`n` and `k`
+//!   stay at their original values; only `m` is split), then express each
+//!   device's slice as a list of near-square sub-products via the Eq. 5
+//!   squareness heuristic so real work is shaped like profiling work;
+//! * **hardware adjustments** (§4.3.2) — shave the XPU's rows to the
+//!   tensor-core alignment (freed rows go to the next device) and keep
+//!   CPU sub-products cache-resident (the `ops_hi` bound).
+
+pub mod alignment;
+pub mod squareness;
+
+pub use alignment::{align_rows, ops_to_rows, AdaptRules};
+pub use squareness::{decompose, divisors, squareness_score, Decomposition};
+
+use crate::error::{Error, Result};
+use crate::optimize::SplitSolution;
+use crate::workload::GemmSize;
+
+/// The Adapt phase's output for one device.
+#[derive(Debug, Clone)]
+pub struct DeviceAssignment {
+    /// Device index (machine order).
+    pub device: usize,
+    /// Rows of C assigned (m_i). 0 = device unused.
+    pub rows: u64,
+    /// Row offset within the global C (for the real execution path).
+    pub row_offset: u64,
+    /// The whole slice (rows, n, k).
+    pub slice: GemmSize,
+    /// Square-ish sub-products covering the slice.
+    pub subproducts: Vec<GemmSize>,
+    /// Eq. 5 squareness score of the decomposition.
+    pub squareness: f64,
+}
+
+/// Options for `ops_to_mnk`.
+#[derive(Debug, Clone)]
+pub struct AdaptOptions {
+    /// Apply the square decomposition (disable for ablation).
+    pub decompose: bool,
+    /// Apply alignment shaving (disable for ablation).
+    pub align: bool,
+}
+
+impl Default for AdaptOptions {
+    fn default() -> Self {
+        AdaptOptions {
+            decompose: true,
+            align: true,
+        }
+    }
+}
+
+/// The paper's `ops_to_mnk` algorithm.
+///
+/// * `split` — optimizer output (ops per device);
+/// * `size` — the global GEMM;
+/// * `rules` — per-device adapt rules (alignment, profiled op range);
+/// * `fallback_rank` — preference for absorbing alignment leftovers
+///   (use the bus priorities: fastest unaligned device first).
+pub fn ops_to_mnk(
+    split: &SplitSolution,
+    size: GemmSize,
+    rules: &[AdaptRules],
+    fallback_rank: &[u32],
+    opts: &AdaptOptions,
+) -> Result<Vec<DeviceAssignment>> {
+    let d = split.ops.len();
+    if rules.len() != d || fallback_rank.len() != d {
+        return Err(Error::Adapt(format!(
+            "rules/rank arity mismatch: {d} devices, {} rules, {} ranks",
+            rules.len(),
+            fallback_rank.len()
+        )));
+    }
+
+    // ---- Data adjustment 1: ops -> whole rows (m_i), conserving m.
+    let mut rows = ops_to_rows(&split.ops, size.m);
+
+    // ---- Hardware adjustment: alignment shaving + rebalancing.
+    if opts.align {
+        rows = align_rows(&rows, rules, fallback_rank);
+    }
+
+    // ---- Data adjustment 2: square decomposition per device.
+    let mut out = Vec::with_capacity(d);
+    let mut offset = 0u64;
+    for (i, &r) in rows.iter().enumerate() {
+        if r == 0 {
+            out.push(DeviceAssignment {
+                device: i,
+                rows: 0,
+                row_offset: offset,
+                slice: GemmSize::new(1, size.n, size.k), // placeholder, unused
+                subproducts: Vec::new(),
+                squareness: 0.0,
+            });
+            continue;
+        }
+        let slice = GemmSize::new(r, size.n, size.k);
+        let (subproducts, sq) = if opts.decompose {
+            let dec = decompose(
+                r,
+                size.n,
+                size.k,
+                rules[i].ops_lo,
+                rules[i].ops_hi,
+                rules[i].align,
+            );
+            let sq = dec.score;
+            (dec.tiles, sq)
+        } else {
+            (vec![slice], squareness_score(std::slice::from_ref(&slice)))
+        };
+        out.push(DeviceAssignment {
+            device: i,
+            rows: r,
+            row_offset: offset,
+            slice,
+            subproducts,
+            squareness: sq,
+        });
+        offset += r;
+    }
+    debug_assert_eq!(offset, size.m);
+    Ok(out)
+}
+
+/// Invariant check used by tests and debug assertions: assignments
+/// exactly tile the global GEMM.
+pub fn assignments_cover(assignments: &[DeviceAssignment], size: GemmSize) -> bool {
+    let total_rows: u64 = assignments.iter().map(|a| a.rows).sum();
+    if total_rows != size.m {
+        return false;
+    }
+    for a in assignments {
+        if a.rows == 0 {
+            continue;
+        }
+        let want = a.slice.ops();
+        let got: f64 = a.subproducts.iter().map(|t| t.ops()).sum();
+        if (got - want).abs() > want * 1e-9 + 0.5 {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimize::SplitSolution;
+
+    fn split(ops: Vec<f64>) -> SplitSolution {
+        SplitSolution {
+            ops,
+            t_pred: 1.0,
+            compute_pred: vec![],
+            copy_pred: vec![],
+        }
+    }
+
+    fn mach1_rules() -> Vec<AdaptRules> {
+        vec![
+            AdaptRules {
+                align: 1,
+                ops_lo: 1e9,
+                ops_hi: 8e9,
+            }, // cpu
+            AdaptRules {
+                align: 1,
+                ops_lo: 27e9,
+                ops_hi: 216e9,
+            }, // gpu
+            AdaptRules {
+                align: 8,
+                ops_lo: 27e9,
+                ops_hi: 216e9,
+            }, // xpu
+        ]
+    }
+
+    #[test]
+    fn basic_assignment_covers() {
+        let size = GemmSize::square(30_000);
+        let n = size.ops();
+        let s = split(vec![0.0032 * n, 0.2126 * n, 0.7842 * n]);
+        let a = ops_to_mnk(&s, size, &mach1_rules(), &[0, 1, 2], &AdaptOptions::default())
+            .unwrap();
+        assert!(assignments_cover(&a, size));
+        assert_eq!(a[2].rows % 8, 0, "xpu alignment");
+        assert!(a[0].rows < a[1].rows && a[1].rows < a[2].rows);
+    }
+
+    #[test]
+    fn offsets_are_contiguous() {
+        let size = GemmSize::new(10_000, 20_000, 35_000);
+        let n = size.ops();
+        let s = split(vec![0.01 * n, 0.29 * n, 0.70 * n]);
+        let a = ops_to_mnk(&s, size, &mach1_rules(), &[0, 1, 2], &AdaptOptions::default())
+            .unwrap();
+        let mut expect = 0;
+        for asg in &a {
+            assert_eq!(asg.row_offset, expect);
+            expect += asg.rows;
+        }
+        assert_eq!(expect, size.m);
+    }
+
+    #[test]
+    fn zero_share_device_unused() {
+        let size = GemmSize::square(1000);
+        let s = split(vec![0.0, size.ops()]);
+        let rules = vec![AdaptRules::none(), AdaptRules::none()];
+        let a = ops_to_mnk(&s, size, &rules, &[0, 1], &AdaptOptions::default()).unwrap();
+        assert_eq!(a[0].rows, 0);
+        assert!(a[0].subproducts.is_empty());
+        assert_eq!(a[1].rows, 1000);
+    }
+
+    #[test]
+    fn no_decompose_option() {
+        let size = GemmSize::square(30_000);
+        let n = size.ops();
+        let s = split(vec![0.3 * n, 0.7 * n]);
+        let rules = vec![AdaptRules::none(), AdaptRules::none()];
+        let a = ops_to_mnk(
+            &s,
+            size,
+            &rules,
+            &[0, 1],
+            &AdaptOptions {
+                decompose: false,
+                align: false,
+            },
+        )
+        .unwrap();
+        assert_eq!(a[0].subproducts.len(), 1);
+        assert_eq!(a[0].subproducts[0], a[0].slice);
+    }
+
+    #[test]
+    fn subproducts_respect_profiled_range() {
+        let size = GemmSize::square(30_000);
+        let n = size.ops();
+        let s = split(vec![0.0032 * n, 0.2126 * n, 0.7842 * n]);
+        let rules = mach1_rules();
+        let a =
+            ops_to_mnk(&s, size, &rules, &[0, 1, 2], &AdaptOptions::default()).unwrap();
+        // GPU tiles (full stripes) within [27e9, 216e9].
+        let gpu_full: Vec<_> = a[1]
+            .subproducts
+            .iter()
+            .filter(|t| t.m == a[1].subproducts[0].m)
+            .collect();
+        for t in gpu_full {
+            assert!(t.ops() <= 216e9 * 1.001);
+        }
+    }
+
+    #[test]
+    fn arity_mismatch_errors() {
+        let size = GemmSize::square(100);
+        let s = split(vec![size.ops()]);
+        assert!(ops_to_mnk(&s, size, &[], &[], &AdaptOptions::default()).is_err());
+    }
+
+    #[test]
+    fn squareness_reported_positive() {
+        let size = GemmSize::square(30_000);
+        let n = size.ops();
+        let s = split(vec![0.25 * n, 0.75 * n]);
+        let rules = vec![
+            AdaptRules {
+                align: 1,
+                ops_lo: 27e9,
+                ops_hi: 216e9,
+            },
+            AdaptRules {
+                align: 8,
+                ops_lo: 27e9,
+                ops_hi: 216e9,
+            },
+        ];
+        let a = ops_to_mnk(&s, size, &rules, &[1, 2], &AdaptOptions::default()).unwrap();
+        for asg in &a {
+            if asg.rows > 0 {
+                assert!(asg.squareness > 0.0);
+            }
+        }
+    }
+}

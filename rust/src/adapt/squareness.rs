@@ -1,0 +1,269 @@
+//! Square sub-matrix decomposition driven by the Eq. 5 heuristic.
+//!
+//! Profiling only measures *square* products, so prediction is accurate
+//! only when real work is shaped like profiling work (§4.1.2). The Adapt
+//! phase therefore expresses each device's (M, n, k) slice as a list of
+//! near-square sub-products (§4.3.1):
+//!
+//! * `n' = n` always (splitting n would produce partial C results);
+//! * `k'` ranges over divisors of `k` ("the number of horizontal
+//!   dimensions in A fits perfectly: k % k' == 0");
+//! * `m'` is chosen to make tiles square-ish while keeping each tile's
+//!   op count inside the device's profiled range;
+//! * among candidates, the decomposition maximizing the paper's
+//!   squareness score (Eq. 5) wins:
+//!   `sq = Σ_i min(m'_i,k'_i)/max(m'_i,k'_i) * m'_i * k'_i * n`.
+
+use crate::workload::GemmSize;
+
+/// All divisors of `x`, ascending. O(sqrt x).
+pub fn divisors(x: u64) -> Vec<u64> {
+    assert!(x >= 1);
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= x {
+        if x % d == 0 {
+            small.push(d);
+            if d != x / d {
+                large.push(x / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// The Eq. 5 squareness score of a tile list (higher = more square).
+pub fn squareness_score(tiles: &[GemmSize]) -> f64 {
+    tiles
+        .iter()
+        .map(|t| {
+            let (m, k) = (t.m as f64, t.k as f64);
+            (m.min(k) / m.max(k)) * m * k * t.n as f64
+        })
+        .sum()
+}
+
+/// One candidate decomposition of a device slice.
+#[derive(Debug, Clone)]
+pub struct Decomposition {
+    /// Sub-products in execution order (row-major over the m×k grid).
+    pub tiles: Vec<GemmSize>,
+    /// Chosen k' (divides k).
+    pub k_prime: u64,
+    /// Chosen nominal m' (last row-stripe may be smaller).
+    pub m_prime: u64,
+    /// Eq. 5 score.
+    pub score: f64,
+}
+
+/// Decompose a `(rows, n, k)` slice into square-ish sub-products whose
+/// op counts stay within `[ops_lo, ops_hi]` (the device's profiled
+/// range) in a best-effort manner, honoring the device's `align`
+/// requirement on every tile's m and k (paper §4.3.2: tensor cores need
+/// `m % 8 == 0 && k % 8 == 0` *per executed product*, so the
+/// decomposition must not create misaligned tiles out of an aligned
+/// slice). Returns the highest-scoring decomposition, or a single
+/// whole-slice tile when the slice is already within range or too small
+/// to split.
+pub fn decompose(
+    rows: u64,
+    n: u64,
+    k: u64,
+    ops_lo: f64,
+    ops_hi: f64,
+    align: u64,
+) -> Decomposition {
+    assert!(rows >= 1 && n >= 1 && k >= 1);
+    let align = align.max(1);
+    let whole = GemmSize::new(rows, n, k);
+    let fallback = Decomposition {
+        score: squareness_score(std::slice::from_ref(&whole)),
+        tiles: vec![whole],
+        k_prime: k,
+        m_prime: rows,
+    };
+    if whole.ops() <= ops_hi {
+        return fallback;
+    }
+
+    // Scan candidates with an *analytic* Eq. 5 score — the tile grid is
+    // (full_stripes + remainder) x k_chunks copies of at most two
+    // distinct shapes, so the score needs no materialized tile list.
+    // (Perf: materializing every candidate's tiles made ops_to_mnk the
+    // hot spot of plan construction — see EXPERIMENTS.md §Perf.)
+    let tile_score = |m_p: u64, k_p: u64| -> f64 {
+        let (m, kk) = (m_p as f64, k_p as f64);
+        (m.min(kk) / m.max(kk)) * m * kk * n as f64
+    };
+    let mut best: Option<(u64, u64, f64)> = None; // (k', m', score)
+    for k_prime in divisors(k) {
+        // Alignment: an aligned slice must stay aligned tile-by-tile.
+        if k_prime % align != 0 && k_prime != k {
+            continue;
+        }
+        // m' bounds from the op-range constraint for a (m', n, k') tile.
+        let nk = (n * k_prime) as f64;
+        let m_lo = (ops_lo / nk).ceil().max(1.0) as u64;
+        let m_hi = (ops_hi / nk).floor() as u64;
+        if m_hi == 0 || m_lo > m_hi {
+            continue; // this k' cannot yield in-range tiles
+        }
+        // Best-effort square: m' as close to k' as the range allows,
+        // rounded to the alignment (rows are align-multiples already, so
+        // remainder stripes stay aligned too).
+        let mut m_prime = k_prime.clamp(m_lo, m_hi).min(rows);
+        if align > 1 && m_prime >= align {
+            m_prime -= m_prime % align;
+        }
+        if m_prime == 0 {
+            continue;
+        }
+        let k_chunks = k / k_prime;
+        let full_stripes = rows / m_prime;
+        let rem_rows = rows % m_prime;
+        let mut score = (full_stripes * k_chunks) as f64 * tile_score(m_prime, k_prime);
+        if rem_rows > 0 {
+            score += k_chunks as f64 * tile_score(rem_rows, k_prime);
+        }
+        if best.map(|(_, _, s)| score > s).unwrap_or(true) {
+            best = Some((k_prime, m_prime, score));
+        }
+    }
+
+    let Some((k_prime, m_prime, score)) = best else {
+        return fallback;
+    };
+    // Materialize only the winning decomposition.
+    let k_chunks = k / k_prime;
+    let full_stripes = rows / m_prime;
+    let rem_rows = rows % m_prime;
+    let mut tiles = Vec::with_capacity(((full_stripes + 1) * k_chunks) as usize);
+    for _ in 0..full_stripes {
+        for _ in 0..k_chunks {
+            tiles.push(GemmSize::new(m_prime, n, k_prime));
+        }
+    }
+    if rem_rows > 0 {
+        for _ in 0..k_chunks {
+            tiles.push(GemmSize::new(rem_rows, n, k_prime));
+        }
+    }
+    Decomposition {
+        tiles,
+        k_prime,
+        m_prime,
+        score,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(30_000).len(), 50);
+        for d in divisors(30_000) {
+            assert_eq!(30_000 % d, 0);
+        }
+    }
+
+    #[test]
+    fn score_prefers_square() {
+        let square = vec![GemmSize::new(100, 50, 100)];
+        let skinny = vec![GemmSize::new(1000, 50, 10)];
+        // Same volume, different squareness.
+        assert_eq!(square[0].ops(), skinny[0].ops());
+        assert!(squareness_score(&square) > squareness_score(&skinny));
+    }
+
+    #[test]
+    fn small_slice_left_whole() {
+        let d = decompose(100, 100, 100, 1e3, 1e9, 1);
+        assert_eq!(d.tiles, vec![GemmSize::new(100, 100, 100)]);
+    }
+
+    #[test]
+    fn tiles_conserve_ops() {
+        let (rows, n, k) = (23_070, 30_000, 30_000);
+        let lo = 27e9; // 3000^3
+        let hi = 216e9; // 6000^3
+        let d = decompose(rows, n, k, lo, hi, 1);
+        let total: f64 = d.tiles.iter().map(|t| t.ops()).sum();
+        let want = (rows as f64) * (n as f64) * (k as f64);
+        assert!((total - want).abs() < 1.0, "ops not conserved");
+        assert!(d.tiles.len() > 1);
+    }
+
+    #[test]
+    fn tiles_within_profiled_range_mostly() {
+        let d = decompose(23_070, 30_000, 30_000, 27e9, 216e9, 1);
+        // All full stripes in range; only remainder stripes may dip below.
+        let full = d
+            .tiles
+            .iter()
+            .filter(|t| t.m == d.m_prime)
+            .collect::<Vec<_>>();
+        assert!(!full.is_empty());
+        for t in full {
+            assert!(t.ops() <= 216e9 * (1.0 + 1e-9), "tile too big: {t}");
+            assert!(t.ops() >= 27e9 * (1.0 - 1e-9), "tile too small: {t}");
+        }
+    }
+
+    #[test]
+    fn k_prime_divides_k() {
+        for k in [30_000u64, 35_000, 20_000, 40_000] {
+            let d = decompose(10_000, 20_000, k, 27e9, 216e9, 1);
+            assert_eq!(k % d.k_prime, 0, "k'={} !| k={}", d.k_prime, k);
+        }
+    }
+
+    #[test]
+    fn near_square_tiles_for_cpu_range() {
+        // CPU range [1e9, 8e9] (1000^3..2000^3) with n=30000: m'*k' must
+        // be small; check aspect ratio of the chosen full tiles.
+        let d = decompose(96, 30_000, 30_000, 1e9, 8e9, 1);
+        let t = &d.tiles[0];
+        let aspect = t.squareness();
+        // Thin slices (96 rows) cannot be square, but the heuristic picks
+        // the best available k'.
+        assert!(aspect > 0.0);
+        let total: f64 = d.tiles.iter().map(|x| x.ops()).sum();
+        assert!((total - GemmSize::new(96, 30_000, 30_000).ops()).abs() < 1.0);
+    }
+
+    #[test]
+    fn score_matches_eq5_by_hand() {
+        // Two tiles: (2,10,4) and (3,10,4).
+        let tiles = vec![GemmSize::new(2, 10, 4), GemmSize::new(3, 10, 4)];
+        let want = (2.0f64 / 4.0) * 2.0 * 4.0 * 10.0 + (3.0f64 / 4.0) * 3.0 * 4.0 * 10.0;
+        assert!((squareness_score(&tiles) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aligned_decomposition_tiles_stay_aligned() {
+        // XPU slice: rows multiple of 8, k = 20000. Every tile's m and k
+        // must stay multiples of 8 or the tensor-core path degrades.
+        let d = decompose(17_240, 20_000, 20_000, 27e9, 216e9, 8);
+        for t in &d.tiles {
+            assert_eq!(t.m % 8, 0, "tile m misaligned: {t}");
+            assert_eq!(t.k % 8, 0, "tile k misaligned: {t}");
+        }
+        let total: f64 = d.tiles.iter().map(|t| t.ops()).sum();
+        assert!((total - GemmSize::new(17_240, 20_000, 20_000).ops()).abs() < 1.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = decompose(12_345, 20_000, 35_000, 27e9, 216e9, 1);
+        let b = decompose(12_345, 20_000, 35_000, 27e9, 216e9, 1);
+        assert_eq!(a.tiles, b.tiles);
+    }
+}

@@ -1,0 +1,315 @@
+//! Machine and device configuration.
+//!
+//! The paper evaluates on two HPC servers (`mach1`, `mach2` — Tables 1–2).
+//! A [`MachineConfig`] describes such a testbed: one entry per device with
+//! the *ground-truth* parameters of the simulator (effective GEMM
+//! throughput, bus link bandwidth, noise, thermal behaviour, power) plus
+//! the adapt-phase constraints the paper attaches to each device class
+//! (tensor-core alignment, CPU cache-fit, profiling size ranges).
+//!
+//! Ground truth is only visible to the simulator. The POAS pipeline never
+//! reads these numbers: it *profiles* the simulated machine exactly as the
+//! paper profiled MKL/cuBLAS (§4.1.2) and works from the fitted model.
+//!
+//! Configs can be written in a small TOML subset (see [`parser`]) or taken
+//! from [`presets`] which bake the calibrated mach1/mach2 descriptions.
+
+pub mod parser;
+pub mod presets;
+
+use crate::error::{Error, Result};
+
+/// Device class — drives precision, alignment rules and artifact choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// Host CPU running MKL/BLIS (FP32, no PCIe copies).
+    Cpu,
+    /// GPU using ordinary CUDA cores / cuBLAS SGEMM (FP32).
+    Gpu,
+    /// GPU using tensor cores / cuBLAS HGEMM — the paper's "XPU"
+    /// (low-precision multiply, wide accumulate).
+    Xpu,
+}
+
+impl DeviceKind {
+    /// Parse from the config-file token.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "cpu" => Ok(DeviceKind::Cpu),
+            "gpu" => Ok(DeviceKind::Gpu),
+            "xpu" => Ok(DeviceKind::Xpu),
+            other => Err(Error::Config(format!("unknown device kind `{other}`"))),
+        }
+    }
+
+    /// Canonical config-file token.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DeviceKind::Cpu => "cpu",
+            DeviceKind::Gpu => "gpu",
+            DeviceKind::Xpu => "xpu",
+        }
+    }
+
+    /// Bytes per element of the device's native GEMM input dtype
+    /// (paper §4.5: CPU/GPU work in FP32, XPU in FP16 — our XPU artifact
+    /// uses bf16 which is also 2 bytes).
+    pub fn dtype_bytes(&self) -> u64 {
+        match self {
+            DeviceKind::Cpu | DeviceKind::Gpu => 4,
+            DeviceKind::Xpu => 2,
+        }
+    }
+
+    /// AOT artifact family executed for this device class.
+    pub fn artifact_kind(&self) -> &'static str {
+        match self {
+            DeviceKind::Cpu | DeviceKind::Gpu => "f32",
+            DeviceKind::Xpu => "bf16",
+        }
+    }
+}
+
+/// Thermal throttling model of a simulated device.
+///
+/// While a device is busy its clock multiplier decays exponentially from
+/// 1.0 toward `1.0 - throttle_frac` with time constant `heat_tau_s`; while
+/// idle it recovers toward 1.0 with `cool_tau_s`. This reproduces the
+/// paper's §5.2 observation that mach1's poor heat dissipation made
+/// profiled frequencies overestimate real-workload frequencies (the
+/// "outlier" prediction errors of Table 4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThermalSpec {
+    /// Fraction of throughput lost at full throttle (0 = no throttling).
+    pub throttle_frac: f64,
+    /// Seconds of sustained load to reach ~63% of full throttle.
+    pub heat_tau_s: f64,
+    /// Seconds of idle to recover ~63% of the lost clock.
+    pub cool_tau_s: f64,
+}
+
+impl ThermalSpec {
+    /// A device that never throttles (well-cooled server part).
+    pub const NONE: ThermalSpec = ThermalSpec {
+        throttle_frac: 0.0,
+        heat_tau_s: 1.0,
+        cool_tau_s: 1.0,
+    };
+}
+
+/// Full description of one device in a testbed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    /// Short unique id, e.g. `"xeon"`, `"2080ti-xpu"`.
+    pub name: String,
+    /// Device class.
+    pub kind: DeviceKind,
+    /// Marketing / spec-sheet model name (Table 1 row).
+    pub model: String,
+
+    // ---- simulator ground truth (hidden from the POAS pipeline) ----
+    /// Effective sustained GEMM throughput in Tera-ops/s, where one op is
+    /// one multiply-add (the paper's `ops = m*n*k` unit). This is the
+    /// *library-achieved* rate, not the spec-sheet peak.
+    pub eff_rate_tops: f64,
+    /// Fixed per-call overhead (library dispatch, kernel launch) seconds.
+    pub launch_overhead_s: f64,
+    /// Run-to-run multiplicative throughput noise (std-dev).
+    pub noise_sigma: f64,
+    /// Thermal throttling behaviour.
+    pub thermal: ThermalSpec,
+    /// Device memory capacity in GiB (0 = host memory, effectively inf).
+    pub mem_gib: f64,
+    /// Throughput multiplier applied when a workload's working set
+    /// exceeds `mem_gib` and the device must stream/chunk through host
+    /// memory (models the paper's standalone-GPU degradation on 30K-sized
+    /// inputs that barely fit an 11 GiB card).
+    pub oversub_penalty: f64,
+    /// Throughput multiplier when XPU inputs violate the tensor-core
+    /// alignment restriction (m % 8, k % 8) — cuBLAS falls back to the
+    /// non-tensor path (footnote 1 in the paper).
+    pub misalign_penalty: f64,
+    /// Asymptotic throughput *gain* for very large single GEMM calls
+    /// relative to the small cache-fit tiles the profiler measures
+    /// (`rate *= 1 + bonus * ops/(ops + knee)`). Models many-core CPUs
+    /// whose BLAS is launch/threading-bound on small tiles — this is why
+    /// the paper's standalone-EPYC speedup (~36x) is much smaller than
+    /// the inverse of its co-execution share (~1/1.1%). 0 = flat curve.
+    pub big_gemm_bonus: f64,
+    /// Half-saturation point of the bonus curve, in ops.
+    pub big_gemm_knee_ops: f64,
+
+    // ---- PCIe link (simulator ground truth; CPU has none) ----
+    /// Link bandwidth in GB/s (0 for the CPU — no copies needed).
+    pub bus_bw_gbs: f64,
+    /// Per-transfer latency in seconds.
+    pub bus_latency_s: f64,
+
+    // ---- energy model ----
+    /// Idle power draw in watts.
+    pub idle_w: f64,
+    /// Additional power draw while computing, watts.
+    pub active_w: f64,
+
+    // ---- adapt-phase constraints (paper §4.3.2) ----
+    /// Required alignment of m and k for full-rate operation (8 for
+    /// tensor cores, 1 otherwise).
+    pub align: u64,
+    /// Largest sub-matrix operation count that stays cache-resident on a
+    /// CPU (0 = unconstrained). The profiling menu and the adapt phase
+    /// both respect this bound.
+    pub cache_fit_ops: f64,
+
+    // ---- profiling menu (paper §5.1.3) ----
+    /// Smallest square profiling size.
+    pub profile_lo: u64,
+    /// Largest square profiling size.
+    pub profile_hi: u64,
+}
+
+impl DeviceSpec {
+    /// Sub-matrix decomposition bounds implied by the profiling menu: the
+    /// paper restricts sub-products to the op range covered by profiling.
+    pub fn submatrix_ops_range(&self) -> (f64, f64) {
+        let lo = self.profile_lo as f64;
+        let hi = self.profile_hi as f64;
+        (lo * lo * lo, hi * hi * hi)
+    }
+
+    /// Basic sanity validation.
+    pub fn validate(&self) -> Result<()> {
+        if self.eff_rate_tops <= 0.0 {
+            return Err(Error::Config(format!(
+                "device {}: eff_rate_tops must be > 0",
+                self.name
+            )));
+        }
+        if self.kind != DeviceKind::Cpu && self.bus_bw_gbs <= 0.0 {
+            return Err(Error::Config(format!(
+                "device {}: accelerators need bus_bw_gbs > 0",
+                self.name
+            )));
+        }
+        if self.profile_lo == 0 || self.profile_hi < self.profile_lo {
+            return Err(Error::Config(format!(
+                "device {}: bad profiling range [{}, {}]",
+                self.name, self.profile_lo, self.profile_hi
+            )));
+        }
+        if self.align == 0 {
+            return Err(Error::Config(format!(
+                "device {}: align must be >= 1",
+                self.name
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.thermal.throttle_frac) {
+            return Err(Error::Config(format!(
+                "device {}: throttle_frac must be in [0,1]",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A testbed: a named set of devices sharing one host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineConfig {
+    /// Machine id, e.g. `"mach1"`.
+    pub name: String,
+    /// Devices, CPU first by convention (not required).
+    pub devices: Vec<DeviceSpec>,
+}
+
+impl MachineConfig {
+    /// Validate the whole config.
+    pub fn validate(&self) -> Result<()> {
+        if self.devices.is_empty() {
+            return Err(Error::Config("machine has no devices".into()));
+        }
+        let mut names = std::collections::HashSet::new();
+        for d in &self.devices {
+            d.validate()?;
+            if !names.insert(d.name.clone()) {
+                return Err(Error::Config(format!("duplicate device name {}", d.name)));
+            }
+        }
+        Ok(())
+    }
+
+    /// Index of the first device of the given kind.
+    pub fn device_of_kind(&self, kind: DeviceKind) -> Option<usize> {
+        self.devices.iter().position(|d| d.kind == kind)
+    }
+
+    /// Load from a config file in the supported TOML subset.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        parser::parse_machine(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [DeviceKind::Cpu, DeviceKind::Gpu, DeviceKind::Xpu] {
+            assert_eq!(DeviceKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(DeviceKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn dtype_bytes_match_paper() {
+        assert_eq!(DeviceKind::Cpu.dtype_bytes(), 4);
+        assert_eq!(DeviceKind::Gpu.dtype_bytes(), 4);
+        assert_eq!(DeviceKind::Xpu.dtype_bytes(), 2);
+    }
+
+    #[test]
+    fn artifact_kind_mapping() {
+        assert_eq!(DeviceKind::Gpu.artifact_kind(), "f32");
+        assert_eq!(DeviceKind::Xpu.artifact_kind(), "bf16");
+    }
+
+    #[test]
+    fn presets_validate() {
+        presets::mach1().validate().unwrap();
+        presets::mach2().validate().unwrap();
+        presets::pjrt_local().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_rate() {
+        let mut m = presets::mach1();
+        m.devices[0].eff_rate_tops = 0.0;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_duplicate_names() {
+        let mut m = presets::mach1();
+        let dup = m.devices[0].clone();
+        m.devices.push(dup);
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_missing_bus() {
+        let mut m = presets::mach1();
+        let gpu = m.device_of_kind(DeviceKind::Gpu).unwrap();
+        m.devices[gpu].bus_bw_gbs = 0.0;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn submatrix_ops_range_is_cubic() {
+        let m = presets::mach1();
+        let cpu = &m.devices[m.device_of_kind(DeviceKind::Cpu).unwrap()];
+        let (lo, hi) = cpu.submatrix_ops_range();
+        assert_eq!(lo, (cpu.profile_lo as f64).powi(3));
+        assert_eq!(hi, (cpu.profile_hi as f64).powi(3));
+    }
+}

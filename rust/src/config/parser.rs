@@ -1,0 +1,323 @@
+//! Minimal TOML-subset parser for machine config files.
+//!
+//! Supported grammar (enough for testbed descriptions, nothing more):
+//!
+//! ```toml
+//! name = "mach1"
+//!
+//! [[device]]
+//! name = "xeon"
+//! kind = "cpu"
+//! model = "Intel Xeon E5-2603 v3"
+//! eff_rate_tops = 0.109
+//! thermal.throttle_frac = 0.0
+//! ...
+//! ```
+//!
+//! * top-level `key = value` pairs before the first table header;
+//! * `[[device]]` array-of-tables headers;
+//! * values: double-quoted strings, integers, floats;
+//! * `#` comments and blank lines.
+//!
+//! A matching [`serialize_machine`] writes configs back out, and the
+//! round-trip is property-tested.
+
+use super::{DeviceKind, DeviceSpec, MachineConfig, ThermalSpec};
+use crate::error::{Error, Result};
+
+/// One parsed `key = value` with the raw value token.
+#[derive(Debug, Clone)]
+enum Value {
+    Str(String),
+    Num(f64),
+}
+
+impl Value {
+    fn as_str(&self, key: &str) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            Value::Num(_) => Err(Error::Config(format!("key `{key}` must be a string"))),
+        }
+    }
+
+    fn as_f64(&self, key: &str) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            Value::Str(_) => Err(Error::Config(format!("key `{key}` must be a number"))),
+        }
+    }
+
+    fn as_u64(&self, key: &str) -> Result<u64> {
+        let n = self.as_f64(key)?;
+        if n < 0.0 || n.fract() != 0.0 {
+            return Err(Error::Config(format!(
+                "key `{key}` must be a non-negative integer, got {n}"
+            )));
+        }
+        Ok(n as u64)
+    }
+}
+
+fn parse_value(raw: &str, line_no: usize) -> Result<Value> {
+    let raw = raw.trim();
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| Error::Config(format!("line {line_no}: unterminated string")))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    raw.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| Error::Config(format!("line {line_no}: cannot parse value `{raw}`")))
+}
+
+/// Key-value map for one section, preserving dotted keys verbatim.
+type Section = Vec<(String, Value)>;
+
+fn get<'a>(sec: &'a Section, key: &str) -> Option<&'a Value> {
+    sec.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v)
+}
+
+fn req<'a>(sec: &'a Section, key: &str, what: &str) -> Result<&'a Value> {
+    get(sec, key).ok_or_else(|| Error::Config(format!("{what}: missing key `{key}`")))
+}
+
+fn num_or(sec: &Section, key: &str, default: f64) -> Result<f64> {
+    match get(sec, key) {
+        Some(v) => v.as_f64(key),
+        None => Ok(default),
+    }
+}
+
+fn build_device(sec: &Section) -> Result<DeviceSpec> {
+    let name = req(sec, "name", "device")?.as_str("name")?.to_string();
+    let what = format!("device {name}");
+    let kind = DeviceKind::parse(req(sec, "kind", &what)?.as_str("kind")?)?;
+    let is_xpu = kind == DeviceKind::Xpu;
+    let is_cpu = kind == DeviceKind::Cpu;
+    Ok(DeviceSpec {
+        model: match get(sec, "model") {
+            Some(v) => v.as_str("model")?.to_string(),
+            None => name.clone(),
+        },
+        eff_rate_tops: req(sec, "eff_rate_tops", &what)?.as_f64("eff_rate_tops")?,
+        launch_overhead_s: num_or(sec, "launch_overhead_s", 50e-6)?,
+        noise_sigma: num_or(sec, "noise_sigma", 0.02)?,
+        thermal: ThermalSpec {
+            throttle_frac: num_or(sec, "thermal.throttle_frac", 0.0)?,
+            heat_tau_s: num_or(sec, "thermal.heat_tau_s", 20.0)?,
+            cool_tau_s: num_or(sec, "thermal.cool_tau_s", 40.0)?,
+        },
+        mem_gib: num_or(sec, "mem_gib", 0.0)?,
+        oversub_penalty: num_or(sec, "oversub_penalty", 1.0)?,
+        misalign_penalty: num_or(sec, "misalign_penalty", if is_xpu { 0.55 } else { 1.0 })?,
+        big_gemm_bonus: num_or(sec, "big_gemm_bonus", 0.0)?,
+        big_gemm_knee_ops: num_or(sec, "big_gemm_knee_ops", 64.0e9)?,
+        bus_bw_gbs: num_or(sec, "bus_bw_gbs", 0.0)?,
+        bus_latency_s: num_or(sec, "bus_latency_s", 12e-6)?,
+        idle_w: num_or(sec, "idle_w", 20.0)?,
+        active_w: num_or(sec, "active_w", 150.0)?,
+        align: match get(sec, "align") {
+            Some(v) => v.as_u64("align")?,
+            None => {
+                if is_xpu {
+                    8
+                } else {
+                    1
+                }
+            }
+        },
+        cache_fit_ops: num_or(sec, "cache_fit_ops", 0.0)?,
+        profile_lo: match get(sec, "profile_lo") {
+            Some(v) => v.as_u64("profile_lo")?,
+            None => {
+                if is_cpu {
+                    1000
+                } else {
+                    3000
+                }
+            }
+        },
+        profile_hi: match get(sec, "profile_hi") {
+            Some(v) => v.as_u64("profile_hi")?,
+            None => {
+                if is_cpu {
+                    2000
+                } else {
+                    6000
+                }
+            }
+        },
+        name,
+        kind,
+    })
+}
+
+/// Parse a machine config from TOML-subset text.
+pub fn parse_machine(text: &str) -> Result<MachineConfig> {
+    // Two passes: first split the text into sections (index 0 = top
+    // level, one section per `[[device]]` header), then build the structs.
+    let mut sections: Vec<Section> = vec![Vec::new()];
+    let mut cur = 0usize;
+    for (i, raw_line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = match raw_line.find('#') {
+            // Only strip comments outside of strings — our values never
+            // contain `#`, so a simple check suffices: keep the `#` if it
+            // appears inside quotes.
+            Some(pos) if raw_line[..pos].matches('"').count() % 2 == 0 => &raw_line[..pos],
+            _ => raw_line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "[[device]]" {
+            sections.push(Vec::new());
+            cur = sections.len() - 1;
+            continue;
+        }
+        if line.starts_with('[') {
+            return Err(Error::Config(format!(
+                "line {line_no}: unsupported table header `{line}`"
+            )));
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| Error::Config(format!("line {line_no}: expected `key = value`")))?;
+        let key = line[..eq].trim().to_string();
+        let value = parse_value(&line[eq + 1..], line_no)?;
+        sections[cur].push((key, value));
+    }
+
+    let top = &sections[0];
+    let name = req(top, "name", "machine")?.as_str("name")?.to_string();
+    let mut devs = Vec::new();
+    for sec in &sections[1..] {
+        devs.push(build_device(sec)?);
+    }
+    let machine = MachineConfig {
+        name,
+        devices: devs,
+    };
+    machine.validate()?;
+    Ok(machine)
+}
+
+/// Serialize a machine config in the same TOML subset.
+pub fn serialize_machine(m: &MachineConfig) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("name = \"{}\"\n", m.name));
+    for d in &m.devices {
+        out.push_str("\n[[device]]\n");
+        out.push_str(&format!("name = \"{}\"\n", d.name));
+        out.push_str(&format!("kind = \"{}\"\n", d.kind.as_str()));
+        out.push_str(&format!("model = \"{}\"\n", d.model));
+        out.push_str(&format!("eff_rate_tops = {}\n", d.eff_rate_tops));
+        out.push_str(&format!("launch_overhead_s = {}\n", d.launch_overhead_s));
+        out.push_str(&format!("noise_sigma = {}\n", d.noise_sigma));
+        out.push_str(&format!(
+            "thermal.throttle_frac = {}\n",
+            d.thermal.throttle_frac
+        ));
+        out.push_str(&format!("thermal.heat_tau_s = {}\n", d.thermal.heat_tau_s));
+        out.push_str(&format!("thermal.cool_tau_s = {}\n", d.thermal.cool_tau_s));
+        out.push_str(&format!("mem_gib = {}\n", d.mem_gib));
+        out.push_str(&format!("oversub_penalty = {}\n", d.oversub_penalty));
+        out.push_str(&format!("misalign_penalty = {}\n", d.misalign_penalty));
+        out.push_str(&format!("big_gemm_bonus = {}\n", d.big_gemm_bonus));
+        out.push_str(&format!("big_gemm_knee_ops = {}\n", d.big_gemm_knee_ops));
+        out.push_str(&format!("bus_bw_gbs = {}\n", d.bus_bw_gbs));
+        out.push_str(&format!("bus_latency_s = {}\n", d.bus_latency_s));
+        out.push_str(&format!("idle_w = {}\n", d.idle_w));
+        out.push_str(&format!("active_w = {}\n", d.active_w));
+        out.push_str(&format!("align = {}\n", d.align));
+        out.push_str(&format!("cache_fit_ops = {}\n", d.cache_fit_ops));
+        out.push_str(&format!("profile_lo = {}\n", d.profile_lo));
+        out.push_str(&format!("profile_hi = {}\n", d.profile_hi));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn parse_minimal() {
+        let text = r#"
+            name = "tiny"
+            [[device]]
+            name = "c"
+            kind = "cpu"
+            eff_rate_tops = 0.1
+        "#;
+        let m = parse_machine(text).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.devices.len(), 1);
+        assert_eq!(m.devices[0].kind, DeviceKind::Cpu);
+        // defaults applied
+        assert_eq!(m.devices[0].profile_lo, 1000);
+        assert_eq!(m.devices[0].align, 1);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let text = "# header\nname = \"t\"  # trailing\n\n[[device]]\nname = \"c\"\nkind = \"cpu\"\neff_rate_tops = 1\n";
+        assert!(parse_machine(text).is_ok());
+    }
+
+    #[test]
+    fn roundtrip_presets() {
+        for m in [presets::mach1(), presets::mach2(), presets::pjrt_local()] {
+            let text = serialize_machine(&m);
+            let parsed = parse_machine(&text).unwrap();
+            assert_eq!(parsed, m, "round-trip mismatch for {}", m.name);
+        }
+    }
+
+    #[test]
+    fn missing_required_key_errors() {
+        let text = "name = \"t\"\n[[device]]\nname = \"c\"\nkind = \"cpu\"\n";
+        let err = parse_machine(text).unwrap_err();
+        assert!(err.to_string().contains("eff_rate_tops"));
+    }
+
+    #[test]
+    fn bad_kind_errors() {
+        let text = "name = \"t\"\n[[device]]\nname = \"c\"\nkind = \"dsp\"\neff_rate_tops = 1\n";
+        assert!(parse_machine(text).is_err());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let text = "name = 5\n";
+        assert!(parse_machine(text).is_err());
+        let text = "name = \"t\"\n[[device]]\nname = \"c\"\nkind = \"cpu\"\neff_rate_tops = \"fast\"\n";
+        assert!(parse_machine(text).is_err());
+    }
+
+    #[test]
+    fn unsupported_header_errors() {
+        let text = "name = \"t\"\n[device]\n";
+        assert!(parse_machine(text).is_err());
+    }
+
+    #[test]
+    fn unterminated_string_errors() {
+        assert!(parse_machine("name = \"t\n").is_err());
+    }
+
+    #[test]
+    fn last_duplicate_key_wins() {
+        let text = "name = \"a\"\nname = \"b\"\n[[device]]\nname = \"c\"\nkind = \"cpu\"\neff_rate_tops = 1\n";
+        assert_eq!(parse_machine(text).unwrap().name, "b");
+    }
+
+    #[test]
+    fn integer_fields_reject_fractions() {
+        let text = "name = \"t\"\n[[device]]\nname = \"c\"\nkind = \"cpu\"\neff_rate_tops = 1\nalign = 1.5\n";
+        assert!(parse_machine(text).is_err());
+    }
+}

@@ -1,0 +1,281 @@
+//! Baked testbed descriptions.
+//!
+//! `mach1` / `mach2` reproduce the paper's two HPC servers (Tables 1–2).
+//! The *spec-sheet* numbers (core counts, peak TFLOP/s, bus generation)
+//! come straight from Table 1; the *effective* throughputs are calibrated
+//! so that the simulated testbed reproduces the relative device speeds the
+//! paper measured (Tables 6–7) — see `EXPERIMENTS.md` §Calibration for the
+//! derivation. The POAS pipeline itself never reads these values: it
+//! re-discovers them by profiling.
+
+use super::{DeviceKind, DeviceSpec, MachineConfig, ThermalSpec};
+
+/// Convenience constructor with the fields every preset shares.
+#[allow(clippy::too_many_arguments)]
+fn dev(
+    name: &str,
+    kind: DeviceKind,
+    model: &str,
+    eff_rate_tops: f64,
+    bus_bw_gbs: f64,
+    mem_gib: f64,
+    thermal: ThermalSpec,
+    noise_sigma: f64,
+) -> DeviceSpec {
+    let is_cpu = kind == DeviceKind::Cpu;
+    DeviceSpec {
+        name: name.to_string(),
+        kind,
+        model: model.to_string(),
+        eff_rate_tops,
+        launch_overhead_s: if is_cpu { 20e-6 } else { 60e-6 },
+        noise_sigma,
+        thermal,
+        mem_gib,
+        // Working sets past ~80% of device memory force chunked streaming
+        // through host memory; throughput drops to ~60%.
+        oversub_penalty: 0.62,
+        // cuBLAS without tensor-core eligibility (footnote 1).
+        misalign_penalty: if kind == DeviceKind::Xpu { 0.55 } else { 1.0 },
+        big_gemm_bonus: 0.0,
+        big_gemm_knee_ops: 64.0e9, // ~4000^3
+
+        bus_bw_gbs,
+        bus_latency_s: 12e-6,
+        idle_w: if is_cpu { 25.0 } else { 18.0 },
+        active_w: match kind {
+            DeviceKind::Cpu => 70.0,
+            DeviceKind::Gpu => 240.0,
+            DeviceKind::Xpu => 255.0,
+        },
+        align: if kind == DeviceKind::Xpu { 8 } else { 1 },
+        cache_fit_ops: if is_cpu { 8.0e9 } else { 0.0 }, // 2000^3, §5.1.3
+        profile_lo: if is_cpu { 1000 } else { 3000 },
+        profile_hi: if is_cpu { 2000 } else { 6000 },
+    }
+}
+
+/// `mach1`: Intel Xeon E5-2603 v3 (6C Haswell) + RTX 2080 Ti as GPU +
+/// RTX 2080 Ti as XPU, PCIe 3.0 x16 (15.75 GB/s). Poor chassis cooling:
+/// the paper attributes mach1's larger prediction errors to clock
+/// down-scaling under sustained load (§5.2), modelled here as thermal
+/// throttling on both accelerators.
+pub fn mach1() -> MachineConfig {
+    let hot = ThermalSpec {
+        throttle_frac: 0.11,
+        heat_tau_s: 18.0,
+        cool_tau_s: 45.0,
+    };
+    MachineConfig {
+        name: "mach1".to_string(),
+        devices: vec![
+            // 0.307 TFLOP/s FP32 peak, 5 of 6 cores usable (one reserved
+            // to drive the accelerators, §5.1.1), MKL ~85% efficiency:
+            // 0.307/2 * 5/6 * 0.85 ≈ 0.109 Tera-madd/s.
+            dev(
+                "xeon",
+                DeviceKind::Cpu,
+                "Intel Xeon E5-2603 v3",
+                0.109,
+                0.0,
+                0.0,
+                ThermalSpec::NONE,
+                0.020,
+            ),
+            // 13.45 TFLOP/s FP32 peak; cuBLAS SGEMM ~83% -> 5.6 T-madd/s.
+            dev(
+                "2080ti-gpu",
+                DeviceKind::Gpu,
+                "NVIDIA RTX 2080 Ti (CUDA cores)",
+                5.6,
+                15.75,
+                11.0,
+                hot,
+                0.025,
+            ),
+            // 107.5 TFLOP/s FP16 tensor peak; achieved HGEMM throughput on
+            // Turing is far below peak (~40%) -> 21.5 T-madd/s.
+            dev(
+                "2080ti-xpu",
+                DeviceKind::Xpu,
+                "NVIDIA RTX 2080 Ti (tensor cores)",
+                21.5,
+                15.75,
+                11.0,
+                hot,
+                0.030,
+            ),
+        ],
+    }
+}
+
+/// `mach2`: AMD EPYC 7413 (24C Zen 3) + RTX 3090 as GPU + RTX 2080 Ti as
+/// XPU. GPU on PCIe 4.0 x16 (31.75 GB/s); the 2080 Ti only links at 3.0
+/// speed (15.75 GB/s) even in the 4.0 slot (§5.1.1). Well-cooled chassis.
+pub fn mach2() -> MachineConfig {
+    MachineConfig {
+        name: "mach2".to_string(),
+        devices: vec![
+            // 2.76 TFLOP/s FP32 peak on 24C; 23 usable. BLIS on small
+            // cache-fit tiles sustains ~0.60 T-madd/s (the profiled rate);
+            // monolithic huge GEMMs stream better (big_gemm curve in the
+            // simulator) which is why the paper's standalone-CPU speedup
+            // (~36x) is below the inverse CPU share (~1/1.1%).
+            {
+                let mut d = dev(
+                    "epyc",
+                    DeviceKind::Cpu,
+                    "AMD EPYC 7413",
+                    0.60,
+                    0.0,
+                    0.0,
+                    ThermalSpec::NONE,
+                    0.012,
+                );
+                // 24C Zen3 BLIS is threading-bound on cache-fit tiles;
+                // monolithic huge GEMMs (the standalone baseline's single
+                // library call) reach ~1.4x the profiled rate. The knee
+                // sits far above the profiling range so the Predict
+                // phase's linear model stays valid on scheduled tiles.
+                d.big_gemm_bonus = 0.4;
+                d.big_gemm_knee_ops = 1.0e12;
+                d
+            },
+            // 35.58 TFLOP/s FP32 peak; cuBLAS SGEMM on Ampere sustains
+            // ~92% on large tiles -> 16.4 T-madd/s.
+            dev(
+                "3090-gpu",
+                DeviceKind::Gpu,
+                "NVIDIA RTX 3090 (CUDA cores)",
+                16.4,
+                31.75,
+                24.0,
+                ThermalSpec {
+                    throttle_frac: 0.045,
+                    heat_tau_s: 25.0,
+                    cool_tau_s: 40.0,
+                },
+                0.018,
+            ),
+            // Same silicon as mach1's XPU but properly cooled: sustains
+            // ~38 T-madd/s (71% of FP16 tensor peak).
+            dev(
+                "2080ti-xpu",
+                DeviceKind::Xpu,
+                "NVIDIA RTX 2080 Ti (tensor cores)",
+                38.0,
+                15.75,
+                11.0,
+                ThermalSpec {
+                    throttle_frac: 0.075,
+                    heat_tau_s: 22.0,
+                    cool_tau_s: 40.0,
+                },
+                0.022,
+            ),
+        ],
+    }
+}
+
+/// A local PJRT testbed for the real-execution path: three "devices"
+/// backed by the host CPU running the AOT artifacts (f32 artifacts for
+/// cpu/gpu, bf16 for xpu). Rates are placeholders — the e2e examples
+/// profile the PJRT executables live, exactly like the simulated flow.
+pub fn pjrt_local() -> MachineConfig {
+    let mk = |name: &str, kind, model: &str| DeviceSpec {
+        // PJRT-interpret GEMM on this host is in the GFLOP/s range.
+        eff_rate_tops: 0.001,
+        launch_overhead_s: 1e-4,
+        noise_sigma: 0.05,
+        thermal: ThermalSpec::NONE,
+        mem_gib: 0.0,
+        oversub_penalty: 1.0,
+        misalign_penalty: 1.0,
+        big_gemm_bonus: 0.0,
+        big_gemm_knee_ops: 64.0e9,
+        // "Copies" are host memcpys; treat as a fast virtual link.
+        bus_bw_gbs: if kind == DeviceKind::Cpu { 0.0 } else { 8.0 },
+        bus_latency_s: 5e-6,
+        idle_w: 5.0,
+        active_w: 30.0,
+        align: if kind == DeviceKind::Xpu { 8 } else { 1 },
+        cache_fit_ops: 0.0,
+        // Tile menu sizes are the profiling menu on the real path.
+        profile_lo: 64,
+        profile_hi: 256,
+        name: name.to_string(),
+        kind,
+        model: model.to_string(),
+    };
+    MachineConfig {
+        name: "pjrt-local".to_string(),
+        devices: vec![
+            mk("pjrt-cpu", DeviceKind::Cpu, "PJRT CPU (f32 artifacts)"),
+            mk("pjrt-gpu", DeviceKind::Gpu, "PJRT CPU (f32 artifacts)"),
+            mk("pjrt-xpu", DeviceKind::Xpu, "PJRT CPU (bf16 artifacts)"),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mach1_matches_table1_structure() {
+        let m = mach1();
+        assert_eq!(m.devices.len(), 3);
+        assert_eq!(m.devices[0].kind, DeviceKind::Cpu);
+        assert_eq!(m.devices[1].kind, DeviceKind::Gpu);
+        assert_eq!(m.devices[2].kind, DeviceKind::Xpu);
+        // PCIe 3.0 on both accelerators.
+        assert_eq!(m.devices[1].bus_bw_gbs, 15.75);
+        assert_eq!(m.devices[2].bus_bw_gbs, 15.75);
+    }
+
+    #[test]
+    fn mach2_bus_generations() {
+        let m = mach2();
+        assert_eq!(m.devices[1].bus_bw_gbs, 31.75); // 3090 on PCIe 4.0
+        assert_eq!(m.devices[2].bus_bw_gbs, 15.75); // 2080 Ti capped at 3.0
+    }
+
+    #[test]
+    fn device_speed_ordering_xpu_gt_gpu_gt_cpu() {
+        for m in [mach1(), mach2()] {
+            let r = |k| m.devices[m.device_of_kind(k).unwrap()].eff_rate_tops;
+            assert!(r(DeviceKind::Xpu) > r(DeviceKind::Gpu));
+            assert!(r(DeviceKind::Gpu) > r(DeviceKind::Cpu));
+        }
+    }
+
+    #[test]
+    fn mach1_is_thermally_worse_than_mach2() {
+        let t1 = mach1().devices[2].thermal.throttle_frac;
+        let t2 = mach2().devices[2].thermal.throttle_frac;
+        assert!(t1 > t2);
+    }
+
+    #[test]
+    fn xpu_alignment_rule() {
+        for m in [mach1(), mach2(), pjrt_local()] {
+            for d in &m.devices {
+                if d.kind == DeviceKind::Xpu {
+                    assert_eq!(d.align, 8);
+                } else {
+                    assert_eq!(d.align, 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_profiling_range_is_cache_fit() {
+        for m in [mach1(), mach2()] {
+            let cpu = &m.devices[m.device_of_kind(DeviceKind::Cpu).unwrap()];
+            assert_eq!((cpu.profile_lo, cpu.profile_hi), (1000, 2000));
+            let (_, hi) = cpu.submatrix_ops_range();
+            assert!(hi <= cpu.cache_fit_ops);
+        }
+    }
+}

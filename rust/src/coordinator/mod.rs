@@ -1,0 +1,15 @@
+//! The coordinator: end-to-end POAS pipelines.
+//!
+//! * [`pipeline`] — the simulated-testbed pipeline (profile → plan →
+//!   execute on [`crate::sim::SimMachine`]): what every paper-table
+//!   regenerator drives;
+//! * [`pjrt`] — the real-execution pipeline: profile the PJRT
+//!   executables, plan with the same POAS code, then co-execute the GEMM
+//!   with one worker thread per "device", each running its row band
+//!   through the AOT artifacts, and assemble + verify C.
+
+pub mod pipeline;
+pub mod pjrt;
+
+pub use pipeline::{Pipeline, RunResult};
+pub use pjrt::{PjrtCoordinator, PjrtRun};

@@ -1,0 +1,173 @@
+//! Simulated-testbed pipeline: the four POAS phases against a
+//! [`SimMachine`].
+//!
+//! This is the driver used by the evaluation regenerators: it profiles
+//! the simulated machine exactly once (the paper profiles at installation
+//! time, §4.1.2), then plans and executes workloads on demand, optionally
+//! with the dynamic scheduler in the loop.
+
+use crate::config::MachineConfig;
+use crate::error::Result;
+use crate::predict::{profile, PerfModel, ProfileOptions};
+use crate::schedule::{
+    build_plan, static_sched::rules_from_config, DynamicScheduler, PlanOptions, SchedulePlan,
+};
+use crate::adapt::AdaptRules;
+use crate::sim::{ExecOutcome, SimMachine};
+use crate::workload::GemmSize;
+
+/// Outcome of one pipeline run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// The schedule that was executed.
+    pub plan: SchedulePlan,
+    /// Simulator outcome.
+    pub exec: ExecOutcome,
+    /// Convenience copy of `exec.makespan` (seconds, all repetitions).
+    pub makespan: f64,
+}
+
+/// A POAS pipeline bound to a simulated machine.
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    /// The machine being driven.
+    pub sim: SimMachine,
+    /// The fitted model (Predict output).
+    pub model: PerfModel,
+    /// Adapt-phase rules per device.
+    pub rules: Vec<AdaptRules>,
+    /// Plan construction options.
+    pub opts: PlanOptions,
+}
+
+impl Pipeline {
+    /// Build a pipeline for a simulated machine: constructs the
+    /// simulator with `seed` and runs the installation-time profiling.
+    pub fn for_simulated_machine(cfg: &MachineConfig, seed: u64) -> Self {
+        Self::with_options(cfg, seed, &ProfileOptions::default(), PlanOptions::default())
+    }
+
+    /// Full-control constructor.
+    pub fn with_options(
+        cfg: &MachineConfig,
+        seed: u64,
+        prof: &ProfileOptions,
+        opts: PlanOptions,
+    ) -> Self {
+        let mut sim = SimMachine::new(cfg, seed);
+        let model = profile(&mut sim, prof).expect("profiling a valid machine cannot fail");
+        // Paper: experiments run after profiling with the machine idle.
+        sim.rest(120.0);
+        let rules = rules_from_config(cfg);
+        Pipeline {
+            sim,
+            model,
+            rules,
+            opts,
+        }
+    }
+
+    /// Plan a workload (static scheduling, §3.4.1).
+    pub fn plan(&self, size: GemmSize) -> Result<SchedulePlan> {
+        build_plan(&self.model, size, &self.rules, &self.opts)
+    }
+
+    /// Plan + execute `reps` repetitions on the simulated machine.
+    pub fn run_sim(&mut self, size: GemmSize, reps: u32) -> RunResult {
+        let plan = self.plan(size).expect("planning failed");
+        let exec = self.sim.execute(&plan.to_work_order(reps));
+        RunResult {
+            makespan: exec.makespan,
+            plan,
+            exec,
+        }
+    }
+
+    /// Run with the dynamic scheduler (§3.4.2): execute `rounds`
+    /// consecutive workloads, refreshing the model from observations and
+    /// re-planning when it drifts. Returns per-round results and the
+    /// scheduler state.
+    pub fn run_sim_dynamic(
+        &mut self,
+        size: GemmSize,
+        reps: u32,
+        rounds: usize,
+    ) -> (Vec<RunResult>, DynamicScheduler) {
+        let mut dynsched = DynamicScheduler::new(self.model.clone());
+        let mut plan = dynsched
+            .plan(size, &self.rules, &self.opts)
+            .expect("planning failed");
+        let mut results = Vec::with_capacity(rounds);
+        for _ in 0..rounds {
+            let exec = self.sim.execute(&plan.to_work_order(reps));
+            let replan = dynsched.observe(&plan, &exec, reps);
+            results.push(RunResult {
+                makespan: exec.makespan,
+                plan: plan.clone(),
+                exec,
+            });
+            if replan {
+                plan = dynsched
+                    .plan(size, &self.rules, &self.opts)
+                    .expect("re-planning failed");
+            }
+        }
+        (results, dynsched)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn pipeline_end_to_end_mach1() {
+        let cfg = presets::mach1();
+        let mut p = Pipeline::for_simulated_machine(&cfg, 42);
+        let r = p.run_sim(GemmSize::square(30_000), 5);
+        assert!(r.makespan > 0.0);
+        assert_eq!(r.plan.active_devices(), 3);
+        // XPU dominates the split.
+        let shares = r.plan.shares();
+        assert!(shares[2] > 0.6);
+    }
+
+    #[test]
+    fn coexecution_beats_standalone_xpu() {
+        let cfg = presets::mach2();
+        let mut p = Pipeline::for_simulated_machine(&cfg, 7);
+        let size = GemmSize::square(30_000);
+        let reps = 10;
+        let co = p.run_sim(size, reps).makespan;
+        let alone = crate::baselines::standalone(&mut p.sim, 2, size, reps).makespan;
+        let speedup = alone / co;
+        assert!(
+            speedup > 1.05 && speedup < 2.0,
+            "speedup vs XPU = {speedup}"
+        );
+    }
+
+    #[test]
+    fn dynamic_run_produces_rounds() {
+        let cfg = presets::mach1();
+        let mut p = Pipeline::for_simulated_machine(&cfg, 3);
+        let (results, dynsched) = p.run_sim_dynamic(GemmSize::square(30_000), 20, 4);
+        assert_eq!(results.len(), 4);
+        // mach1 throttles -> at least one replan.
+        assert!(dynsched.replans >= 1);
+    }
+
+    #[test]
+    fn different_seeds_different_noise() {
+        let cfg = presets::mach1();
+        let mut a = Pipeline::for_simulated_machine(&cfg, 1);
+        let mut b = Pipeline::for_simulated_machine(&cfg, 2);
+        let size = GemmSize::square(20_000);
+        let ra = a.run_sim(size, 3).makespan;
+        let rb = b.run_sim(size, 3).makespan;
+        assert_ne!(ra, rb);
+        // ... but close (same machine).
+        assert!((ra - rb).abs() / ra < 0.1);
+    }
+}

@@ -1,0 +1,80 @@
+//! Library-wide error type.
+//!
+//! The library keeps a small hand-rolled error enum (no `thiserror`
+//! dependency); binaries and examples wrap it in `eyre` for reporting.
+
+use std::fmt;
+
+/// Errors produced by the POAS library.
+#[derive(Debug)]
+pub enum Error {
+    /// Configuration file/preset problems (parse errors, missing keys...).
+    Config(String),
+    /// The optimizer could not produce a feasible work split.
+    Infeasible(String),
+    /// The LP/MILP is unbounded (a modelling bug by construction).
+    Unbounded(String),
+    /// Profiling or prediction failed (degenerate regression, bad ranges).
+    Predict(String),
+    /// The adapt phase could not map ops onto matrix dimensions.
+    Adapt(String),
+    /// PJRT runtime failures (artifact missing, compile/execute errors).
+    Runtime(String),
+    /// Workload / matrix shape errors.
+    Workload(String),
+    /// Underlying I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Infeasible(m) => write!(f, "infeasible problem: {m}"),
+            Error::Unbounded(m) => write!(f, "unbounded problem: {m}"),
+            Error::Predict(m) => write!(f, "prediction error: {m}"),
+            Error::Adapt(m) => write!(f, "adapt error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Workload(m) => write!(f, "workload error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Convenience alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = Error::Infeasible("sum c_i = N unsatisfiable".into());
+        assert!(e.to_string().contains("infeasible"));
+        assert!(e.to_string().contains("unsatisfiable"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

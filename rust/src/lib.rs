@@ -1,0 +1,78 @@
+//! # poas — POAS (Predict, Optimize, Adapt, Schedule) for Accelerator Level Parallelism
+//!
+//! Reproduction of *"POAS: A high-performance scheduling framework for
+//! exploiting Accelerator Level Parallelism"* (Martínez, Bernabé, García —
+//! PACT 2022), including the paper's **hgemms** case study: co-executing a
+//! single large GEMM across a CPU, a GPU (FP32) and an XPU (tensor-core /
+//! low-precision) sharing one PCIe bus.
+//!
+//! The library is organised around the paper's four phases:
+//!
+//! 1. [`predict`] — hardware profiling (compute power + memory bandwidth
+//!    microbenchmarks) and a linear-regression performance model that maps
+//!    an operation count to execution time (paper §3.1, §4.1).
+//! 2. [`optimize`] — a from-scratch simplex / branch-and-bound MILP solver
+//!    (substituting the paper's CPLEX 12.10) and the minimax work-split
+//!    formulation of Eq. 1–4, including serialized shared-bus copy terms
+//!    (paper §3.2, §4.2).
+//! 3. [`adapt`] — the `ops_to_mnk` algorithm: ops → (m, n, k) mapping, the
+//!    square-submatrix decomposition driven by the squareness heuristic of
+//!    Eq. 5, and the hardware alignment rules (tensor-core `m % 8 == 0`,
+//!    CPU cache-fit) (paper §3.3, §4.3).
+//! 4. [`schedule`] — static and dynamic schedulers plus the priority-ordered
+//!    shared-bus communication scheme of Fig. 2 (paper §3.4, §4.4).
+//!
+//! Everything the paper's evaluation depends on is built here as well:
+//!
+//! * [`sim`] — a virtual-time heterogeneous testbed simulator (device
+//!   performance curves with noise + thermal throttling, a shared PCIe bus
+//!   with pluggable arbitration, an energy model). The paper ran on two HPC
+//!   servers (`mach1`, `mach2`, Tables 1–2); we do not own that hardware, so
+//!   the simulator plays its role and the POAS pipeline *profiles it* exactly
+//!   as the paper profiled cuBLAS/MKL (see `DESIGN.md` §Hardware-Adaptation).
+//! * [`runtime`] — the real compute path: AOT-compiled HLO artifacts
+//!   (JAX/Pallas tiled GEMM kernels, lowered at build time) loaded and
+//!   executed through the PJRT CPU client from Rust. Python never runs on
+//!   the request path.
+//! * [`coordinator`] — the end-to-end pipeline gluing the four phases to an
+//!   executor (simulated or PJRT) and assembling the output matrix.
+//! * [`baselines`] — standalone single-device execution and the co-execution
+//!   baselines POAS is compared against (equal split, ratio split,
+//!   queue-based work stealing à la HPMaX).
+//! * [`workload`], [`config`], [`metrics`], [`report`] — Table 3 inputs,
+//!   machine descriptions, statistics and table/figure rendering.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use poas::config::presets;
+//! use poas::coordinator::Pipeline;
+//! use poas::workload::GemmSize;
+//!
+//! // Simulated mach2 (AMD EPYC 7413 + RTX 3090 + RTX 2080 Ti) testbed.
+//! let machine = presets::mach2();
+//! let mut pipeline = Pipeline::for_simulated_machine(&machine, 42);
+//! let outcome = pipeline.run_sim(GemmSize::new(30_000, 30_000, 30_000), 50);
+//! println!("simulated co-executed GEMM finished in {:.3}s", outcome.makespan);
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers (including real PJRT
+//! co-execution with numerics checks) and `rust/benches/` for the
+//! regenerators of every table and figure in the paper's evaluation.
+
+pub mod adapt;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod metrics;
+pub mod optimize;
+pub mod predict;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,312 @@
+//! `poas` — CLI for the POAS/hgemms reproduction.
+//!
+//! Subcommands:
+//!
+//! * `info` — testbed presets and artifact menu;
+//! * `profile` — run the Predict phase on a simulated machine and print
+//!   (or save) the fitted performance model;
+//! * `plan` — profile + optimize + adapt a workload and print the split;
+//! * `run` — full simulated co-execution, with standalone baselines;
+//! * `pjrt` — real co-execution of a small GEMM through the AOT
+//!   artifacts, with verification;
+//! * `bus` — the Fig. 2 predicted bus timeline.
+//!
+//! Argument parsing is hand-rolled (the offline build has no clap); see
+//! `Args` below.
+
+use poas::baselines;
+use poas::config::{presets, MachineConfig};
+use poas::coordinator::{Pipeline, PjrtCoordinator};
+use poas::report::{pct, secs, times, Table};
+use poas::runtime::ArtifactManifest;
+use poas::schedule::comm::{predicted_timeline, render_ascii};
+use poas::workload::{GemmSize, Matrix};
+
+/// Tiny argument cursor: positional subcommand + `--key value` flags.
+struct Args {
+    flags: Vec<(String, String)>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = if it.peek().map(|v| !v.starts_with("--")).unwrap_or(false) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                flags.push((key.to_string(), val));
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn machine(&self) -> MachineConfig {
+        match self.flag("machine").unwrap_or("mach1") {
+            "mach1" => presets::mach1(),
+            "mach2" => presets::mach2(),
+            path => MachineConfig::from_file(std::path::Path::new(path))
+                .unwrap_or_else(|e| die(&format!("cannot load machine config `{path}`: {e}"))),
+        }
+    }
+
+    fn size(&self) -> GemmSize {
+        let parse = |k: &str, d: u64| {
+            self.flag(k)
+                .map(|v| v.parse().unwrap_or_else(|_| die(&format!("bad --{k}"))))
+                .unwrap_or(d)
+        };
+        GemmSize::new(parse("m", 30_000), parse("n", 30_000), parse("k", 30_000))
+    }
+
+    fn reps(&self) -> u32 {
+        self.flag("reps")
+            .map(|v| v.parse().unwrap_or_else(|_| die("bad --reps")))
+            .unwrap_or(50)
+    }
+
+    fn seed(&self) -> u64 {
+        self.flag("seed")
+            .map(|v| v.parse().unwrap_or_else(|_| die("bad --seed")))
+            .unwrap_or(0)
+    }
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2);
+}
+
+const USAGE: &str = "\
+poas — POAS (Predict, Optimize, Adapt, Schedule) reproduction
+
+USAGE: poas <command> [--machine mach1|mach2|<config.toml>] [flags]
+
+COMMANDS:
+  info                       testbed presets + artifact menu
+  profile [--save FILE]      run the Predict phase, print the fitted model
+  plan    [--m --n --k]      print the optimized work split for a GEMM
+  run     [--m --n --k --reps --seed]
+                             simulated co-execution + standalone baselines
+  pjrt    [--m --n --k]      real co-execution through the AOT artifacts
+  bus     [--m --n --k]      predicted Fig.2 bus timeline (ASCII)
+  suit    [--m --n --k --min-gain]
+                             co-execution suitability + crossover size
+";
+
+fn main() {
+    let args = Args::parse();
+    match args.positional.first().map(String::as_str) {
+        Some("info") => cmd_info(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("run") => cmd_run(&args),
+        Some("pjrt") => cmd_pjrt(&args),
+        Some("bus") => cmd_bus(&args),
+        Some("suit") => cmd_suit(&args),
+        _ => print!("{USAGE}"),
+    }
+}
+
+fn cmd_info(args: &Args) {
+    let cfg = args.machine();
+    let mut t = Table::new(
+        &format!("machine `{}` (Table 1/2 analogue)", cfg.name),
+        &["device", "kind", "model", "eff TOps", "bus GB/s", "mem GiB"],
+    );
+    for d in &cfg.devices {
+        t.row(&[
+            d.name.clone(),
+            d.kind.as_str().to_string(),
+            d.model.clone(),
+            format!("{:.3}", d.eff_rate_tops),
+            format!("{:.2}", d.bus_bw_gbs),
+            format!("{:.0}", d.mem_gib),
+        ]);
+    }
+    t.print();
+    match ArtifactManifest::load(&ArtifactManifest::default_dir()) {
+        Ok(m) => {
+            println!(
+                "\nartifacts: {} entries in {}",
+                m.entries.len(),
+                m.dir.display()
+            );
+            for kind in ["f32", "bf16", "acc_f32", "acc_bf16"] {
+                println!("  {kind}: tiles {:?}", m.tile_menu(kind));
+            }
+        }
+        Err(e) => println!("\nartifacts: unavailable ({e})"),
+    }
+}
+
+fn cmd_profile(args: &Args) {
+    let cfg = args.machine();
+    let p = Pipeline::for_simulated_machine(&cfg, args.seed());
+    print!("{}", p.model.to_text());
+    if let Some(path) = args.flag("save") {
+        p.model
+            .save(std::path::Path::new(path))
+            .unwrap_or_else(|e| die(&e.to_string()));
+        eprintln!("saved to {path}");
+    }
+}
+
+fn cmd_plan(args: &Args) {
+    let cfg = args.machine();
+    let p = Pipeline::for_simulated_machine(&cfg, args.seed());
+    let size = args.size();
+    let plan = p.plan(size).unwrap_or_else(|e| die(&e.to_string()));
+    let mut t = Table::new(
+        &format!("plan for {size} on {}", cfg.name),
+        &["device", "share", "rows", "tiles", "pred compute", "pred copy"],
+    );
+    for (i, a) in plan.assignments.iter().enumerate() {
+        t.row(&[
+            p.model.devices[i].name.clone(),
+            pct(plan.shares()[i]),
+            a.rows.to_string(),
+            a.subproducts.len().to_string(),
+            secs(plan.predicted.compute_pred[i]),
+            secs(plan.predicted.copy_pred[i]),
+        ]);
+    }
+    t.print();
+    println!("predicted makespan/rep: {}", secs(plan.predicted_makespan()));
+}
+
+fn cmd_run(args: &Args) {
+    let cfg = args.machine();
+    let mut p = Pipeline::for_simulated_machine(&cfg, args.seed());
+    let size = args.size();
+    let reps = args.reps();
+    let r = p.run_sim(size, reps);
+    let mut t = Table::new(
+        &format!("co-execution of {size} x{reps} on {}", cfg.name),
+        &["device", "share", "compute", "copy", "bus wait", "finish"],
+    );
+    for (i, tl) in r.exec.timelines.iter().enumerate() {
+        t.row(&[
+            p.model.devices[i].name.clone(),
+            pct(r.plan.shares()[i]),
+            secs(tl.compute_s),
+            secs(tl.copy_s()),
+            secs(tl.bus_wait_s),
+            secs(tl.finish),
+        ]);
+    }
+    t.print();
+    println!(
+        "makespan {}   energy {:.1} kJ   avg power {:.0} W",
+        secs(r.makespan),
+        r.exec.energy.total_j / 1e3,
+        r.exec.energy.avg_power_w()
+    );
+    // Standalone baselines (Table 7 comparison).
+    let mut t = Table::new("speedup vs standalone", &["device", "standalone", "speedup"]);
+    for dev in 0..cfg.devices.len() {
+        let alone = baselines::standalone(&mut p.sim, dev, size, reps).makespan;
+        t.row(&[
+            p.model.devices[dev].name.clone(),
+            secs(alone),
+            times(alone / r.makespan),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_pjrt(args: &Args) {
+    let dir = ArtifactManifest::default_dir();
+    let coord = PjrtCoordinator::new(&dir, None).unwrap_or_else(|e| die(&e.to_string()));
+    let m = args.flag("m").map(|v| v.parse().unwrap()).unwrap_or(256usize);
+    let n = args.flag("n").map(|v| v.parse().unwrap()).unwrap_or(192usize);
+    let k = args.flag("k").map(|v| v.parse().unwrap()).unwrap_or(224usize);
+    let mut rng = poas::rng::Rng::new(args.seed());
+    let a = Matrix::random(m, k, &mut rng);
+    let b = Matrix::random(k, n, &mut rng);
+    println!("co-executing {m}x{n}x{k} through PJRT artifacts...");
+    let run = coord.run(&a, &b, true).unwrap_or_else(|e| die(&e.to_string()));
+    let mut t = Table::new("real co-execution", &["device", "rows", "tiles", "compute"]);
+    for d in &run.devices {
+        t.row(&[
+            d.name.clone(),
+            d.rows.to_string(),
+            d.tiles.to_string(),
+            secs(d.compute_s),
+        ]);
+    }
+    t.print();
+    println!(
+        "makespan {}   verification rel err {:.2e}",
+        secs(run.makespan_s),
+        run.verify_rel_err.unwrap()
+    );
+}
+
+fn cmd_suit(args: &Args) {
+    use poas::schedule::suitability::{coexec_crossover, recommend, Recommendation};
+    let cfg = args.machine();
+    let p = Pipeline::for_simulated_machine(&cfg, args.seed());
+    let size = args.size();
+    let min_gain: f64 = args
+        .flag("min-gain")
+        .map(|v| v.parse().unwrap_or_else(|_| die("bad --min-gain")))
+        .unwrap_or(1.05);
+    match recommend(&p.model, size, min_gain, 20e-6) {
+        Recommendation::CoExecute {
+            t_coexec,
+            t_best_single,
+            best_device,
+            gain,
+        } => println!(
+            "{size} on {}: CO-EXECUTE — predicted {} vs best single ({}) {}, gain {}",
+            cfg.name,
+            secs(t_coexec),
+            p.model.devices[best_device].name,
+            secs(t_best_single),
+            times(gain)
+        ),
+        Recommendation::Standalone {
+            device,
+            t_single,
+            t_coexec,
+        } => println!(
+            "{size} on {}: STANDALONE on {} — {} beats co-execution ({})",
+            cfg.name,
+            p.model.devices[device].name,
+            secs(t_single),
+            secs(t_coexec)
+        ),
+    }
+    let cross = coexec_crossover(&p.model, min_gain, 20e-6);
+    println!(
+        "co-execution crossover (square GEMM, gain >= {times_g}): ~{cross}^3",
+        times_g = times(min_gain)
+    );
+}
+
+fn cmd_bus(args: &Args) {
+    let cfg = args.machine();
+    let p = Pipeline::for_simulated_machine(&cfg, args.seed());
+    let size = args.size();
+    let plan = p.plan(size).unwrap_or_else(|e| die(&e.to_string()));
+    let tl = predicted_timeline(&plan, &p.model);
+    let names: Vec<String> = p.model.devices.iter().map(|d| d.name.clone()).collect();
+    println!("predicted Fig.2 timeline for {size} on {} (one repetition):\n", cfg.name);
+    print!("{}", render_ascii(&tl, &names, 72));
+}

@@ -1,0 +1,124 @@
+//! Statistics used across the evaluation: relative error, RMSE, speedup.
+//!
+//! These implement exactly the paper's §5.2 definitions: the prediction
+//! error `e = 100 * (v - v_pred) / v` (relative, in percent) and the
+//! root-mean-square error over a set of inputs.
+
+/// The paper's relative prediction error, percent:
+/// `e = 100 * (v - v_pred) / v`. The paper's tables report magnitudes,
+/// so callers usually take `.abs()`.
+pub fn prediction_error_pct(measured: f64, predicted: f64) -> f64 {
+    if measured == 0.0 {
+        return if predicted == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    100.0 * (measured - predicted) / measured
+}
+
+/// RMSE of a set of (already percentual) errors — Table 5 aggregates the
+/// per-input errors of Table 4 this way.
+pub fn rmse(errors: &[f64]) -> f64 {
+    if errors.is_empty() {
+        return 0.0;
+    }
+    (errors.iter().map(|e| e * e).sum::<f64>() / errors.len() as f64).sqrt()
+}
+
+/// Speedup of `ours` relative to `baseline` (Table 7: baseline time /
+/// hgemms time).
+pub fn speedup(baseline_s: f64, ours_s: f64) -> f64 {
+    baseline_s / ours_s
+}
+
+/// Sample mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (population).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Geometric mean (used for speedup summaries).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// A simple wall-clock stopwatch for the real execution path.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch {
+            start: std::time::Instant::now(),
+        }
+    }
+
+    /// Elapsed seconds.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_pct_matches_paper_definition() {
+        // measured 10s, predicted 9.5s -> e = 5%.
+        assert!((prediction_error_pct(10.0, 9.5) - 5.0).abs() < 1e-12);
+        // over-prediction is negative.
+        assert!(prediction_error_pct(10.0, 10.5) < 0.0);
+        assert_eq!(prediction_error_pct(0.0, 0.0), 0.0);
+        assert!(prediction_error_pct(0.0, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn rmse_known_values() {
+        assert!((rmse(&[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(rmse(&[]), 0.0);
+        // RMSE >= mean magnitude.
+        let errs = [1.0, 2.0, 6.0];
+        assert!(rmse(&errs) >= mean(&errs));
+    }
+
+    #[test]
+    fn speedup_simple() {
+        assert_eq!(speedup(10.0, 2.0), 5.0);
+    }
+
+    #[test]
+    fn stats_basics() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!(stddev(&[2.0, 2.0, 2.0]) < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.elapsed_s() >= 0.004);
+    }
+}

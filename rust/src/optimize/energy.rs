@@ -1,0 +1,293 @@
+//! Energy-objective variant of the split problem (§3: POAS "can be
+//! focused on ... minimizing the energy consumption").
+//!
+//! Same decision variables and constraints as [`super::problem`], but the
+//! objective becomes total energy:
+//!
+//! ```text
+//!   minimize  Σ_x  p_active(x) * (t_cx + t_yx)  +  P_idle * T
+//!   s.t.      finish_x(c) <= T   (same as the time formulation)
+//!             T <= deadline      (optional time budget)
+//!             Σ c_x = N, c_x >= 0
+//! ```
+//!
+//! Active energy is linear in `c` (compute and copy times are), and the
+//! idle floor is linear in `T`, so the problem stays an LP. Without a
+//! deadline the optimum degenerates to "put everything on the most
+//! efficient device"; the deadline constraint exposes the energy/time
+//! trade-off curve (`ablation_energy` bench).
+
+use super::problem::{BusModel, DeviceModelInput, SplitSolution};
+use super::simplex::{Constraint, Lp};
+use crate::error::{Error, Result};
+use crate::workload::GemmSize;
+
+/// Per-device power figures for the energy objective.
+#[derive(Debug, Clone, Copy)]
+pub struct DevicePower {
+    /// Extra watts while computing or copying.
+    pub active_w: f64,
+    /// Idle watts (summed machine-wide into the `T` coefficient).
+    pub idle_w: f64,
+}
+
+/// Energy-minimizing split problem.
+#[derive(Debug, Clone)]
+pub struct EnergyProblem {
+    pub devices: Vec<DeviceModelInput>,
+    pub power: Vec<DevicePower>,
+    pub size: GemmSize,
+    pub bus: BusModel,
+    /// Optional cap on the makespan (seconds per repetition).
+    pub deadline_s: Option<f64>,
+}
+
+impl EnergyProblem {
+    /// Solve; returns the split plus the predicted energy (J/repetition).
+    pub fn solve(&self) -> Result<(SplitSolution, f64)> {
+        let d = self.devices.len();
+        if d == 0 || self.power.len() != d {
+            return Err(Error::Config(
+                "energy problem needs matching devices and power entries".into(),
+            ));
+        }
+        let n_ops = self.size.ops();
+        let nvars = d + 1;
+        let t_var = d;
+
+        let mut constraints = Vec::new();
+        let mut sum_row = vec![1.0; d];
+        sum_row.push(0.0);
+        constraints.push(Constraint::eq(sum_row, n_ops));
+
+        // finish_x <= T (identical construction to the time problem).
+        for (i, dev) in self.devices.iter().enumerate() {
+            let mut row = vec![0.0; nvars];
+            let mut rhs = -dev.b;
+            row[i] += dev.a;
+            row[t_var] = -1.0;
+            if !dev.is_cpu {
+                // Same structure as the time formulation: serialized H2D
+                // waits, own D2H (see problem.rs).
+                let h2d_waits: Vec<usize> = match self.bus {
+                    BusModel::Exclusive => vec![i],
+                    BusModel::SharedPriority => (0..d)
+                        .filter(|&j| {
+                            !self.devices[j].is_cpu
+                                && self.devices[j].priority >= dev.priority
+                        })
+                        .collect(),
+                };
+                for &j in &h2d_waits {
+                    let dj = &self.devices[j];
+                    row[j] += dj.dtype_bytes / (self.size.n as f64 * dj.bw);
+                    rhs -= dj.dtype_bytes * (self.size.k * self.size.n) as f64 / dj.bw
+                        + 2.0 * dj.lat;
+                }
+                row[i] += dev.dtype_bytes / (self.size.k as f64 * dev.bw);
+                rhs -= dev.lat;
+            }
+            constraints.push(Constraint::le(row, rhs));
+        }
+
+        if let Some(dl) = self.deadline_s {
+            let mut row = vec![0.0; nvars];
+            row[t_var] = 1.0;
+            constraints.push(Constraint::le(row, dl));
+        }
+
+        // Objective: active energy (linear in c) + idle power * T.
+        let mut objective = vec![0.0; nvars];
+        let mut fixed_energy = 0.0;
+        for (i, (dev, pw)) in self.devices.iter().zip(&self.power).enumerate() {
+            // compute: a*c + b seconds.
+            objective[i] += pw.active_w * dev.a;
+            fixed_energy += pw.active_w * dev.b;
+            if !dev.is_cpu {
+                // copy: (dt/(n bw) + dt/(k bw)) * c + constants.
+                objective[i] += pw.active_w
+                    * (dev.dtype_bytes / (self.size.n as f64 * dev.bw)
+                        + dev.dtype_bytes / (self.size.k as f64 * dev.bw));
+                fixed_energy += pw.active_w
+                    * (dev.dtype_bytes * (self.size.k * self.size.n) as f64 / dev.bw
+                        + 3.0 * dev.lat);
+            }
+        }
+        objective[t_var] = self.power.iter().map(|p| p.idle_w).sum();
+
+        let lp = Lp {
+            objective,
+            constraints,
+        };
+        let sol = lp.solve()?;
+        let ops: Vec<f64> = sol.x[..d].iter().map(|&c| c.max(0.0)).collect();
+        let t_pred = sol.x[t_var];
+        let compute_pred: Vec<f64> = self
+            .devices
+            .iter()
+            .zip(&ops)
+            .map(|(dev, &c)| dev.compute_time(c))
+            .collect();
+        let copy_pred: Vec<f64> = self
+            .devices
+            .iter()
+            .zip(&ops)
+            .map(|(dev, &c)| dev.copy_time(c, self.size))
+            .collect();
+        let energy = sol.objective + fixed_energy;
+        Ok((
+            SplitSolution {
+                ops,
+                t_pred,
+                compute_pred,
+                copy_pred,
+            },
+            energy,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn devices() -> (Vec<DeviceModelInput>, Vec<DevicePower>) {
+        let mk = |name: &str, is_cpu: bool, rate_tops: f64, dt: f64, prio: u32| {
+            DeviceModelInput {
+                name: name.into(),
+                is_cpu,
+                a: 1.0 / (rate_tops * 1e12),
+                b: 0.0,
+                dtype_bytes: dt,
+                bw: 15.75e9,
+                lat: 0.0,
+                priority: prio,
+            }
+        };
+        (
+            vec![
+                mk("cpu", true, 0.109, 4.0, 0),
+                mk("gpu", false, 5.6, 4.0, 1),
+                mk("xpu", false, 21.5, 2.0, 2),
+            ],
+            vec![
+                DevicePower {
+                    active_w: 70.0,
+                    idle_w: 25.0,
+                },
+                DevicePower {
+                    active_w: 240.0,
+                    idle_w: 18.0,
+                },
+                DevicePower {
+                    active_w: 255.0,
+                    idle_w: 18.0,
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn without_deadline_prefers_efficient_device() {
+        let (devices, power) = devices();
+        let p = EnergyProblem {
+            devices,
+            power,
+            size: GemmSize::square(20_000),
+            bus: BusModel::SharedPriority,
+            deadline_s: None,
+        };
+        let (sol, energy) = p.solve().unwrap();
+        assert!(energy > 0.0);
+        // XPU: 255 W / 21.5 Tops = 11.9 J/Top — by far the most
+        // energy-efficient; it should take (almost) everything.
+        let shares = sol.shares();
+        assert!(shares[2] > 0.95, "xpu share {}", shares[2]);
+    }
+
+    #[test]
+    fn tight_deadline_forces_coexecution() {
+        let (devices, power) = devices();
+        // Time-optimal T for this size is ~0.29s/rep; force close to it.
+        let size = GemmSize::square(20_000);
+        let time_opt = crate::optimize::problem::SplitProblem {
+            devices: devices.clone(),
+            size,
+            bus: BusModel::SharedPriority,
+            row_integral: false,
+        }
+        .solve()
+        .unwrap();
+        let p = EnergyProblem {
+            devices,
+            power,
+            size,
+            bus: BusModel::SharedPriority,
+            deadline_s: Some(time_opt.t_pred * 1.02),
+        };
+        let (sol, _) = p.solve().unwrap();
+        let shares = sol.shares();
+        // Meeting a near-optimal deadline requires the GPU too.
+        assert!(shares[1] > 0.05, "gpu share {}", shares[1]);
+    }
+
+    #[test]
+    fn energy_increases_as_deadline_tightens() {
+        let (devices, power) = devices();
+        let size = GemmSize::square(20_000);
+        let solve_dl = |dl: Option<f64>| {
+            EnergyProblem {
+                devices: devices.clone(),
+                power: power.clone(),
+                size,
+                bus: BusModel::SharedPriority,
+                deadline_s: dl,
+            }
+            .solve()
+            .unwrap()
+            .1
+        };
+        let t_opt = crate::optimize::problem::SplitProblem {
+            devices: devices.clone(),
+            size,
+            bus: BusModel::SharedPriority,
+            row_integral: false,
+        }
+        .solve()
+        .unwrap()
+        .t_pred;
+        let loose = solve_dl(None);
+        let tight = solve_dl(Some(t_opt * 1.05));
+        assert!(
+            tight >= loose - 1e-6,
+            "tight deadline must cost energy: {tight} vs {loose}"
+        );
+    }
+
+    #[test]
+    fn infeasible_deadline_detected() {
+        let (devices, power) = devices();
+        let p = EnergyProblem {
+            devices,
+            power,
+            size: GemmSize::square(20_000),
+            bus: BusModel::SharedPriority,
+            deadline_s: Some(1e-6),
+        };
+        assert!(p.solve().is_err());
+    }
+
+    #[test]
+    fn mismatched_power_entries_error() {
+        let (devices, mut power) = devices();
+        power.pop();
+        let p = EnergyProblem {
+            devices,
+            power,
+            size: GemmSize::square(100),
+            bus: BusModel::Exclusive,
+            deadline_s: None,
+        };
+        assert!(p.solve().is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! Branch & bound MILP on top of the simplex relaxation.
+//!
+//! The paper formulates the split as a *mixed-integer* program (§4.2.1).
+//! In hgemms the integral quantities are whole C rows (`m_i`): a device
+//! cannot compute a fractional row. [`solve_milp`] therefore accepts a
+//! list of integer-constrained variables with a per-variable unit (ops
+//! per row), solves the LP relaxation, and branches on the most
+//! fractional variable until all integrality gaps close.
+//!
+//! Best-first search with bound pruning; depth is tiny in practice
+//! because the relaxation is almost integral (unit ≪ N).
+
+use super::simplex::{Constraint, Lp, LpSolution};
+use crate::error::{Error, Result};
+
+/// Options for the branch & bound search.
+#[derive(Debug, Clone)]
+pub struct MilpOptions {
+    /// Variables constrained to integer multiples of `units[i]`
+    /// (variable index, unit size). Empty = plain LP.
+    pub integer_units: Vec<(usize, f64)>,
+    /// Maximum branch & bound nodes before giving up and returning the
+    /// best incumbent (or the relaxation if none).
+    pub max_nodes: usize,
+    /// Integrality tolerance in *units*.
+    pub tol: f64,
+}
+
+impl Default for MilpOptions {
+    fn default() -> Self {
+        MilpOptions {
+            integer_units: Vec::new(),
+            max_nodes: 10_000,
+            tol: 1e-6,
+        }
+    }
+}
+
+/// Solve `lp` with the integrality side-constraints of `opts`.
+pub fn solve_milp(lp: &Lp, opts: &MilpOptions) -> Result<LpSolution> {
+    let relax = lp.solve()?;
+    if opts.integer_units.is_empty() {
+        return Ok(relax);
+    }
+
+    // Node = additional bound constraints (var, unit-multiple lower, upper).
+    #[derive(Clone)]
+    struct Node {
+        extra: Vec<Constraint>,
+        bound: f64, // LP relaxation objective (lower bound for min)
+        sol: LpSolution,
+    }
+
+    let mut best: Option<LpSolution> = None;
+    let mut stack = vec![Node {
+        extra: Vec::new(),
+        bound: relax.objective,
+        sol: relax,
+    }];
+    let mut nodes = 0usize;
+
+    while let Some(node) = stack.pop() {
+        nodes += 1;
+        if nodes > opts.max_nodes {
+            break;
+        }
+        // Prune against incumbent.
+        if let Some(b) = &best {
+            if node.bound >= b.objective - 1e-12 {
+                continue;
+            }
+        }
+
+        // Find the most fractional integer variable.
+        let mut branch: Option<(usize, f64, f64)> = None; // (var, unit, value_units)
+        let mut worst_frac = opts.tol;
+        for &(var, unit) in &opts.integer_units {
+            let units = node.sol.x[var] / unit;
+            let frac = (units - units.round()).abs();
+            if frac > worst_frac {
+                worst_frac = frac;
+                branch = Some((var, unit, units));
+            }
+        }
+
+        let Some((var, unit, units)) = branch else {
+            // Integral: candidate incumbent.
+            match &best {
+                Some(b) if b.objective <= node.sol.objective => {}
+                _ => best = Some(node.sol.clone()),
+            }
+            continue;
+        };
+
+        // Branch: x_var <= floor(units)*unit  |  x_var >= ceil(units)*unit
+        let lo = units.floor() * unit;
+        let hi = units.ceil() * unit;
+        let nvars = lp.objective.len();
+        let mut unitvec = vec![0.0; nvars];
+        unitvec[var] = 1.0;
+
+        for bound_con in [
+            Constraint::le(unitvec.clone(), lo),
+            Constraint::ge(unitvec.clone(), hi),
+        ] {
+            let mut extra = node.extra.clone();
+            extra.push(bound_con);
+            let mut sub = lp.clone();
+            sub.constraints.extend(extra.iter().cloned());
+            match sub.solve() {
+                Ok(sol) => {
+                    let bound = sol.objective;
+                    // Prune immediately if dominated.
+                    if best
+                        .as_ref()
+                        .map(|b| bound >= b.objective - 1e-12)
+                        .unwrap_or(false)
+                    {
+                        continue;
+                    }
+                    stack.push(Node { extra, bound, sol });
+                }
+                Err(Error::Infeasible(_)) => {} // dead branch
+                Err(e) => return Err(e),
+            }
+        }
+        // Best-first: keep the most promising node on top.
+        stack.sort_by(|a, b| b.bound.total_cmp(&a.bound));
+    }
+
+    best.ok_or_else(|| {
+        Error::Infeasible("no integral solution found within node budget".into())
+    })
+}
+
+/// Round an LP point onto the integer grid (fallback / warm start):
+/// floors every integer variable and reports the leftover per variable.
+pub fn floor_to_units(x: &[f64], integer_units: &[(usize, f64)]) -> (Vec<f64>, f64) {
+    let mut out = x.to_vec();
+    let mut leftover = 0.0;
+    for &(var, unit) in integer_units {
+        let floored = (x[var] / unit).floor() * unit;
+        leftover += x[var] - floored;
+        out[var] = floored;
+    }
+    (out, leftover)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimize::simplex::{Constraint, Lp};
+
+    #[test]
+    fn plain_lp_passthrough() {
+        let lp = Lp {
+            objective: vec![1.0],
+            constraints: vec![Constraint::ge(vec![1.0], 2.5)],
+        };
+        let s = solve_milp(&lp, &MilpOptions::default()).unwrap();
+        assert!((s.x[0] - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn integer_rounding_up() {
+        // min x s.t. x >= 2.5, x integer -> 3
+        let lp = Lp {
+            objective: vec![1.0],
+            constraints: vec![Constraint::ge(vec![1.0], 2.5)],
+        };
+        let opts = MilpOptions {
+            integer_units: vec![(0, 1.0)],
+            ..Default::default()
+        };
+        let s = solve_milp(&lp, &opts).unwrap();
+        assert!((s.x[0] - 3.0).abs() < 1e-7, "x={}", s.x[0]);
+    }
+
+    #[test]
+    fn knapsack_like() {
+        // max 5a + 4b s.t. 6a + 5b <= 14, a,b integer >= 0
+        // LP opt: a=14/6; MILP opt: a=1,b=1 (9) vs a=2,b=0 (10) -> 10.
+        let lp = Lp {
+            objective: vec![-5.0, -4.0],
+            constraints: vec![Constraint::le(vec![6.0, 5.0], 14.0)],
+        };
+        let opts = MilpOptions {
+            integer_units: vec![(0, 1.0), (1, 1.0)],
+            ..Default::default()
+        };
+        let s = solve_milp(&lp, &opts).unwrap();
+        assert!((s.objective + 10.0).abs() < 1e-7, "obj={}", s.objective);
+        assert!((s.x[0] - 2.0).abs() < 1e-7);
+        assert!(s.x[1].abs() < 1e-7);
+    }
+
+    #[test]
+    fn custom_units() {
+        // min x s.t. x >= 10, x multiple of 4 -> 12.
+        let lp = Lp {
+            objective: vec![1.0],
+            constraints: vec![Constraint::ge(vec![1.0], 10.0)],
+        };
+        let opts = MilpOptions {
+            integer_units: vec![(0, 4.0)],
+            ..Default::default()
+        };
+        let s = solve_milp(&lp, &opts).unwrap();
+        assert!((s.x[0] - 12.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn mixed_integer_split() {
+        // The POAS shape: c1 + c2 = 100, T >= c1/1, T >= c2/3, c1 rows of 7.
+        // Relaxation: c1=25, c2=75, T=25. With c1 restricted to multiples
+        // of 7: c1=21 -> T=max(21, 79/3=26.33)=26.33; c1=28 -> T=28.
+        // Optimum c1=21.
+        let lp = Lp {
+            objective: vec![0.0, 0.0, 1.0],
+            constraints: vec![
+                Constraint::le(vec![1.0, 0.0, -1.0], 0.0),
+                Constraint::le(vec![0.0, 1.0 / 3.0, -1.0], 0.0),
+                Constraint::eq(vec![1.0, 1.0, 0.0], 100.0),
+            ],
+        };
+        let opts = MilpOptions {
+            integer_units: vec![(0, 7.0)],
+            ..Default::default()
+        };
+        let s = solve_milp(&lp, &opts).unwrap();
+        assert!((s.x[0] - 21.0).abs() < 1e-6, "c1={}", s.x[0]);
+    }
+
+    #[test]
+    fn infeasible_integrality() {
+        // x = 2.5 exactly, x integer — infeasible.
+        let lp = Lp {
+            objective: vec![1.0],
+            constraints: vec![Constraint::eq(vec![1.0], 2.5)],
+        };
+        let opts = MilpOptions {
+            integer_units: vec![(0, 1.0)],
+            ..Default::default()
+        };
+        assert!(solve_milp(&lp, &opts).is_err());
+    }
+
+    #[test]
+    fn floor_to_units_accounting() {
+        let (x, leftover) = floor_to_units(&[10.7, 5.0], &[(0, 1.0)]);
+        assert_eq!(x[0], 10.0);
+        assert!((leftover - 0.7).abs() < 1e-12);
+        assert_eq!(x[1], 5.0);
+    }
+}

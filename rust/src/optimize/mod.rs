@@ -1,0 +1,27 @@
+//! The Optimize phase: a from-scratch LP/MILP solver and the POAS
+//! work-split formulation.
+//!
+//! The paper expresses the split of `ops` across devices as a
+//! mixed-integer linear program (Eq. 1–4) and solves it with CPLEX 12.10
+//! (§4.2.1). CPLEX is proprietary, so this module implements the solver
+//! substrate from scratch:
+//!
+//! * [`simplex`] — a dense two-phase primal simplex with Bland's rule;
+//! * [`milp`] — branch & bound on top of the LP relaxation;
+//! * [`problem`] — the hgemms formulation: the minimax objective of Eq. 1
+//!   linearized with an epigraph variable, the copy-time model of Eq. 4,
+//!   and the serialized shared-bus extension the paper describes
+//!   ("the function must take into account the time to copy the data of
+//!   previous devices");
+//! * [`energy`] — the energy-objective variant (§3: POAS can minimize
+//!   energy instead of time).
+
+pub mod energy;
+pub mod milp;
+pub mod problem;
+pub mod simplex;
+
+pub use energy::EnergyProblem;
+pub use milp::{solve_milp, MilpOptions};
+pub use problem::{DeviceModelInput, SplitProblem, SplitSolution};
+pub use simplex::{Constraint, Lp, LpSolution, Relation};

@@ -1,0 +1,520 @@
+//! Dense two-phase primal simplex.
+//!
+//! Solves `min c·x  s.t.  A x {<=,>=,=} b,  x >= 0` — the LP relaxations
+//! behind the POAS split problem. Problems here are tiny (a handful of
+//! devices + one epigraph variable), so a dense tableau with Bland's
+//! anti-cycling rule is the right tool: simple, exact enough, and easy
+//! to verify.
+//!
+//! Phase 1 minimizes the sum of artificial variables to find a basic
+//! feasible point; phase 2 re-optimizes the true objective from there.
+
+use crate::error::{Error, Result};
+
+/// Constraint relation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Relation {
+    /// `coeffs . x <= rhs`
+    Le,
+    /// `coeffs . x >= rhs`
+    Ge,
+    /// `coeffs . x == rhs`
+    Eq,
+}
+
+/// One linear constraint.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub coeffs: Vec<f64>,
+    pub op: Relation,
+    pub rhs: f64,
+}
+
+impl Constraint {
+    pub fn le(coeffs: Vec<f64>, rhs: f64) -> Self {
+        Constraint {
+            coeffs,
+            op: Relation::Le,
+            rhs,
+        }
+    }
+
+    pub fn ge(coeffs: Vec<f64>, rhs: f64) -> Self {
+        Constraint {
+            coeffs,
+            op: Relation::Ge,
+            rhs,
+        }
+    }
+
+    pub fn eq(coeffs: Vec<f64>, rhs: f64) -> Self {
+        Constraint {
+            coeffs,
+            op: Relation::Eq,
+            rhs,
+        }
+    }
+}
+
+/// A linear program: minimize `objective . x` over the constraints,
+/// with implicit `x >= 0`.
+#[derive(Debug, Clone)]
+pub struct Lp {
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+}
+
+/// An optimal LP solution.
+#[derive(Debug, Clone)]
+pub struct LpSolution {
+    /// Optimal point (structural variables only).
+    pub x: Vec<f64>,
+    /// Objective value at `x`.
+    pub objective: f64,
+}
+
+const EPS: f64 = 1e-9;
+
+impl Lp {
+    /// Minimize; returns the optimum or `Infeasible` / `Unbounded`.
+    ///
+    /// The POAS problems mix coefficients spanning ~26 orders of magnitude
+    /// (ops ~1e13 against slopes ~1e-13), which would swamp any fixed
+    /// pivot tolerance — so the problem is equilibrated first: every
+    /// column is scaled to unit max magnitude (substituting
+    /// `x_j = x'_j / s_j`), rows likewise, and the solution is mapped
+    /// back afterwards.
+    pub fn solve(&self) -> Result<LpSolution> {
+        let n = self.objective.len();
+        for (i, c) in self.constraints.iter().enumerate() {
+            if c.coeffs.len() != n {
+                return Err(Error::Config(format!(
+                    "constraint {i} has {} coefficients, expected {n}",
+                    c.coeffs.len()
+                )));
+            }
+        }
+
+        // ---- Alternating geometric-mean equilibration (Curtis–Reid
+        // style): find row scales r_i and column scales c_j such that the
+        // nonzeros of r_i * a_ij * c_j all sit near 1. A few alternating
+        // passes shrink the dynamic range from ~1e26 to ~1e1.
+        let m = self.constraints.len();
+        let mut row_scale = vec![1.0f64; m];
+        let mut col_scale = vec![1.0f64; n];
+        for _ in 0..15 {
+            for (i, c) in self.constraints.iter().enumerate() {
+                let mut log_sum = 0.0;
+                let mut cnt = 0usize;
+                for (j, &v) in c.coeffs.iter().enumerate() {
+                    let s = (v * row_scale[i] * col_scale[j]).abs();
+                    if s > 0.0 {
+                        log_sum += s.ln();
+                        cnt += 1;
+                    }
+                }
+                if cnt > 0 {
+                    row_scale[i] /= (log_sum / cnt as f64).exp();
+                }
+            }
+            for j in 0..n {
+                let mut log_sum = 0.0;
+                let mut cnt = 0usize;
+                for (i, c) in self.constraints.iter().enumerate() {
+                    let s = (c.coeffs[j] * row_scale[i] * col_scale[j]).abs();
+                    if s > 0.0 {
+                        log_sum += s.ln();
+                        cnt += 1;
+                    }
+                }
+                if cnt > 0 {
+                    col_scale[j] /= (log_sum / cnt as f64).exp();
+                }
+            }
+        }
+
+        // Substitution x_j = c_j * x'_j: scaled problem has coefficients
+        // r_i a_ij c_j, rhs r_i b_i, objective obj_j c_j.
+        let scaled = Lp {
+            objective: self
+                .objective
+                .iter()
+                .zip(&col_scale)
+                .map(|(o, s)| o * s)
+                .collect(),
+            constraints: self
+                .constraints
+                .iter()
+                .zip(&row_scale)
+                .map(|(c, &r)| Constraint {
+                    coeffs: c
+                        .coeffs
+                        .iter()
+                        .zip(&col_scale)
+                        .map(|(v, s)| v * r * s)
+                        .collect(),
+                    op: c.op,
+                    rhs: c.rhs * r,
+                })
+                .collect(),
+        };
+        let mut sol = scaled.solve_scaled()?;
+        for (x, s) in sol.x.iter_mut().zip(&col_scale) {
+            *x *= s;
+        }
+        // Recompute the objective in original units (more accurate than
+        // unscaling the tableau value).
+        sol.objective = self
+            .objective
+            .iter()
+            .zip(&sol.x)
+            .map(|(o, x)| o * x)
+            .sum();
+        Ok(sol)
+    }
+
+    /// Core two-phase simplex on an (already equilibrated) problem.
+    fn solve_scaled(&self) -> Result<LpSolution> {
+        let n = self.objective.len();
+        let m = self.constraints.len();
+
+        // ---- Build the standard-form tableau.
+        // Columns: [structural n | slack/surplus s | artificial a | rhs]
+        // Every row is normalized to rhs >= 0 first.
+        let mut rows: Vec<(Vec<f64>, Relation, f64)> = self
+            .constraints
+            .iter()
+            .map(|c| {
+                if c.rhs < 0.0 {
+                    let coeffs: Vec<f64> = c.coeffs.iter().map(|v| -v).collect();
+                    let op = match c.op {
+                        Relation::Le => Relation::Ge,
+                        Relation::Ge => Relation::Le,
+                        Relation::Eq => Relation::Eq,
+                    };
+                    (coeffs, op, -c.rhs)
+                } else {
+                    (c.coeffs.clone(), c.op, c.rhs)
+                }
+            })
+            .collect();
+
+        let n_slack = rows
+            .iter()
+            .filter(|(_, op, _)| *op != Relation::Eq)
+            .count();
+        let n_art = rows
+            .iter()
+            .filter(|(_, op, _)| *op != Relation::Le)
+            .count();
+        let total = n + n_slack + n_art;
+
+        // tableau[r] = row of length total+1 (last = rhs)
+        let mut t = vec![vec![0.0f64; total + 1]; m];
+        let mut basis = vec![usize::MAX; m];
+        let mut s_idx = n;
+        let mut a_idx = n + n_slack;
+        for (r, (coeffs, op, rhs)) in rows.drain(..).enumerate() {
+            t[r][..n].copy_from_slice(&coeffs);
+            t[r][total] = rhs;
+            match op {
+                Relation::Le => {
+                    t[r][s_idx] = 1.0;
+                    basis[r] = s_idx;
+                    s_idx += 1;
+                }
+                Relation::Ge => {
+                    t[r][s_idx] = -1.0;
+                    s_idx += 1;
+                    t[r][a_idx] = 1.0;
+                    basis[r] = a_idx;
+                    a_idx += 1;
+                }
+                Relation::Eq => {
+                    t[r][a_idx] = 1.0;
+                    basis[r] = a_idx;
+                    a_idx += 1;
+                }
+            }
+        }
+
+        // ---- Phase 1: minimize sum of artificials.
+        if n_art > 0 {
+            let mut cost = vec![0.0f64; total];
+            for c in cost.iter_mut().take(n + n_slack + n_art).skip(n + n_slack) {
+                *c = 1.0;
+            }
+            let obj = Self::optimize(&mut t, &mut basis, &cost, total)?;
+            if obj > 1e-7 {
+                return Err(Error::Infeasible(format!(
+                    "phase-1 objective {obj:.3e} > 0"
+                )));
+            }
+            // Drive any artificial still in the basis out (degenerate).
+            for r in 0..m {
+                if basis[r] >= n + n_slack {
+                    // Pivot on any non-artificial column with a nonzero
+                    // entry; if none, the row is redundant — zero it.
+                    if let Some(col) = (0..n + n_slack).find(|&c| t[r][c].abs() > EPS) {
+                        Self::pivot(&mut t, &mut basis, r, col, total);
+                    }
+                }
+            }
+        }
+
+        // ---- Phase 2: the real objective (artificials forbidden).
+        let mut cost = vec![0.0f64; total];
+        cost[..n].copy_from_slice(&self.objective);
+        // Forbid re-entry of artificials by giving them a huge cost and
+        // masking them out of pivoting (handled in `optimize` via the
+        // `max_col` argument).
+        let obj = Self::optimize(&mut t, &mut basis, &cost, n + n_slack)?;
+
+        let mut x = vec![0.0f64; n];
+        for (r, &b) in basis.iter().enumerate() {
+            if b < n {
+                x[b] = t[r][total];
+            }
+        }
+        Ok(LpSolution { x, objective: obj })
+    }
+
+    /// Run simplex iterations on the tableau, minimizing `cost` over
+    /// columns `[0, max_col)`. Returns the objective value.
+    fn optimize(
+        t: &mut [Vec<f64>],
+        basis: &mut [usize],
+        cost: &[f64],
+        max_col: usize,
+    ) -> Result<f64> {
+        let m = t.len();
+        let total = cost.len();
+        let rhs_col = t.first().map(|r| r.len() - 1).unwrap_or(0);
+
+        // Iteration cap: Bland's rule guarantees termination, the cap is
+        // a defensive backstop against numerical pathologies.
+        let max_iters = 200 * (m + total) + 1000;
+        for _ in 0..max_iters {
+            // Reduced costs: cj - cB . B^-1 Aj  (computed directly from
+            // the tableau: rc_j = cost_j - sum_r cost[basis[r]] * t[r][j])
+            let mut entering = None;
+            for j in 0..max_col {
+                let mut rc = cost[j];
+                for r in 0..m {
+                    let cb = cost[basis[r]];
+                    if cb != 0.0 {
+                        rc -= cb * t[r][j];
+                    }
+                }
+                if rc < -EPS {
+                    entering = Some(j); // Bland: first improving column
+                    break;
+                }
+            }
+            let Some(col) = entering else {
+                // Optimal: objective = cB . xB
+                let mut obj = 0.0;
+                for r in 0..m {
+                    obj += cost[basis[r]] * t[r][rhs_col];
+                }
+                return Ok(obj);
+            };
+
+            // Ratio test (Bland: smallest basis index breaks ties).
+            let mut leave: Option<usize> = None;
+            let mut best = f64::INFINITY;
+            for r in 0..m {
+                if t[r][col] > EPS {
+                    let ratio = t[r][rhs_col] / t[r][col];
+                    let better = ratio < best - EPS
+                        || (ratio < best + EPS
+                            && leave.map(|l| basis[r] < basis[l]).unwrap_or(false));
+                    if better {
+                        best = ratio;
+                        leave = Some(r);
+                    }
+                }
+            }
+            let Some(row) = leave else {
+                return Err(Error::Unbounded(
+                    "no leaving row: objective unbounded below".into(),
+                ));
+            };
+            Self::pivot(t, basis, row, col, rhs_col);
+        }
+        Err(Error::Infeasible(
+            "simplex iteration cap exceeded (numerical cycling?)".into(),
+        ))
+    }
+
+    /// Gauss pivot on (row, col).
+    fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, rhs_col: usize) {
+        let m = t.len();
+        let piv = t[row][col];
+        debug_assert!(piv.abs() > EPS);
+        for v in t[row].iter_mut() {
+            *v /= piv;
+        }
+        for r in 0..m {
+            if r != row {
+                let f = t[r][col];
+                if f != 0.0 {
+                    for j in 0..=rhs_col {
+                        t[r][j] -= f * t[row][j];
+                    }
+                }
+            }
+        }
+        basis[row] = col;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} != {b}");
+    }
+
+    #[test]
+    fn simple_2d_max_as_min() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18  (classic Dantzig)
+        // -> min -3x -5y; optimum x=2, y=6, obj=-36.
+        let lp = Lp {
+            objective: vec![-3.0, -5.0],
+            constraints: vec![
+                Constraint::le(vec![1.0, 0.0], 4.0),
+                Constraint::le(vec![0.0, 2.0], 12.0),
+                Constraint::le(vec![3.0, 2.0], 18.0),
+            ],
+        };
+        let s = lp.solve().unwrap();
+        assert_close(s.objective, -36.0);
+        assert_close(s.x[0], 2.0);
+        assert_close(s.x[1], 6.0);
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // min x + y  s.t. x + y = 10, x >= 3 -> x=10,y=0 ... any point on
+        // the segment has obj 10; check objective only.
+        let lp = Lp {
+            objective: vec![1.0, 1.0],
+            constraints: vec![
+                Constraint::eq(vec![1.0, 1.0], 10.0),
+                Constraint::ge(vec![1.0, 0.0], 3.0),
+            ],
+        };
+        let s = lp.solve().unwrap();
+        assert_close(s.objective, 10.0);
+        assert!(s.x[0] >= 3.0 - 1e-9);
+        assert_close(s.x[0] + s.x[1], 10.0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x <= 1 and x >= 2
+        let lp = Lp {
+            objective: vec![1.0],
+            constraints: vec![
+                Constraint::le(vec![1.0], 1.0),
+                Constraint::ge(vec![1.0], 2.0),
+            ],
+        };
+        assert!(matches!(lp.solve(), Err(Error::Infeasible(_))));
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x with x >= 0 only
+        let lp = Lp {
+            objective: vec![-1.0],
+            constraints: vec![Constraint::ge(vec![1.0], 0.0)],
+        };
+        assert!(matches!(lp.solve(), Err(Error::Unbounded(_))));
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // -x <= -5  <=>  x >= 5
+        let lp = Lp {
+            objective: vec![1.0],
+            constraints: vec![Constraint::le(vec![-1.0], -5.0)],
+        };
+        let s = lp.solve().unwrap();
+        assert_close(s.x[0], 5.0);
+    }
+
+    #[test]
+    fn epigraph_minimax() {
+        // min T s.t. T >= 2a, T >= 3b, a + b = 10  (the POAS pattern)
+        // vars: [a, b, T]; optimum: 2a = 3b -> a=6, b=4, T=12.
+        let lp = Lp {
+            objective: vec![0.0, 0.0, 1.0],
+            constraints: vec![
+                Constraint::le(vec![2.0, 0.0, -1.0], 0.0),
+                Constraint::le(vec![0.0, 3.0, -1.0], 0.0),
+                Constraint::eq(vec![1.0, 1.0, 0.0], 10.0),
+            ],
+        };
+        let s = lp.solve().unwrap();
+        assert_close(s.objective, 12.0);
+        assert_close(s.x[0], 6.0);
+        assert_close(s.x[1], 4.0);
+    }
+
+    #[test]
+    fn degenerate_redundant_rows() {
+        // Duplicate equality rows must not break phase 1.
+        let lp = Lp {
+            objective: vec![1.0, 2.0],
+            constraints: vec![
+                Constraint::eq(vec![1.0, 1.0], 4.0),
+                Constraint::eq(vec![2.0, 2.0], 8.0),
+            ],
+        };
+        let s = lp.solve().unwrap();
+        assert_close(s.objective, 4.0); // all weight on x0
+    }
+
+    #[test]
+    fn zero_rhs_feasible() {
+        let lp = Lp {
+            objective: vec![1.0],
+            constraints: vec![Constraint::eq(vec![1.0], 0.0)],
+        };
+        let s = lp.solve().unwrap();
+        assert_close(s.x[0], 0.0);
+    }
+
+    #[test]
+    fn mismatched_arity_is_config_error() {
+        let lp = Lp {
+            objective: vec![1.0, 1.0],
+            constraints: vec![Constraint::le(vec![1.0], 1.0)],
+        };
+        assert!(matches!(lp.solve(), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn scale_invariance_large_numbers() {
+        // POAS works in ops (1e13+) and seconds — coefficients span many
+        // orders of magnitude; the pivoting must stay stable.
+        let n_ops = 2.7e13f64;
+        let lp = Lp {
+            // vars: [c1, c2, T]
+            objective: vec![0.0, 0.0, 1.0],
+            constraints: vec![
+                // T >= c1 / 5.6e12, T >= c2 / 21.5e12
+                Constraint::le(vec![1.0 / 5.6e12, 0.0, -1.0], 0.0),
+                Constraint::le(vec![0.0, 1.0 / 21.5e12, -1.0], 0.0),
+                Constraint::eq(vec![1.0, 1.0, 0.0], n_ops),
+            ],
+        };
+        let s = lp.solve().unwrap();
+        let expect_t = n_ops / (5.6e12 + 21.5e12);
+        assert!((s.objective - expect_t).abs() / expect_t < 1e-6);
+        assert!((s.x[0] + s.x[1] - n_ops).abs() / n_ops < 1e-6);
+    }
+}

@@ -1,0 +1,22 @@
+//! The Predict phase: profiling + linear-regression performance model.
+//!
+//! POAS requires "a mathematical function that, given the input size,
+//! predicts the execution time of the application for a variety of
+//! hardware devices" (§3.1). For GEMM the paper linearizes the cubic
+//! growth by regressing on the op count `ops = m*n*k` instead of the
+//! matrix dimension (§4.1.1), and separately fits the host↔device link
+//! as `t = latency + bytes/bandwidth` (§4.1.2).
+//!
+//! * [`regression`] — OLS fits;
+//! * [`profiler`] — the installation-time microbenchmark harness,
+//!   generic over simulated and real (PJRT) targets;
+//! * [`model`] — the fitted [`PerfModel`], its text-file persistence and
+//!   the conversion into optimizer inputs.
+
+pub mod model;
+pub mod profiler;
+pub mod regression;
+
+pub use model::{DevicePerf, PerfModel};
+pub use profiler::{profile, ProfileOptions, ProfileTarget};
+pub use regression::{fit_linear, fit_proportional, LinearFit};

@@ -1,0 +1,331 @@
+//! The fitted performance model — the Predict phase's output.
+//!
+//! One [`DevicePerf`] per device: the compute-time line `t = a*ops + b`
+//! (paper §4.1.1) and the copy-time line `t = lat + bytes/bw` from the
+//! memory microbenchmark (§4.1.2). The model persists to the plain text
+//! file the paper describes ("results are stored in a text file that is
+//! read when real matrix multiplication workloads arrive").
+
+use crate::config::DeviceKind;
+use crate::error::{Error, Result};
+use crate::optimize::problem::DeviceModelInput;
+use crate::workload::GemmSize;
+
+/// Fitted performance description of one device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DevicePerf {
+    pub name: String,
+    pub kind: DeviceKind,
+    /// Compute seconds per op.
+    pub a: f64,
+    /// Compute intercept seconds.
+    pub b: f64,
+    /// Fit quality of the compute regression.
+    pub r2: f64,
+    /// Link bandwidth bytes/s (0 for CPU).
+    pub bw: f64,
+    /// Link latency seconds (0 for CPU).
+    pub lat: f64,
+    /// Bus priority (assigned from fitted speed: fastest = highest).
+    pub priority: u32,
+}
+
+impl DevicePerf {
+    /// Fitted effective rate in Tera-ops/s.
+    pub fn rate_tops(&self) -> f64 {
+        1.0 / self.a / 1e12
+    }
+
+    /// Predicted compute seconds for a sub-product.
+    pub fn predict_compute(&self, size: GemmSize) -> f64 {
+        self.a * size.ops() + self.b
+    }
+
+    /// Predicted one-way copy seconds for `bytes`.
+    pub fn predict_copy(&self, bytes: f64) -> f64 {
+        if self.kind == DeviceKind::Cpu {
+            0.0
+        } else {
+            self.lat + bytes / self.bw
+        }
+    }
+
+    /// Convert into the optimizer's input row.
+    pub fn to_model_input(&self) -> DeviceModelInput {
+        DeviceModelInput {
+            name: self.name.clone(),
+            is_cpu: self.kind == DeviceKind::Cpu,
+            a: self.a,
+            b: self.b,
+            dtype_bytes: self.kind.dtype_bytes() as f64,
+            bw: if self.bw > 0.0 { self.bw } else { 1.0 },
+            lat: self.lat,
+            priority: self.priority,
+        }
+    }
+}
+
+/// The complete fitted model for one machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfModel {
+    pub machine: String,
+    pub devices: Vec<DevicePerf>,
+}
+
+impl PerfModel {
+    /// Assign bus priorities by fitted speed: the fastest device gets the
+    /// highest priority (paper §4.4: "the faster the device, the higher
+    /// priority"). CPUs keep priority 0 (they do not use the bus).
+    pub fn assign_priorities(&mut self) {
+        let mut order: Vec<usize> = (0..self.devices.len())
+            .filter(|&i| self.devices[i].kind != DeviceKind::Cpu)
+            .collect();
+        order.sort_by(|&x, &y| self.devices[x].a.total_cmp(&self.devices[y].a));
+        // order[0] = fastest accelerator.
+        let n = order.len() as u32;
+        for (rank, &i) in order.iter().enumerate() {
+            self.devices[i].priority = n - rank as u32;
+        }
+        for d in &mut self.devices {
+            if d.kind == DeviceKind::Cpu {
+                d.priority = 0;
+            }
+        }
+    }
+
+    /// Optimizer inputs, machine order.
+    pub fn model_inputs(&self) -> Vec<DeviceModelInput> {
+        self.devices.iter().map(|d| d.to_model_input()).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Text persistence (paper: profile results live in a text file).
+    // ------------------------------------------------------------------
+
+    /// Serialize to the profile text format.
+    pub fn to_text(&self) -> String {
+        let mut s = String::from("# poas perf profile v1\n");
+        s.push_str(&format!("machine {}\n", self.machine));
+        for d in &self.devices {
+            s.push_str(&format!(
+                "device {} {} a={:e} b={:e} r2={} bw={} lat={:e} prio={}\n",
+                d.name,
+                d.kind.as_str(),
+                d.a,
+                d.b,
+                d.r2,
+                d.bw,
+                d.lat,
+                d.priority
+            ));
+        }
+        s
+    }
+
+    /// Parse the profile text format.
+    pub fn from_text(text: &str) -> Result<PerfModel> {
+        let mut machine = None;
+        let mut devices = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("machine") => {
+                    machine = Some(
+                        parts
+                            .next()
+                            .ok_or_else(|| Error::Predict(format!("line {}: machine needs a name", ln + 1)))?
+                            .to_string(),
+                    );
+                }
+                Some("device") => {
+                    let name = parts
+                        .next()
+                        .ok_or_else(|| Error::Predict(format!("line {}: device needs a name", ln + 1)))?
+                        .to_string();
+                    let kind = DeviceKind::parse(
+                        parts
+                            .next()
+                            .ok_or_else(|| Error::Predict(format!("line {}: device needs a kind", ln + 1)))?,
+                    )?;
+                    let mut d = DevicePerf {
+                        name,
+                        kind,
+                        a: 0.0,
+                        b: 0.0,
+                        r2: 0.0,
+                        bw: 0.0,
+                        lat: 0.0,
+                        priority: 0,
+                    };
+                    for kv in parts {
+                        let (k, v) = kv.split_once('=').ok_or_else(|| {
+                            Error::Predict(format!("line {}: bad key=value `{kv}`", ln + 1))
+                        })?;
+                        let fv: f64 = v.parse().map_err(|_| {
+                            Error::Predict(format!("line {}: bad number `{v}`", ln + 1))
+                        })?;
+                        match k {
+                            "a" => d.a = fv,
+                            "b" => d.b = fv,
+                            "r2" => d.r2 = fv,
+                            "bw" => d.bw = fv,
+                            "lat" => d.lat = fv,
+                            "prio" => d.priority = fv as u32,
+                            other => {
+                                return Err(Error::Predict(format!(
+                                    "line {}: unknown key `{other}`",
+                                    ln + 1
+                                )))
+                            }
+                        }
+                    }
+                    if d.a <= 0.0 {
+                        return Err(Error::Predict(format!(
+                            "device {}: slope a must be > 0",
+                            d.name
+                        )));
+                    }
+                    devices.push(d);
+                }
+                Some(other) => {
+                    return Err(Error::Predict(format!(
+                        "line {}: unknown directive `{other}`",
+                        ln + 1
+                    )))
+                }
+                None => unreachable!(),
+            }
+        }
+        Ok(PerfModel {
+            machine: machine.ok_or_else(|| Error::Predict("missing `machine` line".into()))?,
+            devices,
+        })
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_text())?;
+        Ok(())
+    }
+
+    /// Read from a file.
+    pub fn load(path: &std::path::Path) -> Result<PerfModel> {
+        Self::from_text(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PerfModel {
+        PerfModel {
+            machine: "mach1".into(),
+            devices: vec![
+                DevicePerf {
+                    name: "xeon".into(),
+                    kind: DeviceKind::Cpu,
+                    a: 1.0 / 0.109e12,
+                    b: 2e-5,
+                    r2: 0.999,
+                    bw: 0.0,
+                    lat: 0.0,
+                    priority: 0,
+                },
+                DevicePerf {
+                    name: "gpu".into(),
+                    kind: DeviceKind::Gpu,
+                    a: 1.0 / 5.6e12,
+                    b: 6e-5,
+                    r2: 0.998,
+                    bw: 15.6e9,
+                    lat: 1.1e-5,
+                    priority: 0,
+                },
+                DevicePerf {
+                    name: "xpu".into(),
+                    kind: DeviceKind::Xpu,
+                    a: 1.0 / 21.5e12,
+                    b: 6e-5,
+                    r2: 0.997,
+                    bw: 15.7e9,
+                    lat: 1.2e-5,
+                    priority: 0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn priorities_by_speed() {
+        let mut m = sample();
+        m.assign_priorities();
+        assert_eq!(m.devices[0].priority, 0); // cpu
+        assert_eq!(m.devices[2].priority, 2); // xpu fastest
+        assert_eq!(m.devices[1].priority, 1);
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let mut m = sample();
+        m.assign_priorities();
+        let parsed = PerfModel::from_text(&m.to_text()).unwrap();
+        assert_eq!(parsed.machine, m.machine);
+        assert_eq!(parsed.devices.len(), m.devices.len());
+        for (a, b) in parsed.devices.iter().zip(&m.devices) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert!((a.a - b.a).abs() / b.a < 1e-12);
+            assert!((a.bw - b.bw).abs() <= b.bw * 1e-12);
+            assert_eq!(a.priority, b.priority);
+        }
+    }
+
+    #[test]
+    fn rate_tops_inverse_of_slope() {
+        let m = sample();
+        assert!((m.devices[1].rate_tops() - 5.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn predictions_linear() {
+        let m = sample();
+        let d = &m.devices[1];
+        let s1 = GemmSize::square(1000);
+        let s2 = GemmSize::new(2000, 1000, 1000);
+        let t1 = d.predict_compute(s1) - d.b;
+        let t2 = d.predict_compute(s2) - d.b;
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cpu_copy_is_free() {
+        let m = sample();
+        assert_eq!(m.devices[0].predict_copy(1e9), 0.0);
+        assert!(m.devices[1].predict_copy(1e9) > 0.0);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(PerfModel::from_text("device x cpu a=1").is_err()); // no machine
+        assert!(PerfModel::from_text("machine m\nbogus line").is_err());
+        assert!(PerfModel::from_text("machine m\ndevice x cpu a=zero").is_err());
+        assert!(PerfModel::from_text("machine m\ndevice x cpu a=-1").is_err());
+        assert!(PerfModel::from_text("machine m\ndevice x cpu q=1").is_err());
+    }
+
+    #[test]
+    fn model_inputs_match() {
+        let mut m = sample();
+        m.assign_priorities();
+        let inputs = m.model_inputs();
+        assert_eq!(inputs.len(), 3);
+        assert!(inputs[0].is_cpu);
+        assert_eq!(inputs[2].dtype_bytes, 2.0);
+        assert_eq!(inputs[2].priority, 2);
+    }
+}

@@ -1,0 +1,132 @@
+//! Ordinary least squares for the performance predictor.
+//!
+//! The paper's Predict phase models compute time as a *linear* function
+//! of the op count (`ops = m*n*k`) so that linear programming stays
+//! applicable (§3.2, §4.1.1), and copy time as linear in bytes. Both fits
+//! reduce to simple 1-D OLS.
+
+/// Result of a 1-D least-squares fit `y ≈ slope * x + intercept`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination in [0, 1] (1 = perfect).
+    pub r2: f64,
+    /// Root mean square residual, in y-units.
+    pub rmse: f64,
+}
+
+/// Fit `y = slope*x + intercept` by OLS. Needs >= 2 distinct x values.
+pub fn fit_linear(xs: &[f64], ys: &[f64]) -> Option<LinearFit> {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    if sxx <= 0.0 {
+        return None; // all x identical: slope undefined
+    }
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let mut ss_res = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        let e = y - (slope * x + intercept);
+        ss_res += e * e;
+    }
+    let r2 = if syy > 0.0 { 1.0 - ss_res / syy } else { 1.0 };
+    let rmse = (ss_res / n).sqrt();
+    Some(LinearFit {
+        slope,
+        intercept,
+        r2,
+        rmse,
+    })
+}
+
+/// Fit through the origin: `y = slope * x` (used when the intercept is
+/// known to be zero, e.g. pure-bandwidth models).
+pub fn fit_proportional(xs: &[f64], ys: &[f64]) -> Option<f64> {
+    if xs.len() != ys.len() || xs.is_empty() {
+        return None;
+    }
+    let num: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let den: f64 = xs.iter().map(|x| x * x).sum();
+    if den <= 0.0 {
+        None
+    } else {
+        Some(num / den)
+    }
+}
+
+/// Mean of a slice (0 for empty — callers guard).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_line_recovered() {
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 2.0).collect();
+        let f = fit_linear(&xs, &ys).unwrap();
+        assert!((f.slope - 3.0).abs() < 1e-12);
+        assert!((f.intercept - 2.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+        assert!(f.rmse < 1e-12);
+    }
+
+    #[test]
+    fn noisy_line_close() {
+        let mut rng = crate::rng::Rng::new(11);
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 0.5 * x + 10.0 + rng.normal_with(0.0, 0.5))
+            .collect();
+        let f = fit_linear(&xs, &ys).unwrap();
+        assert!((f.slope - 0.5).abs() < 0.01, "slope={}", f.slope);
+        assert!((f.intercept - 10.0).abs() < 1.0);
+        assert!(f.r2 > 0.99);
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        assert!(fit_linear(&[1.0], &[2.0]).is_none());
+        assert!(fit_linear(&[1.0, 1.0], &[2.0, 3.0]).is_none());
+        assert!(fit_linear(&[1.0, 2.0], &[2.0]).is_none());
+    }
+
+    #[test]
+    fn proportional_fit() {
+        let xs = [1.0, 2.0, 4.0];
+        let ys = [2.1, 3.9, 8.05];
+        let s = fit_proportional(&xs, &ys).unwrap();
+        assert!((s - 2.0).abs() < 0.05);
+        assert!(fit_proportional(&[], &[]).is_none());
+    }
+
+    #[test]
+    fn constant_y_gives_r2_one_zero_slope() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [5.0, 5.0, 5.0];
+        let f = fit_linear(&xs, &ys).unwrap();
+        assert!(f.slope.abs() < 1e-12);
+        assert_eq!(f.r2, 1.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Table and figure rendering for the evaluation regenerators.
+//!
+//! Every bench prints the same rows/series the paper reports; this
+//! module owns the formatting so tables look uniform: fixed-width text
+//! tables (paper tables) and ASCII bar charts (Figs. 3–4).
+
+/// A simple fixed-width text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience for string-slices.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&sep);
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out.push_str(&sep);
+        let _ = ncols;
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Horizontal ASCII bar chart: one group of bars per label (Figs. 3–4
+/// style: execution time per input, one bar per device/system).
+#[derive(Debug, Clone, Default)]
+pub struct BarChart {
+    title: String,
+    unit: String,
+    groups: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl BarChart {
+    pub fn new(title: &str, unit: &str) -> Self {
+        BarChart {
+            title: title.to_string(),
+            unit: unit.to_string(),
+            groups: Vec::new(),
+        }
+    }
+
+    /// Add a group (e.g. input "i1") with (series name, value) bars.
+    pub fn group(&mut self, label: &str, bars: &[(&str, f64)]) -> &mut Self {
+        self.groups.push((
+            label.to_string(),
+            bars.iter().map(|(n, v)| (n.to_string(), *v)).collect(),
+        ));
+        self
+    }
+
+    /// Render with bars scaled to `width` characters at the global max.
+    pub fn render(&self, width: usize) -> String {
+        let max = self
+            .groups
+            .iter()
+            .flat_map(|(_, bars)| bars.iter().map(|(_, v)| *v))
+            .fold(0.0f64, f64::max);
+        let mut out = format!("== {} ({}) ==\n", self.title, self.unit);
+        if max <= 0.0 {
+            return out;
+        }
+        let name_w = self
+            .groups
+            .iter()
+            .flat_map(|(_, b)| b.iter().map(|(n, _)| n.len()))
+            .max()
+            .unwrap_or(4);
+        for (label, bars) in &self.groups {
+            out.push_str(&format!("{label}\n"));
+            for (name, v) in bars {
+                let len = ((v / max) * width as f64).round() as usize;
+                out.push_str(&format!(
+                    "  {name:>name_w$} | {:<width$} {v:.3}\n",
+                    "█".repeat(len.max(if *v > 0.0 { 1 } else { 0 })),
+                ));
+            }
+        }
+        out
+    }
+
+    pub fn print(&self, width: usize) {
+        print!("{}", self.render(width));
+    }
+}
+
+/// Format a share as "12.34%".
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+/// Format a speedup as "1.23x".
+pub fn times(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Format seconds adaptively (s / ms / µs).
+pub fn secs(x: f64) -> String {
+    if x >= 1.0 {
+        format!("{x:.3}s")
+    } else if x >= 1e-3 {
+        format!("{:.3}ms", x * 1e3)
+    } else {
+        format!("{:.1}µs", x * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["id", "value"]);
+        t.row_str(&["i1", "27.0"]).row_str(&["i2", "42.0"]);
+        let s = t.render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("i1"));
+        // All body lines equal length.
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        let lens: Vec<usize> = lines.iter().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn barchart_scales_to_max() {
+        let mut b = BarChart::new("Exec time", "s");
+        b.group("i1", &[("cpu", 10.0), ("xpu", 2.0)]);
+        let s = b.render(40);
+        assert!(s.contains("cpu"));
+        assert!(s.contains("10.000"));
+        // cpu bar longer than xpu bar.
+        let cpu_len = s.lines().find(|l| l.contains("cpu")).unwrap().matches('█').count();
+        let xpu_len = s.lines().find(|l| l.contains("xpu")).unwrap().matches('█').count();
+        assert!(cpu_len > xpu_len);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(pct(0.1234), "12.34%");
+        assert_eq!(times(1.5), "1.50x");
+        assert_eq!(secs(2.5), "2.500s");
+        assert_eq!(secs(0.0025), "2.500ms");
+        assert_eq!(secs(2.5e-6), "2.5µs");
+    }
+}

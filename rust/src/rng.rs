@@ -1,0 +1,174 @@
+//! Deterministic pseudo-random numbers for the simulator.
+//!
+//! The whole evaluation must be reproducible run-to-run (the paper averages
+//! 3 independent runs; we seed them 0, 1, 2), so the simulator uses its own
+//! small PRNG instead of a system source: `SplitMix64` for seeding and
+//! `xoshiro256**` for the stream — both public-domain algorithms with good
+//! statistical quality and trivial state.
+
+/// `xoshiro256**` PRNG seeded via `SplitMix64`.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 expansion of the seed into the 256-bit state.
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        let s = [next(), next(), next(), next()];
+        Rng { s }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        // 53 significant bits -> exact dyadic rationals in [0,1).
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n). `n` must be > 0.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free-enough reduction; bias is < 2^-53 for
+        // the n values used here (simulation jitter, not cryptography).
+        ((self.uniform() * n as f64) as u64).min(n - 1)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the twin is
+    /// discarded to keep the state machine trivial).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-300); // avoid log(0)
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean `mu` and standard deviation `sigma`.
+    pub fn normal_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Multiplicative noise factor `~ N(1, sigma)`, clamped to stay
+    /// positive — models run-to-run variance of a device's throughput.
+    pub fn noise_factor(&mut self, sigma: f64) -> f64 {
+        self.normal_with(1.0, sigma).max(0.01)
+    }
+
+    /// Fork an independent stream (for per-device generators).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Rng::new(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(6);
+        for _ in 0..10_000 {
+            assert!(r.below(7) < 7);
+        }
+        // all residues hit
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            seen[r.below(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn noise_factor_positive_and_centered() {
+        let mut r = Rng::new(8);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.noise_factor(0.02)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01);
+        for _ in 0..1000 {
+            assert!(r.noise_factor(0.5) > 0.0);
+        }
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(9);
+        let mut f1 = root.fork();
+        let mut f2 = root.fork();
+        let a: Vec<u64> = (0..10).map(|_| f1.next_u64()).collect();
+        let b: Vec<u64> = (0..10).map(|_| f2.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,200 @@
+//! AOT artifact discovery: the manifest written by `python/compile/aot.py`.
+//!
+//! Artifacts are shape-specialized HLO-text files, one per (device-class
+//! kernel, square tile size). The manifest row format is
+//! `name kind m n k n_inputs file` — see `aot.py`.
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    /// Unique name, e.g. `gemm_f32_128`.
+    pub name: String,
+    /// Kernel family: `f32`, `bf16`, `acc_f32`, `acc_bf16`.
+    pub kind: String,
+    /// Tile dimensions (square menu: m == n == k).
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// Number of HLO entry parameters (2 or 3).
+    pub n_inputs: u32,
+    /// HLO text file path (absolute).
+    pub path: PathBuf,
+}
+
+/// The parsed artifact menu.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mpath = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                mpath.display()
+            ))
+        })?;
+        let mut entries = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 7 {
+                return Err(Error::Runtime(format!(
+                    "manifest line {}: expected 7 fields, got {}",
+                    ln + 1,
+                    f.len()
+                )));
+            }
+            let parse_u64 = |s: &str, what: &str| -> Result<u64> {
+                s.parse()
+                    .map_err(|_| Error::Runtime(format!("manifest line {}: bad {what} `{s}`", ln + 1)))
+            };
+            entries.push(ArtifactEntry {
+                name: f[0].to_string(),
+                kind: f[1].to_string(),
+                m: parse_u64(f[2], "m")?,
+                n: parse_u64(f[3], "n")?,
+                k: parse_u64(f[4], "k")?,
+                n_inputs: parse_u64(f[5], "n_inputs")? as u32,
+                path: dir.join(f[6]),
+            });
+        }
+        if entries.is_empty() {
+            return Err(Error::Runtime("manifest has no artifacts".into()));
+        }
+        Ok(ArtifactManifest {
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Default artifact directory: `$POAS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("POAS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Entry lookup by kernel family and tile size.
+    pub fn find(&self, kind: &str, tile: u64) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.m == tile)
+    }
+
+    /// Sorted tile sizes available for a kernel family.
+    pub fn tile_menu(&self, kind: &str) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.m)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Pick the menu tile that minimizes padded work for a sub-product
+    /// of shape (m, n, k): cost = #tiles * tile³. Ties prefer the larger
+    /// tile (fewer kernel launches).
+    pub fn best_tile(&self, kind: &str, m: u64, n: u64, k: u64) -> Option<u64> {
+        let menu = self.tile_menu(kind);
+        menu.into_iter().min_by(|&a, &b| {
+            let cost = |t: u64| {
+                let tiles = m.div_ceil(t) * n.div_ceil(t) * k.div_ceil(t);
+                (tiles * t * t * t) as f64
+            };
+            cost(a)
+                .total_cmp(&cost(b))
+                .then(b.cmp(&a)) // tie: larger tile first
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn temp_manifest(rows: &str) -> ArtifactManifest {
+        let dir = std::env::temp_dir().join(format!(
+            "poas-test-manifest-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        writeln!(f, "# name kind m n k n_inputs file").unwrap();
+        write!(f, "{rows}").unwrap();
+        ArtifactManifest::load(&dir).unwrap()
+    }
+
+    fn sample() -> ArtifactManifest {
+        temp_manifest(
+            "gemm_f32_64 f32 64 64 64 2 gemm_f32_64.hlo.txt\n\
+             gemm_f32_128 f32 128 128 128 2 gemm_f32_128.hlo.txt\n\
+             gemm_f32_256 f32 256 256 256 2 gemm_f32_256.hlo.txt\n\
+             gemm_bf16_128 bf16 128 128 128 2 gemm_bf16_128.hlo.txt\n\
+             gemm_acc_f32_128 acc_f32 128 128 128 3 gemm_acc_f32_128.hlo.txt\n",
+        )
+    }
+
+    #[test]
+    fn load_and_lookup() {
+        let m = sample();
+        assert_eq!(m.entries.len(), 5);
+        let e = m.find("f32", 128).unwrap();
+        assert_eq!(e.name, "gemm_f32_128");
+        assert_eq!(e.n_inputs, 2);
+        assert!(m.find("f32", 512).is_none());
+        assert!(m.find("int8", 128).is_none());
+    }
+
+    #[test]
+    fn tile_menu_sorted() {
+        let m = sample();
+        assert_eq!(m.tile_menu("f32"), vec![64, 128, 256]);
+        assert_eq!(m.tile_menu("bf16"), vec![128]);
+        assert!(m.tile_menu("nope").is_empty());
+    }
+
+    #[test]
+    fn best_tile_minimizes_padding() {
+        let m = sample();
+        // 64-cube: tile 64 exactly (cost 64^3) beats 128 (128^3).
+        assert_eq!(m.best_tile("f32", 64, 64, 64), Some(64));
+        // 128-cube: 128 exact; 64 also exact (8 tiles) -> tie on cost,
+        // larger preferred.
+        assert_eq!(m.best_tile("f32", 128, 128, 128), Some(128));
+        // 65^3: 64-tiles cost 8*64^3=2^21*... vs 128: 128^3. 8*262144 =
+        // 2,097,152 = 128^3 exactly -> tie -> 128.
+        assert_eq!(m.best_tile("f32", 65, 65, 65), Some(128));
+        // 192: 64 divides -> 27*64^3 < padding alternatives.
+        assert_eq!(m.best_tile("f32", 192, 192, 192), Some(64));
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("poas-no-such-dir-xyz");
+        assert!(ArtifactManifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn malformed_rows_error() {
+        let dir = std::env::temp_dir().join(format!("poas-bad-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "gemm f32 64\n").unwrap();
+        assert!(ArtifactManifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! The request-path compute engine: loads HLO text produced by
+//! `python/compile/aot.py`, compiles it once on the PJRT CPU client, and
+//! executes tiles from the L3 hot path. Python is never involved here.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`, with the 1-tuple unwrap required by the
+//! `return_tuple=True` lowering.
+
+use super::artifacts::ArtifactManifest;
+use crate::error::{Error, Result};
+use crate::workload::Matrix;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A PJRT client with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Compiles performed (diagnostics: cache effectiveness).
+    pub compiles: usize,
+    /// Tile executions performed.
+    pub executions: usize,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("artifacts", &self.manifest.dir)
+            .field("cached_exes", &self.exes.len())
+            .field("compiles", &self.compiles)
+            .field("executions", &self.executions)
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu failed: {e:?}")))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: HashMap::new(),
+            compiles: 0,
+            executions: 0,
+        })
+    }
+
+    /// The artifact menu.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling and caching on first use) the executable for a
+    /// kernel family + tile size.
+    fn executable(&mut self, kind: &str, tile: u64) -> Result<&xla::PjRtLoadedExecutable> {
+        let entry = self
+            .manifest
+            .find(kind, tile)
+            .ok_or_else(|| Error::Runtime(format!("no artifact for kind={kind} tile={tile}")))?
+            .clone();
+        if !self.exes.contains_key(&entry.name) {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.path.to_str().ok_or_else(|| {
+                    Error::Runtime(format!("non-utf8 path {}", entry.path.display()))
+                })?,
+            )
+            .map_err(|e| {
+                Error::Runtime(format!("parse {} failed: {e:?}", entry.path.display()))
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {} failed: {e:?}", entry.name)))?;
+            self.compiles += 1;
+            self.exes.insert(entry.name.clone(), exe);
+        }
+        Ok(&self.exes[&entry.name])
+    }
+
+    /// Pre-compile every artifact of a kernel family (warm-up, so the
+    /// first scheduled tile does not pay the compile).
+    pub fn warmup(&mut self, kind: &str) -> Result<usize> {
+        let tiles = self.manifest.tile_menu(kind);
+        for t in &tiles {
+            self.executable(kind, *t)?;
+        }
+        Ok(tiles.len())
+    }
+
+    fn literal_from_matrix(m: &Matrix) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(m.as_slice());
+        lit.reshape(&[m.rows() as i64, m.cols() as i64])
+            .map_err(|e| Error::Runtime(format!("literal reshape failed: {e:?}")))
+    }
+
+    fn matrix_from_result(result: xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+        let tuple = result
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("tuple unwrap failed: {e:?}")))?;
+        let data = tuple
+            .to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("literal to_vec failed: {e:?}")))?;
+        if data.len() != rows * cols {
+            return Err(Error::Runtime(format!(
+                "result size {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    /// Execute one square tile product `C = A @ B` (both `tile x tile`)
+    /// through the `kind` kernel family.
+    pub fn run_tile(&mut self, kind: &str, tile: u64, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        let t = tile as usize;
+        if a.rows() != t || a.cols() != t || b.rows() != t || b.cols() != t {
+            return Err(Error::Runtime(format!(
+                "run_tile expects {t}x{t} operands, got {}x{} and {}x{}",
+                a.rows(),
+                a.cols(),
+                b.rows(),
+                b.cols()
+            )));
+        }
+        let la = Self::literal_from_matrix(a)?;
+        let lb = Self::literal_from_matrix(b)?;
+        let exe = self.executable(kind, tile)?;
+        let result = exe
+            .execute::<xla::Literal>(&[la, lb])
+            .map_err(|e| Error::Runtime(format!("execute failed: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal_sync failed: {e:?}")))?;
+        self.executions += 1;
+        Self::matrix_from_result(result, t, t)
+    }
+
+    /// Execute one accumulating tile `C = A @ B + C_in` through the
+    /// `acc_<kind>` family.
+    pub fn run_tile_acc(
+        &mut self,
+        kind: &str,
+        tile: u64,
+        a: &Matrix,
+        b: &Matrix,
+        c_in: &Matrix,
+    ) -> Result<Matrix> {
+        let t = tile as usize;
+        let acc_kind = format!("acc_{kind}");
+        let la = Self::literal_from_matrix(a)?;
+        let lb = Self::literal_from_matrix(b)?;
+        let lc = Self::literal_from_matrix(c_in)?;
+        let exe = self.executable(&acc_kind, tile)?;
+        let result = exe
+            .execute::<xla::Literal>(&[la, lb, lc])
+            .map_err(|e| Error::Runtime(format!("execute failed: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal_sync failed: {e:?}")))?;
+        self.executions += 1;
+        Self::matrix_from_result(result, t, t)
+    }
+
+    /// Compute a general `C[m,n] = A[m,k] @ B[k,n]` by tiling over the
+    /// artifact menu: pick the best tile size, pad edge blocks with
+    /// zeros (exact for GEMM), and chain k-chunks through the
+    /// accumulating kernel so partial sums stay in the XLA graph.
+    pub fn run_gemm(&mut self, kind: &str, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        let (m, k) = (a.rows(), a.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        if k != k2 {
+            return Err(Error::Runtime(format!(
+                "contraction mismatch: {m}x{k} @ {k2}x{n}"
+            )));
+        }
+        let tile = self
+            .manifest
+            .best_tile(kind, m as u64, n as u64, k as u64)
+            .ok_or_else(|| Error::Runtime(format!("no tiles for kind={kind}")))?
+            as usize;
+
+        let mut c = Matrix::zeros(m, n);
+        for i0 in (0..m).step_by(tile) {
+            let h = tile.min(m - i0);
+            for j0 in (0..n).step_by(tile) {
+                let w = tile.min(n - j0);
+                let mut acc: Option<Matrix> = None;
+                for p0 in (0..k).step_by(tile) {
+                    let d = tile.min(k - p0);
+                    let at = a.padded_block(i0, p0, h, d, tile, tile);
+                    let bt = b.padded_block(p0, j0, d, w, tile, tile);
+                    acc = Some(match acc {
+                        None => self.run_tile(kind, tile as u64, &at, &bt)?,
+                        Some(prev) => {
+                            self.run_tile_acc(kind, tile as u64, &at, &bt, &prev)?
+                        }
+                    });
+                }
+                c.set_block(i0, j0, h, w, &acc.expect("k >= 1 guarantees one chunk"));
+            }
+        }
+        Ok(c)
+    }
+}

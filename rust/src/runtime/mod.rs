@@ -1,0 +1,20 @@
+//! The PJRT runtime: real execution of the AOT-compiled GEMM artifacts.
+//!
+//! This is the Rust end of the three-layer stack:
+//!
+//! 1. Pallas kernels (`python/compile/kernels/`) are the compute;
+//! 2. the JAX tile functions (`python/compile/model.py`) wrap them and
+//!    are lowered to HLO text once at build time (`make artifacts`);
+//! 3. this module loads those artifacts through the PJRT C API (`xla`
+//!    crate), compiles them once per process, and executes square tiles
+//!    from the scheduler's hot path — Python never runs here.
+//!
+//! * [`artifacts`] — manifest parsing + tile-menu selection;
+//! * [`client`] — the PJRT client, executable cache, and the padded/
+//!   accumulating tiled-GEMM driver.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactEntry, ArtifactManifest};
+pub use client::Runtime;

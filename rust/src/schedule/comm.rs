@@ -1,0 +1,239 @@
+//! The Fig. 2 communication scheme: predicted bus/compute timeline.
+//!
+//! Given a plan and the fitted model, reconstruct the schedule the
+//! priority bus produces: A and B copies in descending priority, compute
+//! per device, C copies back in the order devices finish (priority order
+//! by construction). Used by the `fig2_bus_trace` regenerator and by
+//! diagnostics that compare predicted against simulated timelines.
+
+use super::plan::SchedulePlan;
+use crate::config::DeviceKind;
+use crate::predict::PerfModel;
+
+/// What a timeline entry describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// A+B host-to-device copy.
+    CopyIn,
+    /// Device compute.
+    Compute,
+    /// C device-to-host copy.
+    CopyOut,
+}
+
+impl std::fmt::Display for PhaseKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PhaseKind::CopyIn => write!(f, "copy A,B"),
+            PhaseKind::Compute => write!(f, "compute"),
+            PhaseKind::CopyOut => write!(f, "copy C"),
+        }
+    }
+}
+
+/// One predicted interval.
+#[derive(Debug, Clone)]
+pub struct TimelineEntry {
+    pub device: usize,
+    pub phase: PhaseKind,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Predict the per-repetition timeline of a plan under the Fig. 2
+/// priority scheme. Pure model arithmetic — no simulator access.
+pub fn predicted_timeline(plan: &SchedulePlan, model: &PerfModel) -> Vec<TimelineEntry> {
+    let mut entries = Vec::new();
+    // Active accelerators in descending priority; CPU computes alongside.
+    let mut accels: Vec<usize> = plan
+        .assignments
+        .iter()
+        .filter(|a| a.rows > 0 && model.devices[a.device].kind != DeviceKind::Cpu)
+        .map(|a| a.device)
+        .collect();
+    accels.sort_by_key(|&d| std::cmp::Reverse(plan.priorities[d]));
+
+    let input = model.model_inputs();
+
+    // Phase 1: serialized H2D in priority order.
+    let mut bus_t = 0.0f64;
+    let mut compute_start = vec![0.0f64; plan.assignments.len()];
+    for &d in &accels {
+        let a = &plan.assignments[d];
+        let ops = a.slice.ops();
+        let h2d = input[d].h2d_time(ops, plan.size);
+        entries.push(TimelineEntry {
+            device: d,
+            phase: PhaseKind::CopyIn,
+            start: bus_t,
+            end: bus_t + h2d,
+        });
+        bus_t += h2d;
+        compute_start[d] = bus_t;
+    }
+
+    // Phase 2: compute (CPU from t=0, accelerators after their copy).
+    let mut compute_end = vec![0.0f64; plan.assignments.len()];
+    for a in &plan.assignments {
+        if a.rows == 0 {
+            continue;
+        }
+        let d = a.device;
+        let start = compute_start[d];
+        let dur = model.devices[d].predict_compute(a.slice);
+        entries.push(TimelineEntry {
+            device: d,
+            phase: PhaseKind::Compute,
+            start,
+            end: start + dur,
+        });
+        compute_end[d] = start + dur;
+    }
+
+    // Phase 3: serialized D2H, priority order, each after its compute.
+    let mut bus_t = 0.0f64;
+    for &d in &accels {
+        let a = &plan.assignments[d];
+        let ops = a.slice.ops();
+        let d2h = input[d].d2h_time(ops, plan.size);
+        let start = compute_end[d].max(bus_t);
+        entries.push(TimelineEntry {
+            device: d,
+            phase: PhaseKind::CopyOut,
+            start,
+            end: start + d2h,
+        });
+        bus_t = start + d2h;
+    }
+
+    entries
+}
+
+/// Render a timeline as an ASCII Gantt chart (Fig. 2 style).
+pub fn render_ascii(
+    entries: &[TimelineEntry],
+    device_names: &[String],
+    width: usize,
+) -> String {
+    let t_max = entries.iter().map(|e| e.end).fold(0.0, f64::max);
+    if t_max <= 0.0 {
+        return String::new();
+    }
+    let mut out = String::new();
+    let col = |t: f64| ((t / t_max) * (width as f64 - 1.0)).round() as usize;
+    for (d, name) in device_names.iter().enumerate() {
+        let mut row = vec![' '; width];
+        for e in entries.iter().filter(|e| e.device == d) {
+            let (s, en) = (col(e.start), col(e.end).max(col(e.start) + 1));
+            let ch = match e.phase {
+                PhaseKind::CopyIn => '<',
+                PhaseKind::Compute => '#',
+                PhaseKind::CopyOut => '>',
+            };
+            for c in row.iter_mut().take(en.min(width)).skip(s) {
+                *c = ch;
+            }
+        }
+        out.push_str(&format!("{name:>12} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{:>12}  0{:>w$.3}s   (< copy-in, # compute, > copy-out)\n",
+        "t",
+        t_max,
+        w = width - 1
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::predict::{profile, ProfileOptions};
+    use crate::schedule::static_sched::{build_plan, rules_from_config, PlanOptions};
+    use crate::sim::SimMachine;
+    use crate::workload::GemmSize;
+
+    fn plan_and_model() -> (SchedulePlan, PerfModel) {
+        let cfg = presets::mach1();
+        let mut sim = SimMachine::new(&cfg, 0);
+        let model = profile(&mut sim, &ProfileOptions::default()).unwrap();
+        let plan = build_plan(
+            &model,
+            GemmSize::square(30_000),
+            &rules_from_config(&cfg),
+            &PlanOptions::default(),
+        )
+        .unwrap();
+        (plan, model)
+    }
+
+    #[test]
+    fn copyins_serialized_priority_first() {
+        let (plan, model) = plan_and_model();
+        let tl = predicted_timeline(&plan, &model);
+        let copyins: Vec<_> = tl
+            .iter()
+            .filter(|e| e.phase == PhaseKind::CopyIn)
+            .collect();
+        assert_eq!(copyins.len(), 2);
+        // XPU (higher priority) first.
+        assert_eq!(copyins[0].device, 2);
+        assert!(copyins[0].end <= copyins[1].start + 1e-12);
+    }
+
+    #[test]
+    fn cpu_computes_from_time_zero() {
+        let (plan, model) = plan_and_model();
+        let tl = predicted_timeline(&plan, &model);
+        let cpu = tl
+            .iter()
+            .find(|e| e.device == 0 && e.phase == PhaseKind::Compute)
+            .unwrap();
+        assert_eq!(cpu.start, 0.0);
+    }
+
+    #[test]
+    fn compute_follows_copyin() {
+        let (plan, model) = plan_and_model();
+        let tl = predicted_timeline(&plan, &model);
+        for d in [1usize, 2] {
+            let ci = tl
+                .iter()
+                .find(|e| e.device == d && e.phase == PhaseKind::CopyIn)
+                .unwrap();
+            let co = tl
+                .iter()
+                .find(|e| e.device == d && e.phase == PhaseKind::Compute)
+                .unwrap();
+            assert!(co.start >= ci.end - 1e-12);
+        }
+    }
+
+    #[test]
+    fn copyouts_do_not_overlap() {
+        let (plan, model) = plan_and_model();
+        let tl = predicted_timeline(&plan, &model);
+        let outs: Vec<_> = tl
+            .iter()
+            .filter(|e| e.phase == PhaseKind::CopyOut)
+            .collect();
+        for w in outs.windows(2) {
+            assert!(w[0].end <= w[1].start + 1e-12);
+        }
+    }
+
+    #[test]
+    fn ascii_render_contains_all_devices() {
+        let (plan, model) = plan_and_model();
+        let tl = predicted_timeline(&plan, &model);
+        let names: Vec<String> = model.devices.iter().map(|d| d.name.clone()).collect();
+        let art = render_ascii(&tl, &names, 60);
+        for n in &names {
+            assert!(art.contains(n.as_str()));
+        }
+        assert!(art.contains('#'));
+        assert!(art.contains('<'));
+        assert!(art.contains('>'));
+    }
+}

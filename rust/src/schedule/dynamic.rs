@@ -1,0 +1,185 @@
+//! Dynamic scheduling (paper §3.4.2).
+//!
+//! The static scheduler assumes profiled performance holds during real
+//! workloads. When it does not (thermal throttling, contention,
+//! hot-plugged devices), the dynamic scheduler closes the loop: after
+//! every execution it compares *observed* per-device rates against the
+//! model, blends them in with an EWMA ("constantly measuring the
+//! execution time of the application and adapting the performance model
+//! over certain periods"), and rebuilds the plan when the drift exceeds
+//! a threshold.
+
+use super::plan::SchedulePlan;
+use super::static_sched::{build_plan, PlanOptions};
+use crate::adapt::AdaptRules;
+use crate::error::Result;
+use crate::predict::PerfModel;
+use crate::sim::ExecOutcome;
+use crate::workload::GemmSize;
+
+/// Closed-loop scheduler state.
+#[derive(Debug, Clone)]
+pub struct DynamicScheduler {
+    /// The live performance model (starts as the profiled one).
+    pub model: PerfModel,
+    /// EWMA blend factor for observed rates (0 = ignore observations,
+    /// 1 = replace model each step). Paper leaves the granularity open;
+    /// 0.5 converges in a few iterations without oscillating.
+    pub alpha: f64,
+    /// Relative rate drift that triggers a re-plan.
+    pub replan_threshold: f64,
+    /// Count of re-plans performed (diagnostics).
+    pub replans: usize,
+}
+
+impl DynamicScheduler {
+    /// Start from a profiled model.
+    pub fn new(model: PerfModel) -> Self {
+        DynamicScheduler {
+            model,
+            alpha: 0.5,
+            replan_threshold: 0.02,
+            replans: 0,
+        }
+    }
+
+    /// Build the initial (or refreshed) plan.
+    pub fn plan(
+        &self,
+        size: GemmSize,
+        rules: &[AdaptRules],
+        opts: &PlanOptions,
+    ) -> Result<SchedulePlan> {
+        build_plan(&self.model, size, rules, opts)
+    }
+
+    /// Feed back one execution. Returns `true` if the model drifted
+    /// enough that the caller should re-plan.
+    ///
+    /// Observation model: device `i` computed `ops_i` ops in
+    /// `compute_s_i` measured seconds, so its observed slope is
+    /// `compute_s_i / ops_i` (the intercept is negligible at workload
+    /// sizes). The EWMA blends slopes, not rates, because the LP
+    /// consumes slopes.
+    pub fn observe(&mut self, plan: &SchedulePlan, outcome: &ExecOutcome, reps: u32) -> bool {
+        let mut max_drift: f64 = 0.0;
+        for a in &plan.assignments {
+            if a.rows == 0 {
+                continue;
+            }
+            let ops = a.slice.ops() * reps.max(1) as f64;
+            let tl = &outcome.timelines[a.device];
+            if tl.compute_s <= 0.0 || ops <= 0.0 {
+                continue;
+            }
+            let observed_a = tl.compute_s / ops;
+            let dev = &mut self.model.devices[a.device];
+            let drift = (observed_a - dev.a).abs() / dev.a;
+            max_drift = max_drift.max(drift);
+            dev.a = (1.0 - self.alpha) * dev.a + self.alpha * observed_a;
+        }
+        // Speeds may have reordered: refresh priorities.
+        self.model.assign_priorities();
+        let replan = max_drift > self.replan_threshold;
+        if replan {
+            self.replans += 1;
+        }
+        replan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::predict::{profile, ProfileOptions};
+    use crate::schedule::static_sched::rules_from_config;
+    use crate::sim::SimMachine;
+    use crate::workload::GemmSize;
+
+    fn setup() -> (SimMachine, DynamicScheduler, Vec<AdaptRules>) {
+        let cfg = presets::mach1();
+        let mut sim = SimMachine::new(&cfg, 0);
+        let model = profile(&mut sim, &ProfileOptions::default()).unwrap();
+        let rules = rules_from_config(&cfg);
+        (sim, DynamicScheduler::new(model), rules)
+    }
+
+    #[test]
+    fn observe_converges_toward_truth() {
+        let (mut sim, mut dyn_sched, rules) = setup();
+        let size = GemmSize::square(30_000);
+        let opts = PlanOptions::default();
+        // Thermal throttling makes sustained rates ~10% below profiled on
+        // mach1; after a few observe/replan cycles the model's XPU slope
+        // should have moved toward the sustained (slower) truth.
+        let a0 = dyn_sched.model.devices[2].a;
+        for _ in 0..4 {
+            let plan = dyn_sched.plan(size, &rules, &opts).unwrap();
+            let outcome = sim.execute(&plan.to_work_order(50));
+            dyn_sched.observe(&plan, &outcome, 50);
+        }
+        let a1 = dyn_sched.model.devices[2].a;
+        assert!(a1 > a0, "slope should grow (device slower when hot)");
+        let slowdown = a1 / a0;
+        assert!(slowdown < 1.25, "unreasonable drift {slowdown}");
+    }
+
+    #[test]
+    fn drift_triggers_replan_flag() {
+        let (mut sim, mut dyn_sched, rules) = setup();
+        let size = GemmSize::square(30_000);
+        let plan = dyn_sched.plan(size, &rules, &PlanOptions::default()).unwrap();
+        let outcome = sim.execute(&plan.to_work_order(50));
+        let replan = dyn_sched.observe(&plan, &outcome, 50);
+        // mach1's throttling (11%) is well past the 2% threshold.
+        assert!(replan);
+        assert_eq!(dyn_sched.replans, 1);
+    }
+
+    #[test]
+    fn dynamic_beats_static_under_drift() {
+        // Run 5 consecutive 50-rep workloads. The static plan keeps the
+        // cold-profile split; the dynamic scheduler rebalances toward the
+        // observed hot rates. Dynamic must not be slower overall.
+        let size = GemmSize::square(30_000);
+
+        let (mut sim_s, dyn0, rules) = setup();
+        let static_plan = dyn0.plan(size, &rules, &PlanOptions::default()).unwrap();
+        let mut static_total = 0.0;
+        for _ in 0..5 {
+            static_total += sim_s.execute(&static_plan.to_work_order(50)).makespan;
+        }
+
+        let (mut sim_d, mut dyn_sched, rules) = setup();
+        let mut dynamic_total = 0.0;
+        let mut plan = dyn_sched.plan(size, &rules, &PlanOptions::default()).unwrap();
+        for _ in 0..5 {
+            let outcome = sim_d.execute(&plan.to_work_order(50));
+            dynamic_total += outcome.makespan;
+            if dyn_sched.observe(&plan, &outcome, 50) {
+                plan = dyn_sched.plan(size, &rules, &PlanOptions::default()).unwrap();
+            }
+        }
+        assert!(
+            dynamic_total <= static_total * 1.02,
+            "dynamic {dynamic_total} vs static {static_total}"
+        );
+    }
+
+    #[test]
+    fn zero_work_devices_ignored() {
+        let (mut sim, mut dyn_sched, rules) = setup();
+        let size = GemmSize::square(30_000);
+        let plan = dyn_sched.plan(size, &rules, &PlanOptions::default()).unwrap();
+        let outcome = sim.execute(&plan.to_work_order(10));
+        let cpu_a_before = dyn_sched.model.devices[0].a;
+        dyn_sched.observe(&plan, &outcome, 10);
+        // CPU had (tiny but nonzero) work — its slope may move; devices
+        // with zero compute time must not corrupt the model with NaNs.
+        for d in &dyn_sched.model.devices {
+            assert!(d.a.is_finite() && d.a > 0.0);
+        }
+        let _ = cpu_a_before;
+    }
+}

@@ -1,0 +1,25 @@
+//! The Schedule phase (paper §3.4, §4.4).
+//!
+//! * [`plan`] — the [`SchedulePlan`]: per-device work items with bus
+//!   priorities, plus the predictions they were derived from;
+//! * [`static_sched`] — the paper's static scheduler: predict → optimize
+//!   → adapt once, then execute unchanged (chosen for hgemms, §4.4);
+//! * [`dynamic`] — the dynamic scheduler of §3.4.2: keeps measuring
+//!   real executions and refreshes the performance model (EWMA on the
+//!   observed rates), re-running the pipeline when the model drifts;
+//! * [`comm`] — the Fig. 2 communication scheme: the predicted
+//!   priority-ordered bus timeline for a plan;
+//! * [`suitability`] — the §6 future-work hook: decide whether a
+//!   workload is worth co-executing at all, and find the crossover size.
+
+pub mod comm;
+pub mod dynamic;
+pub mod plan;
+pub mod static_sched;
+pub mod suitability;
+
+pub use comm::{predicted_timeline, PhaseKind, TimelineEntry};
+pub use dynamic::DynamicScheduler;
+pub use plan::SchedulePlan;
+pub use static_sched::{build_plan, PlanOptions};
+pub use suitability::{coexec_crossover, recommend, Recommendation};

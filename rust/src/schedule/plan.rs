@@ -1,0 +1,115 @@
+//! The schedule plan: what each device runs and in what bus order.
+
+use crate::adapt::DeviceAssignment;
+use crate::optimize::SplitSolution;
+use crate::sim::{WorkItem, WorkOrder};
+use crate::workload::GemmSize;
+
+/// A complete, executable schedule for one GEMM workload.
+#[derive(Debug, Clone)]
+pub struct SchedulePlan {
+    /// The global problem.
+    pub size: GemmSize,
+    /// Per-device assignments from the Adapt phase (machine order).
+    pub assignments: Vec<DeviceAssignment>,
+    /// Bus priority per device (machine order; paper: fastest first).
+    pub priorities: Vec<u32>,
+    /// The optimizer's predictions behind this plan.
+    pub predicted: SplitSolution,
+}
+
+impl SchedulePlan {
+    /// Convert into the simulator's work order for `reps` repetitions.
+    /// Devices with zero rows are omitted.
+    pub fn to_work_order(&self, reps: u32) -> WorkOrder {
+        let items = self
+            .assignments
+            .iter()
+            .filter(|a| a.rows > 0)
+            .map(|a| WorkItem {
+                device: a.device,
+                slice: a.slice,
+                subproducts: a.subproducts.clone(),
+                priority: self.priorities[a.device],
+            })
+            .collect();
+        WorkOrder { items, reps }
+    }
+
+    /// Work share per device (fraction of ops), machine order.
+    pub fn shares(&self) -> Vec<f64> {
+        let total: f64 = self
+            .assignments
+            .iter()
+            .map(|a| a.rows as f64)
+            .sum::<f64>()
+            .max(1.0);
+        self.assignments
+            .iter()
+            .map(|a| a.rows as f64 / total)
+            .collect()
+    }
+
+    /// Predicted makespan per repetition, seconds.
+    pub fn predicted_makespan(&self) -> f64 {
+        self.predicted.t_pred
+    }
+
+    /// Number of devices actually used.
+    pub fn active_devices(&self) -> usize {
+        self.assignments.iter().filter(|a| a.rows > 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::DeviceAssignment;
+
+    fn plan() -> SchedulePlan {
+        let size = GemmSize::new(100, 50, 40);
+        let mk = |device, rows, row_offset| DeviceAssignment {
+            device,
+            rows,
+            row_offset,
+            slice: GemmSize::new(rows.max(1), 50, 40),
+            subproducts: if rows > 0 {
+                vec![GemmSize::new(rows, 50, 40)]
+            } else {
+                vec![]
+            },
+            squareness: 1.0,
+        };
+        SchedulePlan {
+            size,
+            assignments: vec![mk(0, 10, 0), mk(1, 0, 10), mk(2, 90, 10)],
+            priorities: vec![0, 1, 2],
+            predicted: SplitSolution {
+                ops: vec![10.0 * 50.0 * 40.0, 0.0, 90.0 * 50.0 * 40.0],
+                t_pred: 0.5,
+                compute_pred: vec![0.5, 0.0, 0.5],
+                copy_pred: vec![0.0, 0.0, 0.1],
+            },
+        }
+    }
+
+    #[test]
+    fn work_order_skips_empty_devices() {
+        let wo = plan().to_work_order(3);
+        assert_eq!(wo.items.len(), 2);
+        assert_eq!(wo.reps, 3);
+        assert_eq!(wo.items[1].priority, 2);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let s = plan().shares();
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(s[1], 0.0);
+    }
+
+    #[test]
+    fn active_devices_counted() {
+        assert_eq!(plan().active_devices(), 2);
+    }
+}

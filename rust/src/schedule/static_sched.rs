@@ -1,0 +1,167 @@
+//! Static scheduling: run the POAS pipeline once per workload (§3.4.1).
+//!
+//! `build_plan` is the complete Predict→Optimize→Adapt composition: it
+//! takes the fitted [`PerfModel`], formulates and solves the split
+//! MILP, maps ops to matrix rows, and returns an executable
+//! [`SchedulePlan`]. The paper uses exactly this mode for hgemms ("we
+//! used a static scheduling, as we found that gives excellent results
+//! for our case study", §4.4).
+
+use super::plan::SchedulePlan;
+use crate::adapt::{ops_to_mnk, AdaptOptions, AdaptRules};
+use crate::error::Result;
+use crate::optimize::problem::{BusModel, SplitProblem};
+use crate::predict::PerfModel;
+use crate::workload::GemmSize;
+
+/// Options controlling plan construction (defaults = the paper's setup).
+#[derive(Debug, Clone)]
+pub struct PlanOptions {
+    /// Bus model in the optimizer formulation.
+    pub bus: BusModel,
+    /// Constrain the split to whole C rows (MILP). The relaxation is
+    /// near-integral, so this mainly matters for small/skewed problems.
+    pub row_integral: bool,
+    /// Adapt-phase switches (square decomposition, alignment).
+    pub adapt: AdaptOptions,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions {
+            bus: BusModel::SharedPriority,
+            row_integral: false,
+            adapt: AdaptOptions::default(),
+        }
+    }
+}
+
+/// Build a static schedule for `size` from a fitted model.
+///
+/// `rules` carries the per-device adapt constraints (alignment, profiled
+/// op range) in machine order.
+pub fn build_plan(
+    model: &PerfModel,
+    size: GemmSize,
+    rules: &[AdaptRules],
+    opts: &PlanOptions,
+) -> Result<SchedulePlan> {
+    // ---- Optimize: split ops across devices (Eq. 1-4).
+    let problem = SplitProblem {
+        devices: model.model_inputs(),
+        size,
+        bus: opts.bus,
+        row_integral: opts.row_integral,
+    };
+    let split = problem.solve()?;
+
+    // ---- Adapt: ops -> rows -> square sub-products.
+    let priorities: Vec<u32> = model.devices.iter().map(|d| d.priority).collect();
+    let assignments = ops_to_mnk(&split, size, rules, &priorities, &opts.adapt)?;
+
+    Ok(SchedulePlan {
+        size,
+        assignments,
+        priorities,
+        predicted: split,
+    })
+}
+
+/// Derive the adapt rules from a machine config (datasheet constraints:
+/// alignment and profiled ranges — public information, not hidden
+/// simulator state).
+pub fn rules_from_config(cfg: &crate::config::MachineConfig) -> Vec<AdaptRules> {
+    cfg.devices
+        .iter()
+        .map(|d| {
+            let (lo, hi) = d.submatrix_ops_range();
+            AdaptRules {
+                align: d.align,
+                ops_lo: lo,
+                ops_hi: hi,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::assignments_cover;
+    use crate::config::presets;
+    use crate::predict::{profile, ProfileOptions};
+    use crate::sim::SimMachine;
+
+    fn mach1_plan(size: GemmSize) -> SchedulePlan {
+        let cfg = presets::mach1();
+        let mut sim = SimMachine::new(&cfg, 0);
+        let model = profile(&mut sim, &ProfileOptions::default()).unwrap();
+        build_plan(
+            &model,
+            size,
+            &rules_from_config(&cfg),
+            &PlanOptions::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn plan_covers_problem() {
+        let size = GemmSize::square(30_000);
+        let plan = mach1_plan(size);
+        assert!(assignments_cover(&plan.assignments, size));
+    }
+
+    #[test]
+    fn plan_shares_match_paper_shape() {
+        // Table 6 mach1 i1: CPU ~0.3%, GPU ~21%, XPU ~78%.
+        let plan = mach1_plan(GemmSize::square(30_000));
+        let s = plan.shares();
+        assert!(s[0] < 0.02, "cpu {}", s[0]);
+        assert!(s[1] > 0.10 && s[1] < 0.35, "gpu {}", s[1]);
+        assert!(s[2] > 0.60 && s[2] < 0.90, "xpu {}", s[2]);
+    }
+
+    #[test]
+    fn xpu_rows_aligned() {
+        let plan = mach1_plan(GemmSize::square(30_000));
+        assert_eq!(plan.assignments[2].rows % 8, 0);
+    }
+
+    #[test]
+    fn predicted_makespan_positive_and_sane() {
+        let size = GemmSize::square(30_000);
+        let plan = mach1_plan(size);
+        // All-XPU lower bound: N / rate_xpu.
+        let lower = size.ops() / (21.5e12 * 1.2);
+        assert!(plan.predicted_makespan() > lower);
+        assert!(plan.predicted_makespan() < 10.0 * lower);
+    }
+
+    #[test]
+    fn row_integral_plans_also_cover() {
+        let cfg = presets::mach1();
+        let mut sim = SimMachine::new(&cfg, 1);
+        let model = profile(&mut sim, &ProfileOptions::default()).unwrap();
+        let size = GemmSize::new(4000, 2000, 1600);
+        let plan = build_plan(
+            &model,
+            size,
+            &rules_from_config(&cfg),
+            &PlanOptions {
+                row_integral: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(assignments_cover(&plan.assignments, size));
+    }
+
+    #[test]
+    fn rules_from_config_respects_spec() {
+        let cfg = presets::mach1();
+        let rules = rules_from_config(&cfg);
+        assert_eq!(rules[2].align, 8);
+        assert_eq!(rules[0].ops_hi, 8e9);
+    }
+}

@@ -1,0 +1,190 @@
+//! Co-execution suitability detection (paper §6, future work).
+//!
+//! "The POAS framework can detect when running a certain workload is
+//! beneficial for co-execution or not depending on the amount of work to
+//! do ... when the workload size is known (after the DS-POAS was
+//! designed)." This module implements exactly that hook: with the fitted
+//! model in hand, compare the *predicted* co-execution makespan against
+//! the *predicted* best standalone device, fold in the scheduling
+//! overhead, and recommend a mode. Small GEMMs (where B's copy time or
+//! launch overheads dominate) correctly fall back to a single device.
+
+use crate::optimize::problem::{BusModel, DeviceModelInput, SplitProblem};
+use crate::predict::PerfModel;
+use crate::workload::GemmSize;
+
+/// The detector's recommendation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Recommendation {
+    /// Co-execute with the predicted split (expected gain stated).
+    CoExecute {
+        /// Predicted makespan of the co-execution (s/rep).
+        t_coexec: f64,
+        /// Predicted makespan of the best single device (s/rep).
+        t_best_single: f64,
+        /// Which device would be the best single runner.
+        best_device: usize,
+        /// Predicted speedup (>= the threshold).
+        gain: f64,
+    },
+    /// Run on one device; co-execution would not pay.
+    Standalone {
+        /// The device to use.
+        device: usize,
+        /// Predicted makespan on it (s/rep).
+        t_single: f64,
+        /// Predicted co-execution makespan that lost.
+        t_coexec: f64,
+    },
+}
+
+impl Recommendation {
+    /// True if co-execution is advised.
+    pub fn co_execute(&self) -> bool {
+        matches!(self, Recommendation::CoExecute { .. })
+    }
+}
+
+/// Predicted standalone time of the full workload on one device
+/// (compute + its own copies — no bus contention when running alone).
+pub fn predicted_standalone(dev: &DeviceModelInput, size: GemmSize) -> f64 {
+    dev.compute_time(size.ops()) + dev.copy_time(size.ops(), size)
+}
+
+/// Decide whether `size` is worth co-executing under `model`.
+///
+/// `min_gain` is the required predicted speedup over the best single
+/// device (e.g. 1.05 = demand at least 5%); the comparison also charges
+/// the co-execution side `overhead_s` (planning + extra orchestration,
+/// measured at ~15 µs by `perf_hotpath` — essentially free, but the
+/// parameter keeps the trade-off explicit).
+pub fn recommend(
+    model: &PerfModel,
+    size: GemmSize,
+    min_gain: f64,
+    overhead_s: f64,
+) -> Recommendation {
+    let inputs = model.model_inputs();
+    let (best_device, t_best_single) = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| (i, predicted_standalone(d, size)))
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .expect("model has devices");
+
+    let t_coexec = SplitProblem {
+        devices: inputs,
+        size,
+        bus: BusModel::SharedPriority,
+        row_integral: false,
+    }
+    .solve()
+    .map(|s| s.t_pred)
+    .unwrap_or(f64::INFINITY)
+        + overhead_s;
+
+    let gain = t_best_single / t_coexec;
+    if gain >= min_gain {
+        Recommendation::CoExecute {
+            t_coexec,
+            t_best_single,
+            best_device,
+            gain,
+        }
+    } else {
+        Recommendation::Standalone {
+            device: best_device,
+            t_single: t_best_single,
+            t_coexec,
+        }
+    }
+}
+
+/// Binary-search the smallest square size (to `tol` relative precision)
+/// for which co-execution is recommended — the "crossover point" a
+/// DS-POAS designer would document for their domain.
+pub fn coexec_crossover(model: &PerfModel, min_gain: f64, overhead_s: f64) -> u64 {
+    let worth = |s: u64| recommend(model, GemmSize::square(s), min_gain, overhead_s).co_execute();
+    // Bracket.
+    let mut hi = 64u64;
+    while !worth(hi) {
+        hi *= 2;
+        if hi > 1 << 22 {
+            return hi; // never worth it at sane sizes
+        }
+    }
+    let mut lo = hi / 2;
+    while hi - lo > (lo / 64).max(1) {
+        let mid = lo + (hi - lo) / 2;
+        if worth(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::predict::{profile, ProfileOptions};
+    use crate::sim::SimMachine;
+
+    fn model() -> PerfModel {
+        let mut sim = SimMachine::new(&presets::mach1(), 0);
+        profile(&mut sim, &ProfileOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn big_gemm_is_worth_coexecuting() {
+        let m = model();
+        let rec = recommend(&m, GemmSize::square(30_000), 1.05, 20e-6);
+        assert!(rec.co_execute(), "{rec:?}");
+        if let Recommendation::CoExecute {
+            gain, best_device, ..
+        } = rec
+        {
+            assert!(gain > 1.05 && gain < 2.0, "gain {gain}");
+            assert_eq!(best_device, 2, "XPU is the best single device");
+        }
+    }
+
+    #[test]
+    fn tiny_gemm_stays_standalone() {
+        let m = model();
+        // 256^3: B copy + launch overheads dwarf any parallel gain.
+        let rec = recommend(&m, GemmSize::square(256), 1.05, 20e-6);
+        assert!(!rec.co_execute(), "{rec:?}");
+    }
+
+    #[test]
+    fn crossover_is_between_tiny_and_huge() {
+        let m = model();
+        let s = coexec_crossover(&m, 1.05, 20e-6);
+        assert!(s > 256, "crossover {s} suspiciously small");
+        assert!(s < 30_000, "crossover {s} suspiciously large");
+        // Consistency: below says no, above says yes.
+        assert!(!recommend(&m, GemmSize::square(s / 2), 1.05, 20e-6).co_execute());
+        assert!(recommend(&m, GemmSize::square(s * 2), 1.05, 20e-6).co_execute());
+    }
+
+    #[test]
+    fn higher_threshold_raises_crossover() {
+        let m = model();
+        let low = coexec_crossover(&m, 1.02, 20e-6);
+        let high = coexec_crossover(&m, 1.15, 20e-6);
+        assert!(high >= low, "low {low} high {high}");
+    }
+
+    #[test]
+    fn best_single_device_is_fastest_overall() {
+        let m = model();
+        let size = GemmSize::square(10_000);
+        let inputs = m.model_inputs();
+        let t_xpu = predicted_standalone(&inputs[2], size);
+        let t_gpu = predicted_standalone(&inputs[1], size);
+        assert!(t_xpu < t_gpu);
+    }
+}

@@ -1,0 +1,453 @@
+//! A complete simulated testbed: devices + shared bus + virtual clock.
+//!
+//! Two entry points, mirroring how the paper's software touches real
+//! hardware:
+//!
+//! * **profiling microbenchmarks** ([`SimMachine::profile_compute`],
+//!   [`SimMachine::profile_bandwidth`]) — what the Predict phase runs at
+//!   installation time (§4.1.2);
+//! * **work-order execution** ([`SimMachine::execute`]) — a scheduled
+//!   co-execution: per repetition, each accelerator's A/B copies go
+//!   through the shared bus (arbitrated by the configured policy), the
+//!   device computes its list of sub-products, and C returns over the
+//!   bus (Fig. 2). The CPU computes host-side without copies.
+//!
+//! The returned [`ExecOutcome`] carries per-device timelines (compute
+//! versus copy seconds — what Table 4's prediction errors are measured
+//! against), the makespan (Tables 6–7, Figs. 3–4), the energy report and
+//! the bus trace (Fig. 2).
+
+use super::bus::{Bus, BusPolicy, BusTrace, Direction, TransferReq};
+use super::device::SimDevice;
+use super::energy::EnergyReport;
+use crate::config::{DeviceKind, MachineConfig};
+use crate::rng::Rng;
+use crate::workload::GemmSize;
+
+/// The work assigned to one device for one co-executed GEMM.
+#[derive(Debug, Clone)]
+pub struct WorkItem {
+    /// Device index in the machine.
+    pub device: usize,
+    /// The device's overall slice (m_i, n, k) — sizes the A/B/C copies.
+    pub slice: GemmSize,
+    /// The slice decomposed into sub-products executed sequentially per
+    /// repetition (the Adapt phase's square decomposition). May be just
+    /// `[slice]` when no decomposition is applied.
+    pub subproducts: Vec<GemmSize>,
+    /// Bus priority (higher = earlier copies; paper: faster device first).
+    pub priority: u32,
+}
+
+impl WorkItem {
+    /// Undecomposed work item.
+    pub fn whole(device: usize, slice: GemmSize, priority: u32) -> Self {
+        WorkItem {
+            device,
+            slice,
+            subproducts: vec![slice],
+            priority,
+        }
+    }
+}
+
+/// A complete co-execution request: per-device work plus repetitions
+/// (the paper repeats each input 50 times, §5.1.2).
+#[derive(Debug, Clone)]
+pub struct WorkOrder {
+    pub items: Vec<WorkItem>,
+    pub reps: u32,
+}
+
+/// Per-device timing of one execution.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceTimeline {
+    /// Seconds spent computing (all reps).
+    pub compute_s: f64,
+    /// Seconds of H2D occupancy attributed to this device.
+    pub h2d_s: f64,
+    /// Seconds of D2H occupancy attributed to this device.
+    pub d2h_s: f64,
+    /// Seconds spent waiting on the bus (ready but not transferring).
+    pub bus_wait_s: f64,
+    /// Virtual time the device finished its last repetition.
+    pub finish: f64,
+}
+
+impl DeviceTimeline {
+    /// Total copy seconds (both directions).
+    pub fn copy_s(&self) -> f64 {
+        self.h2d_s + self.d2h_s
+    }
+}
+
+/// Result of executing a [`WorkOrder`].
+#[derive(Debug, Clone)]
+pub struct ExecOutcome {
+    /// Wall-clock of the whole co-execution (max device finish).
+    pub makespan: f64,
+    /// Per-device timelines (machine order; devices with no work get
+    /// default zeros).
+    pub timelines: Vec<DeviceTimeline>,
+    /// Energy over the makespan window.
+    pub energy: EnergyReport,
+    /// Bus activity.
+    pub bus_trace: BusTrace,
+}
+
+/// A simulated machine instance.
+#[derive(Debug, Clone)]
+pub struct SimMachine {
+    cfg: MachineConfig,
+    devices: Vec<SimDevice>,
+    bus: Bus,
+    /// Session clock: profiling and executions advance it so thermal
+    /// state carries realistically between activities.
+    now: f64,
+}
+
+impl SimMachine {
+    /// Build a machine with the paper's priority bus policy.
+    pub fn new(cfg: &MachineConfig, seed: u64) -> Self {
+        Self::with_policy(cfg, seed, BusPolicy::Priority)
+    }
+
+    /// Build a machine with an explicit bus arbitration policy.
+    pub fn with_policy(cfg: &MachineConfig, seed: u64, policy: BusPolicy) -> Self {
+        let mut root = Rng::new(seed ^ 0x9E3779B97F4A7C15);
+        let devices = cfg
+            .devices
+            .iter()
+            .map(|d| SimDevice::new(d.clone(), root.fork()))
+            .collect();
+        SimMachine {
+            cfg: cfg.clone(),
+            devices,
+            bus: Bus::new(policy),
+            now: 0.0,
+        }
+    }
+
+    /// The machine's configuration.
+    pub fn config(&self) -> &MachineConfig {
+        &self.cfg
+    }
+
+    /// Number of devices.
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Direct (test/calibration) access to a device.
+    pub fn device(&self, i: usize) -> &SimDevice {
+        &self.devices[i]
+    }
+
+    // ------------------------------------------------------------------
+    // Profiling microbenchmarks (the Predict phase's view of hardware)
+    // ------------------------------------------------------------------
+
+    /// Run one square `s x s x s` GEMM on device `dev` and return the
+    /// measured (virtual) seconds — including the launch overhead, like a
+    /// wall-clock benchmark would. Advances the session clock with a
+    /// small inter-run gap.
+    pub fn profile_compute_once(&mut self, dev: usize, s: u64) -> f64 {
+        let size = GemmSize::square(s);
+        let ws = size.working_set_bytes(self.cfg.devices[dev].kind.dtype_bytes());
+        let t = self.devices[dev].compute(size, ws, self.now);
+        self.now += t + 0.05; // benchmark harness gap between runs
+        t
+    }
+
+    /// Measure the host<->device bandwidth of device `dev` by timing a
+    /// transfer of `bytes` (exclusive bus — profiling runs alone).
+    /// Returns measured bytes/second.
+    pub fn profile_bandwidth_once(&mut self, dev: usize, bytes: f64) -> f64 {
+        let t = self.devices[dev].transfer_time(bytes);
+        self.now += t + 0.05;
+        bytes / t
+    }
+
+    /// Let every device cool down (idle gap between experiments).
+    pub fn rest(&mut self, seconds: f64) {
+        self.now += seconds;
+    }
+
+    // ------------------------------------------------------------------
+    // Work-order execution (the Schedule phase's view of hardware)
+    // ------------------------------------------------------------------
+
+    /// Execute a co-scheduled GEMM. Devices start cold (a fresh program
+    /// run after the inter-experiment gap) but heat up across the
+    /// repetitions — which is exactly how the paper's testbed behaved.
+    pub fn execute(&mut self, order: &WorkOrder) -> ExecOutcome {
+        for d in &mut self.devices {
+            d.reset();
+        }
+        self.bus.reset();
+        let t0 = 0.0;
+
+        let mut timelines: Vec<DeviceTimeline> = (0..self.devices.len())
+            .map(|_| DeviceTimeline::default())
+            .collect();
+
+        // Per-device time cursor within this execution.
+        let mut cursor = vec![t0; self.devices.len()];
+
+        for _rep in 0..order.reps.max(1) {
+            // ---- Phase 1: H2D copies of A_i and B (accelerators only).
+            let mut reqs = Vec::new();
+            let mut req_owner = Vec::new();
+            for item in &order.items {
+                let spec = &self.cfg.devices[item.device];
+                if spec.kind == DeviceKind::Cpu {
+                    continue;
+                }
+                let dt = spec.kind.dtype_bytes();
+                let a = item.slice.a_bytes(dt);
+                let b = item.slice.b_bytes(dt);
+                for (bytes, label) in [(a, "A"), (b, "B")] {
+                    let duration = self.devices[item.device].transfer_time(bytes);
+                    reqs.push(TransferReq {
+                        device: item.device,
+                        dir: Direction::H2D,
+                        label,
+                        ready: cursor[item.device],
+                        duration,
+                        bytes,
+                        priority: item.priority,
+                    });
+                    req_owner.push(item.device);
+                }
+            }
+            let spans = self.bus.schedule(reqs);
+            // Advance each accelerator's cursor to its last H2D end.
+            for (owner, (start, end)) in req_owner.iter().zip(&spans) {
+                let tl = &mut timelines[*owner];
+                tl.h2d_s += end - start;
+                tl.bus_wait_s += (start - cursor[*owner]).max(0.0);
+                cursor[*owner] = cursor[*owner].max(*end);
+            }
+
+            // ---- Phase 2: compute (all devices, including CPU).
+            for item in &order.items {
+                let spec = &self.cfg.devices[item.device];
+                let dt = spec.kind.dtype_bytes();
+                let ws = item.slice.working_set_bytes(dt);
+                let mut t = cursor[item.device];
+                for sub in &item.subproducts {
+                    let dur = self.devices[item.device].compute(*sub, ws, t);
+                    timelines[item.device].compute_s += dur;
+                    t += dur;
+                }
+                cursor[item.device] = t;
+            }
+
+            // ---- Phase 3: D2H copy of C_i (accelerators only).
+            let mut reqs = Vec::new();
+            let mut req_owner = Vec::new();
+            for item in &order.items {
+                let spec = &self.cfg.devices[item.device];
+                if spec.kind == DeviceKind::Cpu {
+                    continue;
+                }
+                let dt = spec.kind.dtype_bytes();
+                let c = item.slice.c_bytes(dt);
+                let duration = self.devices[item.device].transfer_time(c);
+                reqs.push(TransferReq {
+                    device: item.device,
+                    dir: Direction::D2H,
+                    label: "C",
+                    ready: cursor[item.device],
+                    duration,
+                    bytes: c,
+                    priority: item.priority,
+                });
+                req_owner.push(item.device);
+            }
+            let spans = self.bus.schedule(reqs);
+            for (owner, (start, end)) in req_owner.iter().zip(&spans) {
+                let tl = &mut timelines[*owner];
+                tl.d2h_s += end - start;
+                tl.bus_wait_s += (start - cursor[*owner]).max(0.0);
+                cursor[*owner] = cursor[*owner].max(*end);
+            }
+        }
+
+        for (i, tl) in timelines.iter_mut().enumerate() {
+            tl.finish = cursor[i];
+        }
+        let makespan = cursor
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max);
+
+        let busy: Vec<f64> = timelines
+            .iter()
+            .map(|t| t.compute_s + t.h2d_s + t.d2h_s)
+            .collect();
+        let energy = EnergyReport::from_busy(&self.cfg, &busy, makespan);
+        let bus_trace = self.bus.trace().clone();
+
+        // The experiment occupied the session: advance the clock and give
+        // the machine the paper's inter-run rest.
+        self.now += makespan + 30.0;
+
+        ExecOutcome {
+            makespan,
+            timelines,
+            energy,
+            bus_trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn mach1() -> SimMachine {
+        SimMachine::new(&presets::mach1(), 0)
+    }
+
+    fn simple_order(_m: &SimMachine) -> WorkOrder {
+        // Rough thirds of a 9000-row GEMM across cpu/gpu/xpu.
+        let n = 9000;
+        let slice = |rows| GemmSize::new(rows, n, n);
+        WorkOrder {
+            items: vec![
+                WorkItem::whole(0, slice(40), 0),
+                WorkItem::whole(1, slice(1960), 1),
+                WorkItem::whole(2, slice(7000), 2),
+            ],
+            reps: 2,
+        }
+    }
+
+    #[test]
+    fn execute_produces_consistent_outcome() {
+        let mut m = mach1();
+        let o = m.execute(&simple_order(&m));
+        assert!(o.makespan > 0.0);
+        // makespan is the max finish.
+        let max_fin = o.timelines.iter().map(|t| t.finish).fold(0.0, f64::max);
+        assert_eq!(o.makespan, max_fin);
+        // accelerators moved bytes, CPU did not.
+        assert_eq!(o.timelines[0].copy_s(), 0.0);
+        assert!(o.timelines[1].copy_s() > 0.0);
+        assert!(o.timelines[2].copy_s() > 0.0);
+        // bus never overlaps.
+        assert!(o.bus_trace.is_serialized());
+        assert!(o.energy.total_j > 0.0);
+    }
+
+    #[test]
+    fn priority_device_copies_first() {
+        let mut m = mach1();
+        let o = m.execute(&simple_order(&m));
+        // First bus segment belongs to the XPU (priority 2).
+        assert_eq!(o.bus_trace.segments[0].device, 2);
+        assert_eq!(o.bus_trace.segments[0].dir, Direction::H2D);
+    }
+
+    #[test]
+    fn reps_scale_compute_time() {
+        let mut m1 = mach1();
+        let mut o1 = simple_order(&m1);
+        o1.reps = 1;
+        let r1 = m1.execute(&o1);
+        let mut m2 = mach1();
+        let mut o2 = simple_order(&m2);
+        o2.reps = 4;
+        let r4 = m2.execute(&o2);
+        let ratio = r4.timelines[2].compute_s / r1.timelines[2].compute_s;
+        assert!(ratio > 3.7 && ratio < 4.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn standalone_cpu_has_no_bus_traffic() {
+        let mut m = mach1();
+        let o = m.execute(&WorkOrder {
+            items: vec![WorkItem::whole(0, GemmSize::square(3000), 0)],
+            reps: 1,
+        });
+        assert!(o.bus_trace.segments.is_empty());
+        assert!(o.makespan > 0.0);
+    }
+
+    #[test]
+    fn profiling_returns_sane_rates() {
+        let mut m = mach1();
+        let t = m.profile_compute_once(1, 4000);
+        let rate_tops = GemmSize::square(4000).ops() / t / 1e12;
+        let spec_rate = m.config().devices[1].eff_rate_tops;
+        assert!((rate_tops / spec_rate - 1.0).abs() < 0.15, "rate={rate_tops}");
+    }
+
+    #[test]
+    fn bandwidth_profiling_near_spec() {
+        let mut m = mach1();
+        let measured = m.profile_bandwidth_once(1, 1e9);
+        let spec = m.config().devices[1].bus_bw_gbs * 1e9;
+        assert!((measured / spec - 1.0).abs() < 0.2, "bw={measured}");
+    }
+
+    #[test]
+    fn subproduct_decomposition_equivalent_ops() {
+        // Decomposed work takes roughly as long as whole work (same total
+        // ops, more launch overheads).
+        let mut m1 = mach1();
+        let whole = m1.execute(&WorkOrder {
+            items: vec![WorkItem::whole(1, GemmSize::square(8000), 1)],
+            reps: 1,
+        });
+        let mut m2 = mach1();
+        let subs: Vec<GemmSize> = (0..8).map(|_| GemmSize::new(1000, 8000, 8000)).collect();
+        let split = m2.execute(&WorkOrder {
+            items: vec![WorkItem {
+                device: 1,
+                slice: GemmSize::square(8000),
+                subproducts: subs,
+                priority: 1,
+            }],
+            reps: 1,
+        });
+        let ratio = split.timelines[1].compute_s / whole.timelines[1].compute_s;
+        assert!((ratio - 1.0).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn determinism_per_seed() {
+        let cfg = presets::mach2();
+        let run = |seed| {
+            let mut m = SimMachine::new(&cfg, seed);
+            let o = m.execute(&WorkOrder {
+                items: vec![
+                    WorkItem::whole(1, GemmSize::new(2000, 8000, 8000), 1),
+                    WorkItem::whole(2, GemmSize::new(6000, 8000, 8000), 2),
+                ],
+                reps: 3,
+            });
+            o.makespan
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn thermal_state_resets_per_execution() {
+        let mut m = mach1();
+        let o1 = m.execute(&simple_order(&m));
+        let o2 = m.execute(&simple_order(&m));
+        // Same order, fresh thermal state: makespans within noise of each
+        // other (not monotonically increasing from carried-over heat).
+        let rel = (o1.makespan - o2.makespan).abs() / o1.makespan;
+        assert!(rel < 0.1, "rel={rel}");
+    }
+}

@@ -1,0 +1,31 @@
+//! Virtual-time simulator of the paper's heterogeneous testbeds.
+//!
+//! The paper evaluated on two physical HPC servers we do not own
+//! (repro band 0 — hardware gate), so this module plays their role: it is
+//! the *ground truth* the POAS pipeline profiles, predicts, and schedules
+//! against, exactly as the paper's pipeline treated MKL/cuBLAS/PCIe.
+//!
+//! Structure:
+//! * [`device`] — per-device GEMM timing: effective rate curves, launch
+//!   overhead, run-to-run noise, thermal throttling state, memory
+//!   oversubscription and tensor-core alignment penalties.
+//! * [`bus`] — the shared PCIe bus: serialized DMA transfers under a
+//!   pluggable arbitration policy (priority / FIFO / round-robin), with a
+//!   recorded trace (Fig. 2 regenerator).
+//! * [`machine`] — a complete testbed: devices + bus + virtual clock, with
+//!   the two entry points the rest of the stack uses: profiling
+//!   microbenchmarks and full work-order execution.
+//! * [`energy`] — joule accounting from the execution timeline.
+//!
+//! Everything is deterministic given a seed; the paper's "3 independent
+//! runs" become 3 seeds.
+
+pub mod bus;
+pub mod device;
+pub mod energy;
+pub mod machine;
+
+pub use bus::{BusPolicy, BusSegment, BusTrace, Direction};
+pub use device::SimDevice;
+pub use energy::EnergyReport;
+pub use machine::{DeviceTimeline, ExecOutcome, SimMachine, WorkItem, WorkOrder};

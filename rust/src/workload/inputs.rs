@@ -1,0 +1,132 @@
+//! The paper's evaluation inputs (Table 3) and scaled-down variants.
+//!
+//! Table 3 defines six matrix sizes, each run 50 times per experiment and
+//! averaged over 3 independent runs (§5.1.2). `scaled_inputs` divides all
+//! dimensions by a factor so the same *shapes* can be executed for real
+//! through the PJRT runtime on this host.
+
+use super::GemmSize;
+
+/// One row of Table 3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PaperInput {
+    /// Paper id: "i1" .. "i6".
+    pub id: &'static str,
+    /// Matrix dimensions.
+    pub size: GemmSize,
+    /// Why this shape is in the evaluation (§5.1.2).
+    pub rationale: &'static str,
+}
+
+/// Number of repetitions per input in the paper's evaluation (§5.1.2).
+pub const PAPER_REPS: u32 = 50;
+
+/// Number of independent runs averaged in the paper (§5.1.2).
+pub const PAPER_RUNS: u32 = 3;
+
+/// Table 3: the six evaluation inputs, in paper order.
+pub fn paper_inputs() -> Vec<PaperInput> {
+    vec![
+        PaperInput {
+            id: "i1",
+            size: GemmSize::new(30_000, 30_000, 30_000),
+            rationale: "relatively small squared matrix",
+        },
+        PaperInput {
+            id: "i2",
+            size: GemmSize::new(60_000, 20_000, 35_000),
+            rationale: "larger non-square matrix",
+        },
+        PaperInput {
+            id: "i3",
+            size: GemmSize::new(130_000, 20_000, 20_000),
+            rationale: "very skinny: m much larger than n, k",
+        },
+        PaperInput {
+            id: "i4",
+            size: GemmSize::new(40_000, 80_000, 20_000),
+            rationale: "n-dominant shape",
+        },
+        PaperInput {
+            id: "i5",
+            size: GemmSize::new(40_000, 30_000, 60_000),
+            rationale: "k-dominant shape",
+        },
+        PaperInput {
+            id: "i6",
+            size: GemmSize::new(56_000, 40_000, 40_000),
+            rationale: "largest product in the list",
+        },
+    ]
+}
+
+/// The Table 3 shapes divided by `factor` (rounded to multiples of 8 so
+/// the XPU alignment path stays exercised). Used by the real-execution
+/// examples and integration tests.
+pub fn scaled_inputs(factor: u64) -> Vec<PaperInput> {
+    assert!(factor >= 1);
+    paper_inputs()
+        .into_iter()
+        .map(|p| {
+            let scale = |d: u64| ((d / factor).max(8) / 8) * 8;
+            PaperInput {
+                size: GemmSize::new(scale(p.size.m), scale(p.size.n), scale(p.size.k)),
+                ..p
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_tops_column() {
+        // The TOps column of Table 3: 27.0, 42.0, 52.0, 64.0, 72.0, 89.6.
+        let want = [27.0, 42.0, 52.0, 64.0, 72.0, 89.6];
+        for (p, w) in paper_inputs().iter().zip(want) {
+            assert!(
+                (p.size.tops() - w).abs() < 1e-9,
+                "{}: {} != {w}",
+                p.id,
+                p.size.tops()
+            );
+        }
+    }
+
+    #[test]
+    fn table3_is_sorted_by_tops() {
+        let inputs = paper_inputs();
+        for w in inputs.windows(2) {
+            assert!(w[0].size.tops() <= w[1].size.tops());
+        }
+    }
+
+    #[test]
+    fn ids_are_i1_to_i6() {
+        let ids: Vec<_> = paper_inputs().iter().map(|p| p.id).collect();
+        assert_eq!(ids, ["i1", "i2", "i3", "i4", "i5", "i6"]);
+    }
+
+    #[test]
+    fn scaled_inputs_are_aligned_and_positive() {
+        for f in [1, 100, 1000, 100_000] {
+            for p in scaled_inputs(f) {
+                assert!(p.size.m >= 8 && p.size.n >= 8 && p.size.k >= 8);
+                assert_eq!(p.size.m % 8, 0);
+                assert_eq!(p.size.n % 8, 0);
+                assert_eq!(p.size.k % 8, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_preserves_relative_shape() {
+        let full = paper_inputs();
+        let small = scaled_inputs(100);
+        // i3 stays the m-dominant input after scaling.
+        assert!(small[2].size.m > small[2].size.n * 5);
+        assert_eq!(full[2].id, small[2].id);
+    }
+}

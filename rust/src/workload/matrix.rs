@@ -1,0 +1,280 @@
+//! Host-side dense f32 matrices for the real (PJRT) execution path.
+//!
+//! Row-major storage, with the slicing/assembly operations the
+//! coordinator needs: row-band extraction (hgemms splits m), column-band
+//! extraction of B/C tiles, padded tile extraction (the artifact menu is
+//! square power-of-two tiles), and write-back of computed tiles. A naive
+//! triple-loop `matmul` serves as the end-to-end verification oracle.
+
+use crate::rng::Rng;
+
+/// Dense row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Matrix from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Deterministic random matrix with entries in [-1, 1).
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols)
+            .map(|_| rng.range(-1.0, 1.0) as f32)
+            .collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity (rows == cols).
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow the row-major buffer.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Element accessor (debug-checked).
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Mutable element accessor (debug-checked).
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Copy of rows `[r0, r0+h)` — the hgemms m-split of A or C.
+    pub fn row_band(&self, r0: usize, h: usize) -> Matrix {
+        assert!(r0 + h <= self.rows, "row band out of range");
+        let start = r0 * self.cols;
+        Matrix {
+            rows: h,
+            cols: self.cols,
+            data: self.data[start..start + h * self.cols].to_vec(),
+        }
+    }
+
+    /// Copy of the rectangular block at (`r0`, `c0`) of size `h x w`,
+    /// zero-padded to `ph x pw` (artifact tiles are fixed square sizes,
+    /// edge tiles are padded — padding with zeros is exact for GEMM).
+    pub fn padded_block(&self, r0: usize, c0: usize, h: usize, w: usize, ph: usize, pw: usize) -> Matrix {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
+        assert!(ph >= h && pw >= w, "padded size smaller than block");
+        let mut out = Matrix::zeros(ph, pw);
+        for r in 0..h {
+            let src = (r0 + r) * self.cols + c0;
+            let dst = r * pw;
+            out.data[dst..dst + w].copy_from_slice(&self.data[src..src + w]);
+        }
+        out
+    }
+
+    /// Add the top-left `h x w` corner of `tile` into the block at
+    /// (`r0`, `c0`) — tile write-back with padding discarded.
+    pub fn add_block(&mut self, r0: usize, c0: usize, h: usize, w: usize, tile: &Matrix) {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
+        assert!(tile.rows >= h && tile.cols >= w, "tile smaller than block");
+        for r in 0..h {
+            let src = r * tile.cols;
+            let dst = (r0 + r) * self.cols + c0;
+            for c in 0..w {
+                self.data[dst + c] += tile.data[src + c];
+            }
+        }
+    }
+
+    /// Overwrite the block at (`r0`, `c0`) with the `h x w` corner of `tile`.
+    pub fn set_block(&mut self, r0: usize, c0: usize, h: usize, w: usize, tile: &Matrix) {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
+        assert!(tile.rows >= h && tile.cols >= w, "tile smaller than block");
+        for r in 0..h {
+            let src = r * tile.cols;
+            let dst = (r0 + r) * self.cols + c0;
+            self.data[dst..dst + w].copy_from_slice(&tile.data[src..src + w]);
+        }
+    }
+
+    /// Naive triple-loop reference matmul (ikj order for cache behaviour).
+    /// Verification oracle only — never on a hot path.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "contraction mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                let crow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Max absolute difference to another matrix of the same shape.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative Frobenius-norm difference `||A-B||_F / ||B||_F`.
+    pub fn rel_frob_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        if den == 0.0 {
+            return if num == 0.0 { 0.0 } else { f64::INFINITY };
+        }
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(1234)
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let mut r = rng();
+        let a = Matrix::random(7, 7, &mut r);
+        let i = Matrix::identity(7);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn row_band_roundtrip() {
+        let mut r = rng();
+        let a = Matrix::random(10, 4, &mut r);
+        let band = a.row_band(3, 4);
+        assert_eq!(band.rows(), 4);
+        for rr in 0..4 {
+            for cc in 0..4 {
+                assert_eq!(band.get(rr, cc), a.get(rr + 3, cc));
+            }
+        }
+    }
+
+    #[test]
+    fn padded_block_zero_fills() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let p = a.padded_block(0, 0, 2, 2, 4, 4);
+        assert_eq!(p.get(0, 0), 1.0);
+        assert_eq!(p.get(1, 1), 4.0);
+        assert_eq!(p.get(2, 2), 0.0);
+        assert_eq!(p.get(3, 0), 0.0);
+    }
+
+    #[test]
+    fn padding_is_exact_for_gemm() {
+        // (A|0) @ (B;0) == A @ B — padded tiles give exact products.
+        let mut r = rng();
+        let a = Matrix::random(3, 5, &mut r);
+        let b = Matrix::random(5, 2, &mut r);
+        let ap = a.padded_block(0, 0, 3, 5, 8, 8);
+        let bp = b.padded_block(0, 0, 5, 2, 8, 8);
+        let full = ap.matmul(&bp);
+        let want = a.matmul(&b);
+        let mut got = Matrix::zeros(3, 2);
+        got.set_block(0, 0, 3, 2, &full);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn add_block_accumulates() {
+        let mut c = Matrix::zeros(4, 4);
+        let t = Matrix::from_vec(2, 2, vec![1.0; 4]);
+        c.add_block(1, 1, 2, 2, &t);
+        c.add_block(1, 1, 2, 2, &t);
+        assert_eq!(c.get(1, 1), 2.0);
+        assert_eq!(c.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn split_k_matmul_composes() {
+        // A@B == A[:, :k1]@B[:k1, :] + A[:, k1:]@B[k1:, :] — the k-split
+        // contract the coordinator relies on.
+        let mut r = rng();
+        let a = Matrix::random(6, 10, &mut r);
+        let b = Matrix::random(10, 5, &mut r);
+        let a1 = a.padded_block(0, 0, 6, 4, 6, 4);
+        let a2 = a.padded_block(0, 4, 6, 6, 6, 6);
+        let b1 = b.padded_block(0, 0, 4, 5, 4, 5);
+        let b2 = b.padded_block(4, 0, 6, 5, 6, 5);
+        let mut c = Matrix::zeros(6, 5);
+        c.add_block(0, 0, 6, 5, &a1.matmul(&b1));
+        c.add_block(0, 0, 6, 5, &a2.matmul(&b2));
+        assert!(c.max_abs_diff(&a.matmul(&b)) < 1e-4);
+    }
+
+    #[test]
+    fn rel_frob_diff_zero_for_identical() {
+        let mut r = rng();
+        let a = Matrix::random(5, 5, &mut r);
+        assert_eq!(a.rel_frob_diff(&a), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,144 @@
+//! Workloads: GEMM problem sizes (Table 3) and host-side matrices.
+//!
+//! [`GemmSize`] is the unit the whole framework schedules: a single
+//! `C[m,n] = A[m,k] @ B[k,n]` product, with the paper's op count
+//! convention `ops = m * n * k` (one op = one multiply-add). [`Matrix`] is
+//! the host representation used on the real (PJRT) execution path.
+
+pub mod inputs;
+pub mod matrix;
+
+pub use inputs::{paper_inputs, scaled_inputs, PaperInput};
+pub use matrix::Matrix;
+
+/// Dimensions of one GEMM: `C[m,n] = A[m,k] @ B[k,n]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmSize {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+impl GemmSize {
+    /// Construct a size; all dimensions must be >= 1.
+    pub fn new(m: u64, n: u64, k: u64) -> Self {
+        assert!(m >= 1 && n >= 1 && k >= 1, "GEMM dims must be >= 1");
+        GemmSize { m, n, k }
+    }
+
+    /// Square size `s x s x s`.
+    pub fn square(s: u64) -> Self {
+        GemmSize::new(s, s, s)
+    }
+
+    /// The paper's operation count: `ops = m*n*k` (multiply-adds).
+    pub fn ops(&self) -> f64 {
+        self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Tera-ops, the unit of Table 3.
+    pub fn tops(&self) -> f64 {
+        self.ops() / 1e12
+    }
+
+    /// FLOPs (2 per multiply-add) — used for roofline arithmetic.
+    pub fn flops(&self) -> f64 {
+        2.0 * self.ops()
+    }
+
+    /// Bytes of A for element size `dt`.
+    pub fn a_bytes(&self, dt: u64) -> f64 {
+        (self.m * self.k * dt) as f64
+    }
+
+    /// Bytes of B for element size `dt`.
+    pub fn b_bytes(&self, dt: u64) -> f64 {
+        (self.k * self.n * dt) as f64
+    }
+
+    /// Bytes of C for element size `dt`.
+    pub fn c_bytes(&self, dt: u64) -> f64 {
+        (self.m * self.n * dt) as f64
+    }
+
+    /// Total working set (A + B + C) in bytes.
+    pub fn working_set_bytes(&self, dt: u64) -> f64 {
+        self.a_bytes(dt) + self.b_bytes(dt) + self.c_bytes(dt)
+    }
+
+    /// A row-slice of this GEMM: the sub-product computing `rows` rows of
+    /// C (the paper's hgemms splits only the m dimension, §4.3.1).
+    pub fn row_slice(&self, rows: u64) -> GemmSize {
+        assert!(rows >= 1 && rows <= self.m, "row slice out of range");
+        GemmSize::new(rows, self.n, self.k)
+    }
+
+    /// "Squareness" of this (sub-)matrix product per the paper's Eq. 5
+    /// numerator term: `min(m,k)/max(m,k)` (n is excluded — it is kept at
+    /// its original value by ops_to_mnk).
+    pub fn squareness(&self) -> f64 {
+        let (lo, hi) = if self.m < self.k {
+            (self.m, self.k)
+        } else {
+            (self.k, self.m)
+        };
+        lo as f64 / hi as f64
+    }
+}
+
+impl std::fmt::Display for GemmSize {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.m, self.n, self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_matches_paper_convention() {
+        // i1 of Table 3: 30K^3 = 27.0 TOps.
+        let s = GemmSize::new(30_000, 30_000, 30_000);
+        assert!((s.tops() - 27.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nonsquare_tops() {
+        // i2: 60K x 20K x 35K = 42.0 TOps.
+        let s = GemmSize::new(60_000, 20_000, 35_000);
+        assert!((s.tops() - 42.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let s = GemmSize::new(4, 6, 8);
+        assert_eq!(s.a_bytes(4), (4 * 8 * 4) as f64);
+        assert_eq!(s.b_bytes(4), (8 * 6 * 4) as f64);
+        assert_eq!(s.c_bytes(2), (4 * 6 * 2) as f64);
+        assert_eq!(
+            s.working_set_bytes(4),
+            s.a_bytes(4) + s.b_bytes(4) + s.c_bytes(4)
+        );
+    }
+
+    #[test]
+    fn row_slice_keeps_n_k() {
+        let s = GemmSize::new(100, 50, 25);
+        let r = s.row_slice(10);
+        assert_eq!(r, GemmSize::new(10, 50, 25));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_slice_rejects_oversize() {
+        GemmSize::new(10, 10, 10).row_slice(11);
+    }
+
+    #[test]
+    fn squareness_bounds() {
+        assert_eq!(GemmSize::square(64).squareness(), 1.0);
+        let skinny = GemmSize::new(1000, 10, 10);
+        assert!((skinny.squareness() - 0.01).abs() < 1e-12);
+    }
+}

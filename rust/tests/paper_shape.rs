@@ -1,0 +1,132 @@
+//! The acceptance criteria of DESIGN.md, as executable assertions.
+//!
+//! These pin the *shape* of the paper's evaluation — who wins, by
+//! roughly what factor, and how the trends move — on the simulated
+//! testbeds. Absolute numbers are not asserted (our substrate is a
+//! simulator, not the authors' servers).
+
+use poas::baselines;
+use poas::config::presets;
+use poas::coordinator::Pipeline;
+use poas::workload::{paper_inputs, GemmSize};
+
+/// Table 6 shape: XPU supermajority, GPU minority, CPU sliver; CPU share
+/// larger on mach2 (24-core EPYC) than mach1 (6-core Xeon).
+#[test]
+fn table6_share_shape() {
+    let mut cpu_shares = Vec::new();
+    for cfg in [presets::mach1(), presets::mach2()] {
+        let p = Pipeline::for_simulated_machine(&cfg, 0);
+        for inp in paper_inputs() {
+            let plan = p.plan(inp.size).unwrap();
+            let s = plan.shares();
+            assert!(
+                s[2] > 0.60 && s[2] < 0.90,
+                "{} {}: xpu share {}",
+                cfg.name,
+                inp.id,
+                s[2]
+            );
+            assert!(
+                s[1] > 0.10 && s[1] < 0.35,
+                "{} {}: gpu share {}",
+                cfg.name,
+                inp.id,
+                s[1]
+            );
+            assert!(s[0] < 0.03, "{} {}: cpu share {}", cfg.name, inp.id, s[0]);
+        }
+        let plan = p.plan(paper_inputs()[0].size).unwrap();
+        cpu_shares.push(plan.shares()[0]);
+    }
+    assert!(
+        cpu_shares[1] > cpu_shares[0],
+        "mach2's EPYC must take a larger share than mach1's Xeon: {cpu_shares:?}"
+    );
+}
+
+/// Table 7 shape: speedup orderings and rough factors on i1.
+#[test]
+fn table7_speedup_shape() {
+    let size = GemmSize::square(30_000);
+    let reps = 10;
+
+    // mach1: CPU huge, GPU mid, XPU just above 1.
+    let cfg = presets::mach1();
+    let mut p = Pipeline::for_simulated_machine(&cfg, 0);
+    let co = p.run_sim(size, reps).makespan;
+    let s_cpu = baselines::standalone(&mut p.sim, 0, size, reps).makespan / co;
+    let s_gpu = baselines::standalone(&mut p.sim, 1, size, reps).makespan / co;
+    let s_xpu = baselines::standalone(&mut p.sim, 2, size, reps).makespan / co;
+    assert!(s_cpu > 100.0, "mach1 cpu speedup {s_cpu}");
+    assert!((4.0..12.0).contains(&s_gpu), "mach1 gpu speedup {s_gpu}");
+    assert!((1.05..1.5).contains(&s_xpu), "mach1 xpu speedup {s_xpu}");
+
+    // mach2: CPU tens, GPU ~2-3, XPU 1.1-1.6.
+    let cfg = presets::mach2();
+    let mut p = Pipeline::for_simulated_machine(&cfg, 0);
+    let co = p.run_sim(size, reps).makespan;
+    let s_cpu = baselines::standalone(&mut p.sim, 0, size, reps).makespan / co;
+    let s_gpu = baselines::standalone(&mut p.sim, 1, size, reps).makespan / co;
+    let s_xpu = baselines::standalone(&mut p.sim, 2, size, reps).makespan / co;
+    assert!((15.0..80.0).contains(&s_cpu), "mach2 cpu speedup {s_cpu}");
+    assert!((1.7..4.0).contains(&s_gpu), "mach2 gpu speedup {s_gpu}");
+    assert!((1.1..1.7).contains(&s_xpu), "mach2 xpu speedup {s_xpu}");
+}
+
+/// Figs. 3/4 shape: the hgemms bar is the lowest for every input.
+#[test]
+fn fig3_fig4_hgemms_always_lowest() {
+    for cfg in [presets::mach1(), presets::mach2()] {
+        let mut p = Pipeline::for_simulated_machine(&cfg, 1);
+        for inp in paper_inputs() {
+            let co = p.run_sim(inp.size, 3).makespan;
+            for dev in 0..3 {
+                let alone = baselines::standalone(&mut p.sim, dev, inp.size, 3).makespan;
+                assert!(
+                    co < alone,
+                    "{} {}: hgemms {co:.2}s not below device {dev} ({alone:.2}s)",
+                    cfg.name,
+                    inp.id
+                );
+            }
+        }
+    }
+}
+
+/// Table 4 shape: mach1 (bad cooling) predicts no better than mach2.
+#[test]
+fn table4_mach1_noisier_than_mach2() {
+    let size = GemmSize::square(30_000);
+    let mut errs = Vec::new();
+    for cfg in [presets::mach1(), presets::mach2()] {
+        let mut p = Pipeline::for_simulated_machine(&cfg, 0);
+        let r = p.run_sim(size, 50);
+        // XPU global error (the paper's dominant term).
+        let pred = (r.plan.predicted.compute_pred[2] + r.plan.predicted.copy_pred[2]) * 50.0;
+        let meas = r.exec.timelines[2].compute_s + r.exec.timelines[2].copy_s();
+        errs.push(100.0 * (meas - pred).abs() / meas);
+    }
+    assert!(
+        errs[0] > errs[1] * 0.8,
+        "mach1 ({:.1}%) should not predict dramatically better than mach2 ({:.1}%)",
+        errs[0],
+        errs[1]
+    );
+    assert!(errs[0] < 20.0 && errs[1] < 15.0, "errors sane: {errs:?}");
+}
+
+/// §5.3 trend: the CPU's share does not grow as inputs grow (mach1 row
+/// of Table 6: 0.32% at i1 down to 0.28% at i6).
+#[test]
+fn cpu_share_trend_with_size() {
+    let cfg = presets::mach1();
+    let p = Pipeline::for_simulated_machine(&cfg, 0);
+    let inputs = paper_inputs();
+    let first = p.plan(inputs[0].size).unwrap().shares()[0];
+    let last = p.plan(inputs[5].size).unwrap().shares()[0];
+    assert!(
+        last <= first * 1.05,
+        "cpu share should not grow with input size: i1 {first} vs i6 {last}"
+    );
+}

@@ -1,0 +1,374 @@
+//! Property-based tests on the coordinator's invariants.
+//!
+//! No external property-testing crate is available offline, so this file
+//! carries a small in-tree harness: `prop!` runs a closure over N
+//! deterministic random cases from the crate's own PRNG and reports the
+//! first failing case's seed for reproduction.
+
+use poas::adapt::{align_rows, assignments_cover, decompose, ops_to_mnk, ops_to_rows, AdaptOptions, AdaptRules};
+use poas::optimize::milp::{solve_milp, MilpOptions};
+use poas::optimize::simplex::{Constraint, Lp};
+use poas::optimize::problem::{BusModel, DeviceModelInput, SplitProblem};
+use poas::optimize::SplitSolution;
+use poas::rng::Rng;
+use poas::sim::bus::{Bus, BusPolicy, Direction, TransferReq};
+use poas::workload::GemmSize;
+
+/// Run `cases` deterministic random property checks.
+fn prop<F: FnMut(&mut Rng, u64)>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        // A panic inside f carries `name` and `case` via the message of
+        // the assert; wrap to add context.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Adapt invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_ops_to_rows_conserves_and_bounds() {
+    prop("ops_to_rows conservation", 500, |rng, _| {
+        let d = 1 + (rng.below(5) as usize);
+        let total = 1 + rng.below(100_000);
+        let ops: Vec<f64> = (0..d).map(|_| rng.uniform() * 1e12).collect();
+        let rows = ops_to_rows(&ops, total);
+        assert_eq!(rows.iter().sum::<u64>(), total);
+        // Each device's rows within 1 of the exact proportional value.
+        let sum: f64 = ops.iter().sum();
+        if sum > 0.0 {
+            for (r, o) in rows.iter().zip(&ops) {
+                let exact = o / sum * total as f64;
+                assert!(
+                    (*r as f64 - exact).abs() <= 1.0 + 1e-9,
+                    "rows {r} vs exact {exact}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_align_rows_conserves_and_aligns() {
+    prop("align_rows", 500, |rng, _| {
+        let d = 1 + (rng.below(5) as usize);
+        let rows: Vec<u64> = (0..d).map(|_| rng.below(50_000)).collect();
+        let aligns: Vec<u64> = (0..d)
+            .map(|_| *[1u64, 1, 8, 16].get(rng.below(4) as usize).unwrap())
+            .collect();
+        let rules: Vec<AdaptRules> = aligns
+            .iter()
+            .map(|&a| AdaptRules {
+                align: a,
+                ops_lo: 0.0,
+                ops_hi: f64::INFINITY,
+            })
+            .collect();
+        let ranks: Vec<u32> = (0..d as u32).collect();
+        let out = align_rows(&rows, &rules, &ranks);
+        assert_eq!(out.iter().sum::<u64>(), rows.iter().sum::<u64>());
+        // Any device that was shaved is aligned; the absorber may not be.
+        let absorber = (0..d)
+            .filter(|&i| aligns[i] <= 1)
+            .max_by_key(|&i| ranks[i])
+            .unwrap_or_else(|| (0..d).max_by_key(|&i| ranks[i]).unwrap());
+        for i in 0..d {
+            if i != absorber && aligns[i] > 1 {
+                assert_eq!(out[i] % aligns[i], 0, "device {i} misaligned");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_decompose_conserves_ops_and_alignment() {
+    prop("decompose", 300, |rng, _| {
+        let align = *[1u64, 8].get(rng.below(2) as usize).unwrap();
+        let rows = align * (1 + rng.below(4000));
+        let n = 8 * (1 + rng.below(3000));
+        let k = align * (1 + rng.below(3000));
+        let lo = 1e9;
+        let hi = 216e9;
+        let d = decompose(rows, n, k, lo, hi, align);
+        let total: f64 = d.tiles.iter().map(|t| t.ops()).sum();
+        let want = GemmSize::new(rows, n, k).ops();
+        assert!(
+            (total - want).abs() < want * 1e-9 + 1.0,
+            "ops {total} != {want}"
+        );
+        assert_eq!(k % d.k_prime, 0);
+        if align > 1 && d.tiles.len() > 1 {
+            for t in &d.tiles {
+                assert_eq!(t.m % align, 0, "tile m misaligned");
+                assert_eq!(t.k % align, 0, "tile k misaligned");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ops_to_mnk_covers_problem() {
+    prop("ops_to_mnk coverage", 200, |rng, _| {
+        let size = GemmSize::new(
+            8 * (1 + rng.below(4000)),
+            8 * (1 + rng.below(3000)),
+            8 * (1 + rng.below(3000)),
+        );
+        let total = size.ops();
+        let w = [rng.uniform(), rng.uniform(), rng.uniform()];
+        let wsum: f64 = w.iter().sum();
+        let split = SplitSolution {
+            ops: w.iter().map(|x| x / wsum * total).collect(),
+            t_pred: 1.0,
+            compute_pred: vec![],
+            copy_pred: vec![],
+        };
+        let rules = vec![
+            AdaptRules {
+                align: 1,
+                ops_lo: 1e9,
+                ops_hi: 8e9,
+            },
+            AdaptRules {
+                align: 1,
+                ops_lo: 27e9,
+                ops_hi: 216e9,
+            },
+            AdaptRules {
+                align: 8,
+                ops_lo: 27e9,
+                ops_hi: 216e9,
+            },
+        ];
+        let asg =
+            ops_to_mnk(&split, size, &rules, &[0, 1, 2], &AdaptOptions::default()).unwrap();
+        assert!(assignments_cover(&asg, size));
+        // Offsets are a partition.
+        let mut cursor = 0;
+        for a in &asg {
+            assert_eq!(a.row_offset, cursor);
+            cursor += a.rows;
+        }
+        assert_eq!(cursor, size.m);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Optimizer invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_lp_solution_is_feasible() {
+    prop("simplex feasibility", 300, |rng, _| {
+        // Random small LP: 2-4 vars, 2-5 constraints, mixed relations.
+        let n = 2 + rng.below(3) as usize;
+        let m = 2 + rng.below(4) as usize;
+        let objective: Vec<f64> = (0..n).map(|_| rng.range(-5.0, 5.0)).collect();
+        let constraints: Vec<Constraint> = (0..m)
+            .map(|_| {
+                let coeffs: Vec<f64> = (0..n).map(|_| rng.range(-3.0, 3.0)).collect();
+                // Keep rhs >= small positive so x=0 feasible for Le; mix
+                // in some Ge with rhs <= 0 (also feasible at 0).
+                match rng.below(3) {
+                    0 => Constraint::le(coeffs, rng.range(0.1, 10.0)),
+                    1 => Constraint::ge(coeffs, rng.range(-10.0, -0.1)),
+                    _ => Constraint::le(coeffs, rng.range(0.1, 10.0)),
+                }
+            })
+            .collect();
+        let lp = Lp {
+            objective,
+            constraints,
+        };
+        match lp.solve() {
+            Ok(sol) => {
+                // Check feasibility of the returned point.
+                for (ci, c) in lp.constraints.iter().enumerate() {
+                    let lhs: f64 = c.coeffs.iter().zip(&sol.x).map(|(a, x)| a * x).sum();
+                    let ok = match c.op {
+                        poas::optimize::simplex::Relation::Le => lhs <= c.rhs + 1e-6,
+                        poas::optimize::simplex::Relation::Ge => lhs >= c.rhs - 1e-6,
+                        poas::optimize::simplex::Relation::Eq => (lhs - c.rhs).abs() < 1e-6,
+                    };
+                    assert!(ok, "constraint {ci} violated: {lhs} vs {}", c.rhs);
+                }
+                for &x in &sol.x {
+                    assert!(x >= -1e-7, "negative variable {x}");
+                }
+            }
+            Err(_) => {} // unbounded is legitimate for random objectives
+        }
+    });
+}
+
+#[test]
+fn prop_split_problem_conserves_and_bounds() {
+    prop("split conservation", 200, |rng, _| {
+        let size = GemmSize::new(
+            1000 + rng.below(100_000),
+            1000 + rng.below(50_000),
+            1000 + rng.below(50_000),
+        );
+        let d = 2 + rng.below(3) as usize;
+        let devices: Vec<DeviceModelInput> = (0..d)
+            .map(|i| DeviceModelInput {
+                name: format!("d{i}"),
+                is_cpu: i == 0,
+                a: 1.0 / (rng.range(0.1, 50.0) * 1e12),
+                b: rng.range(0.0, 1e-4),
+                dtype_bytes: if rng.below(2) == 0 { 4.0 } else { 2.0 },
+                bw: rng.range(5.0, 40.0) * 1e9,
+                lat: 1e-5,
+                priority: i as u32,
+            })
+            .collect();
+        let p = SplitProblem {
+            devices,
+            size,
+            bus: if rng.below(2) == 0 {
+                BusModel::Exclusive
+            } else {
+                BusModel::SharedPriority
+            },
+            row_integral: false,
+        };
+        let sol = p.solve().unwrap();
+        let total: f64 = sol.ops.iter().sum();
+        assert!(
+            (total - size.ops()).abs() < size.ops() * 1e-6,
+            "ops not conserved: {total} vs {}",
+            size.ops()
+        );
+        for &c in &sol.ops {
+            assert!(c >= -1e-6);
+        }
+        assert!(sol.t_pred > 0.0);
+        // T must be at least the best single device's pure compute bound.
+        let best_rate = p
+            .devices
+            .iter()
+            .map(|dv| 1.0 / dv.a)
+            .fold(0.0f64, f64::max);
+        let all_rate: f64 = p.devices.iter().map(|dv| 1.0 / dv.a).sum();
+        assert!(sol.t_pred >= size.ops() / all_rate - 1e-9);
+        assert!(sol.t_pred <= size.ops() / best_rate * 2.0 + 1.0);
+    });
+}
+
+#[test]
+fn prop_milp_respects_units_and_dominates_relaxation() {
+    prop("milp units", 100, |rng, _| {
+        let unit = 1.0 + rng.below(20) as f64;
+        let total = unit * (10.0 + rng.below(500) as f64);
+        let r1 = rng.range(1.0, 10.0);
+        let r2 = rng.range(1.0, 10.0);
+        // min T st c1/r1 <= T, c2/r2 <= T, c1+c2 = total, c1 unit-integral.
+        let lp = Lp {
+            objective: vec![0.0, 0.0, 1.0],
+            constraints: vec![
+                Constraint::le(vec![1.0 / r1, 0.0, -1.0], 0.0),
+                Constraint::le(vec![0.0, 1.0 / r2, -1.0], 0.0),
+                Constraint::eq(vec![1.0, 1.0, 0.0], total),
+            ],
+        };
+        let relax = lp.solve().unwrap();
+        let milp = solve_milp(
+            &lp,
+            &MilpOptions {
+                integer_units: vec![(0, unit)],
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let units = milp.x[0] / unit;
+        assert!(
+            (units - units.round()).abs() < 1e-5,
+            "not integral: {}",
+            milp.x[0]
+        );
+        assert!(milp.objective >= relax.objective - 1e-9);
+        // Within one unit's worth of the relaxation.
+        let unit_time = unit / r1.min(r2);
+        assert!(milp.objective <= relax.objective + unit_time + 1e-6);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Bus invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_bus_serialization_and_work_conservation() {
+    prop("bus serialization", 300, |rng, _| {
+        let policy = match rng.below(3) {
+            0 => BusPolicy::Priority,
+            1 => BusPolicy::Fifo,
+            _ => BusPolicy::RoundRobin,
+        };
+        let mut bus = Bus::new(policy);
+        let nreq = 1 + rng.below(12) as usize;
+        let reqs: Vec<TransferReq> = (0..nreq)
+            .map(|i| TransferReq {
+                device: i % 3,
+                dir: if rng.below(2) == 0 {
+                    Direction::H2D
+                } else {
+                    Direction::D2H
+                },
+                label: "p",
+                ready: rng.range(0.0, 1.0),
+                duration: rng.range(0.001, 0.5),
+                bytes: 1e6,
+                priority: rng.below(4) as u32,
+            })
+            .collect();
+        let total_dur: f64 = reqs.iter().map(|r| r.duration).sum();
+        let spans = bus.schedule(reqs.clone());
+        // Serialized.
+        assert!(bus.trace().is_serialized());
+        // Work conserving: busy time equals sum of durations.
+        assert!((bus.trace().busy_time() - total_dur).abs() < 1e-9);
+        // Each request's span >= its duration and starts after ready.
+        for (r, (s, e)) in reqs.iter().zip(&spans) {
+            assert!(*e - *s >= r.duration - 1e-9);
+            assert!(*s >= r.ready - 1e-9);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// End-to-end plan invariant on random workloads
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_random_workloads_always_covered() {
+    use poas::config::presets;
+    use poas::predict::{profile, ProfileOptions};
+    use poas::schedule::{build_plan, static_sched::rules_from_config, PlanOptions};
+    use poas::sim::SimMachine;
+
+    let cfg = presets::mach1();
+    let mut sim = SimMachine::new(&cfg, 99);
+    let model = profile(&mut sim, &ProfileOptions::default()).unwrap();
+    let rules = rules_from_config(&cfg);
+
+    prop("random workload coverage", 100, |rng, _| {
+        let size = GemmSize::new(
+            1000 + rng.below(120_000),
+            1000 + rng.below(60_000),
+            1000 + rng.below(60_000),
+        );
+        let plan = build_plan(&model, size, &rules, &PlanOptions::default()).unwrap();
+        assert!(assignments_cover(&plan.assignments, size), "size {size}");
+        let shares = plan.shares();
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    });
+}

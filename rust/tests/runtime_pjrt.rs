@@ -1,0 +1,143 @@
+//! PJRT runtime integration tests — require `make artifacts` first.
+//!
+//! These close the three-layer loop from the Rust side: load the
+//! HLO-text artifacts lowered from the Pallas kernels, execute them
+//! through the PJRT CPU client, and check numerics against the host
+//! reference. The full co-execution (threads + assembly + verification)
+//! is covered at the end.
+
+use poas::coordinator::PjrtCoordinator;
+use poas::rng::Rng;
+use poas::runtime::{ArtifactManifest, Runtime};
+use poas::workload::Matrix;
+use std::path::PathBuf;
+
+fn artifact_dir() -> PathBuf {
+    let dir = ArtifactManifest::default_dir();
+    assert!(
+        dir.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+    dir
+}
+
+#[test]
+fn manifest_has_full_menu() {
+    let m = ArtifactManifest::load(&artifact_dir()).unwrap();
+    for kind in ["f32", "bf16", "acc_f32", "acc_bf16"] {
+        let menu = m.tile_menu(kind);
+        assert!(
+            menu.contains(&64) && menu.contains(&128) && menu.contains(&256),
+            "{kind}: menu {menu:?}"
+        );
+    }
+}
+
+#[test]
+fn f32_tile_matches_host_reference() {
+    let mut rt = Runtime::new(&artifact_dir()).unwrap();
+    let mut rng = Rng::new(1);
+    let a = Matrix::random(64, 64, &mut rng);
+    let b = Matrix::random(64, 64, &mut rng);
+    let c = rt.run_tile("f32", 64, &a, &b).unwrap();
+    let want = a.matmul(&b);
+    assert!(
+        c.max_abs_diff(&want) < 1e-3,
+        "diff {}",
+        c.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn bf16_tile_close_to_f32_reference() {
+    let mut rt = Runtime::new(&artifact_dir()).unwrap();
+    let mut rng = Rng::new(2);
+    let a = Matrix::random(64, 64, &mut rng);
+    let b = Matrix::random(64, 64, &mut rng);
+    let c = rt.run_tile("bf16", 64, &a, &b).unwrap();
+    let want = a.matmul(&b);
+    // bf16 multiply: ~2-3 decimal digits.
+    assert!(c.rel_frob_diff(&want) < 2e-2, "diff {}", c.rel_frob_diff(&want));
+    // ... but clearly not garbage.
+    assert!(c.rel_frob_diff(&want) > 0.0);
+}
+
+#[test]
+fn acc_tile_accumulates() {
+    let mut rt = Runtime::new(&artifact_dir()).unwrap();
+    let mut rng = Rng::new(3);
+    let a = Matrix::random(64, 64, &mut rng);
+    let b = Matrix::random(64, 64, &mut rng);
+    let c0 = Matrix::random(64, 64, &mut rng);
+    let c = rt.run_tile_acc("f32", 64, &a, &b, &c0).unwrap();
+    let mut want = a.matmul(&b);
+    want.add_block(0, 0, 64, 64, &c0);
+    assert!(c.max_abs_diff(&want) < 1e-3);
+}
+
+#[test]
+fn general_gemm_tiles_pad_and_accumulate() {
+    let mut rt = Runtime::new(&artifact_dir()).unwrap();
+    let mut rng = Rng::new(4);
+    // Not tile-aligned in any dimension; forces padding + k-chunks.
+    let a = Matrix::random(100, 150, &mut rng);
+    let b = Matrix::random(150, 70, &mut rng);
+    let c = rt.run_gemm("f32", &a, &b).unwrap();
+    let want = a.matmul(&b);
+    assert!(c.max_abs_diff(&want) < 1e-2, "diff {}", c.max_abs_diff(&want));
+}
+
+#[test]
+fn executable_cache_reused() {
+    let mut rt = Runtime::new(&artifact_dir()).unwrap();
+    let mut rng = Rng::new(5);
+    let a = Matrix::random(64, 64, &mut rng);
+    let b = Matrix::random(64, 64, &mut rng);
+    rt.run_tile("f32", 64, &a, &b).unwrap();
+    let compiles_after_first = rt.compiles;
+    for _ in 0..5 {
+        rt.run_tile("f32", 64, &a, &b).unwrap();
+    }
+    assert_eq!(rt.compiles, compiles_after_first, "cache miss on re-run");
+    assert!(rt.executions >= 6);
+}
+
+#[test]
+fn warmup_compiles_menu() {
+    let mut rt = Runtime::new(&artifact_dir()).unwrap();
+    let n = rt.warmup("f32").unwrap();
+    assert!(n >= 3);
+    assert_eq!(rt.compiles, n);
+}
+
+#[test]
+fn run_tile_shape_validation() {
+    let mut rt = Runtime::new(&artifact_dir()).unwrap();
+    let a = Matrix::zeros(32, 64);
+    let b = Matrix::zeros(64, 64);
+    assert!(rt.run_tile("f32", 64, &a, &b).is_err());
+    assert!(rt
+        .run_gemm("f32", &Matrix::zeros(8, 9), &Matrix::zeros(8, 8))
+        .is_err());
+}
+
+#[test]
+fn e2e_coexecution_verified() {
+    // The end-to-end driver: profile the PJRT executables, POAS-plan a
+    // real GEMM, co-execute on three worker threads, assemble, verify.
+    let coord = PjrtCoordinator::new(&artifact_dir(), None).unwrap();
+    let mut rng = Rng::new(6);
+    let (m, n, k) = (192, 128, 160);
+    let a = Matrix::random(m, n * 0 + k, &mut rng); // m x k
+    let b = Matrix::random(k, n, &mut rng);
+    let run = coord.run(&a, &b, true).unwrap();
+    // All rows computed by someone.
+    let rows: u64 = run.devices.iter().map(|d| d.rows).sum();
+    assert_eq!(rows, m as u64);
+    // Numerics: mixed precision (bf16 band) bounded error.
+    let err = run.verify_rel_err.unwrap();
+    assert!(err < 2e-2, "verification error {err}");
+    assert!(run.makespan_s > 0.0);
+    // The plan used the same POAS machinery (priorities assigned).
+    assert_eq!(run.plan.priorities.len(), 3);
+}
