@@ -1,0 +1,139 @@
+//! Service-layer regenerator: plan-cache effect and queue policies.
+//!
+//! Two questions, answered with the same hand-rolled harness as
+//! `perf_hotpath` (offline build — no criterion):
+//!
+//! 1. how much does the [`PlanCache`] save on the admission hot path?
+//!    (target: a cached plan is >= 10x faster than a cold solve — the
+//!    MILP/LP is skipped entirely on a hit);
+//! 2. what do the queue policies and the standalone bypass do to a
+//!    mixed 40-request stream's latency distribution?
+
+#[path = "common.rs"]
+mod common;
+
+use common::time_median;
+use poas::config::presets;
+use poas::coordinator::Pipeline;
+use poas::report::{rate, secs, Table};
+use poas::schedule::{build_plan, static_sched::rules_from_config, PlanOptions};
+use poas::service::{PlanCache, QueuePolicy, Server, ServerOptions};
+use poas::workload::GemmSize;
+
+fn main() {
+    let cfg = presets::mach2();
+    let pipeline = Pipeline::for_simulated_machine(&cfg, 0);
+    let model = pipeline.model.clone();
+    let rules = rules_from_config(&cfg);
+    let size = GemmSize::square(30_000);
+
+    // ---- 1. Cold planning vs cache hit, both formulations.
+    let mut table = Table::new(
+        "planning latency for a repeated 30K shape (median)",
+        &["formulation", "cold solve", "cache hit", "speedup"],
+    );
+    let mut worst_speedup = f64::INFINITY;
+    for (name, opts) in [
+        ("LP relaxation", PlanOptions::default()),
+        (
+            "MILP (row-integral)",
+            PlanOptions {
+                row_integral: true,
+                ..Default::default()
+            },
+        ),
+    ] {
+        let t_cold = time_median(30, || {
+            build_plan(&model, size, &rules, &opts).unwrap();
+        });
+        let mut cache = PlanCache::new(8);
+        cache.get_or_build(&model, size, &rules, &opts).unwrap(); // warm it
+        let t_hit = time_median(300, || {
+            cache.get_or_build(&model, size, &rules, &opts).unwrap();
+        });
+        let speedup = t_cold / t_hit;
+        worst_speedup = worst_speedup.min(speedup);
+        table.row(&[
+            name.to_string(),
+            secs(t_cold),
+            secs(t_hit),
+            format!("{speedup:.0}x"),
+        ]);
+    }
+    table.print();
+    println!(
+        "cache target (>= 10x): {}",
+        if worst_speedup >= 10.0 {
+            format!("PASS ({worst_speedup:.0}x worst case)")
+        } else {
+            format!("FAIL ({worst_speedup:.1}x worst case)")
+        }
+    );
+
+    // ---- 2. A mixed 40-request stream under each serving mode.
+    let mut mix: Vec<(GemmSize, u32)> = Vec::new();
+    let shapes = [
+        GemmSize::square(16_000),
+        GemmSize::square(24_000),
+        GemmSize::new(12_000, 20_000, 16_000),
+        GemmSize::square(30_000),
+    ];
+    for i in 0..40u64 {
+        if i % 4 == 3 {
+            mix.push((GemmSize::square(280 + 16 * (i % 8)), 2)); // standalone band
+        } else {
+            mix.push((shapes[(i % 4) as usize], 2));
+        }
+    }
+
+    let mut table = Table::new(
+        "40-request mixed stream on mach2 (seed 0, 2 reps each)",
+        &[
+            "policy",
+            "bypass",
+            "machine time",
+            "mean completion",
+            "p95",
+            "throughput",
+            "plan hits",
+        ],
+    );
+    for (policy, bypass) in [
+        (QueuePolicy::Fifo, false),
+        (QueuePolicy::Fifo, true),
+        (QueuePolicy::Spjf, false),
+        (QueuePolicy::Spjf, true),
+    ] {
+        let mut srv = Server::new(
+            &cfg,
+            0,
+            ServerOptions {
+                policy,
+                standalone_bypass: bypass,
+                ..Default::default()
+            },
+        );
+        for &(s, reps) in &mix {
+            srv.submit(s, reps);
+        }
+        let report = srv.run_to_completion();
+        table.row(&[
+            format!("{policy:?}"),
+            if bypass { "on" } else { "off" }.to_string(),
+            secs(report.makespan),
+            secs(report.mean_completion()),
+            secs(report.latency_percentile(95.0)),
+            rate(report.throughput_rps()),
+            format!(
+                "{}/{}",
+                report.cache_hits,
+                report.cache_hits + report.cache_misses
+            ),
+        ]);
+    }
+    table.print();
+    println!(
+        "\ntargets: cache hit >= 10x cold solve; SPJF mean completion \
+         below FIFO on this mix; bypass cuts small-request latency."
+    );
+}

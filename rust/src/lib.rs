@@ -39,6 +39,13 @@
 //! * [`baselines`] — standalone single-device execution and the co-execution
 //!   baselines POAS is compared against (equal split, ratio split,
 //!   queue-based work stealing à la HPMaX).
+//! * [`service`] — the serving layer: a multi-tenant [`service::Server`]
+//!   that gates a stream of heterogeneous GEMM requests through the §6
+//!   suitability detector, dispatches under pluggable queue policies
+//!   (FIFO / shortest-predicted-job-first, with a standalone bypass that
+//!   co-schedules small jobs on an idle device), and memoizes
+//!   Optimize-phase output in a [`service::PlanCache`] keyed by
+//!   `(shape, model epoch)` so repeated shapes skip the MILP solve.
 //! * [`workload`], [`config`], [`metrics`], [`report`] — Table 3 inputs,
 //!   machine descriptions, statistics and table/figure rendering.
 //!
@@ -56,9 +63,32 @@
 //! println!("simulated co-executed GEMM finished in {:.3}s", outcome.makespan);
 //! ```
 //!
+//! Serving a request stream instead of running one GEMM:
+//!
+//! ```no_run
+//! use poas::config::presets;
+//! use poas::service::{QueuePolicy, Server, ServerOptions};
+//! use poas::workload::GemmSize;
+//!
+//! let mut server = Server::new(
+//!     &presets::mach2(),
+//!     42,
+//!     ServerOptions {
+//!         policy: QueuePolicy::Spjf,
+//!         standalone_bypass: true,
+//!         ..Default::default()
+//!     },
+//! );
+//! server.submit(GemmSize::square(30_000), 10); // co-executed
+//! server.submit(GemmSize::square(400), 10); // standalone (gate, §6)
+//! let report = server.run_to_completion();
+//! println!("{}", report.summary());
+//! ```
+//!
 //! See `examples/` for runnable end-to-end drivers (including real PJRT
-//! co-execution with numerics checks) and `rust/benches/` for the
-//! regenerators of every table and figure in the paper's evaluation.
+//! co-execution with numerics checks and the `gemm_service` request
+//! server) and `rust/benches/` for the regenerators of every table and
+//! figure in the paper's evaluation.
 
 pub mod adapt;
 pub mod baselines;
@@ -72,6 +102,7 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod schedule;
+pub mod service;
 pub mod sim;
 pub mod workload;
 

@@ -154,6 +154,11 @@ pub fn times(x: f64) -> String {
     format!("{x:.2}x")
 }
 
+/// Format a service rate as "12.34 req/s".
+pub fn rate(x: f64) -> String {
+    format!("{x:.2} req/s")
+}
+
 /// Format seconds adaptively (s / ms / µs).
 pub fn secs(x: f64) -> String {
     if x >= 1.0 {
@@ -209,5 +214,6 @@ mod tests {
         assert_eq!(secs(2.5), "2.500s");
         assert_eq!(secs(0.0025), "2.500ms");
         assert_eq!(secs(2.5e-6), "2.5µs");
+        assert_eq!(rate(12.345), "12.35 req/s");
     }
 }

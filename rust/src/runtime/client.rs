@@ -15,6 +15,14 @@ use crate::workload::Matrix;
 use std::collections::HashMap;
 use std::path::Path;
 
+// The offline build carries no external crates: without the `pjrt`
+// feature, the `xla` name resolves to the in-tree stub, which
+// type-checks identically and fails at `PjRtClient::cpu()`. With the
+// feature (and the `xla` dependency added to Cargo.toml), the real
+// bindings take over and the stub is compiled out.
+#[cfg(not(feature = "pjrt"))]
+use super::pjrt_stub as xla;
+
 /// A PJRT client with a compiled-executable cache.
 pub struct Runtime {
     client: xla::PjRtClient,

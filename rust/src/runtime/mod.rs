@@ -15,6 +15,8 @@
 
 pub mod artifacts;
 pub mod client;
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt_stub;
 
 pub use artifacts::{ArtifactEntry, ArtifactManifest};
 pub use client::Runtime;

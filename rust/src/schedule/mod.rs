@@ -21,5 +21,5 @@ pub mod suitability;
 pub use comm::{predicted_timeline, PhaseKind, TimelineEntry};
 pub use dynamic::DynamicScheduler;
 pub use plan::SchedulePlan;
-pub use static_sched::{build_plan, PlanOptions};
+pub use static_sched::{build_plan, build_plan_excluding, PlanOptions};
 pub use suitability::{coexec_crossover, recommend, Recommendation};

@@ -59,6 +59,38 @@ impl SchedulePlan {
     pub fn active_devices(&self) -> usize {
         self.assignments.iter().filter(|a| a.rows > 0).count()
     }
+
+    /// Devices with a non-empty assignment (machine order).
+    pub fn active_device_indices(&self) -> Vec<usize> {
+        self.assignments
+            .iter()
+            .filter(|a| a.rows > 0)
+            .map(|a| a.device)
+            .collect()
+    }
+
+    /// True when two plans describe the same executable schedule: same
+    /// problem, per-device rows/offsets/sub-products and bus priorities,
+    /// and bit-identical predictions. Plan construction is deterministic,
+    /// so a cached plan must satisfy this against a fresh solve — the
+    /// `PlanCache` property tests assert exactly that.
+    pub fn same_split(&self, other: &SchedulePlan) -> bool {
+        self.size == other.size
+            && self.priorities == other.priorities
+            && self.assignments.len() == other.assignments.len()
+            && self
+                .assignments
+                .iter()
+                .zip(&other.assignments)
+                .all(|(a, b)| {
+                    a.device == b.device
+                        && a.rows == b.rows
+                        && a.row_offset == b.row_offset
+                        && a.subproducts == b.subproducts
+                })
+            && self.predicted.t_pred == other.predicted.t_pred
+            && self.predicted.ops == other.predicted.ops
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +143,18 @@ mod tests {
     #[test]
     fn active_devices_counted() {
         assert_eq!(plan().active_devices(), 2);
+        assert_eq!(plan().active_device_indices(), vec![0, 2]);
+    }
+
+    #[test]
+    fn same_split_detects_differences() {
+        let a = plan();
+        let mut b = plan();
+        assert!(a.same_split(&b));
+        b.predicted.t_pred += 1e-9;
+        assert!(!a.same_split(&b));
+        let mut c = plan();
+        c.assignments[0].rows += 1;
+        assert!(!a.same_split(&c));
     }
 }

@@ -9,8 +9,9 @@
 
 use super::plan::SchedulePlan;
 use crate::adapt::{ops_to_mnk, AdaptOptions, AdaptRules};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::optimize::problem::{BusModel, SplitProblem};
+use crate::optimize::SplitSolution;
 use crate::predict::PerfModel;
 use crate::workload::GemmSize;
 
@@ -46,14 +47,56 @@ pub fn build_plan(
     rules: &[AdaptRules],
     opts: &PlanOptions,
 ) -> Result<SchedulePlan> {
-    // ---- Optimize: split ops across devices (Eq. 1-4).
+    build_plan_excluding(model, size, rules, opts, &[])
+}
+
+/// [`build_plan`], but with `excluded` devices left out of the split
+/// problem entirely: they are guaranteed zero ops (and zero rows), so
+/// the resulting work order leaves them idle. The service layer's
+/// standalone bypass plans around its host device this way.
+///
+/// Assignments and predictions come back in full machine order;
+/// excluded devices carry empty assignments and zeroed predictions.
+pub fn build_plan_excluding(
+    model: &PerfModel,
+    size: GemmSize,
+    rules: &[AdaptRules],
+    opts: &PlanOptions,
+    excluded: &[usize],
+) -> Result<SchedulePlan> {
+    let n = model.devices.len();
+    let keep: Vec<usize> = (0..n).filter(|i| !excluded.contains(i)).collect();
+    if keep.is_empty() {
+        return Err(Error::Infeasible(
+            "every device excluded from the split problem".into(),
+        ));
+    }
+    let inputs = model.model_inputs();
+
+    // ---- Optimize: split ops across the kept devices (Eq. 1-4).
     let problem = SplitProblem {
-        devices: model.model_inputs(),
+        devices: keep.iter().map(|&i| inputs[i].clone()).collect(),
         size,
         bus: opts.bus,
         row_integral: opts.row_integral,
     };
-    let split = problem.solve()?;
+    let sub = problem.solve()?;
+
+    // Re-expand the solution to machine order (zeros for excluded).
+    let mut ops = vec![0.0; n];
+    let mut compute_pred = vec![0.0; n];
+    let mut copy_pred = vec![0.0; n];
+    for (j, &i) in keep.iter().enumerate() {
+        ops[i] = sub.ops[j];
+        compute_pred[i] = sub.compute_pred[j];
+        copy_pred[i] = sub.copy_pred[j];
+    }
+    let split = SplitSolution {
+        ops,
+        t_pred: sub.t_pred,
+        compute_pred,
+        copy_pred,
+    };
 
     // ---- Adapt: ops -> rows -> square sub-products.
     let priorities: Vec<u32> = model.devices.iter().map(|d| d.priority).collect();
@@ -155,6 +198,35 @@ mod tests {
         )
         .unwrap();
         assert!(assignments_cover(&plan.assignments, size));
+    }
+
+    #[test]
+    fn excluding_a_device_zeroes_it_and_still_covers() {
+        let cfg = presets::mach1();
+        let mut sim = SimMachine::new(&cfg, 2);
+        let model = profile(&mut sim, &ProfileOptions::default()).unwrap();
+        let size = GemmSize::square(30_000);
+        let plan = build_plan_excluding(
+            &model,
+            size,
+            &rules_from_config(&cfg),
+            &PlanOptions::default(),
+            &[0], // exclude the CPU
+        )
+        .unwrap();
+        assert_eq!(plan.assignments[0].rows, 0);
+        assert_eq!(plan.predicted.ops[0], 0.0);
+        assert!(assignments_cover(&plan.assignments, size));
+        assert_eq!(plan.active_devices(), 2);
+        // Excluding everything is infeasible.
+        assert!(build_plan_excluding(
+            &model,
+            size,
+            &rules_from_config(&cfg),
+            &PlanOptions::default(),
+            &[0, 1, 2],
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,210 @@
+//! Plan memoization: skip the Optimize-phase (MI)LP solve for repeated
+//! shapes.
+//!
+//! `perf_hotpath` shows the plan build (LP/MILP + adapt) is the hot path
+//! of request admission; a serving workload repeats shapes constantly
+//! (the paper profiles at installation time precisely because "real
+//! matrix multiplication workloads arrive" later, §4.1.2). The cache
+//! memoizes [`build_plan`] output keyed by `(GemmSize, model epoch)`:
+//! the epoch is bumped whenever the dynamic scheduler refreshes the
+//! performance model, so no plan computed against a stale model can ever
+//! be returned — even stale entries that survived eviction would miss on
+//! the epoch component of the key (they are additionally dropped
+//! eagerly).
+
+use crate::adapt::AdaptRules;
+use crate::error::Result;
+use crate::predict::PerfModel;
+use crate::schedule::{build_plan, PlanOptions, SchedulePlan};
+use crate::workload::GemmSize;
+use std::collections::{HashMap, VecDeque};
+
+/// A bounded FIFO memo of Optimize/Adapt output.
+#[derive(Debug, Clone)]
+pub struct PlanCache {
+    map: HashMap<(GemmSize, u64), SchedulePlan>,
+    /// Insertion order for FIFO eviction.
+    order: VecDeque<(GemmSize, u64)>,
+    epoch: u64,
+    capacity: usize,
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that had to solve.
+    pub misses: u64,
+    /// Epoch bumps performed (each dropped every cached plan).
+    pub invalidations: u64,
+}
+
+impl PlanCache {
+    /// New cache holding at most `capacity` plans (min 1).
+    pub fn new(capacity: usize) -> Self {
+        PlanCache {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            epoch: 0,
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+            invalidations: 0,
+        }
+    }
+
+    /// The current model epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fraction of lookups answered from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// The performance model changed (dynamic-scheduler refresh): any
+    /// plan computed against the old model is wrong. Advances the epoch
+    /// — which alone retires every existing key — and drops the entries.
+    pub fn bump_epoch(&mut self) {
+        self.epoch += 1;
+        self.map.clear();
+        self.order.clear();
+        self.invalidations += 1;
+    }
+
+    /// Non-counting lookup at the current epoch (diagnostics/tests).
+    pub fn peek(&self, size: GemmSize) -> Option<&SchedulePlan> {
+        self.map.get(&(size, self.epoch))
+    }
+
+    /// Return the cached plan for `size` at the current epoch, or solve
+    /// with [`build_plan`] and cache the result. The flag is `true` on a
+    /// cache hit (the MILP solve was skipped).
+    pub fn get_or_build(
+        &mut self,
+        model: &PerfModel,
+        size: GemmSize,
+        rules: &[AdaptRules],
+        opts: &PlanOptions,
+    ) -> Result<(SchedulePlan, bool)> {
+        let key = (size, self.epoch);
+        if let Some(plan) = self.map.get(&key) {
+            self.hits += 1;
+            return Ok((plan.clone(), true));
+        }
+        self.misses += 1;
+        let plan = build_plan(model, size, rules, opts)?;
+        self.insert(key, plan.clone());
+        Ok((plan, false))
+    }
+
+    fn insert(&mut self, key: (GemmSize, u64), plan: SchedulePlan) {
+        if self.map.insert(key, plan).is_none() {
+            self.order.push_back(key);
+        }
+        while self.map.len() > self.capacity {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::predict::{profile, ProfileOptions};
+    use crate::schedule::static_sched::rules_from_config;
+    use crate::sim::SimMachine;
+
+    fn fixture() -> (PerfModel, Vec<AdaptRules>, PlanOptions) {
+        let cfg = presets::mach1();
+        let mut sim = SimMachine::new(&cfg, 0);
+        let model = profile(&mut sim, &ProfileOptions::default()).unwrap();
+        (model, rules_from_config(&cfg), PlanOptions::default())
+    }
+
+    #[test]
+    fn hit_returns_identical_plan() {
+        let (model, rules, opts) = fixture();
+        let size = GemmSize::square(20_000);
+        let mut cache = PlanCache::new(8);
+        let fresh = build_plan(&model, size, &rules, &opts).unwrap();
+        let (first, hit1) = cache.get_or_build(&model, size, &rules, &opts).unwrap();
+        let (second, hit2) = cache.get_or_build(&model, size, &rules, &opts).unwrap();
+        assert!(!hit1);
+        assert!(hit2);
+        assert!(first.same_split(&fresh));
+        assert!(second.same_split(&fresh));
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+        assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn epoch_bump_invalidates_everything() {
+        let (model, rules, opts) = fixture();
+        let mut cache = PlanCache::new(8);
+        for s in [10_000u64, 12_000, 14_000] {
+            cache
+                .get_or_build(&model, GemmSize::square(s), &rules, &opts)
+                .unwrap();
+        }
+        assert_eq!(cache.len(), 3);
+        cache.bump_epoch();
+        assert!(cache.is_empty());
+        assert_eq!(cache.epoch(), 1);
+        assert_eq!(cache.invalidations, 1);
+        assert!(cache.peek(GemmSize::square(10_000)).is_none());
+        // The next lookup must re-solve.
+        let (_, hit) = cache
+            .get_or_build(&model, GemmSize::square(10_000), &rules, &opts)
+            .unwrap();
+        assert!(!hit);
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_first() {
+        let (model, rules, opts) = fixture();
+        let mut cache = PlanCache::new(2);
+        let sizes = [
+            GemmSize::square(10_000),
+            GemmSize::square(12_000),
+            GemmSize::square(14_000),
+        ];
+        for &s in &sizes {
+            cache.get_or_build(&model, s, &rules, &opts).unwrap();
+        }
+        assert_eq!(cache.len(), 2);
+        assert!(cache.peek(sizes[0]).is_none(), "oldest entry evicted");
+        assert!(cache.peek(sizes[1]).is_some());
+        assert!(cache.peek(sizes[2]).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let (model, rules, opts) = fixture();
+        let mut cache = PlanCache::new(0);
+        let size = GemmSize::square(10_000);
+        cache.get_or_build(&model, size, &rules, &opts).unwrap();
+        assert_eq!(cache.len(), 1);
+        let (_, hit) = cache.get_or_build(&model, size, &rules, &opts).unwrap();
+        assert!(hit);
+    }
+}

@@ -1,0 +1,34 @@
+//! The serving layer: POAS as installation-time infrastructure behind a
+//! request stream.
+//!
+//! The paper frames the framework as something deployed once and then
+//! consulted as "real matrix multiplication workloads arrive" (§4.1.2),
+//! and ALP (Hill & Reddi) presumes many concurrent workloads. This
+//! module is that deployment shape, built on [`crate::coordinator`]:
+//!
+//! * [`server`] — a multi-tenant [`Server`]: owns the machine + profile,
+//!   gates every request through the §6 suitability detector, dispatches
+//!   under a pluggable queue policy, and optionally closes the loop with
+//!   the dynamic scheduler;
+//! * [`cache`] — the [`PlanCache`]: Optimize-phase output memoized by
+//!   `(shape, model epoch)` so repeated shapes skip the MILP solve; a
+//!   model refresh bumps the epoch and invalidates everything;
+//! * [`queue`] — FIFO and shortest-predicted-job-first orderings, plus
+//!   the scan used by the standalone bypass (a small standalone-bound
+//!   request co-scheduled on a device the plan leaves idle);
+//! * [`request`] — request/outcome records and the per-session
+//!   latency/throughput report.
+//!
+//! See `rust/tests/service_scenarios.rs` for the deterministic scenario
+//! harness and `rust/benches/service_throughput.rs` for the cache and
+//! policy numbers.
+
+pub mod cache;
+pub mod queue;
+pub mod request;
+pub mod server;
+
+pub use cache::PlanCache;
+pub use queue::{QueuePolicy, QueuedRequest, RequestQueue};
+pub use request::{ExecMode, GemmRequest, ServedRequest, ServiceReport};
+pub use server::{Server, ServerOptions};

@@ -1,0 +1,182 @@
+//! Pluggable request-queue policies.
+//!
+//! The server admits requests into a [`RequestQueue`] and drains it one
+//! dispatch at a time. Two orderings are provided (queue-level
+//! co-scheduling in the spirit of Aupy et al., "Co-Scheduling Algorithms
+//! for High-Throughput Workload Execution"):
+//!
+//! * [`QueuePolicy::Fifo`] — arrival order (the baseline a naive
+//!   service would use);
+//! * [`QueuePolicy::Spjf`] — shortest-predicted-job-first: dispatch the
+//!   request with the smallest admission-time predicted service time.
+//!   Classic SPT scheduling minimizes mean completion time on a single
+//!   shared machine, and POAS gives us the predictions for free.
+//!
+//! Requests are annotated once at admission ([`QueuedRequest`]) so
+//! policy decisions never re-run the optimizer.
+
+use super::request::GemmRequest;
+use std::collections::VecDeque;
+
+/// Dispatch-order policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// First in, first out.
+    Fifo,
+    /// Shortest predicted job first (ties: arrival order).
+    Spjf,
+}
+
+/// A pending request plus the admission-time gate/prediction results.
+#[derive(Debug, Clone)]
+pub struct QueuedRequest {
+    /// The request itself.
+    pub req: GemmRequest,
+    /// Virtual time it entered the queue.
+    pub arrival: f64,
+    /// Suitability-gate verdict: worth co-executing?
+    pub co_execute: bool,
+    /// Best single device if run standalone.
+    pub best_device: usize,
+    /// Predicted total service seconds (all reps) under the verdict.
+    pub predicted_s: f64,
+}
+
+/// The pending-request queue.
+#[derive(Debug, Clone)]
+pub struct RequestQueue {
+    policy: QueuePolicy,
+    pending: VecDeque<QueuedRequest>,
+}
+
+impl RequestQueue {
+    /// Empty queue under `policy`.
+    pub fn new(policy: QueuePolicy) -> Self {
+        RequestQueue {
+            policy,
+            pending: VecDeque::new(),
+        }
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> QueuePolicy {
+        self.policy
+    }
+
+    /// Number of pending requests.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True when nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Admit a request at the tail.
+    pub fn push(&mut self, q: QueuedRequest) {
+        self.pending.push_back(q);
+    }
+
+    /// Put a request back at the head (used when a bypass pairing has to
+    /// be undone).
+    pub fn push_front(&mut self, q: QueuedRequest) {
+        self.pending.push_front(q);
+    }
+
+    /// Remove and return the next request to dispatch under the policy.
+    pub fn pop_next(&mut self) -> Option<QueuedRequest> {
+        match self.policy {
+            QueuePolicy::Fifo => self.pending.pop_front(),
+            QueuePolicy::Spjf => {
+                let idx = self
+                    .pending
+                    .iter()
+                    .enumerate()
+                    .min_by(|(ia, a), (ib, b)| {
+                        a.predicted_s
+                            .total_cmp(&b.predicted_s)
+                            .then(ia.cmp(ib))
+                    })
+                    .map(|(i, _)| i)?;
+                self.pending.remove(idx)
+            }
+        }
+    }
+
+    /// Remove and return the first pending request (queue order)
+    /// matching `pred` — the bypass scan.
+    pub fn take_first<F: FnMut(&QueuedRequest) -> bool>(
+        &mut self,
+        mut pred: F,
+    ) -> Option<QueuedRequest> {
+        let idx = self.pending.iter().position(|q| pred(q))?;
+        self.pending.remove(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::GemmSize;
+
+    fn q(id: u64, predicted_s: f64, co: bool) -> QueuedRequest {
+        QueuedRequest {
+            req: GemmRequest {
+                id,
+                size: GemmSize::square(1000),
+                reps: 1,
+            },
+            arrival: id as f64,
+            co_execute: co,
+            best_device: 2,
+            predicted_s,
+        }
+    }
+
+    #[test]
+    fn fifo_preserves_arrival_order() {
+        let mut rq = RequestQueue::new(QueuePolicy::Fifo);
+        for (id, t) in [(0, 5.0), (1, 1.0), (2, 3.0)] {
+            rq.push(q(id, t, true));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| rq.pop_next().map(|x| x.req.id)).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+        assert!(rq.is_empty());
+    }
+
+    #[test]
+    fn spjf_dispatches_shortest_first() {
+        let mut rq = RequestQueue::new(QueuePolicy::Spjf);
+        for (id, t) in [(0, 5.0), (1, 1.0), (2, 3.0), (3, 1.0)] {
+            rq.push(q(id, t, true));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| rq.pop_next().map(|x| x.req.id)).collect();
+        // Ties (ids 1 and 3 at 1.0s) break by queue position.
+        assert_eq!(order, vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn take_first_scans_in_queue_order() {
+        let mut rq = RequestQueue::new(QueuePolicy::Fifo);
+        rq.push(q(0, 5.0, true));
+        rq.push(q(1, 1.0, false));
+        rq.push(q(2, 0.5, false));
+        let got = rq.take_first(|c| !c.co_execute).unwrap();
+        assert_eq!(got.req.id, 1, "first matching, not best matching");
+        assert_eq!(rq.len(), 2);
+        assert!(rq.take_first(|c| c.predicted_s > 100.0).is_none());
+        assert_eq!(rq.len(), 2);
+    }
+
+    #[test]
+    fn push_front_restores_head() {
+        let mut rq = RequestQueue::new(QueuePolicy::Fifo);
+        rq.push(q(0, 1.0, true));
+        let taken = rq.pop_next().unwrap();
+        rq.push(q(1, 1.0, true));
+        rq.push_front(taken);
+        assert_eq!(rq.pop_next().unwrap().req.id, 0);
+        assert_eq!(rq.pop_next().unwrap().req.id, 1);
+    }
+}

@@ -1,0 +1,290 @@
+//! Service-level request and outcome types.
+//!
+//! A [`GemmRequest`] is the unit tenants submit: one GEMM shape plus a
+//! repetition count. The server answers with a [`ServedRequest`] record
+//! (virtual-time start/finish, execution mode, cache behaviour) and the
+//! whole session aggregates into a [`ServiceReport`] with the latency /
+//! throughput statistics the ROADMAP's production framing calls for.
+
+use crate::metrics::{mean, percentile};
+use crate::report::Table;
+use crate::workload::GemmSize;
+use std::fmt;
+
+/// One tenant request: `C = A @ B` of `size`, repeated `reps` times.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmRequest {
+    /// Caller-visible id (unique per server).
+    pub id: u64,
+    /// The GEMM shape.
+    pub size: GemmSize,
+    /// Repetitions (the paper's workloads repeat each input, §5.1.2).
+    pub reps: u32,
+}
+
+/// How a request was executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Co-executed across the machine with a POAS plan.
+    CoExec,
+    /// Ran alone on one device (suitability gate said co-execution
+    /// would not pay, §6).
+    Standalone {
+        /// The device it ran on.
+        device: usize,
+    },
+    /// Standalone job co-scheduled on an idle device alongside another
+    /// request's co-execution (the queue-level bypass).
+    BypassStandalone {
+        /// The device it ran on.
+        device: usize,
+    },
+}
+
+impl ExecMode {
+    /// True for either standalone variant.
+    pub fn is_standalone(&self) -> bool {
+        !matches!(self, ExecMode::CoExec)
+    }
+
+    /// True when the request rode along via the bypass.
+    pub fn is_bypass(&self) -> bool {
+        matches!(self, ExecMode::BypassStandalone { .. })
+    }
+}
+
+impl fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecMode::CoExec => write!(f, "co-exec"),
+            ExecMode::Standalone { device } => write!(f, "standalone(d{device})"),
+            ExecMode::BypassStandalone { device } => write!(f, "bypass(d{device})"),
+        }
+    }
+}
+
+/// The server's record of one completed request.
+#[derive(Debug, Clone)]
+pub struct ServedRequest {
+    /// Request id.
+    pub id: u64,
+    /// The GEMM shape.
+    pub size: GemmSize,
+    /// Repetitions executed.
+    pub reps: u32,
+    /// Execution mode chosen by the gate / bypass.
+    pub mode: ExecMode,
+    /// Virtual time the request entered the queue.
+    pub arrival: f64,
+    /// Virtual time its execution started.
+    pub start: f64,
+    /// Virtual time its own devices went idle (overlap-aware).
+    pub finish: f64,
+    /// Seconds its own devices were occupied (`finish - start`).
+    pub exec_s: f64,
+    /// Admission-time predicted service seconds (all reps).
+    pub predicted_s: f64,
+    /// True when planning was served from the [`super::PlanCache`].
+    pub cache_hit: bool,
+    /// Work share per device (machine order; sums to 1).
+    pub shares: Vec<f64>,
+}
+
+impl ServedRequest {
+    /// Queueing + service latency: arrival to completion.
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+
+    /// Time spent waiting before execution started.
+    pub fn queue_wait(&self) -> f64 {
+        self.start - self.arrival
+    }
+}
+
+/// Aggregate outcome of a service session.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceReport {
+    /// Every completed request, in completion order.
+    pub served: Vec<ServedRequest>,
+    /// Total virtual machine time consumed by the session.
+    pub makespan: f64,
+    /// Plan-cache hits across the session.
+    pub cache_hits: u64,
+    /// Plan-cache misses across the session.
+    pub cache_misses: u64,
+    /// Model-epoch bumps (each invalidated the plan cache).
+    pub epoch_bumps: u64,
+    /// Dynamic-scheduler replans observed (0 without `dynamic`).
+    pub replans: usize,
+}
+
+impl ServiceReport {
+    /// Per-request latencies (arrival to completion), served order.
+    pub fn latencies(&self) -> Vec<f64> {
+        self.served.iter().map(|r| r.latency()).collect()
+    }
+
+    /// Mean completion latency — the metric SPJF optimizes.
+    pub fn mean_completion(&self) -> f64 {
+        mean(&self.latencies())
+    }
+
+    /// Latency percentile, `p` in [0, 100].
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        percentile(&self.latencies(), p)
+    }
+
+    /// Requests per virtual second over the session.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.served.len() as f64 / self.makespan
+        }
+    }
+
+    /// Fraction of co-exec plans answered from the cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Look up a request by id.
+    pub fn request(&self, id: u64) -> Option<&ServedRequest> {
+        self.served.iter().find(|r| r.id == id)
+    }
+
+    /// Count of requests served through the bypass.
+    pub fn bypassed(&self) -> usize {
+        self.served.iter().filter(|r| r.mode.is_bypass()).count()
+    }
+
+    /// Render the per-request log as a table.
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &["req", "size", "mode", "exec", "completion", "latency", "plan"],
+        );
+        for r in &self.served {
+            t.row(&[
+                format!("#{:03}", r.id),
+                r.size.to_string(),
+                r.mode.to_string(),
+                crate::report::secs(r.exec_s),
+                crate::report::secs(r.finish),
+                crate::report::secs(r.latency()),
+                if r.mode == ExecMode::CoExec {
+                    if r.cache_hit { "cached" } else { "solved" }.to_string()
+                } else {
+                    "-".to_string()
+                },
+            ]);
+        }
+        t
+    }
+
+    /// One-line summary of the session.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests in {} ({}) — mean completion {}, p95 {}, \
+             cache {}/{} hits, {} epoch bumps",
+            self.served.len(),
+            crate::report::secs(self.makespan),
+            crate::report::rate(self.throughput_rps()),
+            crate::report::secs(self.mean_completion()),
+            crate::report::secs(self.latency_percentile(95.0)),
+            self.cache_hits,
+            self.cache_hits + self.cache_misses,
+            self.epoch_bumps,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn served(id: u64, arrival: f64, start: f64, finish: f64, mode: ExecMode) -> ServedRequest {
+        ServedRequest {
+            id,
+            size: GemmSize::square(1000),
+            reps: 1,
+            mode,
+            arrival,
+            start,
+            finish,
+            exec_s: finish - start,
+            predicted_s: finish - start,
+            cache_hit: false,
+            shares: vec![1.0],
+        }
+    }
+
+    fn report() -> ServiceReport {
+        ServiceReport {
+            served: vec![
+                served(0, 0.0, 0.0, 2.0, ExecMode::CoExec),
+                served(1, 0.0, 2.0, 3.0, ExecMode::Standalone { device: 2 }),
+                served(2, 0.0, 0.0, 1.0, ExecMode::BypassStandalone { device: 0 }),
+            ],
+            makespan: 3.0,
+            cache_hits: 1,
+            cache_misses: 1,
+            epoch_bumps: 0,
+            replans: 0,
+        }
+    }
+
+    #[test]
+    fn latency_and_throughput() {
+        let r = report();
+        assert_eq!(r.latencies(), vec![2.0, 3.0, 1.0]);
+        assert!((r.mean_completion() - 2.0).abs() < 1e-12);
+        assert!((r.throughput_rps() - 1.0).abs() < 1e-12);
+        assert_eq!(r.bypassed(), 1);
+        assert_eq!(r.request(1).unwrap().queue_wait(), 2.0);
+        assert!(r.request(9).is_none());
+        assert!((r.cache_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_is_safe() {
+        let r = ServiceReport::default();
+        assert_eq!(r.mean_completion(), 0.0);
+        assert_eq!(r.throughput_rps(), 0.0);
+        assert_eq!(r.cache_hit_rate(), 0.0);
+        assert_eq!(r.latency_percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn mode_display_and_predicates() {
+        assert_eq!(ExecMode::CoExec.to_string(), "co-exec");
+        assert_eq!(
+            ExecMode::Standalone { device: 2 }.to_string(),
+            "standalone(d2)"
+        );
+        assert_eq!(
+            ExecMode::BypassStandalone { device: 0 }.to_string(),
+            "bypass(d0)"
+        );
+        assert!(!ExecMode::CoExec.is_standalone());
+        assert!(ExecMode::Standalone { device: 1 }.is_standalone());
+        assert!(ExecMode::BypassStandalone { device: 0 }.is_bypass());
+    }
+
+    #[test]
+    fn table_and_summary_render() {
+        let r = report();
+        let s = r.table("demo").render();
+        assert!(s.contains("co-exec"));
+        assert!(s.contains("bypass(d0)"));
+        let sum = r.summary();
+        assert!(sum.contains("3 requests"));
+        assert!(sum.contains("req/s"));
+    }
+}

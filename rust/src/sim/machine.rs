@@ -59,6 +59,36 @@ pub struct WorkOrder {
     pub reps: u32,
 }
 
+impl WorkOrder {
+    /// Merge two work orders that target disjoint device sets and share a
+    /// repetition count. The service layer's standalone bypass uses this
+    /// to co-schedule an independent job on a device the plan leaves
+    /// idle. Returns `None` when the orders conflict (a shared device) or
+    /// their repetition counts differ (the simulator runs one global
+    /// repetition loop, so mixed counts cannot share an execution).
+    pub fn merge(&self, other: &WorkOrder) -> Option<WorkOrder> {
+        if self.reps != other.reps {
+            return None;
+        }
+        let mine: std::collections::HashSet<usize> =
+            self.items.iter().map(|i| i.device).collect();
+        if other.items.iter().any(|i| mine.contains(&i.device)) {
+            return None;
+        }
+        let mut items = self.items.clone();
+        items.extend(other.items.iter().cloned());
+        Some(WorkOrder {
+            items,
+            reps: self.reps,
+        })
+    }
+
+    /// The devices this order occupies.
+    pub fn devices(&self) -> Vec<usize> {
+        self.items.iter().map(|i| i.device).collect()
+    }
+}
+
 /// Per-device timing of one execution.
 #[derive(Debug, Clone, Default)]
 pub struct DeviceTimeline {
@@ -93,6 +123,20 @@ pub struct ExecOutcome {
     pub energy: EnergyReport,
     /// Bus activity.
     pub bus_trace: BusTrace,
+}
+
+impl ExecOutcome {
+    /// Overlap-aware completion time of a subset of devices: the virtual
+    /// time (relative to the execution's start) when the last of
+    /// `devices` went idle. A multi-tenant caller needs this to
+    /// attribute per-request completion inside a merged co-execution —
+    /// `makespan` covers *all* tenants of the order.
+    pub fn finish_of(&self, devices: &[usize]) -> f64 {
+        devices
+            .iter()
+            .map(|&d| self.timelines[d].finish)
+            .fold(0.0, f64::max)
+    }
 }
 
 /// A simulated machine instance.
@@ -438,6 +482,60 @@ mod tests {
         };
         assert_eq!(run(5), run(5));
         assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn merge_rejects_conflicts_and_mixed_reps() {
+        let a = WorkOrder {
+            items: vec![WorkItem::whole(1, GemmSize::square(1000), 1)],
+            reps: 2,
+        };
+        let b = WorkOrder {
+            items: vec![WorkItem::whole(0, GemmSize::square(500), 0)],
+            reps: 2,
+        };
+        let merged = a.merge(&b).unwrap();
+        assert_eq!(merged.items.len(), 2);
+        assert_eq!(merged.devices(), vec![1, 0]);
+        // Same device on both sides -> conflict.
+        let c = WorkOrder {
+            items: vec![WorkItem::whole(1, GemmSize::square(500), 1)],
+            reps: 2,
+        };
+        assert!(a.merge(&c).is_none());
+        // Mismatched reps -> no merge.
+        let d = WorkOrder {
+            items: vec![WorkItem::whole(0, GemmSize::square(500), 0)],
+            reps: 3,
+        };
+        assert!(a.merge(&d).is_none());
+    }
+
+    #[test]
+    fn finish_of_attributes_per_tenant_completion() {
+        // Big job on the XPU, small independent job on the CPU, merged.
+        let mut m = mach1();
+        let big = WorkOrder {
+            items: vec![WorkItem::whole(2, GemmSize::new(7000, 9000, 9000), 2)],
+            reps: 2,
+        };
+        let small = WorkOrder {
+            items: vec![WorkItem::whole(0, GemmSize::square(1200), 0)],
+            reps: 2,
+        };
+        let merged = big.merge(&small).unwrap();
+        let o = m.execute(&merged);
+        let f_big = o.finish_of(&[2]);
+        let f_small = o.finish_of(&[0]);
+        // Each tenant finishes no later than the whole order, and the
+        // makespan is exactly the slowest tenant.
+        assert!(f_big <= o.makespan && f_small <= o.makespan);
+        assert!((o.finish_of(&[0, 2]) - o.makespan).abs() < 1e-12);
+        // The small CPU job overlaps the big one instead of following it.
+        assert!(f_small < f_big, "small {f_small} vs big {f_big}");
+        // Devices without work report finish 0.
+        assert_eq!(o.finish_of(&[1]), 0.0);
+        assert_eq!(o.finish_of(&[]), 0.0);
     }
 
     #[test]

@@ -345,6 +345,89 @@ fn prop_bus_serialization_and_work_conservation() {
 }
 
 // ---------------------------------------------------------------------
+// PlanCache invariants (service layer)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_plan_cache_hit_identical_to_fresh_solve() {
+    use poas::config::presets;
+    use poas::predict::{profile, ProfileOptions};
+    use poas::schedule::{build_plan, static_sched::rules_from_config, PlanOptions};
+    use poas::service::PlanCache;
+    use poas::sim::SimMachine;
+
+    let cfg = presets::mach1();
+    let mut sim = SimMachine::new(&cfg, 42);
+    let model = profile(&mut sim, &ProfileOptions::default()).unwrap();
+    let rules = rules_from_config(&cfg);
+    let opts = PlanOptions::default();
+    let mut cache = PlanCache::new(256);
+
+    prop("plan cache hit == fresh solve", 60, |rng, _| {
+        // Draw from a small menu of sizes so repeated shapes (and
+        // therefore organic hits) occur across cases.
+        let size = GemmSize::new(
+            2_000 + 1_000 * rng.below(12),
+            2_000 + 1_000 * rng.below(8),
+            2_000 + 1_000 * rng.below(8),
+        );
+        let fresh = build_plan(&model, size, &rules, &opts).unwrap();
+        let (cached, _first_hit) = cache.get_or_build(&model, size, &rules, &opts).unwrap();
+        assert!(cached.same_split(&fresh), "cached plan diverged for {size}");
+        // A second lookup is a guaranteed hit and still identical to the
+        // fresh solve (plan construction is deterministic).
+        let (again, hit) = cache.get_or_build(&model, size, &rules, &opts).unwrap();
+        assert!(hit, "second lookup of {size} missed");
+        assert!(again.same_split(&fresh));
+    });
+    assert!(cache.hits >= 60, "expected at least one hit per case");
+}
+
+#[test]
+fn prop_plan_cache_epoch_bump_invalidates_all_entries() {
+    use poas::config::presets;
+    use poas::predict::{profile, ProfileOptions};
+    use poas::schedule::{build_plan, static_sched::rules_from_config, PlanOptions};
+    use poas::service::PlanCache;
+    use poas::sim::SimMachine;
+
+    let cfg = presets::mach2();
+    let mut sim = SimMachine::new(&cfg, 43);
+    let model = profile(&mut sim, &ProfileOptions::default()).unwrap();
+    let rules = rules_from_config(&cfg);
+    let opts = PlanOptions::default();
+
+    prop("plan cache epoch invalidation", 20, |rng, _| {
+        let mut cache = PlanCache::new(64);
+        let mut sizes = Vec::new();
+        for _ in 0..(1 + rng.below(6)) {
+            let size = GemmSize::new(
+                2_000 + 1_000 * rng.below(10),
+                2_000 + 1_000 * rng.below(6),
+                2_000 + 1_000 * rng.below(6),
+            );
+            cache.get_or_build(&model, size, &rules, &opts).unwrap();
+            sizes.push(size);
+        }
+        let epoch0 = cache.epoch();
+        cache.bump_epoch();
+        assert_eq!(cache.epoch(), epoch0 + 1);
+        assert!(cache.is_empty(), "entries survived the epoch bump");
+        for &size in &sizes {
+            assert!(cache.peek(size).is_none(), "stale entry for {size}");
+        }
+        // Re-resolving after the bump must miss, re-solve, and agree
+        // with a fresh build against the current model.
+        let misses_before = cache.misses;
+        let (rebuilt, hit) = cache.get_or_build(&model, sizes[0], &rules, &opts).unwrap();
+        assert!(!hit, "lookup after bump must not hit");
+        assert_eq!(cache.misses, misses_before + 1);
+        let fresh = build_plan(&model, sizes[0], &rules, &opts).unwrap();
+        assert!(rebuilt.same_split(&fresh));
+    });
+}
+
+// ---------------------------------------------------------------------
 // End-to-end plan invariant on random workloads
 // ---------------------------------------------------------------------
 

@@ -1,0 +1,303 @@
+//! Deterministic scenario harness for the `service` subsystem.
+//!
+//! Each scenario is a 4-tuple — (machine preset, seed, request mix,
+//! server options) — in the spirit of virtual protocol-testing systems:
+//! same scenario → same virtual-time outcome, always. The suite asserts
+//! exact-replay determinism for every scenario plus the policy
+//! invariants the service layer is built around (SPJF mean completion,
+//! bypass latency, plan-cache behaviour).
+
+use poas::config::{presets, MachineConfig};
+use poas::service::{QueuePolicy, Server, ServerOptions, ServiceReport};
+use poas::workload::GemmSize;
+
+/// One deterministic scenario.
+struct Scenario {
+    name: &'static str,
+    cfg: MachineConfig,
+    seed: u64,
+    opts: ServerOptions,
+    /// Submission order: (shape, reps).
+    mix: Vec<(GemmSize, u32)>,
+}
+
+impl Scenario {
+    fn serve(&self) -> ServiceReport {
+        let mut srv = Server::new(&self.cfg, self.seed, self.opts.clone());
+        for &(size, reps) in &self.mix {
+            srv.submit(size, reps);
+        }
+        srv.run_to_completion()
+    }
+}
+
+/// Heavy co-executable shapes drawn from a 3-shape menu (repeats
+/// exercise the plan cache).
+fn uniform_mix() -> Vec<(GemmSize, u32)> {
+    let menu = [
+        GemmSize::square(16_000),
+        GemmSize::square(20_000),
+        GemmSize::new(12_000, 18_000, 14_000),
+    ];
+    (0..8).map(|i| (menu[i % menu.len()], 3)).collect()
+}
+
+/// Heavy jobs in front, a tail of small standalone-bound jobs behind
+/// them — the regime where shortest-job-first crushes FIFO on mean
+/// completion time.
+fn skewed_mix() -> Vec<(GemmSize, u32)> {
+    let mut mix: Vec<(GemmSize, u32)> = (0..3).map(|_| (GemmSize::square(24_000), 3)).collect();
+    for i in 0..8u64 {
+        mix.push((GemmSize::square(296 + 24 * i), 3));
+    }
+    mix
+}
+
+/// Alternating big/small with equal reps — the bypass pairing shape.
+fn bypass_mix() -> Vec<(GemmSize, u32)> {
+    vec![
+        (GemmSize::square(20_000), 3),
+        (GemmSize::square(400), 3),
+        (GemmSize::square(18_000), 3),
+        (GemmSize::square(448), 3),
+    ]
+}
+
+/// Big enough (and repeated enough) that mach1's thermal drift forces
+/// the dynamic scheduler to re-plan mid-session.
+fn drift_mix() -> Vec<(GemmSize, u32)> {
+    vec![
+        (GemmSize::square(30_000), 50),
+        (GemmSize::square(400), 50),
+        (GemmSize::square(30_000), 50),
+        (GemmSize::square(400), 50),
+    ]
+}
+
+fn scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "mach1-fifo-uniform",
+            cfg: presets::mach1(),
+            seed: 11,
+            opts: ServerOptions::default(), // FIFO, no bypass
+            mix: uniform_mix(),
+        },
+        Scenario {
+            name: "mach2-spjf-skewed",
+            cfg: presets::mach2(),
+            seed: 22,
+            opts: ServerOptions {
+                policy: QueuePolicy::Spjf,
+                ..Default::default()
+            },
+            mix: skewed_mix(),
+        },
+        Scenario {
+            name: "mach2-fifo-bypass",
+            cfg: presets::mach2(),
+            seed: 33,
+            opts: ServerOptions {
+                standalone_bypass: true,
+                ..Default::default()
+            },
+            mix: bypass_mix(),
+        },
+        Scenario {
+            name: "mach1-spjf-dynamic",
+            cfg: presets::mach1(),
+            seed: 44,
+            opts: ServerOptions {
+                policy: QueuePolicy::Spjf,
+                standalone_bypass: true,
+                dynamic: true,
+                ..Default::default()
+            },
+            mix: drift_mix(),
+        },
+    ]
+}
+
+// ---------------------------------------------------------------------
+// Exact-replay determinism
+// ---------------------------------------------------------------------
+
+#[test]
+fn scenarios_replay_deterministically() {
+    for s in scenarios() {
+        let a = s.serve();
+        let b = s.serve();
+        assert_eq!(a.served.len(), b.served.len(), "{}", s.name);
+        assert_eq!(a.makespan, b.makespan, "{}: makespan drifted", s.name);
+        assert_eq!(a.cache_hits, b.cache_hits, "{}", s.name);
+        assert_eq!(a.epoch_bumps, b.epoch_bumps, "{}", s.name);
+        for (x, y) in a.served.iter().zip(&b.served) {
+            assert_eq!(x.id, y.id, "{}: dispatch order changed", s.name);
+            assert_eq!(x.mode, y.mode, "{}: req {} mode changed", s.name, x.id);
+            assert_eq!(x.finish, y.finish, "{}: req {} finish drifted", s.name, x.id);
+            assert_eq!(x.exec_s, y.exec_s, "{}: req {} exec drifted", s.name, x.id);
+        }
+    }
+}
+
+#[test]
+fn different_seeds_change_outcomes_but_not_structure() {
+    let scen = scenarios();
+    let base = &scen[0];
+    let a = base.serve();
+    let other = Scenario {
+        seed: base.seed + 1,
+        cfg: base.cfg.clone(),
+        opts: base.opts.clone(),
+        mix: base.mix.clone(),
+        name: base.name,
+    };
+    let b = other.serve();
+    // Same request structure...
+    assert_eq!(a.served.len(), b.served.len());
+    for (x, y) in a.served.iter().zip(&b.served) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.mode, y.mode);
+    }
+    // ...different noise draws.
+    assert_ne!(a.makespan, b.makespan);
+}
+
+// ---------------------------------------------------------------------
+// Structural invariants on every scenario
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_request_served_exactly_once_with_sane_accounting() {
+    for s in scenarios() {
+        let report = s.serve();
+        assert_eq!(report.served.len(), s.mix.len(), "{}", s.name);
+        let mut ids: Vec<u64> = report.served.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        let expect: Vec<u64> = (0..s.mix.len() as u64).collect();
+        assert_eq!(ids, expect, "{}: ids not served exactly once", s.name);
+        for r in &report.served {
+            assert!(r.finish > r.start, "{}: req {}", s.name, r.id);
+            assert!(r.start >= r.arrival, "{}: req {}", s.name, r.id);
+            assert!(
+                r.finish <= report.makespan + 1e-9,
+                "{}: req {} finished after the session",
+                s.name,
+                r.id
+            );
+            assert!(
+                (r.shares.iter().sum::<f64>() - 1.0).abs() < 1e-9,
+                "{}: req {} shares",
+                s.name,
+                r.id
+            );
+            assert!(r.predicted_s > 0.0);
+        }
+        assert!(report.throughput_rps() > 0.0, "{}", s.name);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Policy invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn spjf_mean_completion_beats_fifo_on_skewed_mix() {
+    let scen = scenarios();
+    let spjf = &scen[1];
+    assert_eq!(spjf.opts.policy, QueuePolicy::Spjf);
+    let fifo = Scenario {
+        name: "mach2-fifo-skewed",
+        cfg: spjf.cfg.clone(),
+        seed: spjf.seed,
+        opts: ServerOptions {
+            policy: QueuePolicy::Fifo,
+            ..spjf.opts.clone()
+        },
+        mix: spjf.mix.clone(),
+    };
+    let r_spjf = spjf.serve();
+    let r_fifo = fifo.serve();
+    // The small jobs stop waiting behind three heavy ones: mean
+    // completion must improve decisively (SPT optimality), while total
+    // machine time stays in the same ballpark.
+    assert!(
+        r_spjf.mean_completion() < 0.8 * r_fifo.mean_completion(),
+        "spjf {} vs fifo {}",
+        r_spjf.mean_completion(),
+        r_fifo.mean_completion()
+    );
+    assert!(
+        (r_spjf.makespan - r_fifo.makespan).abs() / r_fifo.makespan < 0.2,
+        "policies should not change total work: spjf {} fifo {}",
+        r_spjf.makespan,
+        r_fifo.makespan
+    );
+}
+
+#[test]
+fn bypass_overlaps_small_requests_and_cuts_their_latency() {
+    let scen = scenarios();
+    let with_bypass = &scen[2];
+    assert!(with_bypass.opts.standalone_bypass);
+    let without = Scenario {
+        name: "mach2-fifo-no-bypass",
+        cfg: with_bypass.cfg.clone(),
+        seed: with_bypass.seed,
+        opts: ServerOptions {
+            standalone_bypass: false,
+            ..with_bypass.opts.clone()
+        },
+        mix: with_bypass.mix.clone(),
+    };
+    let r_on = with_bypass.serve();
+    let r_off = without.serve();
+    assert!(r_on.bypassed() >= 1, "no request rode the bypass");
+    assert_eq!(r_off.bypassed(), 0);
+    // Every bypassed rider must beat its serialized latency (it ran
+    // *during* the co-execution it would otherwise have waited for).
+    for r in r_on.served.iter().filter(|r| r.mode.is_bypass()) {
+        let serial = r_off
+            .request(r.id)
+            .expect("same mix must serve the same ids");
+        assert!(
+            r.latency() < serial.latency(),
+            "req {}: bypass {} not below serial {}",
+            r.id,
+            r.latency(),
+            serial.latency()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cache and closed-loop invariants inside scenarios
+// ---------------------------------------------------------------------
+
+#[test]
+fn repeated_shapes_hit_the_cache_in_uniform_scenario() {
+    let scen = scenarios();
+    let s = &scen[0];
+    let report = s.serve();
+    // 8 co-exec requests over a 3-shape menu: exactly 3 solves.
+    assert_eq!(report.cache_misses, 3, "{}", s.name);
+    assert_eq!(report.cache_hits, 5, "{}", s.name);
+    assert!(report.cache_hit_rate() > 0.6);
+    assert_eq!(report.epoch_bumps, 0);
+}
+
+#[test]
+fn dynamic_scenario_bumps_epoch_and_replans_same_shape() {
+    let scen = scenarios();
+    let s = &scen[3];
+    let report = s.serve();
+    assert!(report.replans >= 1, "{}: no replan under drift", s.name);
+    assert!(report.epoch_bumps >= 1, "{}: cache never invalidated", s.name);
+    // The repeated 30K shape had to re-solve after the invalidation.
+    assert!(
+        report.cache_misses >= 2,
+        "{}: misses {}",
+        s.name,
+        report.cache_misses
+    );
+}
