@@ -17,10 +17,19 @@
 //! exactly here, where small jobs queue behind heavy ones; under SPJF
 //! the small jobs would simply dispatch first instead). Per-request
 //! latency and aggregate throughput come out of the session report.
+//!
+//! Part 2 then scales the same deployment out: a 2-shard `Cluster`
+//! (two machines, each with its own installation-time profile and plan
+//! cache) serving an online Poisson arrival trace at ~2x one machine's
+//! capacity — earliest-predicted-finish routing, work stealing, and
+//! queueing-delay / tail-sojourn metrics under real offered load.
 
 use poas::config::presets;
+use poas::report::secs;
 use poas::rng::Rng;
-use poas::service::{GemmRequest, QueuePolicy, Server, ServerOptions};
+use poas::service::{
+    Cluster, ClusterOptions, GemmRequest, PoissonArrivals, QueuePolicy, Server, ServerOptions,
+};
 use poas::workload::GemmSize;
 use std::sync::mpsc;
 
@@ -98,4 +107,56 @@ fn main() {
         100.0 * report.cache_hit_rate()
     );
     assert_eq!(report.served.len(), admitted);
+
+    // ---- Part 2: the same service sharded across two machines, fed by
+    // an online Poisson arrival trace instead of a batch drain. Offered
+    // load is ~2x what one machine sustained above, so a single shard
+    // would queue indefinitely — the second shard absorbs it, and the
+    // report finally has real queueing delay to show.
+    let offered_rps = 2.0 * report.throughput_rps();
+    let menu = vec![
+        (GemmSize::square(16_000), 10),
+        (GemmSize::square(24_000), 10),
+        (GemmSize::square(512), 10),
+    ];
+    let trace = PoissonArrivals::new(offered_rps, menu, 7).trace(12);
+    let mut cluster = Cluster::new(
+        &cfg,
+        0,
+        ClusterOptions {
+            shards: 2,
+            shard: ServerOptions {
+                standalone_bypass: true,
+                ..Default::default()
+            },
+            work_stealing: true,
+        },
+    );
+    let ids = cluster.submit_trace(&trace);
+    let creport = cluster.run_to_completion();
+    println!();
+    creport
+        .table(&format!(
+            "2-shard cluster on {}, Poisson arrivals at {:.2} req/s ({} requests)",
+            cfg.name,
+            offered_rps,
+            ids.len()
+        ))
+        .print();
+    println!("{}", creport.summary());
+    println!(
+        "mean queue wait: {}   sojourn p50/p99: {} / {}",
+        secs(creport.mean_queue_wait()),
+        secs(creport.latency_percentile(50.0)),
+        secs(creport.latency_percentile(99.0)),
+    );
+    for (i, s) in creport.shards.iter().enumerate() {
+        println!(
+            "shard {i}: {} dispatches, busy {}, stole {} request(s)",
+            s.dispatches,
+            secs(s.busy_s),
+            s.stolen
+        );
+    }
+    assert_eq!(creport.served.len(), ids.len());
 }

@@ -1,0 +1,89 @@
+//! Cluster scaling: throughput and sojourn time versus shard count.
+//!
+//! One Poisson arrival trace (fixed seed, rate calibrated to overload a
+//! single machine ~2x), served by clusters of 1, 2 and 4 shards. The
+//! questions, answered with the same hand-rolled harness as the other
+//! regenerators (offline build — no criterion):
+//!
+//! 1. does throughput scale with machines (it must, once a single
+//!    machine is saturated)?
+//! 2. what do extra shards do to mean/p99 sojourn time and queueing
+//!    delay under the *same* offered load?
+//! 3. does work stealing move requests between shards when the backlog
+//!    is imbalanced?
+
+use poas::config::presets;
+use poas::report::{rate, secs, Table};
+use poas::service::{Cluster, ClusterOptions, PoissonArrivals, Server, ServerOptions};
+use poas::workload::GemmSize;
+
+fn main() {
+    let cfg = presets::mach2();
+
+    // Calibrate the virtual-time scale: one heavy request served alone.
+    let unit = {
+        let mut srv = Server::new(&cfg, 0, ServerOptions::default());
+        srv.submit(GemmSize::square(20_000), 2);
+        srv.run_to_completion().makespan
+    };
+    let menu = vec![
+        (GemmSize::square(16_000), 2),
+        (GemmSize::square(20_000), 2),
+        (GemmSize::new(12_000, 18_000, 14_000), 2),
+        (GemmSize::square(400), 2),
+    ];
+    let n = 24;
+    let offered = 2.0 / unit; // ~2x one machine's capacity
+    let trace = PoissonArrivals::new(offered, menu, 1).trace(n);
+
+    let mut table = Table::new(
+        &format!("{n}-request Poisson trace on mach2 (offered {} / machine capacity ~{})",
+            rate(offered),
+            rate(1.0 / unit)),
+        &[
+            "shards",
+            "session time",
+            "busy machine time",
+            "throughput",
+            "mean sojourn",
+            "p99 sojourn",
+            "mean queue wait",
+            "stolen",
+        ],
+    );
+
+    let mut last_throughput = 0.0;
+    for shards in [1usize, 2, 4] {
+        let mut cluster = Cluster::new(
+            &cfg,
+            0,
+            ClusterOptions {
+                shards,
+                ..Default::default()
+            },
+        );
+        cluster.submit_trace(&trace);
+        let report = cluster.run_to_completion();
+        assert_eq!(report.served.len(), n);
+        let stolen: usize = report.shards.iter().map(|s| s.stolen).sum();
+        let busy: f64 = report.shards.iter().map(|s| s.busy_s).sum();
+        table.row(&[
+            shards.to_string(),
+            secs(report.makespan),
+            secs(busy),
+            rate(report.throughput_rps()),
+            secs(report.mean_completion()),
+            secs(report.latency_percentile(99.0)),
+            secs(report.mean_queue_wait()),
+            stolen.to_string(),
+        ]);
+        last_throughput = report.throughput_rps();
+    }
+    table.print();
+    println!(
+        "\ntargets: throughput grows 1 -> 2 shards under ~2x overload; \
+         mean and p99 sojourn shrink as shards absorb the queueing delay. \
+         (final observed throughput: {})",
+        rate(last_throughput)
+    );
+}

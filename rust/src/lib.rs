@@ -39,13 +39,21 @@
 //! * [`baselines`] — standalone single-device execution and the co-execution
 //!   baselines POAS is compared against (equal split, ratio split,
 //!   queue-based work stealing à la HPMaX).
-//! * [`service`] — the serving layer: a multi-tenant [`service::Server`]
-//!   that gates a stream of heterogeneous GEMM requests through the §6
-//!   suitability detector, dispatches under pluggable queue policies
-//!   (FIFO / shortest-predicted-job-first, with a standalone bypass that
-//!   co-schedules small jobs on an idle device), and memoizes
+//! * [`service`] — the serving layer: a multi-machine
+//!   [`service::Cluster`] that admits a stream of heterogeneous GEMM
+//!   requests through the §6 suitability gate ([`service::Admission`],
+//!   memoized in a bounded LRU), routes each one to the
+//!   [`service::ExecutorShard`] with the earliest predicted finish via
+//!   an event-driven virtual-time loop, steals queued work onto idle
+//!   shards, and replays online arrival traces
+//!   ([`service::PoissonArrivals`]) so reports measure queueing delay
+//!   and tail sojourn time under offered load. Each shard dispatches
+//!   under pluggable queue policies (FIFO /
+//!   shortest-predicted-job-first, with a standalone bypass that
+//!   co-schedules small jobs on an idle device) and memoizes
 //!   Optimize-phase output in a [`service::PlanCache`] keyed by
-//!   `(shape, model epoch)` so repeated shapes skip the MILP solve.
+//!   `(shape, model epoch)` so repeated shapes skip the MILP solve. The
+//!   single-machine [`service::Server`] is a 1-shard cluster.
 //! * [`workload`], [`config`], [`metrics`], [`report`] — Table 3 inputs,
 //!   machine descriptions, statistics and table/figure rendering.
 //!

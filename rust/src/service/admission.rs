@@ -1,0 +1,234 @@
+//! Admission control: the §6 suitability gate as a front-end component.
+//!
+//! Every request entering the cluster passes the gate exactly once: the
+//! fitted performance model predicts the co-execution makespan and the
+//! best standalone device, and the verdict plus the per-repetition
+//! service prediction are recorded on the [`super::QueuedRequest`] so
+//! queue policies and the routing front-end never re-run the optimizer.
+//!
+//! The gate's own LP solve is as cacheable as the plan solve, so
+//! verdicts are memoized by `(shape, epoch)` in a **bounded LRU**: a
+//! lookup refreshes its entry's recency and eviction removes the least
+//! recently used key, so a hot working set survives arbitrarily many
+//! cold shapes streaming past (a wholesale `clear()` at capacity would
+//! discard it). A model refresh (dynamic-scheduler replan on any shard)
+//! bumps the epoch, which retires every memoized verdict at once.
+
+use crate::predict::PerfModel;
+use crate::schedule::suitability::{recommend, Recommendation};
+use crate::workload::GemmSize;
+use std::collections::{HashMap, VecDeque};
+
+/// One memoized gate verdict: (co-execute?, best single device,
+/// predicted seconds per repetition under the verdict).
+pub type GateVerdict = (bool, usize, f64);
+
+/// The admission component: suitability gate + bounded-LRU memo.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    /// The front-end's view of machine performance (refreshed when a
+    /// shard's dynamic scheduler re-plans).
+    model: PerfModel,
+    epoch: u64,
+    min_gain: f64,
+    overhead_s: f64,
+    memo: HashMap<(GemmSize, u64), GateVerdict>,
+    /// Recency order: front = least recently used, back = most.
+    recency: VecDeque<(GemmSize, u64)>,
+    capacity: usize,
+    /// Gate lookups answered from the memo.
+    pub hits: u64,
+    /// Gate lookups that had to solve.
+    pub misses: u64,
+}
+
+impl Admission {
+    /// New gate over `model`: require `min_gain` predicted speedup for
+    /// co-execution, charge it `overhead_s` scheduling overhead, and
+    /// memoize at most `capacity` verdicts (min 1).
+    pub fn new(model: PerfModel, min_gain: f64, overhead_s: f64, capacity: usize) -> Self {
+        Admission {
+            model,
+            epoch: 0,
+            min_gain,
+            overhead_s,
+            memo: HashMap::new(),
+            recency: VecDeque::new(),
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// The current model epoch (bumped on every [`Admission::refresh`]).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Number of memoized verdicts.
+    pub fn len(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// True when nothing is memoized.
+    pub fn is_empty(&self) -> bool {
+        self.memo.is_empty()
+    }
+
+    /// The model the gate currently predicts with.
+    pub fn model(&self) -> &PerfModel {
+        &self.model
+    }
+
+    /// Gate one request: returns (co-execute?, best single device,
+    /// predicted **total** service seconds for all `reps`).
+    pub fn admit(&mut self, size: GemmSize, reps: u32) -> (bool, usize, f64) {
+        let key = (size, self.epoch);
+        let (co_execute, device, t_rep) = match self.memo.get(&key) {
+            Some(&hit) => {
+                self.hits += 1;
+                self.touch(key);
+                hit
+            }
+            None => {
+                self.misses += 1;
+                let fresh = match recommend(&self.model, size, self.min_gain, self.overhead_s) {
+                    Recommendation::CoExecute {
+                        t_coexec,
+                        best_device,
+                        ..
+                    } => (true, best_device, t_coexec),
+                    Recommendation::Standalone {
+                        device, t_single, ..
+                    } => (false, device, t_single),
+                };
+                self.insert(key, fresh);
+                fresh
+            }
+        };
+        (co_execute, device, t_rep * reps.max(1) as f64)
+    }
+
+    /// The model changed (a shard's dynamic scheduler re-planned):
+    /// adopt the refreshed model and retire every memoized verdict.
+    pub fn refresh(&mut self, model: PerfModel) {
+        self.model = model;
+        self.epoch += 1;
+        // Old-epoch entries can never be read again (the key carries
+        // the epoch); drop them eagerly rather than waiting for LRU
+        // pressure.
+        self.memo.clear();
+        self.recency.clear();
+    }
+
+    fn touch(&mut self, key: (GemmSize, u64)) {
+        if let Some(pos) = self.recency.iter().position(|k| *k == key) {
+            self.recency.remove(pos);
+            self.recency.push_back(key);
+        }
+    }
+
+    fn insert(&mut self, key: (GemmSize, u64), verdict: GateVerdict) {
+        if self.memo.insert(key, verdict).is_none() {
+            self.recency.push_back(key);
+        }
+        while self.memo.len() > self.capacity {
+            match self.recency.pop_front() {
+                Some(old) => {
+                    self.memo.remove(&old);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::predict::{profile, ProfileOptions};
+    use crate::sim::SimMachine;
+
+    fn model() -> PerfModel {
+        let mut sim = SimMachine::new(&presets::mach1(), 0);
+        profile(&mut sim, &ProfileOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn memoizes_and_scales_by_reps() {
+        let mut gate = Admission::new(model(), 1.05, 20e-6, 64);
+        let size = GemmSize::square(20_000);
+        let (co1, dev1, t1) = gate.admit(size, 1);
+        let (co2, dev2, t3) = gate.admit(size, 3);
+        assert!(co1, "20K is worth co-executing");
+        assert_eq!((co1, dev1), (co2, dev2));
+        assert!((t3 / t1 - 3.0).abs() < 1e-9, "reps scale the prediction");
+        assert_eq!(gate.misses, 1);
+        assert_eq!(gate.hits, 1);
+        assert_eq!(gate.len(), 1);
+    }
+
+    #[test]
+    fn small_shapes_stay_standalone() {
+        let mut gate = Admission::new(model(), 1.05, 20e-6, 64);
+        let (co, _, t) = gate.admit(GemmSize::square(256), 2);
+        assert!(!co);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn lru_keeps_the_hot_set_under_cold_pressure() {
+        let mut gate = Admission::new(model(), 1.05, 20e-6, 4);
+        let hot = GemmSize::square(20_000);
+        gate.admit(hot, 1);
+        // A stream of cold shapes, with the hot shape touched between
+        // each: the touch refreshes recency, so the hot entry must
+        // survive while the cold ones evict each other.
+        for s in 0..8u64 {
+            gate.admit(GemmSize::square(10_000 + 128 * s), 1);
+            gate.admit(hot, 1);
+        }
+        assert!(gate.len() <= 4);
+        let misses_before = gate.misses;
+        gate.admit(hot, 1);
+        assert_eq!(gate.misses, misses_before, "hot entry was evicted");
+        assert_eq!(gate.hits, 9);
+    }
+
+    #[test]
+    fn fifo_style_clear_would_have_lost_the_hot_set() {
+        // Regression shape for the old wholesale-clear behaviour: fill
+        // far past capacity; the most recently used entries remain.
+        let mut gate = Admission::new(model(), 1.05, 20e-6, 4);
+        for s in 0..10u64 {
+            gate.admit(GemmSize::square(8_000 + 256 * s), 1);
+        }
+        assert_eq!(gate.len(), 4, "bounded, not cleared to zero");
+        let misses_before = gate.misses;
+        gate.admit(GemmSize::square(8_000 + 256 * 9), 1);
+        assert_eq!(gate.misses, misses_before, "newest entry still memoized");
+    }
+
+    #[test]
+    fn refresh_bumps_epoch_and_drops_memo() {
+        let m = model();
+        let mut gate = Admission::new(m.clone(), 1.05, 20e-6, 64);
+        gate.admit(GemmSize::square(20_000), 1);
+        assert_eq!(gate.len(), 1);
+        gate.refresh(m);
+        assert_eq!(gate.epoch(), 1);
+        assert!(gate.is_empty());
+        gate.admit(GemmSize::square(20_000), 1);
+        assert_eq!(gate.misses, 2, "post-refresh lookup re-solves");
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut gate = Admission::new(model(), 1.05, 20e-6, 0);
+        gate.admit(GemmSize::square(20_000), 1);
+        assert_eq!(gate.len(), 1);
+        let (_, _, _) = gate.admit(GemmSize::square(20_000), 1);
+        assert_eq!(gate.hits, 1);
+    }
+}

@@ -19,11 +19,13 @@ use crate::schedule::{build_plan, PlanOptions, SchedulePlan};
 use crate::workload::GemmSize;
 use std::collections::{HashMap, VecDeque};
 
-/// A bounded FIFO memo of Optimize/Adapt output.
+/// A bounded LRU memo of Optimize/Adapt output.
 #[derive(Debug, Clone)]
 pub struct PlanCache {
     map: HashMap<(GemmSize, u64), SchedulePlan>,
-    /// Insertion order for FIFO eviction.
+    /// Recency order for LRU eviction: front = least recently used. A
+    /// hit refreshes its entry, so a hot shape survives streams of cold
+    /// ones.
     order: VecDeque<(GemmSize, u64)>,
     epoch: u64,
     capacity: usize,
@@ -101,13 +103,22 @@ impl PlanCache {
     ) -> Result<(SchedulePlan, bool)> {
         let key = (size, self.epoch);
         if let Some(plan) = self.map.get(&key) {
+            let plan = plan.clone();
             self.hits += 1;
-            return Ok((plan.clone(), true));
+            self.touch(key);
+            return Ok((plan, true));
         }
         self.misses += 1;
         let plan = build_plan(model, size, rules, opts)?;
         self.insert(key, plan.clone());
         Ok((plan, false))
+    }
+
+    fn touch(&mut self, key: (GemmSize, u64)) {
+        if let Some(pos) = self.order.iter().position(|k| *k == key) {
+            self.order.remove(pos);
+            self.order.push_back(key);
+        }
     }
 
     fn insert(&mut self, key: (GemmSize, u64), plan: SchedulePlan) {
@@ -195,6 +206,24 @@ mod tests {
         assert!(cache.peek(sizes[0]).is_none(), "oldest entry evicted");
         assert!(cache.peek(sizes[1]).is_some());
         assert!(cache.peek(sizes[2]).is_some());
+    }
+
+    #[test]
+    fn lru_hit_refreshes_recency() {
+        let (model, rules, opts) = fixture();
+        let mut cache = PlanCache::new(2);
+        let hot = GemmSize::square(10_000);
+        cache.get_or_build(&model, hot, &rules, &opts).unwrap();
+        for s in [12_000u64, 14_000, 16_000] {
+            // Touch the hot shape between cold inserts: it must survive
+            // the evictions that retire the cold entries.
+            cache.get_or_build(&model, hot, &rules, &opts).unwrap();
+            cache
+                .get_or_build(&model, GemmSize::square(s), &rules, &opts)
+                .unwrap();
+        }
+        assert!(cache.peek(hot).is_some(), "hot entry was evicted");
+        assert_eq!(cache.misses, 4, "hot shape solved exactly once");
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! The cluster front-end: POAS serving sharded across machines.
+//!
+//! A [`Cluster`] drives N [`ExecutorShard`]s — each a full machine with
+//! its own installation-time profile, plan cache and local queue —
+//! through one **event-driven virtual-time loop**. The single
+//! monolithic `clock: f64` of the old server is replaced by a binary
+//! heap of timestamped events:
+//!
+//! * **arrival** — a request reaches the front-end (either submitted
+//!   "now" or scheduled by an [`super::arrivals`] trace). It passes the
+//!   [`Admission`] gate once, then routes to the shard with the
+//!   earliest *predicted finish*: `max(shard free time, now) + queued
+//!   backlog + this request`, all from admission-time predictions, so
+//!   routing never re-runs the optimizer;
+//! * **wake** — scheduled behind every arrival at the same timestamp so
+//!   that simultaneous arrivals are all admitted (and visible to queue
+//!   policies and the bypass scan) before any of them starts a machine;
+//! * **shard-free** — a machine finished its dispatch. It drains its
+//!   own queue first and, when empty, **steals** the next request (under
+//!   the victim's own policy) from the most backlogged shard, so one
+//!   hot queue cannot starve an idle machine.
+//!
+//! Ties in virtual time break by submission sequence number, which
+//! keeps every replay byte-identical for a fixed seed. A one-shard
+//! cluster degenerates to exactly the old single-machine behaviour —
+//! [`super::Server`] is now a thin wrapper over `Cluster`.
+
+use super::admission::Admission;
+use super::arrivals::Arrival;
+use super::queue::QueuedRequest;
+use super::request::{GemmRequest, ServedRequest, ServiceReport};
+use super::server::ServerOptions;
+use super::shard::ExecutorShard;
+use crate::config::MachineConfig;
+use crate::coordinator::Pipeline;
+use crate::workload::GemmSize;
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// Cluster construction options.
+#[derive(Debug, Clone)]
+pub struct ClusterOptions {
+    /// Number of machines (min 1). Each shard profiles its own
+    /// [`crate::sim::SimMachine`] seeded `seed + shard index`.
+    pub shards: usize,
+    /// Per-shard serving options (queue policy, bypass, dynamic loop)
+    /// plus the admission-gate knobs shared by the front-end.
+    pub shard: ServerOptions,
+    /// Let an idle shard steal queued work from the most backlogged
+    /// shard instead of sitting idle.
+    pub work_stealing: bool,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions {
+            shards: 1,
+            shard: ServerOptions::default(),
+            work_stealing: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum EventKind {
+    /// A request reaches the front-end.
+    Arrival(GemmRequest),
+    /// Post-arrival nudge: dispatch on this shard if it is idle.
+    Wake(usize),
+    /// This shard's machine went idle.
+    ShardFree(usize),
+}
+
+#[derive(Debug, Clone)]
+struct Event {
+    time: f64,
+    /// Tie-break for simultaneous events: strictly increasing push
+    /// order, so replays are exact.
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// A request-serving POAS deployment across one or more machines.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    shards: Vec<ExecutorShard>,
+    admission: Admission,
+    opts: ClusterOptions,
+    events: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    clock: f64,
+    served: Vec<ServedRequest>,
+    next_id: u64,
+}
+
+impl Cluster {
+    /// Build a cluster of `opts.shards` machines from `cfg`: shard `i`
+    /// is profiled at installation time on its own simulator seeded
+    /// `seed + i`; the admission gate predicts with shard 0's profile.
+    pub fn new(cfg: &MachineConfig, seed: u64, opts: ClusterOptions) -> Self {
+        let n = opts.shards.max(1);
+        let pipelines = (0..n)
+            .map(|i| Pipeline::for_simulated_machine(cfg, seed.wrapping_add(i as u64)))
+            .collect();
+        Self::from_pipelines(pipelines, opts)
+    }
+
+    /// Promote already-profiled pipelines into a cluster (one shard per
+    /// pipeline; `pipelines` must be non-empty).
+    pub fn from_pipelines(pipelines: Vec<Pipeline>, mut opts: ClusterOptions) -> Self {
+        assert!(!pipelines.is_empty(), "cluster needs at least one shard");
+        // One source of truth for the shard count.
+        opts.shards = pipelines.len();
+        let shards: Vec<ExecutorShard> = pipelines
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| ExecutorShard::from_pipeline(i, p, &opts.shard))
+            .collect();
+        let admission = Admission::new(
+            shards[0].model.clone(),
+            opts.shard.min_gain,
+            opts.shard.overhead_s,
+            opts.shard.gate_capacity,
+        );
+        Cluster {
+            shards,
+            admission,
+            opts,
+            events: BinaryHeap::new(),
+            seq: 0,
+            clock: 0.0,
+            served: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Current virtual service time (the latest processed event).
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard accessor (diagnostics/tests).
+    pub fn shard(&self, i: usize) -> &ExecutorShard {
+        &self.shards[i]
+    }
+
+    /// The admission component (diagnostics/tests).
+    pub fn admission(&self) -> &Admission {
+        &self.admission
+    }
+
+    /// Requests not yet dispatched: queued on shards or still in the
+    /// arrival event stream.
+    pub fn pending(&self) -> usize {
+        let queued: usize = self.shards.iter().map(|s| s.pending()).sum();
+        let in_flight = self
+            .events
+            .iter()
+            .filter(|r| matches!(r.0.kind, EventKind::Arrival(_)))
+            .count();
+        queued + in_flight
+    }
+
+    /// Requests completed so far.
+    pub fn completed(&self) -> usize {
+        self.served.len()
+    }
+
+    /// Submit a request arriving at the current virtual time; returns
+    /// its id.
+    pub fn submit(&mut self, size: GemmSize, reps: u32) -> u64 {
+        let id = self.next_id;
+        self.submit_request(GemmRequest { id, size, reps });
+        id
+    }
+
+    /// Submit a caller-identified request arriving at the current
+    /// virtual time.
+    pub fn submit_request(&mut self, req: GemmRequest) {
+        self.submit_request_at(self.clock, req);
+    }
+
+    /// Submit a caller-identified request arriving at virtual time `at`
+    /// (clamped to the present — the past is already simulated).
+    pub fn submit_request_at(&mut self, at: f64, req: GemmRequest) {
+        self.next_id = self.next_id.max(req.id + 1);
+        self.push_event(at.max(self.clock), EventKind::Arrival(req));
+    }
+
+    /// Schedule a whole arrival trace (see [`super::arrivals`]);
+    /// returns the assigned request ids in trace order.
+    pub fn submit_trace(&mut self, trace: &[Arrival]) -> Vec<u64> {
+        trace
+            .iter()
+            .map(|a| {
+                let id = self.next_id;
+                self.submit_request_at(a.at, GemmRequest {
+                    id,
+                    size: a.size,
+                    reps: a.reps,
+                });
+                id
+            })
+            .collect()
+    }
+
+    fn push_event(&mut self, time: f64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.events.push(Reverse(Event { time, seq, kind }));
+    }
+
+    /// Route an admitted request to the shard with the earliest
+    /// predicted finish (ties: lowest shard index).
+    fn route(&self, now: f64, predicted_s: f64) -> usize {
+        let mut best = 0usize;
+        let mut best_t = f64::INFINITY;
+        for (i, sh) in self.shards.iter().enumerate() {
+            let t = sh.predicted_finish(now, predicted_s);
+            if t < best_t {
+                best_t = t;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// The most backlogged shard other than `thief` (ties: lowest
+    /// index), if any has queued work to give up.
+    fn steal_victim(&self, thief: usize) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, sh) in self.shards.iter().enumerate() {
+            if i == thief || sh.pending() == 0 {
+                continue;
+            }
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    if sh.pending() > self.shards[b].pending() {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    fn dispatch_on(&mut self, s: usize, at: f64) {
+        let start = self.shards[s].free_at().max(at);
+        if let Some(res) = self.shards[s].dispatch_next(start, &mut self.served) {
+            if res.replanned {
+                // A shard observed drift and refreshed its model: the
+                // front-end gate adopts it so future admissions (and
+                // their memoized verdicts) track the live machine.
+                let model = self.shards[s].model.clone();
+                self.admission.refresh(model);
+            }
+            self.push_event(res.finish, EventKind::ShardFree(s));
+        }
+    }
+
+    /// Process the earliest pending event. Returns `false` when the
+    /// event heap is empty (every submitted request has completed).
+    pub fn step_event(&mut self) -> bool {
+        let Some(Reverse(ev)) = self.events.pop() else {
+            return false;
+        };
+        self.clock = self.clock.max(ev.time);
+        match ev.kind {
+            EventKind::Arrival(req) => {
+                let (co_execute, best_device, predicted_s) =
+                    self.admission.admit(req.size, req.reps);
+                let target = self.route(ev.time, predicted_s);
+                self.shards[target].enqueue(QueuedRequest {
+                    req,
+                    arrival: ev.time,
+                    co_execute,
+                    best_device,
+                    predicted_s,
+                });
+                // Defer the dispatch behind simultaneous arrivals so
+                // queue policies and the bypass see the whole burst.
+                self.push_event(ev.time, EventKind::Wake(target));
+            }
+            EventKind::Wake(s) => {
+                if self.shards[s].free_at() <= ev.time && self.shards[s].pending() > 0 {
+                    self.dispatch_on(s, ev.time);
+                }
+            }
+            EventKind::ShardFree(s) => {
+                if self.shards[s].pending() > 0 {
+                    self.dispatch_on(s, ev.time);
+                } else if self.opts.work_stealing {
+                    if let Some(victim) = self.steal_victim(s) {
+                        if let Some(q) = self.shards[victim].yield_next() {
+                            self.shards[s].note_steal();
+                            self.shards[s].enqueue(q);
+                            self.dispatch_on(s, ev.time);
+                        }
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Drain every event (arrivals included) and return the session
+    /// report.
+    pub fn run_to_completion(&mut self) -> ServiceReport {
+        while self.step_event() {}
+        self.report()
+    }
+
+    /// Snapshot the session statistics, aggregated across shards.
+    pub fn report(&self) -> ServiceReport {
+        let mut report = ServiceReport {
+            served: self.served.clone(),
+            makespan: self.clock,
+            cache_hits: 0,
+            cache_misses: 0,
+            epoch_bumps: 0,
+            replans: 0,
+            shards: self.shards.iter().map(|s| s.stats()).collect(),
+        };
+        for s in &self.shards {
+            report.cache_hits += s.cache.hits;
+            report.cache_misses += s.cache.misses;
+            report.epoch_bumps += s.cache.invalidations;
+            report.replans += s.replans();
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::service::request::ExecMode;
+
+    fn big() -> GemmSize {
+        GemmSize::square(20_000)
+    }
+
+    #[test]
+    fn one_shard_cluster_serves_like_a_server() {
+        let mut c = Cluster::new(&presets::mach2(), 0, ClusterOptions::default());
+        assert_eq!(c.num_shards(), 1);
+        let b = c.submit(big(), 3);
+        let s = c.submit(GemmSize::square(300), 3);
+        assert_eq!(c.pending(), 2);
+        let report = c.run_to_completion();
+        assert_eq!(report.served.len(), 2);
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.completed(), 2);
+        assert_eq!(report.request(b).unwrap().mode, ExecMode::CoExec);
+        assert!(matches!(
+            report.request(s).unwrap().mode,
+            ExecMode::Standalone { .. }
+        ));
+        assert_eq!(report.shards.len(), 1);
+        assert_eq!(report.shards[0].dispatches, 2);
+        assert!(report.shards[0].busy_s > 0.0);
+    }
+
+    #[test]
+    fn burst_arrivals_are_admitted_before_any_dispatch() {
+        // Under SPJF, the shortest of a simultaneous burst must
+        // dispatch first even though it was submitted last — i.e. the
+        // wake ran after the whole burst was admitted.
+        let opts = ClusterOptions {
+            shard: ServerOptions {
+                policy: crate::service::QueuePolicy::Spjf,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut c = Cluster::new(&presets::mach2(), 1, opts);
+        let slow = c.submit(GemmSize::square(24_000), 3);
+        let fast = c.submit(GemmSize::square(16_000), 3);
+        let report = c.run_to_completion();
+        let r_slow = report.request(slow).unwrap();
+        let r_fast = report.request(fast).unwrap();
+        assert!(r_fast.start < r_slow.start, "SPJF saw the whole burst");
+    }
+
+    #[test]
+    fn two_shards_split_a_burst_across_machines() {
+        let opts = ClusterOptions {
+            shards: 2,
+            ..Default::default()
+        };
+        let mut c = Cluster::new(&presets::mach2(), 0, opts);
+        for _ in 0..4 {
+            c.submit(big(), 2);
+        }
+        let report = c.run_to_completion();
+        assert_eq!(report.served.len(), 4);
+        assert_eq!(report.shards.len(), 2);
+        // Earliest-predicted-finish routing load-balances a uniform
+        // burst: both machines worked.
+        assert!(report.shards[0].dispatches > 0);
+        assert!(report.shards[1].dispatches > 0);
+        // Two concurrent machines overlap execution: the session ends
+        // before the serialized sum of both shards' busy time.
+        let total_busy: f64 = report.shards.iter().map(|s| s.busy_s).sum();
+        assert!(report.makespan < total_busy);
+    }
+
+    /// Steal trigger: routing trusts admission-time predictions, so an
+    /// inversion between predicted and actual finish order is what
+    /// leaves work queued on a busy shard while another goes idle.
+    /// mach1's thermal throttling makes a sustained 50-rep job overrun
+    /// its (cold-profile) prediction by ~10%, while short 3-rep jobs
+    /// run as predicted — a deterministic inversion:
+    ///
+    /// * shard 0 gets the 50-rep job (pred 50p) plus, once shard 1's
+    ///   backlog passes it, one 3-rep job queued behind (at 53p vs 54p);
+    /// * shard 1 gets seventeen 3-rep jobs (51p of backlog) and frees at
+    ///   ~51p — while the throttled long job still runs until ~55p.
+    fn steal_scenario(stealing: bool) -> ServiceReport {
+        let opts = ClusterOptions {
+            shards: 2,
+            work_stealing: stealing,
+            ..Default::default()
+        };
+        let mut c = Cluster::new(&presets::mach1(), 5, opts);
+        c.submit(big(), 50);
+        for _ in 0..18 {
+            c.submit(big(), 3);
+        }
+        c.run_to_completion()
+    }
+
+    #[test]
+    fn idle_shard_steals_work_queued_behind_an_overrunning_job() {
+        let report = steal_scenario(true);
+        assert_eq!(report.served.len(), 19);
+        let stolen: usize = report.shards.iter().map(|s| s.stolen).sum();
+        assert!(stolen >= 1, "no work was stolen: {:?}", report.shards);
+        // Every request still served exactly once.
+        let mut ids: Vec<u64> = report.served.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        let expect: Vec<u64> = (0..19).collect();
+        assert_eq!(ids, expect);
+    }
+
+    #[test]
+    fn work_stealing_can_be_disabled() {
+        let with = steal_scenario(true);
+        let without = steal_scenario(false);
+        assert!(without.shards.iter().all(|s| s.stolen == 0));
+        assert_eq!(with.served.len(), without.served.len());
+        // Stealing starts the stranded request earlier than waiting for
+        // the overrunning job would have.
+        let waits_with = with.mean_queue_wait();
+        let waits_without = without.mean_queue_wait();
+        assert!(
+            waits_with <= waits_without + 1e-9,
+            "stealing must not increase mean queueing delay: {waits_with} vs {waits_without}"
+        );
+    }
+}

@@ -4,31 +4,61 @@
 //! The paper frames the framework as something deployed once and then
 //! consulted as "real matrix multiplication workloads arrive" (§4.1.2),
 //! and ALP (Hill & Reddi) presumes many concurrent workloads. This
-//! module is that deployment shape, built on [`crate::coordinator`]:
+//! module is that deployment shape, layered so each concern lives in
+//! exactly one component:
 //!
-//! * [`server`] — a multi-tenant [`Server`]: owns the machine + profile,
-//!   gates every request through the §6 suitability detector, dispatches
-//!   under a pluggable queue policy, and optionally closes the loop with
-//!   the dynamic scheduler;
+//! * [`admission`] — the [`Admission`] front-end gate: every request
+//!   passes the §6 suitability detector once; verdicts and service
+//!   predictions are memoized in a bounded LRU keyed by
+//!   `(shape, model epoch)`;
+//! * [`shard`] — the [`ExecutorShard`]: one machine's simulator,
+//!   installation-time profile, [`PlanCache`], local queue and optional
+//!   dynamic-scheduler loop; dispatch (including the standalone bypass
+//!   pairing and per-tenant completion attribution) is shard-local, and
+//!   an infeasible plan completes as [`ExecMode::Rejected`] instead of
+//!   panicking;
+//! * [`cluster`] — the [`Cluster`] front-end: N shards driven by an
+//!   event-driven virtual-time loop (a binary heap of arrival / wake /
+//!   shard-free events), routing each admitted request to the shard
+//!   with the earliest predicted finish and letting idle shards steal
+//!   queued work from backlogged ones;
+//! * [`arrivals`] — online arrival processes: deterministic Poisson
+//!   traces ([`PoissonArrivals`]) and replayable fixed traces, so
+//!   reports measure queueing delay and p50/p99 sojourn time under
+//!   offered load instead of draining a batch;
+//! * [`server`] — the classic single-machine [`Server`], now a thin
+//!   wrapper over a 1-shard cluster (same submit / run-to-completion /
+//!   report surface; the old public fields and `step()` gave way to
+//!   the layered components, reachable via `cluster()` / `shard()` /
+//!   `admission()`);
 //! * [`cache`] — the [`PlanCache`]: Optimize-phase output memoized by
 //!   `(shape, model epoch)` so repeated shapes skip the MILP solve; a
 //!   model refresh bumps the epoch and invalidates everything;
-//! * [`queue`] — FIFO and shortest-predicted-job-first orderings, plus
-//!   the scan used by the standalone bypass (a small standalone-bound
-//!   request co-scheduled on a device the plan leaves idle);
-//! * [`request`] — request/outcome records and the per-session
-//!   latency/throughput report.
+//! * [`queue`] — FIFO and shortest-predicted-job-first orderings, the
+//!   backlog accounting the router reads, and the scan used by the
+//!   standalone bypass;
+//! * [`request`] — request/outcome records, per-shard stats and the
+//!   per-session latency/throughput report.
 //!
 //! See `rust/tests/service_scenarios.rs` for the deterministic scenario
-//! harness and `rust/benches/service_throughput.rs` for the cache and
-//! policy numbers.
+//! harness (batch and Poisson), `rust/benches/service_throughput.rs`
+//! for the cache and policy numbers, and
+//! `rust/benches/cluster_scaling.rs` for throughput versus shard count.
 
+pub mod admission;
+pub mod arrivals;
 pub mod cache;
+pub mod cluster;
 pub mod queue;
 pub mod request;
 pub mod server;
+pub mod shard;
 
+pub use admission::Admission;
+pub use arrivals::{fixed_trace, Arrival, PoissonArrivals};
 pub use cache::PlanCache;
+pub use cluster::{Cluster, ClusterOptions};
 pub use queue::{QueuePolicy, QueuedRequest, RequestQueue};
-pub use request::{ExecMode, GemmRequest, ServedRequest, ServiceReport};
+pub use request::{ExecMode, GemmRequest, ServedRequest, ServiceReport, ShardStats};
 pub use server::{Server, ServerOptions};
+pub use shard::{DispatchResult, ExecutorShard};

@@ -73,6 +73,18 @@ impl RequestQueue {
         self.pending.is_empty()
     }
 
+    /// Sum of the admission-time service predictions of everything
+    /// pending — the backlog a routing front-end adds to a shard's
+    /// predicted finish.
+    pub fn predicted_backlog(&self) -> f64 {
+        self.pending.iter().map(|q| q.predicted_s).sum()
+    }
+
+    /// Iterate the pending requests in queue order (diagnostics).
+    pub fn iter(&self) -> impl Iterator<Item = &QueuedRequest> {
+        self.pending.iter()
+    }
+
     /// Admit a request at the tail.
     pub fn push(&mut self, q: QueuedRequest) {
         self.pending.push_back(q);
@@ -167,6 +179,18 @@ mod tests {
         assert_eq!(rq.len(), 2);
         assert!(rq.take_first(|c| c.predicted_s > 100.0).is_none());
         assert_eq!(rq.len(), 2);
+    }
+
+    #[test]
+    fn predicted_backlog_sums_pending() {
+        let mut rq = RequestQueue::new(QueuePolicy::Fifo);
+        assert_eq!(rq.predicted_backlog(), 0.0);
+        rq.push(q(0, 5.0, true));
+        rq.push(q(1, 1.5, false));
+        assert!((rq.predicted_backlog() - 6.5).abs() < 1e-12);
+        rq.pop_next();
+        assert!((rq.predicted_backlog() - 1.5).abs() < 1e-12);
+        assert_eq!(rq.iter().count(), 1);
     }
 
     #[test]

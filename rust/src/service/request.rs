@@ -39,17 +39,28 @@ pub enum ExecMode {
         /// The device it ran on.
         device: usize,
     },
+    /// Planning was infeasible: the request completes unserved (zero
+    /// execution time, empty shares) instead of killing the shard.
+    Rejected,
 }
 
 impl ExecMode {
     /// True for either standalone variant.
     pub fn is_standalone(&self) -> bool {
-        !matches!(self, ExecMode::CoExec)
+        matches!(
+            self,
+            ExecMode::Standalone { .. } | ExecMode::BypassStandalone { .. }
+        )
     }
 
     /// True when the request rode along via the bypass.
     pub fn is_bypass(&self) -> bool {
         matches!(self, ExecMode::BypassStandalone { .. })
+    }
+
+    /// True when planning failed and the request was turned away.
+    pub fn is_rejected(&self) -> bool {
+        matches!(self, ExecMode::Rejected)
     }
 }
 
@@ -59,12 +70,13 @@ impl fmt::Display for ExecMode {
             ExecMode::CoExec => write!(f, "co-exec"),
             ExecMode::Standalone { device } => write!(f, "standalone(d{device})"),
             ExecMode::BypassStandalone { device } => write!(f, "bypass(d{device})"),
+            ExecMode::Rejected => write!(f, "rejected"),
         }
     }
 }
 
 /// The server's record of one completed request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServedRequest {
     /// Request id.
     pub id: u64,
@@ -91,7 +103,7 @@ pub struct ServedRequest {
 }
 
 impl ServedRequest {
-    /// Queueing + service latency: arrival to completion.
+    /// Queueing + service latency (sojourn time): arrival to completion.
     pub fn latency(&self) -> f64 {
         self.finish - self.arrival
     }
@@ -102,27 +114,57 @@ impl ServedRequest {
     }
 }
 
+/// Per-shard accounting inside a [`ServiceReport`] (one entry per
+/// [`super::ExecutorShard`], shard order).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardStats {
+    /// Executions this shard dispatched (a bypass pairing counts once).
+    pub dispatches: usize,
+    /// Virtual seconds this shard spent executing.
+    pub busy_s: f64,
+    /// Virtual time the shard went idle for good.
+    pub last_finish: f64,
+    /// Requests this shard stole from a busier shard's queue.
+    pub stolen: usize,
+}
+
 /// Aggregate outcome of a service session.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServiceReport {
-    /// Every completed request, in completion order.
+    /// Every completed request, in dispatch order (per-shard dispatches
+    /// interleave under a cluster; a bypass rider follows its carrier
+    /// regardless of which finished first).
     pub served: Vec<ServedRequest>,
-    /// Total virtual machine time consumed by the session.
+    /// Virtual session time: the instant the last event settled. Shards
+    /// execute concurrently, so actual machine time consumed is the sum
+    /// of [`ShardStats::busy_s`], up to `shards.len()` times larger.
     pub makespan: f64,
-    /// Plan-cache hits across the session.
+    /// Plan-cache hits across the session (all shards).
     pub cache_hits: u64,
-    /// Plan-cache misses across the session.
+    /// Plan-cache misses across the session (all shards).
     pub cache_misses: u64,
-    /// Model-epoch bumps (each invalidated the plan cache).
+    /// Model-epoch bumps (each invalidated a shard's plan cache).
     pub epoch_bumps: u64,
     /// Dynamic-scheduler replans observed (0 without `dynamic`).
     pub replans: usize,
+    /// Per-shard accounting (shard order; one entry for the classic
+    /// single-machine [`super::Server`]).
+    pub shards: Vec<ShardStats>,
 }
 
 impl ServiceReport {
-    /// Per-request latencies (arrival to completion), served order.
+    /// The requests that actually executed (everything but
+    /// [`ExecMode::Rejected`]) — the population the latency/throughput
+    /// aggregates describe, so zero-cost rejections cannot inflate
+    /// them.
+    fn executed(&self) -> impl Iterator<Item = &ServedRequest> {
+        self.served.iter().filter(|r| !r.mode.is_rejected())
+    }
+
+    /// Per-request latencies (arrival to completion) of executed
+    /// requests, record order.
     pub fn latencies(&self) -> Vec<f64> {
-        self.served.iter().map(|r| r.latency()).collect()
+        self.executed().map(|r| r.latency()).collect()
     }
 
     /// Mean completion latency — the metric SPJF optimizes.
@@ -130,17 +172,35 @@ impl ServiceReport {
         mean(&self.latencies())
     }
 
-    /// Latency percentile, `p` in [0, 100].
+    /// Latency (sojourn) percentile, `p` in [0, 100].
     pub fn latency_percentile(&self, p: f64) -> f64 {
         percentile(&self.latencies(), p)
     }
 
-    /// Requests per virtual second over the session.
+    /// Per-request queueing delays (arrival to execution start) of
+    /// executed requests.
+    pub fn queue_waits(&self) -> Vec<f64> {
+        self.executed().map(|r| r.queue_wait()).collect()
+    }
+
+    /// Mean queueing delay — what the arrival process loads the queue
+    /// with; ~0 when offered load is far below capacity.
+    pub fn mean_queue_wait(&self) -> f64 {
+        mean(&self.queue_waits())
+    }
+
+    /// Queueing-delay percentile, `p` in [0, 100].
+    pub fn queue_wait_percentile(&self, p: f64) -> f64 {
+        percentile(&self.queue_waits(), p)
+    }
+
+    /// Executed requests per virtual second over the session (rejected
+    /// requests consumed no machine time and do not count).
     pub fn throughput_rps(&self) -> f64 {
         if self.makespan <= 0.0 {
             0.0
         } else {
-            self.served.len() as f64 / self.makespan
+            self.executed().count() as f64 / self.makespan
         }
     }
 
@@ -162,6 +222,11 @@ impl ServiceReport {
     /// Count of requests served through the bypass.
     pub fn bypassed(&self) -> usize {
         self.served.iter().filter(|r| r.mode.is_bypass()).count()
+    }
+
+    /// Count of requests rejected at planning time.
+    pub fn rejected(&self) -> usize {
+        self.served.iter().filter(|r| r.mode.is_rejected()).count()
     }
 
     /// Render the per-request log as a table.
@@ -237,6 +302,12 @@ mod tests {
             cache_misses: 1,
             epoch_bumps: 0,
             replans: 0,
+            shards: vec![ShardStats {
+                dispatches: 2,
+                busy_s: 3.0,
+                last_finish: 3.0,
+                stolen: 0,
+            }],
         }
     }
 
@@ -272,9 +343,24 @@ mod tests {
             ExecMode::BypassStandalone { device: 0 }.to_string(),
             "bypass(d0)"
         );
+        assert_eq!(ExecMode::Rejected.to_string(), "rejected");
         assert!(!ExecMode::CoExec.is_standalone());
         assert!(ExecMode::Standalone { device: 1 }.is_standalone());
         assert!(ExecMode::BypassStandalone { device: 0 }.is_bypass());
+        assert!(ExecMode::Rejected.is_rejected());
+        assert!(!ExecMode::Rejected.is_standalone());
+        assert!(!ExecMode::Rejected.is_bypass());
+        assert!(!ExecMode::CoExec.is_rejected());
+    }
+
+    #[test]
+    fn queue_wait_metrics() {
+        let r = report();
+        assert_eq!(r.queue_waits(), vec![0.0, 2.0, 0.0]);
+        assert!((r.mean_queue_wait() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((r.queue_wait_percentile(100.0) - 2.0).abs() < 1e-12);
+        assert_eq!(r.rejected(), 0);
+        assert_eq!(ServiceReport::default().mean_queue_wait(), 0.0);
     }
 
     #[test]

@@ -1,39 +1,30 @@
-//! The multi-tenant GEMM server.
+//! The single-machine server: a 1-shard [`Cluster`] with the classic
+//! API.
 //!
-//! A [`Server`] owns a simulated machine and its installation-time
-//! profile (exactly like [`Pipeline`]) and serves a *stream* of
-//! heterogeneous [`GemmRequest`]s — the regime ALP envisions (many
-//! concurrent workloads, not one GEMM at a time):
-//!
-//! 1. **admission** — every request passes the §6 suitability gate once;
-//!    the verdict and predicted service time are recorded so queue
-//!    policies never re-run the optimizer;
-//! 2. **dispatch** — a pluggable [`QueuePolicy`] picks the next request;
-//! 3. **planning** — co-executed requests take their plan from the
-//!    [`PlanCache`] (repeated shapes skip the MILP solve entirely);
-//! 4. **bypass** — optionally, a standalone-bound small request is
-//!    co-scheduled on a device the plan leaves idle, overlapping the
-//!    co-execution instead of serializing behind it;
-//! 5. **feedback** — optionally, the dynamic scheduler (§3.4.2) observes
-//!    every co-execution; when the model drifts enough to re-plan, the
-//!    cache epoch is bumped so stale plans are never reused.
+//! Historically `Server` was a monolith owning admission, queueing,
+//! plan caching, bypass pairing, execution and the virtual clock. That
+//! state now lives in the layered components — [`Admission`],
+//! [`super::ExecutorShard`], [`Cluster`] — and `Server` is a thin
+//! wrapper over a one-shard cluster, kept because "one machine, batch
+//! submissions, drain the queue" is the common case in tests, benches
+//! and examples. The submit / run-to-completion / report surface is
+//! unchanged; the old public `sim`/`model`/`cache` fields and `step()`
+//! are gone — reach the owning components through [`Server::cluster`],
+//! [`Server::shard`] and [`Server::admission`] instead. Anything the
+//! wrapper does not expose (arrival traces, sharding, work stealing)
+//! is a [`Cluster`] feature.
 
-use super::cache::PlanCache;
-use super::queue::{QueuePolicy, QueuedRequest, RequestQueue};
-use super::request::{ExecMode, GemmRequest, ServedRequest, ServiceReport};
-use crate::adapt::AdaptRules;
-use crate::baselines;
+use super::admission::Admission;
+use super::cluster::{Cluster, ClusterOptions};
+use super::queue::QueuePolicy;
+use super::request::{GemmRequest, ServiceReport};
+use super::shard::ExecutorShard;
 use crate::config::MachineConfig;
 use crate::coordinator::Pipeline;
-use crate::error::{Error, Result};
-use crate::predict::PerfModel;
-use crate::schedule::suitability::{predicted_standalone, recommend, Recommendation};
-use crate::schedule::{build_plan_excluding, DynamicScheduler, PlanOptions, SchedulePlan};
-use crate::sim::{SimMachine, WorkItem, WorkOrder};
 use crate::workload::GemmSize;
-use std::collections::HashMap;
 
-/// Server construction options.
+/// Per-shard serving options (also the admission-gate knobs a cluster
+/// front-end shares across its shards).
 #[derive(Debug, Clone)]
 pub struct ServerOptions {
     /// Dispatch-order policy.
@@ -48,8 +39,10 @@ pub struct ServerOptions {
     pub min_gain: f64,
     /// Scheduling overhead charged to co-execution by the gate, seconds.
     pub overhead_s: f64,
-    /// Plan-cache capacity (entries).
+    /// Plan-cache capacity (entries, per shard).
     pub cache_capacity: usize,
+    /// Admission-memo capacity (entries; bounded LRU).
+    pub gate_capacity: usize,
     /// Close the loop with the dynamic scheduler: refresh the model from
     /// observed executions and invalidate the plan cache on re-plan.
     pub dynamic: bool,
@@ -63,6 +56,7 @@ impl Default for ServerOptions {
             min_gain: 1.05,
             overhead_s: 20e-6,
             cache_capacity: 64,
+            gate_capacity: 1024,
             dynamic: false,
         }
     }
@@ -71,25 +65,7 @@ impl Default for ServerOptions {
 /// A request-serving POAS deployment on one machine.
 #[derive(Debug, Clone)]
 pub struct Server {
-    /// The machine being driven.
-    pub sim: SimMachine,
-    /// The live performance model (profiled at construction; refreshed
-    /// by the dynamic scheduler when `dynamic` is on).
-    pub model: PerfModel,
-    /// The plan memo.
-    pub cache: PlanCache,
-    rules: Vec<AdaptRules>,
-    plan_opts: PlanOptions,
-    opts: ServerOptions,
-    queue: RequestQueue,
-    clock: f64,
-    served: Vec<ServedRequest>,
-    next_id: u64,
-    dynsched: Option<DynamicScheduler>,
-    /// Admission-gate memo: suitability verdict + per-rep prediction by
-    /// `(shape, cache epoch)`, so repeated shapes skip the gate's LP
-    /// solve just like they skip the plan solve.
-    gate_memo: HashMap<(GemmSize, u64), (bool, usize, f64)>,
+    cluster: Cluster,
 }
 
 impl Server {
@@ -103,293 +79,72 @@ impl Server {
     /// Promote an existing pipeline (machine + profile + plan options)
     /// into a server.
     pub fn from_pipeline(pipeline: Pipeline, opts: ServerOptions) -> Self {
-        let Pipeline {
-            sim,
-            model,
-            rules,
-            opts: plan_opts,
-        } = pipeline;
-        let dynsched = if opts.dynamic {
-            Some(DynamicScheduler::new(model.clone()))
-        } else {
-            None
-        };
         Server {
-            sim,
-            cache: PlanCache::new(opts.cache_capacity),
-            rules,
-            plan_opts,
-            queue: RequestQueue::new(opts.policy),
-            clock: 0.0,
-            served: Vec::new(),
-            next_id: 0,
-            dynsched,
-            gate_memo: HashMap::new(),
-            opts,
-            model,
+            cluster: Cluster::from_pipelines(
+                vec![pipeline],
+                ClusterOptions {
+                    shards: 1,
+                    shard: opts,
+                    work_stealing: false,
+                },
+            ),
         }
+    }
+
+    /// The underlying one-shard cluster.
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// The machine-owning shard.
+    pub fn shard(&self) -> &ExecutorShard {
+        self.cluster.shard(0)
+    }
+
+    /// The admission gate.
+    pub fn admission(&self) -> &Admission {
+        self.cluster.admission()
     }
 
     /// Current virtual service time.
     pub fn now(&self) -> f64 {
-        self.clock
+        self.cluster.now()
     }
 
     /// Pending request count.
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.cluster.pending()
     }
 
     /// Requests completed so far.
     pub fn completed(&self) -> usize {
-        self.served.len()
+        self.cluster.completed()
     }
 
     /// Submit a request; returns its id.
     pub fn submit(&mut self, size: GemmSize, reps: u32) -> u64 {
-        let id = self.next_id;
-        self.next_id += 1;
-        self.submit_request(GemmRequest { id, size, reps });
-        id
+        self.cluster.submit(size, reps)
     }
 
     /// Submit a caller-identified request.
     pub fn submit_request(&mut self, req: GemmRequest) {
-        self.next_id = self.next_id.max(req.id + 1);
-        let (co_execute, best_device, predicted_s) = self.predict(req.size, req.reps);
-        self.queue.push(QueuedRequest {
-            req,
-            arrival: self.clock,
-            co_execute,
-            best_device,
-            predicted_s,
-        });
+        self.cluster.submit_request(req);
     }
 
-    /// Admission-time gate: (co-execute?, best single device, predicted
-    /// total service seconds). Memoized by `(shape, epoch)` — the gate's
-    /// own LP solve is as cacheable as the plan solve.
-    fn predict(&mut self, size: GemmSize, reps: u32) -> (bool, usize, f64) {
-        let reps = reps.max(1) as f64;
-        let key = (size, self.cache.epoch());
-        let (co_execute, device, t_rep) = match self.gate_memo.get(&key) {
-            Some(&hit) => hit,
-            None => {
-                let fresh =
-                    match recommend(&self.model, size, self.opts.min_gain, self.opts.overhead_s) {
-                        Recommendation::CoExecute {
-                            t_coexec,
-                            best_device,
-                            ..
-                        } => (true, best_device, t_coexec),
-                        Recommendation::Standalone {
-                            device, t_single, ..
-                        } => (false, device, t_single),
-                    };
-                if self.gate_memo.len() >= 1024 {
-                    self.gate_memo.clear();
-                }
-                self.gate_memo.insert(key, fresh);
-                fresh
-            }
-        };
-        (co_execute, device, t_rep * reps)
-    }
-
-    /// The device the bypass frees for standalone riders: the slowest
-    /// one (largest fitted slope), whose loss barely moves the co-exec
-    /// optimum — on the paper's machines this is the CPU with its ~1%
-    /// share.
+    /// The device the bypass frees for standalone riders (see
+    /// [`ExecutorShard::bypass_host`]).
     pub fn bypass_host(&self) -> usize {
-        self.model
-            .devices
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.a.total_cmp(&b.1.a))
-            .map(|(i, _)| i)
-            .unwrap_or(0)
-    }
-
-    /// Plan `size` with device `host` excluded from the split problem,
-    /// so the resulting work order leaves it idle for a bypass rider.
-    fn plan_excluding(&self, size: GemmSize, host: usize) -> Result<SchedulePlan> {
-        let plan = build_plan_excluding(&self.model, size, &self.rules, &self.plan_opts, &[host])?;
-        if plan.assignments[host].rows > 0 {
-            // Defensive: alignment rebalancing handed leftover rows to
-            // the host (possible only in degenerate configs).
-            return Err(Error::Infeasible(format!(
-                "bypass host {host} still assigned {} rows",
-                plan.assignments[host].rows
-            )));
-        }
-        Ok(plan)
-    }
-
-    /// Serve one dispatch (possibly two requests when the bypass pairs
-    /// them). Returns `false` when the queue is empty.
-    pub fn step(&mut self) -> bool {
-        let Some(q) = self.queue.pop_next() else {
-            return false;
-        };
-        if q.co_execute {
-            self.step_coexec(q);
-        } else {
-            self.step_standalone(q);
-        }
-        true
-    }
-
-    fn step_coexec(&mut self, q: QueuedRequest) {
-        let start = self.clock;
-
-        // ---- Bypass pairing: a standalone-bound request that fits on
-        // the host device within this request's predicted window rides
-        // along instead of waiting for its own turn.
-        let host = self.bypass_host();
-        let mut rider: Option<QueuedRequest> = None;
-        let mut rider_host_pred = 0.0_f64;
-        if self.opts.standalone_bypass {
-            let inputs = self.model.model_inputs();
-            let budget = q.predicted_s;
-            let reps = q.req.reps;
-            rider = self.queue.take_first(|c| {
-                !c.co_execute
-                    && c.req.reps == reps
-                    && predicted_standalone(&inputs[host], c.req.size) * reps.max(1) as f64
-                        <= budget
-            });
-            if let Some(c) = &rider {
-                // The rider runs on the host, so record the host-device
-                // prediction (its admission-time one was for its best
-                // standalone device).
-                rider_host_pred =
-                    predicted_standalone(&inputs[host], c.req.size) * reps.max(1) as f64;
-            }
-        }
-
-        // ---- Plan: cached for the ordinary path; the bypass path plans
-        // around the freed host (not cached — it is shape- and
-        // pairing-specific).
-        let (plan, cache_hit) = if rider.is_some() {
-            match self.plan_excluding(q.req.size, host) {
-                Ok(p) => (p, false),
-                Err(_) => {
-                    // Could not free the host: undo the pairing.
-                    self.queue.push_front(rider.take().unwrap());
-                    self.cached_plan(q.req.size)
-                }
-            }
-        } else {
-            self.cached_plan(q.req.size)
-        };
-
-        // ---- Build the (possibly merged) work order.
-        let mut order = plan.to_work_order(q.req.reps);
-        if let Some(c) = &rider {
-            let priority = self.model.devices[host].priority;
-            let small = WorkOrder {
-                items: vec![WorkItem::whole(host, c.req.size, priority)],
-                reps: c.req.reps,
-            };
-            // Guaranteed disjoint: plan_excluding left the host with zero
-            // rows, and the rider predicate enforced equal reps.
-            order = order
-                .merge(&small)
-                .expect("bypass invariant: host idle and reps equal");
-        }
-
-        // ---- Execute once; attribute completions per tenant.
-        let outcome = self.sim.execute(&order);
-        let finish_big = outcome.finish_of(&plan.active_device_indices());
-        self.served.push(ServedRequest {
-            id: q.req.id,
-            size: q.req.size,
-            reps: q.req.reps,
-            mode: ExecMode::CoExec,
-            arrival: q.arrival,
-            start,
-            finish: start + finish_big,
-            exec_s: finish_big,
-            predicted_s: q.predicted_s,
-            cache_hit,
-            shares: plan.shares(),
-        });
-        if let Some(c) = &rider {
-            let finish_small = outcome.finish_of(&[host]);
-            let mut shares = vec![0.0; self.sim.num_devices()];
-            shares[host] = 1.0;
-            self.served.push(ServedRequest {
-                id: c.req.id,
-                size: c.req.size,
-                reps: c.req.reps,
-                mode: ExecMode::BypassStandalone { device: host },
-                arrival: c.arrival,
-                start,
-                finish: start + finish_small,
-                exec_s: finish_small,
-                predicted_s: rider_host_pred,
-                cache_hit: false,
-                shares,
-            });
-        }
-        self.clock = start + outcome.makespan;
-
-        // ---- Closed loop: observe, refresh, invalidate.
-        if let Some(ds) = &mut self.dynsched {
-            if ds.observe(&plan, &outcome, q.req.reps) {
-                self.model = ds.model.clone();
-                self.cache.bump_epoch();
-                // Old-epoch gate entries can never be read again (the
-                // key carries the epoch); drop them eagerly too.
-                self.gate_memo.clear();
-            }
-        }
-    }
-
-    fn cached_plan(&mut self, size: GemmSize) -> (SchedulePlan, bool) {
-        self.cache
-            .get_or_build(&self.model, size, &self.rules, &self.plan_opts)
-            .expect("planning failed")
-    }
-
-    fn step_standalone(&mut self, q: QueuedRequest) {
-        let start = self.clock;
-        let dev = q.best_device;
-        let outcome = baselines::standalone(&mut self.sim, dev, q.req.size, q.req.reps);
-        let mut shares = vec![0.0; self.sim.num_devices()];
-        shares[dev] = 1.0;
-        self.served.push(ServedRequest {
-            id: q.req.id,
-            size: q.req.size,
-            reps: q.req.reps,
-            mode: ExecMode::Standalone { device: dev },
-            arrival: q.arrival,
-            start,
-            finish: start + outcome.makespan,
-            exec_s: outcome.makespan,
-            predicted_s: q.predicted_s,
-            cache_hit: false,
-            shares,
-        });
-        self.clock = start + outcome.makespan;
+        self.shard().bypass_host()
     }
 
     /// Drain the queue and return the session report.
     pub fn run_to_completion(&mut self) -> ServiceReport {
-        while self.step() {}
-        self.report()
+        self.cluster.run_to_completion()
     }
 
     /// Snapshot the session statistics.
     pub fn report(&self) -> ServiceReport {
-        ServiceReport {
-            served: self.served.clone(),
-            makespan: self.clock,
-            cache_hits: self.cache.hits,
-            cache_misses: self.cache.misses,
-            epoch_bumps: self.cache.invalidations,
-            replans: self.dynsched.as_ref().map(|d| d.replans).unwrap_or(0),
-        }
+        self.cluster.report()
     }
 }
 
@@ -397,6 +152,7 @@ impl Server {
 mod tests {
     use super::*;
     use crate::config::presets;
+    use crate::service::request::ExecMode;
 
     #[test]
     fn gate_routes_by_size_and_everything_completes() {
@@ -489,5 +245,24 @@ mod tests {
         assert!(report.epoch_bumps >= 1);
         // The same shape had to re-plan after the invalidation.
         assert!(report.cache_misses >= 2, "misses {}", report.cache_misses);
+        // The replan refreshed the front-end gate too.
+        assert!(srv.admission().epoch() >= 1);
+    }
+
+    #[test]
+    fn wrapper_exposes_the_layered_components() {
+        let mut srv = Server::new(&presets::mach2(), 4, ServerOptions::default());
+        assert_eq!(srv.cluster().num_shards(), 1);
+        assert_eq!(srv.shard().id, 0);
+        assert_eq!(srv.completed(), 0);
+        let id = srv.submit(GemmSize::square(16_000), 1);
+        assert_eq!(srv.pending(), 1);
+        let report = srv.run_to_completion();
+        assert_eq!(srv.pending(), 0);
+        assert_eq!(srv.completed(), 1);
+        assert!(report.request(id).is_some());
+        assert!(srv.now() > 0.0);
+        assert_eq!(report.shards.len(), 1);
+        assert_eq!(report.shards[0].stolen, 0);
     }
 }

@@ -1,0 +1,473 @@
+//! The executor shard: one machine's worth of the serving deployment.
+//!
+//! An [`ExecutorShard`] owns exactly the state that must live next to
+//! one [`SimMachine`]: the installation-time [`PerfModel`] profiled on
+//! *that* machine, its [`PlanCache`], its pending-request queue, and
+//! (optionally) a [`DynamicScheduler`] closing the loop on drift. The
+//! cluster front-end routes admitted requests onto shards and asks a
+//! shard to dispatch whenever its machine is free; everything below the
+//! routing decision — plan lookup, the standalone bypass pairing,
+//! execution, per-tenant completion attribution, model feedback — is
+//! shard-local.
+//!
+//! A request whose plan turns out to be infeasible completes with an
+//! [`ExecMode::Rejected`] record (zero execution time, empty shares)
+//! instead of propagating a panic out of the serving loop.
+
+use super::cache::PlanCache;
+use super::queue::{QueuedRequest, RequestQueue};
+use super::request::{ExecMode, ServedRequest, ShardStats};
+use super::server::ServerOptions;
+use crate::adapt::AdaptRules;
+use crate::baselines;
+use crate::coordinator::Pipeline;
+use crate::error::{Error, Result};
+use crate::predict::PerfModel;
+use crate::schedule::suitability::predicted_standalone;
+use crate::schedule::{build_plan_excluding, DynamicScheduler, PlanOptions, SchedulePlan};
+use crate::sim::{SimMachine, WorkItem, WorkOrder};
+use crate::workload::GemmSize;
+
+/// What one dispatch did to the shard.
+#[derive(Debug, Clone, Copy)]
+pub struct DispatchResult {
+    /// Virtual time the shard's machine goes free again.
+    pub finish: f64,
+    /// True when the dynamic scheduler re-planned on this dispatch: the
+    /// front-end should refresh its admission model from this shard.
+    pub replanned: bool,
+}
+
+/// One machine of a serving cluster: simulator + profile + plan cache +
+/// local queue + (optional) closed-loop scheduler.
+#[derive(Debug, Clone)]
+pub struct ExecutorShard {
+    /// Shard index in the cluster (0 for a single-machine server).
+    pub id: usize,
+    /// The machine being driven.
+    pub sim: SimMachine,
+    /// The live performance model (profiled at construction; refreshed
+    /// by the dynamic scheduler when `dynamic` is on).
+    pub model: PerfModel,
+    /// The plan memo.
+    pub cache: PlanCache,
+    rules: Vec<AdaptRules>,
+    plan_opts: PlanOptions,
+    opts: ServerOptions,
+    dynsched: Option<DynamicScheduler>,
+    queue: RequestQueue,
+    /// Virtual (service-time) instant the machine goes idle.
+    free_at: f64,
+    /// Virtual seconds spent executing (for utilization accounting).
+    busy_s: f64,
+    dispatches: usize,
+    stolen: usize,
+}
+
+impl ExecutorShard {
+    /// Promote a profiled pipeline (machine + model + plan options)
+    /// into shard `id` of a cluster.
+    pub fn from_pipeline(id: usize, pipeline: Pipeline, opts: &ServerOptions) -> Self {
+        let Pipeline {
+            sim,
+            model,
+            rules,
+            opts: plan_opts,
+        } = pipeline;
+        let dynsched = if opts.dynamic {
+            Some(DynamicScheduler::new(model.clone()))
+        } else {
+            None
+        };
+        ExecutorShard {
+            id,
+            sim,
+            cache: PlanCache::new(opts.cache_capacity),
+            rules,
+            plan_opts,
+            queue: RequestQueue::new(opts.policy),
+            free_at: 0.0,
+            busy_s: 0.0,
+            dispatches: 0,
+            stolen: 0,
+            dynsched,
+            opts: opts.clone(),
+            model,
+        }
+    }
+
+    /// Pending request count on this shard's queue.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Virtual time the machine goes idle (0 before the first dispatch).
+    pub fn free_at(&self) -> f64 {
+        self.free_at
+    }
+
+    /// Sum of admission-time predictions of everything queued here.
+    pub fn backlog_s(&self) -> f64 {
+        self.queue.predicted_backlog()
+    }
+
+    /// Predicted completion of a hypothetical request with service
+    /// prediction `predicted_s` routed to this shard at time `now`:
+    /// current execution + queued backlog + the request itself. The
+    /// cluster routes each arrival to the shard minimizing this.
+    pub fn predicted_finish(&self, now: f64, predicted_s: f64) -> f64 {
+        self.free_at.max(now) + self.backlog_s() + predicted_s
+    }
+
+    /// Dynamic-scheduler re-plans performed so far (0 without `dynamic`).
+    pub fn replans(&self) -> usize {
+        self.dynsched.as_ref().map(|d| d.replans).unwrap_or(0)
+    }
+
+    /// Snapshot the shard's accounting for the session report.
+    pub fn stats(&self) -> ShardStats {
+        ShardStats {
+            dispatches: self.dispatches,
+            busy_s: self.busy_s,
+            last_finish: self.free_at,
+            stolen: self.stolen,
+        }
+    }
+
+    /// Admit an already-gated request into this shard's queue.
+    pub fn enqueue(&mut self, q: QueuedRequest) {
+        self.queue.push(q);
+    }
+
+    /// Give up the request this shard would dispatch next (under its own
+    /// policy) so an idle shard can run it instead.
+    pub fn yield_next(&mut self) -> Option<QueuedRequest> {
+        self.queue.pop_next()
+    }
+
+    /// Record that this shard stole a request from a busier one.
+    pub fn note_steal(&mut self) {
+        self.stolen += 1;
+    }
+
+    /// The device the bypass frees for standalone riders: the slowest
+    /// one (largest fitted slope), whose loss barely moves the co-exec
+    /// optimum — on the paper's machines this is the CPU with its ~1%
+    /// share.
+    pub fn bypass_host(&self) -> usize {
+        self.model
+            .devices
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.a.total_cmp(&b.1.a))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Plan `size` with device `host` excluded from the split problem,
+    /// so the resulting work order leaves it idle for a bypass rider.
+    fn plan_excluding(&self, size: GemmSize, host: usize) -> Result<SchedulePlan> {
+        let plan = build_plan_excluding(&self.model, size, &self.rules, &self.plan_opts, &[host])?;
+        if plan.assignments[host].rows > 0 {
+            // Defensive: alignment rebalancing handed leftover rows to
+            // the host (possible only in degenerate configs).
+            return Err(Error::Infeasible(format!(
+                "bypass host {host} still assigned {} rows",
+                plan.assignments[host].rows
+            )));
+        }
+        Ok(plan)
+    }
+
+    fn cached_plan(&mut self, size: GemmSize) -> Result<(SchedulePlan, bool)> {
+        self.cache
+            .get_or_build(&self.model, size, &self.rules, &self.plan_opts)
+    }
+
+    /// Serve this shard's next queued request (possibly two, when the
+    /// bypass pairs a rider), starting execution at virtual time
+    /// `start` (`>= free_at()`). Completion records are appended to
+    /// `out`. Returns `None` when the queue is empty.
+    pub fn dispatch_next(
+        &mut self,
+        start: f64,
+        out: &mut Vec<ServedRequest>,
+    ) -> Option<DispatchResult> {
+        let q = self.queue.pop_next()?;
+        self.dispatches += 1;
+        let result = if q.co_execute {
+            self.serve_coexec(q, start, out)
+        } else {
+            self.serve_standalone(q, start, out)
+        };
+        self.free_at = result.finish;
+        Some(result)
+    }
+
+    fn serve_coexec(
+        &mut self,
+        q: QueuedRequest,
+        start: f64,
+        out: &mut Vec<ServedRequest>,
+    ) -> DispatchResult {
+        // ---- Bypass pairing: a standalone-bound request that fits on
+        // the host device within this request's predicted window rides
+        // along instead of waiting for its own turn.
+        let host = self.bypass_host();
+        let mut rider: Option<QueuedRequest> = None;
+        let mut rider_host_pred = 0.0_f64;
+        if self.opts.standalone_bypass {
+            let inputs = self.model.model_inputs();
+            let budget = q.predicted_s;
+            let reps = q.req.reps;
+            rider = self.queue.take_first(|c| {
+                !c.co_execute
+                    && c.req.reps == reps
+                    && predicted_standalone(&inputs[host], c.req.size) * reps.max(1) as f64
+                        <= budget
+            });
+            if let Some(c) = &rider {
+                // The rider runs on the host, so record the host-device
+                // prediction (its admission-time one was for its best
+                // standalone device).
+                rider_host_pred =
+                    predicted_standalone(&inputs[host], c.req.size) * reps.max(1) as f64;
+            }
+        }
+
+        // ---- Plan: cached for the ordinary path; the bypass path plans
+        // around the freed host (not cached — it is shape- and
+        // pairing-specific).
+        let plan_result = if rider.is_some() {
+            match self.plan_excluding(q.req.size, host) {
+                Ok(p) => Ok((p, false)),
+                Err(_) => {
+                    // Could not free the host: undo the pairing.
+                    self.queue.push_front(rider.take().unwrap());
+                    self.cached_plan(q.req.size)
+                }
+            }
+        } else {
+            self.cached_plan(q.req.size)
+        };
+        let (plan, cache_hit) = match plan_result {
+            Ok(pc) => pc,
+            Err(_) => {
+                // Infeasible plan: the request completes rejected; the
+                // shard (and the rest of the queue) lives on.
+                self.serve_rejected(q, start, out);
+                return DispatchResult {
+                    finish: start,
+                    replanned: false,
+                };
+            }
+        };
+
+        // ---- Build the (possibly merged) work order.
+        let mut order = plan.to_work_order(q.req.reps);
+        if let Some(c) = &rider {
+            let priority = self.model.devices[host].priority;
+            let small = WorkOrder {
+                items: vec![WorkItem::whole(host, c.req.size, priority)],
+                reps: c.req.reps,
+            };
+            // Guaranteed disjoint: plan_excluding left the host with zero
+            // rows, and the rider predicate enforced equal reps.
+            order = order
+                .merge(&small)
+                .expect("bypass invariant: host idle and reps equal");
+        }
+
+        // ---- Execute once; attribute completions per tenant.
+        let sim_start = self.sim.now();
+        let outcome = self.sim.execute(&order);
+        // `busy_until - start` is exactly the makespan: the machine's
+        // own busy-until hook backs the shard's utilization accounting.
+        self.busy_s += self.sim.busy_until() - sim_start;
+        let finish_big = outcome.finish_of(&plan.active_device_indices());
+        out.push(ServedRequest {
+            id: q.req.id,
+            size: q.req.size,
+            reps: q.req.reps,
+            mode: ExecMode::CoExec,
+            arrival: q.arrival,
+            start,
+            finish: start + finish_big,
+            exec_s: finish_big,
+            predicted_s: q.predicted_s,
+            cache_hit,
+            shares: plan.shares(),
+        });
+        if let Some(c) = &rider {
+            let finish_small = outcome.finish_of(&[host]);
+            let mut shares = vec![0.0; self.sim.num_devices()];
+            shares[host] = 1.0;
+            out.push(ServedRequest {
+                id: c.req.id,
+                size: c.req.size,
+                reps: c.req.reps,
+                mode: ExecMode::BypassStandalone { device: host },
+                arrival: c.arrival,
+                start,
+                finish: start + finish_small,
+                exec_s: finish_small,
+                predicted_s: rider_host_pred,
+                cache_hit: false,
+                shares,
+            });
+        }
+
+        // ---- Closed loop: observe, refresh, invalidate.
+        let mut replanned = false;
+        if let Some(ds) = &mut self.dynsched {
+            if ds.observe(&plan, &outcome, q.req.reps) {
+                self.model = ds.model.clone();
+                self.cache.bump_epoch();
+                replanned = true;
+            }
+        }
+        DispatchResult {
+            finish: start + outcome.makespan,
+            replanned,
+        }
+    }
+
+    fn serve_standalone(
+        &mut self,
+        q: QueuedRequest,
+        start: f64,
+        out: &mut Vec<ServedRequest>,
+    ) -> DispatchResult {
+        let dev = q.best_device;
+        let sim_start = self.sim.now();
+        let outcome = baselines::standalone(&mut self.sim, dev, q.req.size, q.req.reps);
+        self.busy_s += self.sim.busy_until() - sim_start;
+        let mut shares = vec![0.0; self.sim.num_devices()];
+        shares[dev] = 1.0;
+        out.push(ServedRequest {
+            id: q.req.id,
+            size: q.req.size,
+            reps: q.req.reps,
+            mode: ExecMode::Standalone { device: dev },
+            arrival: q.arrival,
+            start,
+            finish: start + outcome.makespan,
+            exec_s: outcome.makespan,
+            predicted_s: q.predicted_s,
+            cache_hit: false,
+            shares,
+        });
+        DispatchResult {
+            finish: start + outcome.makespan,
+            replanned: false,
+        }
+    }
+
+    fn serve_rejected(&mut self, q: QueuedRequest, start: f64, out: &mut Vec<ServedRequest>) {
+        out.push(ServedRequest {
+            id: q.req.id,
+            size: q.req.size,
+            reps: q.req.reps,
+            mode: ExecMode::Rejected,
+            arrival: q.arrival,
+            start,
+            finish: start,
+            exec_s: 0.0,
+            predicted_s: q.predicted_s,
+            cache_hit: false,
+            shares: vec![0.0; self.sim.num_devices()],
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::service::request::GemmRequest;
+
+    fn shard(seed: u64, opts: ServerOptions) -> ExecutorShard {
+        ExecutorShard::from_pipeline(
+            0,
+            Pipeline::for_simulated_machine(&presets::mach2(), seed),
+            &opts,
+        )
+    }
+
+    fn queued(id: u64, size: GemmSize, reps: u32, co: bool, predicted_s: f64) -> QueuedRequest {
+        QueuedRequest {
+            req: GemmRequest { id, size, reps },
+            arrival: 0.0,
+            co_execute: co,
+            best_device: 2,
+            predicted_s,
+        }
+    }
+
+    #[test]
+    fn dispatch_advances_free_time_and_accounts_busy_seconds() {
+        let mut s = shard(0, ServerOptions::default());
+        assert_eq!(s.pending(), 0);
+        s.enqueue(queued(0, GemmSize::square(18_000), 2, true, 1.0));
+        let mut out = Vec::new();
+        let r = s.dispatch_next(5.0, &mut out).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].start, 5.0);
+        assert!(r.finish > 5.0);
+        assert_eq!(s.free_at(), r.finish);
+        // Busy accounting comes from the machine's own busy-until hook.
+        assert!((s.stats().busy_s - (r.finish - 5.0)).abs() < 1e-9);
+        assert_eq!(s.stats().dispatches, 1);
+        assert!(s.dispatch_next(r.finish, &mut out).is_none());
+    }
+
+    #[test]
+    fn predicted_finish_folds_backlog_and_clock() {
+        let mut s = shard(1, ServerOptions::default());
+        s.enqueue(queued(0, GemmSize::square(16_000), 1, true, 2.0));
+        s.enqueue(queued(1, GemmSize::square(16_000), 1, true, 3.0));
+        assert!((s.backlog_s() - 5.0).abs() < 1e-12);
+        // Idle shard, now=10: finish = 10 + backlog + request.
+        assert!((s.predicted_finish(10.0, 4.0) - 19.0).abs() < 1e-12);
+        // A busy shard counts from its free time instead.
+        s.free_at = 50.0;
+        assert!((s.predicted_finish(10.0, 4.0) - 59.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infeasible_plan_rejects_request_instead_of_panicking() {
+        let mut s = shard(2, ServerOptions::default());
+        // Corrupt the adapt rules (arity mismatch) so every plan build
+        // fails — the seam a degenerate config would hit in production.
+        s.rules = Vec::new();
+        s.enqueue(queued(7, GemmSize::square(20_000), 3, true, 1.0));
+        // A standalone request behind it must still be served.
+        s.enqueue(queued(8, GemmSize::square(300), 3, false, 0.5));
+        let mut out = Vec::new();
+        let r = s.dispatch_next(0.0, &mut out).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].mode, ExecMode::Rejected);
+        assert_eq!(out[0].id, 7);
+        assert_eq!(out[0].exec_s, 0.0);
+        assert_eq!(out[0].finish, out[0].start);
+        assert_eq!(out[0].shares.iter().sum::<f64>(), 0.0);
+        assert_eq!(r.finish, 0.0, "rejection consumes no machine time");
+        // The shard survives and serves the rest of its queue.
+        let r2 = s.dispatch_next(r.finish, &mut out).unwrap();
+        assert!(r2.finish > 0.0);
+        assert_eq!(out[1].id, 8);
+        assert!(matches!(out[1].mode, ExecMode::Standalone { .. }));
+    }
+
+    #[test]
+    fn yield_next_hands_over_the_policy_choice() {
+        let mut s = shard(3, ServerOptions::default());
+        s.enqueue(queued(0, GemmSize::square(16_000), 1, true, 2.0));
+        s.enqueue(queued(1, GemmSize::square(16_000), 1, true, 3.0));
+        let stolen = s.yield_next().unwrap();
+        assert_eq!(stolen.req.id, 0, "FIFO yields the head");
+        assert_eq!(s.pending(), 1);
+        s.note_steal();
+        assert_eq!(s.stats().stolen, 1);
+    }
+}

@@ -148,6 +148,9 @@ pub struct SimMachine {
     /// Session clock: profiling and executions advance it so thermal
     /// state carries realistically between activities.
     now: f64,
+    /// Session-clock time the last work order finished (before the
+    /// inter-run rest); profiling does not move it.
+    busy_until: f64,
 }
 
 impl SimMachine {
@@ -169,6 +172,7 @@ impl SimMachine {
             devices,
             bus: Bus::new(policy),
             now: 0.0,
+            busy_until: 0.0,
         }
     }
 
@@ -185,6 +189,16 @@ impl SimMachine {
     /// Current virtual time.
     pub fn now(&self) -> f64 {
         self.now
+    }
+
+    /// Session-clock time at which the machine last finished executing a
+    /// work order (the instant its slowest device went idle, before the
+    /// inter-run rest is charged). `0.0` until the first execution.
+    /// The serving layer's shards difference this against the
+    /// pre-execution clock to account machine-busy seconds without
+    /// re-deriving them from per-device timelines.
+    pub fn busy_until(&self) -> f64 {
+        self.busy_until
     }
 
     /// Direct (test/calibration) access to a device.
@@ -340,6 +354,7 @@ impl SimMachine {
 
         // The experiment occupied the session: advance the clock and give
         // the machine the paper's inter-run rest.
+        self.busy_until = self.now + makespan;
         self.now += makespan + 30.0;
 
         ExecOutcome {
@@ -536,6 +551,21 @@ mod tests {
         // Devices without work report finish 0.
         assert_eq!(o.finish_of(&[1]), 0.0);
         assert_eq!(o.finish_of(&[]), 0.0);
+    }
+
+    #[test]
+    fn busy_until_tracks_execution_end_not_rest() {
+        let mut m = mach1();
+        assert_eq!(m.busy_until(), 0.0);
+        m.profile_compute_once(1, 2000);
+        assert_eq!(m.busy_until(), 0.0, "profiling is not serving work");
+        let before = m.now();
+        let o = m.execute(&simple_order(&m));
+        assert!((m.busy_until() - (before + o.makespan)).abs() < 1e-9);
+        // The inter-run rest is charged to the session clock only.
+        assert!(m.now() > m.busy_until());
+        m.rest(100.0);
+        assert!((m.busy_until() - (before + o.makespan)).abs() < 1e-9);
     }
 
     #[test]

@@ -6,9 +6,17 @@
 //! exact-replay determinism for every scenario plus the policy
 //! invariants the service layer is built around (SPJF mean completion,
 //! bypass latency, plan-cache behaviour).
+//!
+//! The second half drives the sharded [`Cluster`] under *online*
+//! Poisson arrival traces: trace determinism, queueing delay growing
+//! with offered load, and the headline multi-machine property — two
+//! shards strictly beat one on mean sojourn time for the same trace,
+//! byte-identically reproducible per seed.
 
 use poas::config::{presets, MachineConfig};
-use poas::service::{QueuePolicy, Server, ServerOptions, ServiceReport};
+use poas::service::{
+    Cluster, ClusterOptions, PoissonArrivals, QueuePolicy, Server, ServerOptions, ServiceReport,
+};
 use poas::workload::GemmSize;
 
 /// One deterministic scenario.
@@ -300,4 +308,156 @@ fn dynamic_scenario_bumps_epoch_and_replans_same_shape() {
         s.name,
         report.cache_misses
     );
+}
+
+// ---------------------------------------------------------------------
+// Online arrivals: Poisson traces against the sharded cluster
+// ---------------------------------------------------------------------
+
+/// The shape menu tenants draw from under a trace: two co-executable
+/// heavies and a standalone-bound small one.
+fn trace_menu() -> Vec<(GemmSize, u32)> {
+    vec![
+        (GemmSize::square(16_000), 2),
+        (GemmSize::square(20_000), 2),
+        (GemmSize::square(400), 2),
+    ]
+}
+
+/// Heavy-only menu for the capacity comparison: every draw saturates a
+/// machine, so offered load translates directly into queueing.
+fn heavy_menu() -> Vec<(GemmSize, u32)> {
+    vec![
+        (GemmSize::square(16_000), 2),
+        (GemmSize::square(20_000), 2),
+    ]
+}
+
+/// Calibrate the virtual-time scale: how long one heavy menu request
+/// takes served alone. Arrival rates are expressed against this so the
+/// scenarios stay meaningful if device presets change.
+fn probe_service_s() -> f64 {
+    let mut srv = Server::new(&presets::mach2(), 0, ServerOptions::default());
+    srv.submit(GemmSize::square(20_000), 2);
+    srv.run_to_completion().makespan
+}
+
+fn serve_trace(
+    shards: usize,
+    rate_rps: f64,
+    n: usize,
+    seed: u64,
+    menu: Vec<(GemmSize, u32)>,
+) -> ServiceReport {
+    let mut cluster = Cluster::new(
+        &presets::mach2(),
+        0,
+        ClusterOptions {
+            shards,
+            ..Default::default()
+        },
+    );
+    let trace = PoissonArrivals::new(rate_rps, menu, seed).trace(n);
+    let ids = cluster.submit_trace(&trace);
+    assert_eq!(ids.len(), n);
+    cluster.run_to_completion()
+}
+
+#[test]
+fn poisson_trace_is_deterministic_and_seed_sensitive() {
+    let p = PoissonArrivals::new(1.0, trace_menu(), 123);
+    assert_eq!(p.trace(100), p.trace(100));
+    let q = PoissonArrivals::new(1.0, trace_menu(), 124);
+    assert_ne!(p.trace(100), q.trace(100));
+    // Times strictly increase and shapes come from the menu.
+    let t = p.trace(100);
+    let mut prev = 0.0;
+    for a in &t {
+        assert!(a.at > prev);
+        prev = a.at;
+        assert!(trace_menu().iter().any(|&(s, r)| s == a.size && r == a.reps));
+    }
+}
+
+#[test]
+fn poisson_mean_interarrival_matches_rate() {
+    let rate = 2.0;
+    let n = 3000;
+    let trace = PoissonArrivals::new(rate, trace_menu(), 9).trace(n);
+    let mean_gap = trace.last().unwrap().at / n as f64;
+    assert!(
+        (mean_gap * rate - 1.0).abs() < 0.06,
+        "empirical mean inter-arrival {mean_gap} vs expected {}",
+        1.0 / rate
+    );
+}
+
+#[test]
+fn queueing_delay_grows_with_offered_load() {
+    let m = probe_service_s();
+    assert!(m > 0.0);
+    let n = 12;
+    // Same trace seed: the high-rate trace is the low-rate one with
+    // every gap shrunk, so the comparison isolates offered load.
+    let low = serve_trace(1, 0.15 / m, n, 7, trace_menu());
+    let high = serve_trace(1, 2.5 / m, n, 7, trace_menu());
+    assert_eq!(low.served.len(), n);
+    assert_eq!(high.served.len(), n);
+    let (w_low, w_high) = (low.mean_queue_wait(), high.mean_queue_wait());
+    assert!(
+        w_high > 2.0 * w_low + 1e-9,
+        "queueing delay must grow with load: low {w_low} high {w_high}"
+    );
+    // Under load the tail sojourn stretches well past a lone service.
+    assert!(high.latency_percentile(99.0) > high.latency_percentile(50.0));
+    assert!(high.mean_completion() > low.mean_completion());
+}
+
+#[test]
+fn two_shards_beat_one_on_the_same_trace_and_replay_byte_identically() {
+    let m = probe_service_s();
+    let n = 10;
+    let rate = 2.5 / m;
+    // Heavy-only menu: ~2x overload for one machine, ~balanced for two.
+    let one = serve_trace(1, rate, n, 42, heavy_menu());
+    let two = serve_trace(2, rate, n, 42, heavy_menu());
+    assert_eq!(one.served.len(), n);
+    assert_eq!(two.served.len(), n);
+    assert!(
+        two.mean_completion() < one.mean_completion(),
+        "2 shards must strictly lower mean sojourn: one {} two {}",
+        one.mean_completion(),
+        two.mean_completion()
+    );
+    assert_eq!(two.shards.len(), 2);
+    assert!(
+        two.shards.iter().all(|s| s.dispatches > 0),
+        "routing never used a shard: {:?}",
+        two.shards
+    );
+
+    // Same seed, same trace, same cluster → byte-identical reports.
+    let replay = serve_trace(2, rate, n, 42, heavy_menu());
+    assert_eq!(two, replay);
+    assert_eq!(
+        format!("{two:?}"),
+        format!("{replay:?}"),
+        "replay must be byte-identical"
+    );
+}
+
+#[test]
+fn cluster_serves_every_arrival_exactly_once_across_shards() {
+    let m = probe_service_s();
+    let report = serve_trace(3, 1.5 / m, 9, 13, trace_menu());
+    assert_eq!(report.served.len(), 9);
+    let mut ids: Vec<u64> = report.served.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    let expect: Vec<u64> = (0..9).collect();
+    assert_eq!(ids, expect);
+    for r in &report.served {
+        assert!(r.start >= r.arrival, "req {} started before arriving", r.id);
+        assert!(r.finish <= report.makespan + 1e-9);
+    }
+    assert_eq!(report.shards.len(), 3);
 }
