@@ -1,4 +1,5 @@
-//! Cluster scaling: throughput and sojourn time versus shard count.
+//! Cluster scaling: throughput and sojourn time versus shard count,
+//! plus the QoS tier separation under overload.
 //!
 //! One Poisson arrival trace (fixed seed, rate calibrated to overload a
 //! single machine ~2x), served by clusters of 1, 2 and 4 shards. The
@@ -11,13 +12,38 @@
 //!    delay under the *same* offered load?
 //! 3. does work stealing move requests between shards when the backlog
 //!    is imbalanced?
+//! 4. do the QoS tiers actually separate: interactive p99 below batch
+//!    p99 on an overloaded mixed-class trace, with the deadline-hit
+//!    rate of accepted SLO requests staying high?
+//!
+//! Environment knobs (the CI bench-smoke gate sets both):
+//!
+//! * `POAS_BENCH_SMOKE=1` — run a reduced trace (fewer requests) so the
+//!   regenerator finishes in seconds on a CI runner;
+//! * `POAS_BENCH_JSON=<path>` — also write the summary as JSON, the
+//!   artifact CI uploads to record the perf trajectory over time.
 
 use poas::config::presets;
 use poas::report::{rate, secs, Table};
-use poas::service::{Cluster, ClusterOptions, PoissonArrivals, Server, ServerOptions};
+use poas::service::{
+    ClassLoad, Cluster, ClusterOptions, MixedArrivals, PoissonArrivals, QosClass, Server,
+    ServerOptions,
+};
 use poas::workload::GemmSize;
 
+struct ScaleRow {
+    shards: usize,
+    makespan_s: f64,
+    busy_s: f64,
+    throughput_rps: f64,
+    mean_sojourn_s: f64,
+    p99_sojourn_s: f64,
+    mean_queue_wait_s: f64,
+    stolen: usize,
+}
+
 fn main() {
+    let smoke = std::env::var("POAS_BENCH_SMOKE").is_ok_and(|v| v == "1");
     let cfg = presets::mach2();
 
     // Calibrate the virtual-time scale: one heavy request served alone.
@@ -32,14 +58,17 @@ fn main() {
         (GemmSize::new(12_000, 18_000, 14_000), 2),
         (GemmSize::square(400), 2),
     ];
-    let n = 24;
+    let n = if smoke { 10 } else { 24 };
     let offered = 2.0 / unit; // ~2x one machine's capacity
     let trace = PoissonArrivals::new(offered, menu, 1).trace(n);
 
     let mut table = Table::new(
-        &format!("{n}-request Poisson trace on mach2 (offered {} / machine capacity ~{})",
+        &format!(
+            "{n}-request Poisson trace on mach2 (offered {} / machine capacity ~{}{})",
             rate(offered),
-            rate(1.0 / unit)),
+            rate(1.0 / unit),
+            if smoke { ", smoke" } else { "" }
+        ),
         &[
             "shards",
             "session time",
@@ -52,7 +81,7 @@ fn main() {
         ],
     );
 
-    let mut last_throughput = 0.0;
+    let mut rows: Vec<ScaleRow> = Vec::new();
     for shards in [1usize, 2, 4] {
         let mut cluster = Cluster::new(
             &cfg,
@@ -77,13 +106,106 @@ fn main() {
             secs(report.mean_queue_wait()),
             stolen.to_string(),
         ]);
-        last_throughput = report.throughput_rps();
+        rows.push(ScaleRow {
+            shards,
+            makespan_s: report.makespan,
+            busy_s: busy,
+            throughput_rps: report.throughput_rps(),
+            mean_sojourn_s: report.mean_completion(),
+            p99_sojourn_s: report.latency_percentile(99.0),
+            mean_queue_wait_s: report.mean_queue_wait(),
+            stolen,
+        });
     }
     table.print();
+
+    // ---- QoS tiers: the same 2-shard cluster under a mixed-class
+    // overload (heavy batch stream + light deadline-bound interactive
+    // stream).
+    let per_class = if smoke { 8 } else { 16 };
+    let mix = MixedArrivals::new(
+        vec![
+            ClassLoad {
+                class: QosClass::Interactive,
+                rate_rps: 0.6 / unit,
+                menu: vec![(GemmSize::square(16_000), 2), (GemmSize::square(20_000), 2)],
+                deadline_s: Some(6.0 * unit),
+            },
+            ClassLoad {
+                class: QosClass::Batch,
+                rate_rps: 5.0 / unit,
+                menu: vec![(GemmSize::square(16_000), 2), (GemmSize::square(20_000), 2)],
+                deadline_s: None,
+            },
+        ],
+        17,
+    );
+    let mut cluster = Cluster::new(
+        &cfg,
+        0,
+        ClusterOptions {
+            shards: 2,
+            ..Default::default()
+        },
+    );
+    cluster.submit_trace(&mix.trace(per_class));
+    let qos = cluster.run_to_completion();
+    qos.class_table(&format!(
+        "QoS tiers on a 2-shard overload ({} requests/class, interactive SLO {})",
+        per_class,
+        secs(6.0 * unit)
+    ))
+    .print();
+    let p99_i = qos.class_latency_percentile(QosClass::Interactive, 99.0);
+    let p99_b = qos.class_latency_percentile(QosClass::Batch, 99.0);
+    println!(
+        "deadline-hit rate (accepted SLO requests): {:.0}%   denied: {}",
+        100.0 * qos.deadline_hit_rate(),
+        qos.denied()
+    );
+
     println!(
         "\ntargets: throughput grows 1 -> 2 shards under ~2x overload; \
-         mean and p99 sojourn shrink as shards absorb the queueing delay. \
-         (final observed throughput: {})",
-        rate(last_throughput)
+         mean and p99 sojourn shrink as shards absorb the queueing delay; \
+         interactive p99 ({}) below batch p99 ({}).",
+        secs(p99_i),
+        secs(p99_b),
     );
+
+    // ---- Perf-trajectory artifact: a JSON summary CI records per run.
+    if let Ok(path) = std::env::var("POAS_BENCH_JSON") {
+        let mut json = String::from("{\n");
+        json.push_str("  \"bench\": \"cluster_scaling\",\n");
+        json.push_str(&format!("  \"smoke\": {smoke},\n"));
+        json.push_str(&format!("  \"requests\": {n},\n"));
+        json.push_str(&format!("  \"offered_rps\": {offered},\n"));
+        json.push_str("  \"scaling\": [\n");
+        for (i, r) in rows.iter().enumerate() {
+            json.push_str(&format!(
+                "    {{\"shards\": {}, \"makespan_s\": {}, \"busy_s\": {}, \
+                 \"throughput_rps\": {}, \"mean_sojourn_s\": {}, \
+                 \"p99_sojourn_s\": {}, \"mean_queue_wait_s\": {}, \"stolen\": {}}}{}\n",
+                r.shards,
+                r.makespan_s,
+                r.busy_s,
+                r.throughput_rps,
+                r.mean_sojourn_s,
+                r.p99_sojourn_s,
+                r.mean_queue_wait_s,
+                r.stolen,
+                if i + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        json.push_str("  ],\n");
+        json.push_str(&format!(
+            "  \"qos\": {{\"requests_per_class\": {per_class}, \
+             \"interactive_p99_s\": {p99_i}, \"batch_p99_s\": {p99_b}, \
+             \"deadline_hit_rate\": {}, \"denied\": {}}}\n",
+            qos.deadline_hit_rate(),
+            qos.denied()
+        ));
+        json.push_str("}\n");
+        std::fs::write(&path, json).expect("write POAS_BENCH_JSON summary");
+        println!("wrote {path}");
+    }
 }

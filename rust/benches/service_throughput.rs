@@ -21,6 +21,10 @@ use poas::service::{PlanCache, QueuePolicy, Server, ServerOptions};
 use poas::workload::GemmSize;
 
 fn main() {
+    // CI's bench-smoke gate sets POAS_BENCH_SMOKE=1: fewer timing
+    // iterations and a shorter stream, same questions.
+    let smoke = std::env::var("POAS_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    let (cold_iters, hit_iters, stream_len) = if smoke { (8, 80, 16) } else { (30, 300, 40) };
     let cfg = presets::mach2();
     let pipeline = Pipeline::for_simulated_machine(&cfg, 0);
     let model = pipeline.model.clone();
@@ -43,12 +47,12 @@ fn main() {
             },
         ),
     ] {
-        let t_cold = time_median(30, || {
+        let t_cold = time_median(cold_iters, || {
             build_plan(&model, size, &rules, &opts).unwrap();
         });
         let mut cache = PlanCache::new(8);
         cache.get_or_build(&model, size, &rules, &opts).unwrap(); // warm it
-        let t_hit = time_median(300, || {
+        let t_hit = time_median(hit_iters, || {
             cache.get_or_build(&model, size, &rules, &opts).unwrap();
         });
         let speedup = t_cold / t_hit;
@@ -70,7 +74,7 @@ fn main() {
         }
     );
 
-    // ---- 2. A mixed 40-request stream under each serving mode.
+    // ---- 2. A mixed request stream under each serving mode.
     let mut mix: Vec<(GemmSize, u32)> = Vec::new();
     let shapes = [
         GemmSize::square(16_000),
@@ -78,7 +82,7 @@ fn main() {
         GemmSize::new(12_000, 20_000, 16_000),
         GemmSize::square(30_000),
     ];
-    for i in 0..40u64 {
+    for i in 0..stream_len as u64 {
         if i % 4 == 3 {
             mix.push((GemmSize::square(280 + 16 * (i % 8)), 2)); // standalone band
         } else {
@@ -87,7 +91,7 @@ fn main() {
     }
 
     let mut table = Table::new(
-        "40-request mixed stream on mach2 (seed 0, 2 reps each)",
+        &format!("{stream_len}-request mixed stream on mach2 (seed 0, 2 reps each)"),
         &[
             "policy",
             "bypass",

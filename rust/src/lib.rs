@@ -52,8 +52,12 @@
 //!   shortest-predicted-job-first, with a standalone bypass that
 //!   co-schedules small jobs on an idle device) and memoizes
 //!   Optimize-phase output in a [`service::PlanCache`] keyed by
-//!   `(shape, model epoch)` so repeated shapes skip the MILP solve. The
-//!   single-machine [`service::Server`] is a 1-shard cluster.
+//!   `(shape, model epoch)` so repeated shapes skip the MILP solve.
+//!   Tenants submit under QoS tiers ([`service::QosClass`]) drained by
+//!   a weighted fair pick, and SLO-bound requests face deadline-aware
+//!   admission (reject or down-class, [`service::DeadlinePolicy`])
+//!   backed by the deadline-constrained LP. The single-machine
+//!   [`service::Server`] is a 1-shard cluster.
 //! * [`workload`], [`config`], [`metrics`], [`report`] — Table 3 inputs,
 //!   machine descriptions, statistics and table/figure rendering.
 //!

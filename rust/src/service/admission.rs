@@ -6,6 +6,16 @@
 //! service prediction are recorded on the [`super::QueuedRequest`] so
 //! queue policies and the routing front-end never re-run the optimizer.
 //!
+//! Since the QoS tiers landed the gate is also the **deadline
+//! feasibility oracle**: a deadline-bound co-executable request is
+//! probed with the deadline-constrained LP already built for the energy
+//! objective ([`crate::optimize::EnergyProblem`] with unit power
+//! figures — same constraint rows, `T <= deadline` included), so "can
+//! this machine meet the SLO at all?" is answered by the same
+//! formulation that plans deadline-bound energy runs. The *queueing*
+//! side of the sojourn prediction stays with the cluster front-end,
+//! which already computes per-shard backlogs for routing.
+//!
 //! The gate's own LP solve is as cacheable as the plan solve, so
 //! verdicts are memoized by `(shape, epoch)` in a **bounded LRU**: a
 //! lookup refreshes its entry's recency and eviction removes the least
@@ -14,14 +24,22 @@
 //! discard it). A model refresh (dynamic-scheduler replan on any shard)
 //! bumps the epoch, which retires every memoized verdict at once.
 
+use super::cache::LruMap;
+use crate::optimize::energy::{DevicePower, EnergyProblem};
+use crate::optimize::problem::BusModel;
+use crate::optimize::SplitSolution;
 use crate::predict::PerfModel;
 use crate::schedule::suitability::{recommend, Recommendation};
 use crate::workload::GemmSize;
-use std::collections::{HashMap, VecDeque};
 
 /// One memoized gate verdict: (co-execute?, best single device,
 /// predicted seconds per repetition under the verdict).
 pub type GateVerdict = (bool, usize, f64);
+
+/// Key of a memoized deadline-feasibility probe: shape, the per-rep
+/// budget's bit pattern (deadlines are continuous, but SLO streams
+/// reuse a handful of values), and the model epoch.
+type DeadlineKey = (GemmSize, u64, u64);
 
 /// The admission component: suitability gate + bounded-LRU memo.
 #[derive(Debug, Clone)]
@@ -32,14 +50,20 @@ pub struct Admission {
     epoch: u64,
     min_gain: f64,
     overhead_s: f64,
-    memo: HashMap<(GemmSize, u64), GateVerdict>,
-    /// Recency order: front = least recently used, back = most.
-    recency: VecDeque<(GemmSize, u64)>,
-    capacity: usize,
+    /// Gate-verdict memo (bounded, touch-on-hit LRU).
+    memo: LruMap<(GemmSize, u64), GateVerdict>,
+    /// Deadline-feasibility memo: `(shape, per-rep deadline bits,
+    /// epoch)` → can any split meet it? Same bounded-LRU discipline as
+    /// the gate memo, so an SLO-bound stream over a stable menu never
+    /// re-solves the deadline LP per arrival.
+    deadline_memo: LruMap<DeadlineKey, bool>,
     /// Gate lookups answered from the memo.
     pub hits: u64,
     /// Gate lookups that had to solve.
     pub misses: u64,
+    /// Deadline-feasibility probes that had to solve the LP (memo
+    /// misses of the deadline memo).
+    pub deadline_lp_solves: u64,
 }
 
 impl Admission {
@@ -52,11 +76,11 @@ impl Admission {
             epoch: 0,
             min_gain,
             overhead_s,
-            memo: HashMap::new(),
-            recency: VecDeque::new(),
-            capacity: capacity.max(1),
+            memo: LruMap::new(capacity),
+            deadline_memo: LruMap::new(capacity),
             hits: 0,
             misses: 0,
+            deadline_lp_solves: 0,
         }
     }
 
@@ -84,10 +108,9 @@ impl Admission {
     /// predicted **total** service seconds for all `reps`).
     pub fn admit(&mut self, size: GemmSize, reps: u32) -> (bool, usize, f64) {
         let key = (size, self.epoch);
-        let (co_execute, device, t_rep) = match self.memo.get(&key) {
+        let (co_execute, device, t_rep) = match self.memo.get_touch(&key) {
             Some(&hit) => {
                 self.hits += 1;
-                self.touch(key);
                 hit
             }
             None => {
@@ -102,11 +125,71 @@ impl Admission {
                         device, t_single, ..
                     } => (false, device, t_single),
                 };
-                self.insert(key, fresh);
+                self.memo.insert(key, fresh);
                 fresh
             }
         };
         (co_execute, device, t_rep * reps.max(1) as f64)
+    }
+
+    /// Solve the deadline-constrained split for `size`: the energy
+    /// formulation with unit active power and zero idle power, so the
+    /// objective degenerates to "least active device-seconds meeting
+    /// `T <= deadline_per_rep`". `Err` means no split of this machine
+    /// can meet the per-repetition budget — the SLO is infeasible even
+    /// on an empty queue.
+    pub fn deadline_plan(
+        &self,
+        size: GemmSize,
+        deadline_per_rep: f64,
+    ) -> crate::error::Result<(SplitSolution, f64)> {
+        let devices = self.model.model_inputs();
+        let unit = DevicePower {
+            active_w: 1.0,
+            idle_w: 0.0,
+        };
+        let power = vec![unit; devices.len()];
+        EnergyProblem {
+            devices,
+            power,
+            size,
+            bus: BusModel::SharedPriority,
+            deadline_s: Some(deadline_per_rep),
+        }
+        .solve()
+    }
+
+    /// Machine-level SLO feasibility for an already-gated request: can
+    /// this machine finish `reps` repetitions within `deadline_s`
+    /// *ignoring queueing*? Co-executable requests are probed with the
+    /// deadline-constrained LP ([`Admission::deadline_plan`]), memoized
+    /// by `(shape, per-rep budget, epoch)` so a steady SLO stream never
+    /// re-solves per arrival; standalone-bound requests simply compare
+    /// their predicted service time. Queueing is the front-end's half
+    /// of the verdict (it owns the per-shard backlogs).
+    pub fn deadline_feasible(
+        &mut self,
+        co_execute: bool,
+        predicted_s: f64,
+        size: GemmSize,
+        reps: u32,
+        deadline_s: f64,
+    ) -> bool {
+        if deadline_s <= 0.0 {
+            return false;
+        }
+        if !co_execute {
+            return predicted_s <= deadline_s;
+        }
+        let per_rep = deadline_s / reps.max(1) as f64;
+        let key = (size, per_rep.to_bits(), self.epoch);
+        if let Some(&feasible) = self.deadline_memo.get_touch(&key) {
+            return feasible;
+        }
+        self.deadline_lp_solves += 1;
+        let feasible = self.deadline_plan(size, per_rep).is_ok();
+        self.deadline_memo.insert(key, feasible);
+        feasible
     }
 
     /// The model changed (a shard's dynamic scheduler re-planned):
@@ -118,28 +201,7 @@ impl Admission {
         // the epoch); drop them eagerly rather than waiting for LRU
         // pressure.
         self.memo.clear();
-        self.recency.clear();
-    }
-
-    fn touch(&mut self, key: (GemmSize, u64)) {
-        if let Some(pos) = self.recency.iter().position(|k| *k == key) {
-            self.recency.remove(pos);
-            self.recency.push_back(key);
-        }
-    }
-
-    fn insert(&mut self, key: (GemmSize, u64), verdict: GateVerdict) {
-        if self.memo.insert(key, verdict).is_none() {
-            self.recency.push_back(key);
-        }
-        while self.memo.len() > self.capacity {
-            match self.recency.pop_front() {
-                Some(old) => {
-                    self.memo.remove(&old);
-                }
-                None => break,
-            }
-        }
+        self.deadline_memo.clear();
     }
 }
 
@@ -221,6 +283,60 @@ mod tests {
         assert!(gate.is_empty());
         gate.admit(GemmSize::square(20_000), 1);
         assert_eq!(gate.misses, 2, "post-refresh lookup re-solves");
+    }
+
+    #[test]
+    fn deadline_plan_reuses_the_energy_lp_constraint() {
+        let gate = Admission::new(model(), 1.05, 20e-6, 64);
+        let size = GemmSize::square(20_000);
+        // A generous per-rep budget is feasible and respects the cap.
+        let (sol, _) = gate.deadline_plan(size, 10.0).unwrap();
+        assert!(sol.t_pred <= 10.0 + 1e-9);
+        // An impossible budget is infeasible.
+        assert!(gate.deadline_plan(size, 1e-9).is_err());
+    }
+
+    #[test]
+    fn deadline_feasibility_splits_by_verdict() {
+        let mut gate = Admission::new(model(), 1.05, 20e-6, 64);
+        let big = GemmSize::square(20_000);
+        let (co, _, predicted_s) = gate.admit(big, 2);
+        assert!(co);
+        // Far above the predicted service time: feasible.
+        assert!(gate.deadline_feasible(co, predicted_s, big, 2, predicted_s * 10.0));
+        // Tighter than any split can run: infeasible.
+        assert!(!gate.deadline_feasible(co, predicted_s, big, 2, predicted_s * 1e-4));
+        // Standalone verdicts compare the predicted service time.
+        let small = GemmSize::square(256);
+        let (co_s, _, t_small) = gate.admit(small, 2);
+        assert!(!co_s);
+        assert!(gate.deadline_feasible(co_s, t_small, small, 2, t_small * 2.0));
+        assert!(!gate.deadline_feasible(co_s, t_small, small, 2, t_small * 0.5));
+        // Nonsense budgets are never feasible.
+        assert!(!gate.deadline_feasible(co, predicted_s, big, 2, 0.0));
+    }
+
+    #[test]
+    fn deadline_probes_are_memoized_per_shape_and_budget() {
+        let mut gate = Admission::new(model(), 1.05, 20e-6, 64);
+        let big = GemmSize::square(20_000);
+        let (co, _, predicted_s) = gate.admit(big, 2);
+        let budget = predicted_s * 10.0;
+        assert!(gate.deadline_feasible(co, predicted_s, big, 2, budget));
+        assert_eq!(gate.deadline_lp_solves, 1);
+        // Same (shape, budget): answered from the memo, no new solve.
+        for _ in 0..5 {
+            assert!(gate.deadline_feasible(co, predicted_s, big, 2, budget));
+        }
+        assert_eq!(gate.deadline_lp_solves, 1);
+        // A different budget is a different probe.
+        assert!(!gate.deadline_feasible(co, predicted_s, big, 2, budget * 1e-5));
+        assert_eq!(gate.deadline_lp_solves, 2);
+        // A model refresh retires the memo: the next probe re-solves.
+        let m = gate.model().clone();
+        gate.refresh(m);
+        assert!(gate.deadline_feasible(co, predicted_s, big, 2, budget));
+        assert_eq!(gate.deadline_lp_solves, 3);
     }
 
     #[test]

@@ -11,12 +11,18 @@
 //! * [`PoissonArrivals`] — exponential inter-arrival times at a
 //!   configurable offered rate, shapes drawn from a menu, all through
 //!   [`crate::rng::Rng`] so a seed fully determines the trace;
+//! * [`MixedArrivals`] — a per-class Poisson **mix**: each
+//!   [`QosClass`] tier gets its own independent rate, shape menu and
+//!   optional SLO, and the superposed streams merge into one trace (the
+//!   superposition of Poisson processes is Poisson, so the mix stays a
+//!   faithful arrival model);
 //! * [`fixed_trace`] — hand-written `(at, size, reps)` triples for
 //!   replayable regression scenarios.
 //!
 //! Under a trace, `ServiceReport::mean_queue_wait` and the sojourn
 //! percentiles finally measure load, not just ordering.
 
+use super::qos::QosClass;
 use crate::rng::Rng;
 use crate::workload::GemmSize;
 
@@ -29,6 +35,10 @@ pub struct Arrival {
     pub size: GemmSize,
     /// Repetitions requested.
     pub reps: u32,
+    /// Service tier the request is submitted under.
+    pub class: QosClass,
+    /// Optional sojourn SLO carried by the request.
+    pub deadline_s: Option<f64>,
 }
 
 /// A deterministic Poisson arrival process over a shape menu.
@@ -60,31 +70,125 @@ impl PoissonArrivals {
         }
     }
 
-    /// Materialize the first `n` arrivals of the process.
+    /// Materialize the first `n` arrivals of the process (all
+    /// [`QosClass::Standard`], no SLO — the PR 2 behaviour).
     pub fn trace(&self, n: usize) -> Vec<Arrival> {
         // Domain-separate from the machine seeds so a cluster seeded
         // like its trace still draws independent streams.
-        let mut rng = Rng::new(self.seed ^ 0xA55A_D1CE_0F0F_7EA1);
-        let mut t = 0.0_f64;
-        (0..n)
-            .map(|_| {
-                // Inverse-CDF exponential gap; 1 - u in (0, 1] avoids
-                // ln(0).
-                let u = rng.uniform();
-                t += -(1.0 - u).ln() / self.rate_rps;
-                let (size, reps) = self.menu[rng.below(self.menu.len() as u64) as usize];
-                Arrival { at: t, size, reps }
-            })
-            .collect()
+        poisson_stream(
+            self.seed ^ 0xA55A_D1CE_0F0F_7EA1,
+            self.rate_rps,
+            &self.menu,
+            QosClass::Standard,
+            None,
+            n,
+        )
     }
 }
 
-/// A replayable fixed trace from `(at, size, reps)` triples. Arrivals
-/// are sorted by time so out-of-order authorship is harmless.
+/// Draw `n` Poisson arrivals for one class stream.
+fn poisson_stream(
+    seed: u64,
+    rate_rps: f64,
+    menu: &[(GemmSize, u32)],
+    class: QosClass,
+    deadline_s: Option<f64>,
+    n: usize,
+) -> Vec<Arrival> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0_f64;
+    (0..n)
+        .map(|_| {
+            // Inverse-CDF exponential gap; 1 - u in (0, 1] avoids ln(0).
+            let u = rng.uniform();
+            t += -(1.0 - u).ln() / rate_rps;
+            let (size, reps) = menu[rng.below(menu.len() as u64) as usize];
+            Arrival {
+                at: t,
+                size,
+                reps,
+                class,
+                deadline_s,
+            }
+        })
+        .collect()
+}
+
+/// One tier's offered load inside a [`MixedArrivals`] mix.
+#[derive(Debug, Clone)]
+pub struct ClassLoad {
+    /// The tier this stream submits under.
+    pub class: QosClass,
+    /// Offered load of the tier, requests per virtual second.
+    pub rate_rps: f64,
+    /// Shapes the tier submits, drawn uniformly.
+    pub menu: Vec<(GemmSize, u32)>,
+    /// SLO attached to every request of this stream (`None` = no
+    /// deadline).
+    pub deadline_s: Option<f64>,
+}
+
+/// A deterministic per-class Poisson mix: independent Poisson streams,
+/// one per [`ClassLoad`], superposed into a single time-ordered trace.
+/// Each stream draws from its own domain-separated PRNG, so the same
+/// `(seed, loads)` always yields the same trace and adding a class
+/// never perturbs another class's draws.
+#[derive(Debug, Clone)]
+pub struct MixedArrivals {
+    /// The per-tier streams.
+    pub loads: Vec<ClassLoad>,
+    /// Trace seed.
+    pub seed: u64,
+}
+
+impl MixedArrivals {
+    /// A mix over `loads` seeded by `seed`.
+    ///
+    /// Every load needs a positive rate and a non-empty menu.
+    pub fn new(loads: Vec<ClassLoad>, seed: u64) -> Self {
+        assert!(!loads.is_empty(), "mix needs at least one class load");
+        for l in &loads {
+            assert!(l.rate_rps > 0.0, "{} arrival rate must be positive", l.class);
+            assert!(!l.menu.is_empty(), "{} menu must be non-empty", l.class);
+        }
+        MixedArrivals { loads, seed }
+    }
+
+    /// Materialize the first `per_class` arrivals of **each** stream
+    /// and merge them by arrival time (stable: simultaneous arrivals
+    /// keep load order, so replays are exact).
+    pub fn trace(&self, per_class: usize) -> Vec<Arrival> {
+        let mut merged: Vec<Arrival> = Vec::with_capacity(per_class * self.loads.len());
+        for (i, l) in self.loads.iter().enumerate() {
+            merged.extend(poisson_stream(
+                self.seed
+                    ^ 0xA55A_D1CE_0F0F_7EA1
+                    ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                l.rate_rps,
+                &l.menu,
+                l.class,
+                l.deadline_s,
+                per_class,
+            ));
+        }
+        merged.sort_by(|a, b| a.at.total_cmp(&b.at));
+        merged
+    }
+}
+
+/// A replayable fixed trace from `(at, size, reps)` triples (all
+/// [`QosClass::Standard`], no SLO). Arrivals are sorted by time so
+/// out-of-order authorship is harmless.
 pub fn fixed_trace(items: &[(f64, GemmSize, u32)]) -> Vec<Arrival> {
     let mut trace: Vec<Arrival> = items
         .iter()
-        .map(|&(at, size, reps)| Arrival { at, size, reps })
+        .map(|&(at, size, reps)| Arrival {
+            at,
+            size,
+            reps,
+            class: QosClass::Standard,
+            deadline_s: None,
+        })
         .collect();
     trace.sort_by(|a, b| a.at.total_cmp(&b.at));
     trace
@@ -143,6 +247,74 @@ mod tests {
                 "menu entry {size:?} never drawn"
             );
         }
+    }
+
+    #[test]
+    fn mixed_trace_merges_streams_in_time_order() {
+        let mix = MixedArrivals::new(
+            vec![
+                ClassLoad {
+                    class: QosClass::Interactive,
+                    rate_rps: 2.0,
+                    menu: vec![(GemmSize::square(16_000), 2)],
+                    deadline_s: Some(3.0),
+                },
+                ClassLoad {
+                    class: QosClass::Batch,
+                    rate_rps: 1.0,
+                    menu: vec![(GemmSize::square(20_000), 2)],
+                    deadline_s: None,
+                },
+            ],
+            5,
+        );
+        let t = mix.trace(32);
+        assert_eq!(t.len(), 64);
+        let mut prev = 0.0;
+        for a in &t {
+            assert!(a.at >= prev, "trace not time-ordered");
+            prev = a.at;
+            match a.class {
+                QosClass::Interactive => {
+                    assert_eq!(a.deadline_s, Some(3.0));
+                    assert_eq!(a.size, GemmSize::square(16_000));
+                }
+                QosClass::Batch => {
+                    assert_eq!(a.deadline_s, None);
+                    assert_eq!(a.size, GemmSize::square(20_000));
+                }
+                QosClass::Standard => panic!("no standard load in this mix"),
+            }
+        }
+        // Deterministic, and each class drew its full allotment.
+        assert_eq!(t, mix.trace(32));
+        for class in [QosClass::Interactive, QosClass::Batch] {
+            assert_eq!(t.iter().filter(|a| a.class == class).count(), 32);
+        }
+    }
+
+    #[test]
+    fn mixed_streams_are_independent_per_class() {
+        // Dropping one load must not change the other's draws.
+        let interactive = ClassLoad {
+            class: QosClass::Interactive,
+            rate_rps: 2.0,
+            menu: vec![(GemmSize::square(16_000), 2)],
+            deadline_s: None,
+        };
+        let batch = ClassLoad {
+            class: QosClass::Batch,
+            rate_rps: 1.0,
+            menu: vec![(GemmSize::square(20_000), 2)],
+            deadline_s: None,
+        };
+        let both = MixedArrivals::new(vec![interactive.clone(), batch], 9).trace(16);
+        let alone = MixedArrivals::new(vec![interactive], 9).trace(16);
+        let from_mix: Vec<Arrival> = both
+            .into_iter()
+            .filter(|a| a.class == QosClass::Interactive)
+            .collect();
+        assert_eq!(from_mix, alone);
     }
 
     #[test]

@@ -17,18 +17,94 @@ use crate::error::Result;
 use crate::predict::PerfModel;
 use crate::schedule::{build_plan, PlanOptions, SchedulePlan};
 use crate::workload::GemmSize;
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// A bounded map with touch-on-hit LRU eviction — the storage
+/// primitive behind [`PlanCache`] and the [`super::Admission`] memos,
+/// so the recency/eviction logic lives in exactly one place.
+///
+/// Recency is tracked by a monotonically increasing touch stamp per
+/// entry, so the hit path ([`LruMap::get_touch`]) is O(1); the O(len)
+/// scan for the least recently used entry happens only on an eviction.
+/// Stamps are unique, so eviction order is deterministic even though
+/// the underlying `HashMap` iteration order is not.
+#[derive(Debug, Clone)]
+pub struct LruMap<K, V> {
+    /// Value plus the stamp of its most recent touch (hit or insert).
+    map: HashMap<K, (V, u64)>,
+    stamp: u64,
+    capacity: usize,
+}
+
+impl<K: Hash + Eq + Copy, V> LruMap<K, V> {
+    /// An empty map holding at most `capacity` entries (min 1).
+    pub fn new(capacity: usize) -> Self {
+        LruMap {
+            map: HashMap::new(),
+            stamp: 0,
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is stored.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Non-touching lookup (diagnostics/tests).
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.map.get(key).map(|(v, _)| v)
+    }
+
+    /// Lookup that refreshes the entry's recency on a hit. O(1).
+    pub fn get_touch(&mut self, key: &K) -> Option<&V> {
+        self.stamp += 1;
+        let stamp = self.stamp;
+        match self.map.get_mut(key) {
+            Some(entry) => {
+                entry.1 = stamp;
+                Some(&entry.0)
+            }
+            None => None,
+        }
+    }
+
+    /// Insert an entry, evicting the least recently used past capacity.
+    pub fn insert(&mut self, key: K, value: V) {
+        self.stamp += 1;
+        self.map.insert(key, (value, self.stamp));
+        while self.map.len() > self.capacity {
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| *k);
+            match oldest {
+                Some(k) => {
+                    self.map.remove(&k);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Drop every entry (capacity is retained).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
 
 /// A bounded LRU memo of Optimize/Adapt output.
 #[derive(Debug, Clone)]
 pub struct PlanCache {
-    map: HashMap<(GemmSize, u64), SchedulePlan>,
-    /// Recency order for LRU eviction: front = least recently used. A
-    /// hit refreshes its entry, so a hot shape survives streams of cold
-    /// ones.
-    order: VecDeque<(GemmSize, u64)>,
+    store: LruMap<(GemmSize, u64), SchedulePlan>,
     epoch: u64,
-    capacity: usize,
     /// Lookups answered from the cache.
     pub hits: u64,
     /// Lookups that had to solve.
@@ -41,10 +117,8 @@ impl PlanCache {
     /// New cache holding at most `capacity` plans (min 1).
     pub fn new(capacity: usize) -> Self {
         PlanCache {
-            map: HashMap::new(),
-            order: VecDeque::new(),
+            store: LruMap::new(capacity),
             epoch: 0,
-            capacity: capacity.max(1),
             hits: 0,
             misses: 0,
             invalidations: 0,
@@ -58,12 +132,12 @@ impl PlanCache {
 
     /// Number of cached plans.
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.store.len()
     }
 
     /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.store.is_empty()
     }
 
     /// Fraction of lookups answered from the cache.
@@ -81,14 +155,13 @@ impl PlanCache {
     /// — which alone retires every existing key — and drops the entries.
     pub fn bump_epoch(&mut self) {
         self.epoch += 1;
-        self.map.clear();
-        self.order.clear();
+        self.store.clear();
         self.invalidations += 1;
     }
 
     /// Non-counting lookup at the current epoch (diagnostics/tests).
     pub fn peek(&self, size: GemmSize) -> Option<&SchedulePlan> {
-        self.map.get(&(size, self.epoch))
+        self.store.peek(&(size, self.epoch))
     }
 
     /// Return the cached plan for `size` at the current epoch, or solve
@@ -102,37 +175,15 @@ impl PlanCache {
         opts: &PlanOptions,
     ) -> Result<(SchedulePlan, bool)> {
         let key = (size, self.epoch);
-        if let Some(plan) = self.map.get(&key) {
+        if let Some(plan) = self.store.get_touch(&key) {
             let plan = plan.clone();
             self.hits += 1;
-            self.touch(key);
             return Ok((plan, true));
         }
         self.misses += 1;
         let plan = build_plan(model, size, rules, opts)?;
-        self.insert(key, plan.clone());
+        self.store.insert(key, plan.clone());
         Ok((plan, false))
-    }
-
-    fn touch(&mut self, key: (GemmSize, u64)) {
-        if let Some(pos) = self.order.iter().position(|k| *k == key) {
-            self.order.remove(pos);
-            self.order.push_back(key);
-        }
-    }
-
-    fn insert(&mut self, key: (GemmSize, u64), plan: SchedulePlan) {
-        if self.map.insert(key, plan).is_none() {
-            self.order.push_back(key);
-        }
-        while self.map.len() > self.capacity {
-            match self.order.pop_front() {
-                Some(old) => {
-                    self.map.remove(&old);
-                }
-                None => break,
-            }
-        }
     }
 }
 
@@ -224,6 +275,24 @@ mod tests {
         }
         assert!(cache.peek(hot).is_some(), "hot entry was evicted");
         assert_eq!(cache.misses, 4, "hot shape solved exactly once");
+    }
+
+    #[test]
+    fn lru_map_touch_and_eviction() {
+        let mut m: LruMap<u64, &'static str> = LruMap::new(2);
+        assert!(m.is_empty());
+        m.insert(1, "a");
+        m.insert(2, "b");
+        assert_eq!(m.get_touch(&1), Some(&"a")); // 1 is now most recent
+        m.insert(3, "c"); // evicts 2, the least recently used
+        assert_eq!(m.len(), 2);
+        assert!(m.peek(&2).is_none());
+        assert_eq!(m.peek(&1), Some(&"a"));
+        assert_eq!(m.get_touch(&4), None);
+        m.clear();
+        assert!(m.is_empty());
+        m.insert(5, "d");
+        assert_eq!(m.peek(&5), Some(&"d"), "capacity survives clear");
     }
 
     #[test]

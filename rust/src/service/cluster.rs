@@ -8,17 +8,26 @@
 //!
 //! * **arrival** — a request reaches the front-end (either submitted
 //!   "now" or scheduled by an [`super::arrivals`] trace). It passes the
-//!   [`Admission`] gate once, then routes to the shard with the
-//!   earliest *predicted finish*: `max(shard free time, now) + queued
-//!   backlog + this request`, all from admission-time predictions, so
-//!   routing never re-runs the optimizer;
+//!   [`Admission`] gate once; a deadline-bound request then faces
+//!   **deadline admission**: the machine-level feasibility probe (the
+//!   deadline-constrained LP reused from the energy formulation) plus
+//!   the queueing-aware sojourn prediction at the best shard. An SLO
+//!   predicted infeasible is turned away as [`ExecMode::Denied`] or
+//!   demoted to [`QosClass::Batch`] with the SLO stripped, per
+//!   [`super::DeadlinePolicy`]. Accepted requests route to the shard
+//!   with the earliest **class-weighted predicted finish**:
+//!   `max(shard free time, now) + class-discounted backlog + this
+//!   request`, all from admission-time predictions, so routing never
+//!   re-runs the optimizer;
 //! * **wake** — scheduled behind every arrival at the same timestamp so
 //!   that simultaneous arrivals are all admitted (and visible to queue
 //!   policies and the bypass scan) before any of them starts a machine;
 //! * **shard-free** — a machine finished its dispatch. It drains its
-//!   own queue first and, when empty, **steals** the next request (under
-//!   the victim's own policy) from the most backlogged shard, so one
-//!   hot queue cannot starve an idle machine.
+//!   own queue first and, when empty, **steals** the next request
+//!   (under the victim's own weighted pick, so high classes move first)
+//!   from the shard with the largest *class-weighted* backlog — a
+//!   minute of queued interactive work makes a hotter victim than a
+//!   minute of batch.
 //!
 //! Ties in virtual time break by submission sequence number, which
 //! keeps every replay byte-identical for a fixed seed. A one-shard
@@ -27,8 +36,9 @@
 
 use super::admission::Admission;
 use super::arrivals::Arrival;
+use super::qos::{DeadlinePolicy, QosClass};
 use super::queue::QueuedRequest;
-use super::request::{GemmRequest, ServedRequest, ServiceReport};
+use super::request::{ExecMode, GemmRequest, ServedRequest, ServiceReport};
 use super::server::ServerOptions;
 use super::shard::ExecutorShard;
 use crate::config::MachineConfig;
@@ -128,6 +138,11 @@ impl Cluster {
     /// pipeline; `pipelines` must be non-empty).
     pub fn from_pipelines(pipelines: Vec<Pipeline>, mut opts: ClusterOptions) -> Self {
         assert!(!pipelines.is_empty(), "cluster needs at least one shard");
+        assert!(
+            opts.shard.deadline_slack > 0.0 && opts.shard.deadline_slack <= 1.0,
+            "deadline_slack must be in (0, 1], got {}",
+            opts.shard.deadline_slack
+        );
         // One source of truth for the shard count.
         opts.shards = pipelines.len();
         let shards: Vec<ExecutorShard> = pipelines
@@ -190,11 +205,27 @@ impl Cluster {
         self.served.len()
     }
 
-    /// Submit a request arriving at the current virtual time; returns
-    /// its id.
+    /// Submit a [`QosClass::Standard`] request with no SLO arriving at
+    /// the current virtual time; returns its id.
     pub fn submit(&mut self, size: GemmSize, reps: u32) -> u64 {
         let id = self.next_id;
-        self.submit_request(GemmRequest { id, size, reps });
+        self.submit_request(GemmRequest::new(id, size, reps));
+        id
+    }
+
+    /// Submit a request under `class` with an optional sojourn SLO,
+    /// arriving at the current virtual time; returns its id.
+    pub fn submit_qos(
+        &mut self,
+        size: GemmSize,
+        reps: u32,
+        class: QosClass,
+        deadline_s: Option<f64>,
+    ) -> u64 {
+        let id = self.next_id;
+        let mut req = GemmRequest::new(id, size, reps).with_class(class);
+        req.deadline_s = deadline_s;
+        self.submit_request(req);
         id
     }
 
@@ -222,6 +253,8 @@ impl Cluster {
                     id,
                     size: a.size,
                     reps: a.reps,
+                    class: a.class,
+                    deadline_s: a.deadline_s,
                 });
                 id
             })
@@ -235,22 +268,26 @@ impl Cluster {
     }
 
     /// Route an admitted request to the shard with the earliest
-    /// predicted finish (ties: lowest shard index).
-    fn route(&self, now: f64, predicted_s: f64) -> usize {
+    /// class-weighted predicted finish (ties: lowest shard index).
+    /// Returns `(shard, predicted finish)` so deadline admission can
+    /// reuse the sojourn estimate without recomputing it.
+    fn route(&self, now: f64, predicted_s: f64, class: QosClass) -> (usize, f64) {
         let mut best = 0usize;
         let mut best_t = f64::INFINITY;
         for (i, sh) in self.shards.iter().enumerate() {
-            let t = sh.predicted_finish(now, predicted_s);
+            let t = sh.predicted_finish_for(now, predicted_s, class);
             if t < best_t {
                 best_t = t;
                 best = i;
             }
         }
-        best
+        (best, best_t)
     }
 
-    /// The most backlogged shard other than `thief` (ties: lowest
-    /// index), if any has queued work to give up.
+    /// The shard with the largest class-weighted backlog other than
+    /// `thief` (ties: lowest index), if any has queued work to give up.
+    /// Weighting by class makes stealing relieve the queue whose
+    /// waiting work is most latency-sensitive, not merely the longest.
     fn steal_victim(&self, thief: usize) -> Option<usize> {
         let mut best: Option<usize> = None;
         for (i, sh) in self.shards.iter().enumerate() {
@@ -260,13 +297,35 @@ impl Cluster {
             match best {
                 None => best = Some(i),
                 Some(b) => {
-                    if sh.pending() > self.shards[b].pending() {
+                    if sh.weighted_backlog() > self.shards[b].weighted_backlog() {
                         best = Some(i);
                     }
                 }
             }
         }
         best
+    }
+
+    /// Record an admission denial: the request completes immediately as
+    /// [`ExecMode::Denied`], consuming no machine time on any shard.
+    /// Shares are empty — a denial never touched a machine, and shards
+    /// of a heterogeneous cluster disagree on the device count anyway.
+    fn deny(&mut self, now: f64, req: GemmRequest, predicted_s: f64) {
+        self.served.push(ServedRequest {
+            id: req.id,
+            size: req.size,
+            reps: req.reps,
+            class: req.class,
+            deadline_s: req.deadline_s,
+            mode: ExecMode::Denied,
+            arrival: now,
+            start: now,
+            finish: now,
+            exec_s: 0.0,
+            predicted_s,
+            cache_hit: false,
+            shares: Vec::new(),
+        });
     }
 
     fn dispatch_on(&mut self, s: usize, at: f64) {
@@ -291,10 +350,43 @@ impl Cluster {
         };
         self.clock = self.clock.max(ev.time);
         match ev.kind {
-            EventKind::Arrival(req) => {
+            EventKind::Arrival(mut req) => {
                 let (co_execute, best_device, predicted_s) =
                     self.admission.admit(req.size, req.reps);
-                let target = self.route(ev.time, predicted_s);
+                let (mut target, finish) = self.route(ev.time, predicted_s, req.class);
+                // Deadline admission: an SLO predicted infeasible —
+                // machine-level (the deadline-constrained LP / service
+                // prediction) or queueing-level (the routed shard's
+                // predicted sojourn, within the slack guard band) — is
+                // turned away (or demoted, per policy) *now*, before it
+                // consumes queue space it cannot use.
+                if let Some(deadline_s) = req.deadline_s {
+                    let feasible = self.admission.deadline_feasible(
+                        co_execute,
+                        predicted_s,
+                        req.size,
+                        req.reps,
+                        deadline_s,
+                    ) && finish - ev.time
+                        <= self.opts.shard.deadline_slack * deadline_s;
+                    if !feasible {
+                        match self.opts.shard.deadline_policy {
+                            DeadlinePolicy::Reject => {
+                                self.deny(ev.time, req, predicted_s);
+                                return true;
+                            }
+                            DeadlinePolicy::Downclass => {
+                                // Best-effort from here on: the SLO is
+                                // given up, not silently missed — and
+                                // the route is recomputed for the new
+                                // class.
+                                req.class = QosClass::Batch;
+                                req.deadline_s = None;
+                                target = self.route(ev.time, predicted_s, req.class).0;
+                            }
+                        }
+                    }
+                }
                 self.shards[target].enqueue(QueuedRequest {
                     req,
                     arrival: ev.time,
@@ -467,6 +559,84 @@ mod tests {
         ids.sort_unstable();
         let expect: Vec<u64> = (0..19).collect();
         assert_eq!(ids, expect);
+    }
+
+    #[test]
+    fn impossible_slo_is_denied_under_reject_policy() {
+        let mut c = Cluster::new(&presets::mach2(), 0, ClusterOptions::default());
+        // A deadline tighter than any split can run: denied at arrival.
+        let doomed = c.submit_qos(big(), 3, QosClass::Interactive, Some(1e-9));
+        // A deadline-free neighbour is untouched.
+        let ok = c.submit(big(), 3);
+        let report = c.run_to_completion();
+        assert_eq!(report.served.len(), 2);
+        let r = report.request(doomed).unwrap();
+        assert_eq!(r.mode, ExecMode::Denied);
+        assert_eq!(r.exec_s, 0.0);
+        assert_eq!(r.finish, r.arrival, "denial consumes no time");
+        assert_eq!(report.denied(), 1);
+        assert_eq!(report.request(ok).unwrap().mode, ExecMode::CoExec);
+        // The denial never reached a shard.
+        assert_eq!(report.shards[0].dispatches, 1);
+        // Aggregates describe only the executed request.
+        assert_eq!(report.latencies().len(), 1);
+    }
+
+    #[test]
+    fn impossible_slo_is_demoted_under_downclass_policy() {
+        let opts = ClusterOptions {
+            shard: ServerOptions {
+                deadline_policy: crate::service::DeadlinePolicy::Downclass,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut c = Cluster::new(&presets::mach2(), 0, opts);
+        let demoted = c.submit_qos(big(), 3, QosClass::Interactive, Some(1e-9));
+        let report = c.run_to_completion();
+        let r = report.request(demoted).unwrap();
+        // Served — as best-effort batch with the SLO stripped.
+        assert_eq!(r.mode, ExecMode::CoExec);
+        assert_eq!(r.class, QosClass::Batch);
+        assert_eq!(r.deadline_s, None);
+        assert_eq!(report.denied(), 0);
+        assert_eq!(r.deadline_met(), None, "stripped SLO is not a miss");
+    }
+
+    #[test]
+    fn generous_slo_is_admitted_and_met() {
+        let mut c = Cluster::new(&presets::mach2(), 3, ClusterOptions::default());
+        let id = c.submit_qos(big(), 2, QosClass::Interactive, Some(1e6));
+        let report = c.run_to_completion();
+        let r = report.request(id).unwrap();
+        assert_eq!(r.mode, ExecMode::CoExec);
+        assert_eq!(r.class, QosClass::Interactive);
+        assert_eq!(r.deadline_met(), Some(true));
+        assert!((report.deadline_hit_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(report.shards[0].served_by_class, [1, 0, 0]);
+    }
+
+    #[test]
+    fn weighted_drain_prefers_interactive_over_batch_backlog() {
+        // One shard, a simultaneous burst: 2 batch + 1 interactive.
+        // The interactive request must start before the second batch
+        // request despite arriving last.
+        let mut c = Cluster::new(&presets::mach2(), 4, ClusterOptions::default());
+        let b0 = c.submit_qos(big(), 2, QosClass::Batch, None);
+        let b1 = c.submit_qos(big(), 2, QosClass::Batch, None);
+        let i0 = c.submit_qos(big(), 2, QosClass::Interactive, None);
+        let report = c.run_to_completion();
+        let start = |id| report.request(id).unwrap().start;
+        // The weighted pick credits interactive 4:1, so it dispatches
+        // first even though both batch requests were admitted ahead of
+        // it in the same burst.
+        assert!(start(i0) < start(b0), "interactive jumped the batch queue");
+        assert!(start(i0) < start(b1));
+        assert_eq!(
+            report.shards[0].served_by_class,
+            [1, 0, 2],
+            "per-class attribution"
+        );
     }
 
     #[test]

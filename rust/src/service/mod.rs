@@ -7,10 +7,16 @@
 //! module is that deployment shape, layered so each concern lives in
 //! exactly one component:
 //!
+//! * [`qos`] — the QoS vocabulary: [`QosClass`] service tiers
+//!   (Interactive / Standard / Batch with 4 : 2 : 1 scheduling weights)
+//!   attached to every [`GemmRequest`], plus the [`DeadlinePolicy`]
+//!   deciding whether an infeasible SLO is rejected or down-classed;
 //! * [`admission`] — the [`Admission`] front-end gate: every request
 //!   passes the §6 suitability detector once; verdicts and service
 //!   predictions are memoized in a bounded LRU keyed by
-//!   `(shape, model epoch)`;
+//!   `(shape, model epoch)`; deadline-bound requests are additionally
+//!   probed with the deadline-constrained LP reused from the energy
+//!   formulation;
 //! * [`shard`] — the [`ExecutorShard`]: one machine's simulator,
 //!   installation-time profile, [`PlanCache`], local queue and optional
 //!   dynamic-scheduler loop; dispatch (including the standalone bypass
@@ -19,13 +25,16 @@
 //!   panicking;
 //! * [`cluster`] — the [`Cluster`] front-end: N shards driven by an
 //!   event-driven virtual-time loop (a binary heap of arrival / wake /
-//!   shard-free events), routing each admitted request to the shard
-//!   with the earliest predicted finish and letting idle shards steal
-//!   queued work from backlogged ones;
+//!   shard-free events), deadline-admitting SLO-bound arrivals against
+//!   the predicted sojourn, routing each accepted request to the shard
+//!   with the earliest class-weighted predicted finish, and letting
+//!   idle shards steal queued work from the shard with the largest
+//!   class-weighted backlog;
 //! * [`arrivals`] — online arrival processes: deterministic Poisson
-//!   traces ([`PoissonArrivals`]) and replayable fixed traces, so
-//!   reports measure queueing delay and p50/p99 sojourn time under
-//!   offered load instead of draining a batch;
+//!   traces ([`PoissonArrivals`]), per-class Poisson mixes
+//!   ([`MixedArrivals`]) and replayable fixed traces, so reports
+//!   measure queueing delay and p50/p99 sojourn time — per tier —
+//!   under offered load instead of draining a batch;
 //! * [`server`] — the classic single-machine [`Server`], now a thin
 //!   wrapper over a 1-shard cluster (same submit / run-to-completion /
 //!   report surface; the old public fields and `step()` gave way to
@@ -34,11 +43,15 @@
 //! * [`cache`] — the [`PlanCache`]: Optimize-phase output memoized by
 //!   `(shape, model epoch)` so repeated shapes skip the MILP solve; a
 //!   model refresh bumps the epoch and invalidates everything;
-//! * [`queue`] — FIFO and shortest-predicted-job-first orderings, the
-//!   backlog accounting the router reads, and the scan used by the
-//!   standalone bypass;
+//! * [`queue`] — per-class lanes drained by a smooth weighted
+//!   round-robin (no non-empty class ever starves), FIFO and
+//!   shortest-predicted-job-first orderings within a lane, the backlog
+//!   accounting the router reads, and the scan used by the standalone
+//!   bypass;
 //! * [`request`] — request/outcome records, per-shard stats and the
-//!   per-session latency/throughput report.
+//!   per-session latency/throughput report, now with per-class
+//!   breakdowns (p50/p99 sojourn, deadline-hit rate, denials) via
+//!   [`request::ClassBreakdown`].
 //!
 //! See `rust/tests/service_scenarios.rs` for the deterministic scenario
 //! harness (batch and Poisson), `rust/benches/service_throughput.rs`
@@ -49,16 +62,18 @@ pub mod admission;
 pub mod arrivals;
 pub mod cache;
 pub mod cluster;
+pub mod qos;
 pub mod queue;
 pub mod request;
 pub mod server;
 pub mod shard;
 
 pub use admission::Admission;
-pub use arrivals::{fixed_trace, Arrival, PoissonArrivals};
-pub use cache::PlanCache;
+pub use arrivals::{fixed_trace, Arrival, ClassLoad, MixedArrivals, PoissonArrivals};
+pub use cache::{LruMap, PlanCache};
 pub use cluster::{Cluster, ClusterOptions};
+pub use qos::{DeadlinePolicy, QosClass};
 pub use queue::{QueuePolicy, QueuedRequest, RequestQueue};
-pub use request::{ExecMode, GemmRequest, ServedRequest, ServiceReport, ShardStats};
+pub use request::{ClassBreakdown, ExecMode, GemmRequest, ServedRequest, ServiceReport, ShardStats};
 pub use server::{Server, ServerOptions};
 pub use shard::{DispatchResult, ExecutorShard};

@@ -1,0 +1,124 @@
+//! QoS tiers: priority classes, weights, and deadline-admission policy.
+//!
+//! The sharded [`super::Cluster`] of PR 2 treated every tenant
+//! identically; this module introduces the vocabulary for SLO-bound
+//! serving — the deployment shape co-scheduling frameworks (HTS, Aupy
+//! et al.) target:
+//!
+//! * [`QosClass`] — three service tiers attached to every
+//!   [`super::GemmRequest`]. Each class carries a scheduling **weight**;
+//!   per-class queues inside [`super::ExecutorShard`] are drained by a
+//!   smooth weighted round-robin pick (see
+//!   [`super::RequestQueue::pop_next`]), so a heavy class can consume at
+//!   most its weight share while a non-empty light class is never
+//!   starved;
+//! * [`DeadlinePolicy`] — what the front-end does with a request whose
+//!   per-request SLO ([`super::GemmRequest::deadline_s`]) is predicted
+//!   infeasible at arrival: turn it away ([`DeadlinePolicy::Reject`],
+//!   recorded as [`super::ExecMode::Denied`]) or strip the SLO and
+//!   demote it to [`QosClass::Batch`] ([`DeadlinePolicy::Downclass`]).
+//!
+//! The weights are deliberately small integers: the weighted pick and
+//! the class-aware routing estimate both stay exactly replayable.
+
+use std::fmt;
+
+/// Service tier of a request. Order encodes priority: lower discriminant
+/// = more latency-sensitive = larger scheduling weight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum QosClass {
+    /// Latency-sensitive traffic (weight 4): user-facing requests, the
+    /// tier SLO deadlines usually ride on.
+    Interactive,
+    /// The default tier (weight 2): everything that is neither
+    /// interactive nor throughput filler.
+    #[default]
+    Standard,
+    /// Throughput traffic (weight 1): background jobs that tolerate
+    /// queueing and absorb leftover capacity.
+    Batch,
+}
+
+/// Number of QoS classes (array dimension for per-class state).
+pub const NUM_CLASSES: usize = 3;
+
+impl QosClass {
+    /// All classes, priority order (index = [`QosClass::index`]).
+    pub const ALL: [QosClass; NUM_CLASSES] =
+        [QosClass::Interactive, QosClass::Standard, QosClass::Batch];
+
+    /// Dense index for per-class arrays (0 = most latency-sensitive).
+    pub fn index(self) -> usize {
+        match self {
+            QosClass::Interactive => 0,
+            QosClass::Standard => 1,
+            QosClass::Batch => 2,
+        }
+    }
+
+    /// Scheduling weight: the share ratio the weighted-deficit pick
+    /// enforces between backlogged classes (4 : 2 : 1).
+    pub fn weight(self) -> u64 {
+        match self {
+            QosClass::Interactive => 4,
+            QosClass::Standard => 2,
+            QosClass::Batch => 1,
+        }
+    }
+
+    /// Short label for tables and summaries.
+    pub fn label(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Standard => "standard",
+            QosClass::Batch => "batch",
+        }
+    }
+}
+
+impl fmt::Display for QosClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// What deadline-aware admission does with a request whose SLO is
+/// predicted infeasible at arrival time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeadlinePolicy {
+    /// Turn the request away: it completes immediately as
+    /// [`super::ExecMode::Denied`], consuming no machine time. The
+    /// tenant gets a fast, honest "no" instead of a guaranteed miss.
+    #[default]
+    Reject,
+    /// Keep the request but strip its SLO and demote it to
+    /// [`QosClass::Batch`]: it is served on a best-effort basis behind
+    /// the tiers that still have guarantees.
+    Downclass,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_are_dense_and_match_all_order() {
+        for (i, c) in QosClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+        }
+    }
+
+    #[test]
+    fn weights_encode_priority_order() {
+        assert!(QosClass::Interactive.weight() > QosClass::Standard.weight());
+        assert!(QosClass::Standard.weight() > QosClass::Batch.weight());
+        assert_eq!(QosClass::default(), QosClass::Standard);
+    }
+
+    #[test]
+    fn labels_render() {
+        assert_eq!(QosClass::Interactive.to_string(), "interactive");
+        assert_eq!(QosClass::Batch.to_string(), "batch");
+        assert_eq!(DeadlinePolicy::default(), DeadlinePolicy::Reject);
+    }
+}

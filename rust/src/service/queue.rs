@@ -1,9 +1,22 @@
-//! Pluggable request-queue policies.
+//! Pluggable request-queue policies with per-class weighted fairness.
 //!
 //! The server admits requests into a [`RequestQueue`] and drains it one
-//! dispatch at a time. Two orderings are provided (queue-level
-//! co-scheduling in the spirit of Aupy et al., "Co-Scheduling Algorithms
-//! for High-Throughput Workload Execution"):
+//! dispatch at a time. Since the QoS tiers landed, the queue is really
+//! **three queues** — one per [`QosClass`] — drained by a smooth
+//! weighted round-robin pick (the classic deficit/credit scheme used by
+//! fair packet schedulers): every pop credits each non-empty class with
+//! its weight, serves the class holding the most credit, and debits the
+//! winner by the total outstanding weight. Two invariants follow:
+//!
+//! * **weighted shares** — while several classes stay backlogged, class
+//!   `c` receives `weight(c) / Σ weight` of the dispatches;
+//! * **no starvation** — a non-empty class is served at least once
+//!   every `Σ weight / weight(c)` pops (rounded up), no matter how
+//!   heavy the other classes are.
+//!
+//! *Within* a class the original orderings still apply (queue-level
+//! co-scheduling in the spirit of Aupy et al., "Co-Scheduling
+//! Algorithms for High-Throughput Workload Execution"):
 //!
 //! * [`QueuePolicy::Fifo`] — arrival order (the baseline a naive
 //!   service would use);
@@ -13,12 +26,15 @@
 //!   shared machine, and POAS gives us the predictions for free.
 //!
 //! Requests are annotated once at admission ([`QueuedRequest`]) so
-//! policy decisions never re-run the optimizer.
+//! policy decisions never re-run the optimizer. Everything here is
+//! integer-credit arithmetic over a fixed class order, so replays are
+//! byte-identical.
 
+use super::qos::{QosClass, NUM_CLASSES};
 use super::request::GemmRequest;
 use std::collections::VecDeque;
 
-/// Dispatch-order policy.
+/// Dispatch-order policy within a class.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum QueuePolicy {
     /// First in, first out.
@@ -30,7 +46,7 @@ pub enum QueuePolicy {
 /// A pending request plus the admission-time gate/prediction results.
 #[derive(Debug, Clone)]
 pub struct QueuedRequest {
-    /// The request itself.
+    /// The request itself (carries its [`QosClass`] and optional SLO).
     pub req: GemmRequest,
     /// Virtual time it entered the queue.
     pub arrival: f64,
@@ -42,11 +58,16 @@ pub struct QueuedRequest {
     pub predicted_s: f64,
 }
 
-/// The pending-request queue.
+/// The pending-request queue: one lane per [`QosClass`], drained by a
+/// smooth weighted round-robin over the non-empty lanes.
 #[derive(Debug, Clone)]
 pub struct RequestQueue {
     policy: QueuePolicy,
-    pending: VecDeque<QueuedRequest>,
+    lanes: [VecDeque<QueuedRequest>; NUM_CLASSES],
+    /// Weighted-deficit state: credit accumulated by each class. Only
+    /// non-empty classes accrue; an emptied class resets to zero so a
+    /// long-idle tier cannot bank an unbounded burst.
+    credit: [i64; NUM_CLASSES],
 }
 
 impl RequestQueue {
@@ -54,76 +75,160 @@ impl RequestQueue {
     pub fn new(policy: QueuePolicy) -> Self {
         RequestQueue {
             policy,
-            pending: VecDeque::new(),
+            lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            credit: [0; NUM_CLASSES],
         }
     }
 
-    /// The active policy.
+    /// The active (within-class) policy.
     pub fn policy(&self) -> QueuePolicy {
         self.policy
     }
 
-    /// Number of pending requests.
+    /// Number of pending requests across all classes.
     pub fn len(&self) -> usize {
-        self.pending.len()
+        self.lanes.iter().map(|l| l.len()).sum()
     }
 
     /// True when nothing is pending.
     pub fn is_empty(&self) -> bool {
-        self.pending.is_empty()
+        self.lanes.iter().all(|l| l.is_empty())
+    }
+
+    /// Pending requests of one class.
+    pub fn class_len(&self, class: QosClass) -> usize {
+        self.lanes[class.index()].len()
     }
 
     /// Sum of the admission-time service predictions of everything
     /// pending — the backlog a routing front-end adds to a shard's
     /// predicted finish.
     pub fn predicted_backlog(&self) -> f64 {
-        self.pending.iter().map(|q| q.predicted_s).sum()
+        self.iter().map(|q| q.predicted_s).sum()
     }
 
-    /// Iterate the pending requests in queue order (diagnostics).
+    /// Predicted backlog of one class's lane.
+    pub fn class_backlog(&self, class: QosClass) -> f64 {
+        self.lanes[class.index()].iter().map(|q| q.predicted_s).sum()
+    }
+
+    /// Class-weighted backlog: each lane's predicted seconds scaled by
+    /// its scheduling weight. The cluster's work stealing treats the
+    /// shard with the largest value as the most urgent victim — a
+    /// minute of queued interactive work outweighs a minute of batch.
+    pub fn weighted_backlog(&self) -> f64 {
+        QosClass::ALL
+            .iter()
+            .map(|&c| self.class_backlog(c) * c.weight() as f64)
+            .sum()
+    }
+
+    /// Backlog a new arrival of `class` (with predicted service
+    /// `service_s`) should expect to wait behind on this queue, under
+    /// the weighted drain. Equal- and higher-priority lanes count at
+    /// face value — they drain ahead of the arrival. A lower-priority
+    /// lane `k` only interleaves while the arrival's own lane is
+    /// draining, at most `weight(k)/weight(c)` seconds per second of
+    /// that drain — so its contribution is capped by that ratio times
+    /// the arrival's own-lane work (itself included), **not** its full
+    /// backlog. Without the cap, a deep batch queue would spuriously
+    /// fail deadline admission for interactive traffic it cannot
+    /// actually delay.
+    pub fn backlog_ahead_of(&self, class: QosClass, service_s: f64) -> f64 {
+        let w_c = class.weight() as f64;
+        // The arrival's own lane's work to drain, itself included.
+        let own = self.class_backlog(class) + service_s;
+        QosClass::ALL
+            .iter()
+            .map(|&k| {
+                let lane = self.class_backlog(k);
+                if k.weight() >= class.weight() {
+                    lane
+                } else {
+                    lane.min(k.weight() as f64 / w_c * own)
+                }
+            })
+            .sum()
+    }
+
+    /// Iterate the pending requests (class-major: interactive lane
+    /// first, queue order within a lane) — diagnostics and the bypass
+    /// scan.
     pub fn iter(&self) -> impl Iterator<Item = &QueuedRequest> {
-        self.pending.iter()
+        self.lanes.iter().flat_map(|l| l.iter())
     }
 
-    /// Admit a request at the tail.
+    /// Admit a request at the tail of its class lane.
     pub fn push(&mut self, q: QueuedRequest) {
-        self.pending.push_back(q);
+        self.lanes[q.req.class.index()].push_back(q);
     }
 
-    /// Put a request back at the head (used when a bypass pairing has to
-    /// be undone).
+    /// Put a request back at the head of its class lane (used when a
+    /// bypass pairing has to be undone).
     pub fn push_front(&mut self, q: QueuedRequest) {
-        self.pending.push_front(q);
+        self.lanes[q.req.class.index()].push_front(q);
     }
 
-    /// Remove and return the next request to dispatch under the policy.
+    /// Remove and return the next request to dispatch: smooth weighted
+    /// round-robin across non-empty classes, then the within-class
+    /// policy. Deterministic — ties in credit break toward the
+    /// higher-priority class.
     pub fn pop_next(&mut self) -> Option<QueuedRequest> {
+        let mut total: i64 = 0;
+        let mut best: Option<usize> = None;
+        for c in QosClass::ALL {
+            let i = c.index();
+            if self.lanes[i].is_empty() {
+                // An empty lane accrues nothing and banks nothing.
+                self.credit[i] = 0;
+                continue;
+            }
+            self.credit[i] += c.weight() as i64;
+            total += c.weight() as i64;
+            // Strict `>` keeps ties on the earlier (higher-priority)
+            // class.
+            let wins = match best {
+                None => true,
+                Some(b) => self.credit[i] > self.credit[b],
+            };
+            if wins {
+                best = Some(i);
+            }
+        }
+        let lane = best?;
+        self.credit[lane] -= total;
+        self.pop_from_lane(lane)
+    }
+
+    fn pop_from_lane(&mut self, lane: usize) -> Option<QueuedRequest> {
         match self.policy {
-            QueuePolicy::Fifo => self.pending.pop_front(),
+            QueuePolicy::Fifo => self.lanes[lane].pop_front(),
             QueuePolicy::Spjf => {
-                let idx = self
-                    .pending
+                let idx = self.lanes[lane]
                     .iter()
                     .enumerate()
                     .min_by(|(ia, a), (ib, b)| {
-                        a.predicted_s
-                            .total_cmp(&b.predicted_s)
-                            .then(ia.cmp(ib))
+                        a.predicted_s.total_cmp(&b.predicted_s).then(ia.cmp(ib))
                     })
                     .map(|(i, _)| i)?;
-                self.pending.remove(idx)
+                self.lanes[lane].remove(idx)
             }
         }
     }
 
-    /// Remove and return the first pending request (queue order)
-    /// matching `pred` — the bypass scan.
+    /// Remove and return the first pending request (class-major scan
+    /// order) matching `pred` — the bypass scan. Higher-priority riders
+    /// are found first.
     pub fn take_first<F: FnMut(&QueuedRequest) -> bool>(
         &mut self,
         mut pred: F,
     ) -> Option<QueuedRequest> {
-        let idx = self.pending.iter().position(|q| pred(q))?;
-        self.pending.remove(idx)
+        for lane in self.lanes.iter_mut() {
+            if let Some(idx) = lane.iter().position(|q| pred(q)) {
+                return lane.remove(idx);
+            }
+        }
+        None
     }
 }
 
@@ -133,17 +238,21 @@ mod tests {
     use crate::workload::GemmSize;
 
     fn q(id: u64, predicted_s: f64, co: bool) -> QueuedRequest {
+        q_class(id, predicted_s, co, QosClass::Standard)
+    }
+
+    fn q_class(id: u64, predicted_s: f64, co: bool, class: QosClass) -> QueuedRequest {
         QueuedRequest {
-            req: GemmRequest {
-                id,
-                size: GemmSize::square(1000),
-                reps: 1,
-            },
+            req: GemmRequest::new(id, GemmSize::square(1000), 1).with_class(class),
             arrival: id as f64,
             co_execute: co,
             best_device: 2,
             predicted_s,
         }
+    }
+
+    fn drain(rq: &mut RequestQueue) -> Vec<u64> {
+        std::iter::from_fn(|| rq.pop_next().map(|x| x.req.id)).collect()
     }
 
     #[test]
@@ -152,8 +261,7 @@ mod tests {
         for (id, t) in [(0, 5.0), (1, 1.0), (2, 3.0)] {
             rq.push(q(id, t, true));
         }
-        let order: Vec<u64> = std::iter::from_fn(|| rq.pop_next().map(|x| x.req.id)).collect();
-        assert_eq!(order, vec![0, 1, 2]);
+        assert_eq!(drain(&mut rq), vec![0, 1, 2]);
         assert!(rq.is_empty());
     }
 
@@ -163,9 +271,8 @@ mod tests {
         for (id, t) in [(0, 5.0), (1, 1.0), (2, 3.0), (3, 1.0)] {
             rq.push(q(id, t, true));
         }
-        let order: Vec<u64> = std::iter::from_fn(|| rq.pop_next().map(|x| x.req.id)).collect();
         // Ties (ids 1 and 3 at 1.0s) break by queue position.
-        assert_eq!(order, vec![1, 3, 2, 0]);
+        assert_eq!(drain(&mut rq), vec![1, 3, 2, 0]);
     }
 
     #[test]
@@ -179,6 +286,15 @@ mod tests {
         assert_eq!(rq.len(), 2);
         assert!(rq.take_first(|c| c.predicted_s > 100.0).is_none());
         assert_eq!(rq.len(), 2);
+    }
+
+    #[test]
+    fn take_first_prefers_higher_priority_lanes() {
+        let mut rq = RequestQueue::new(QueuePolicy::Fifo);
+        rq.push(q_class(0, 1.0, false, QosClass::Batch));
+        rq.push(q_class(1, 1.0, false, QosClass::Interactive));
+        let got = rq.take_first(|c| !c.co_execute).unwrap();
+        assert_eq!(got.req.id, 1, "interactive lane scanned first");
     }
 
     #[test]
@@ -202,5 +318,83 @@ mod tests {
         rq.push_front(taken);
         assert_eq!(rq.pop_next().unwrap().req.id, 0);
         assert_eq!(rq.pop_next().unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn weighted_pick_shares_match_weights() {
+        // 4:2:1 weights over 70 pops with every class kept non-empty:
+        // exactly 40/20/10 dispatches.
+        let mut rq = RequestQueue::new(QueuePolicy::Fifo);
+        let mut counts = [0usize; NUM_CLASSES];
+        let mut id = 0u64;
+        for _ in 0..70 {
+            for c in QosClass::ALL {
+                // Keep every lane at depth >= 2 so none empties.
+                while rq.class_len(c) < 2 {
+                    rq.push(q_class(id, 1.0, true, c));
+                    id += 1;
+                }
+            }
+            let got = rq.pop_next().unwrap();
+            counts[got.req.class.index()] += 1;
+        }
+        assert_eq!(counts, [40, 20, 10], "shares must match 4:2:1 weights");
+    }
+
+    #[test]
+    fn heavy_class_cannot_starve_light_one() {
+        // A deep interactive lane and a single batch request: the batch
+        // request must dispatch within ceil(7/1) = 7 pops.
+        let mut rq = RequestQueue::new(QueuePolicy::Fifo);
+        for i in 0..40 {
+            rq.push(q_class(i, 1.0, true, QosClass::Interactive));
+        }
+        rq.push(q_class(99, 1.0, true, QosClass::Batch));
+        let order = drain(&mut rq);
+        let pos = order.iter().position(|&id| id == 99).unwrap();
+        assert!(pos < 7, "batch request starved: position {pos}");
+    }
+
+    #[test]
+    fn single_class_degenerates_to_plain_policy() {
+        // All-Standard input must behave exactly like the pre-QoS queue.
+        let mut rq = RequestQueue::new(QueuePolicy::Spjf);
+        for (id, t) in [(0, 5.0), (1, 1.0), (2, 3.0)] {
+            rq.push(q(id, t, true));
+        }
+        assert_eq!(drain(&mut rq), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn class_backlogs_and_weighted_views() {
+        let mut rq = RequestQueue::new(QueuePolicy::Fifo);
+        rq.push(q_class(0, 2.0, true, QosClass::Interactive));
+        rq.push(q_class(1, 3.0, true, QosClass::Batch));
+        assert!((rq.class_backlog(QosClass::Interactive) - 2.0).abs() < 1e-12);
+        assert!((rq.class_backlog(QosClass::Batch) - 3.0).abs() < 1e-12);
+        assert!((rq.class_backlog(QosClass::Standard)).abs() < 1e-12);
+        // Weighted: 2*4 + 3*1 = 11.
+        assert!((rq.weighted_backlog() - 11.0).abs() < 1e-12);
+        // A 1s interactive arrival drains 2+1 = 3s of its own lane and
+        // lets the batch lane interleave at most 3/4s of its 3s; a
+        // batch arrival waits behind everything at face value.
+        assert!((rq.backlog_ahead_of(QosClass::Interactive, 1.0) - (2.0 + 0.75)).abs() < 1e-12);
+        assert!((rq.backlog_ahead_of(QosClass::Batch, 1.0) - 5.0).abs() < 1e-12);
+        assert_eq!(rq.class_len(QosClass::Interactive), 1);
+    }
+
+    #[test]
+    fn deep_batch_backlog_cannot_stall_an_interactive_prediction() {
+        // 100s of queued batch work: a 1s interactive arrival with an
+        // empty own lane is only delayed by the interleave the weighted
+        // drain actually allows (1/4 of its own 1s drain), not by the
+        // whole batch queue.
+        let mut rq = RequestQueue::new(QueuePolicy::Fifo);
+        for i in 0..100 {
+            rq.push(q_class(i, 1.0, true, QosClass::Batch));
+        }
+        assert!((rq.backlog_ahead_of(QosClass::Interactive, 1.0) - 0.25).abs() < 1e-12);
+        // The same arrival submitted as batch waits behind the lane.
+        assert!((rq.backlog_ahead_of(QosClass::Batch, 1.0) - 100.0).abs() < 1e-12);
     }
 }

@@ -6,13 +6,15 @@
 //! whole session aggregates into a [`ServiceReport`] with the latency /
 //! throughput statistics the ROADMAP's production framing calls for.
 
+use super::qos::QosClass;
 use crate::metrics::{mean, percentile};
 use crate::report::Table;
 use crate::workload::GemmSize;
 use std::fmt;
 
-/// One tenant request: `C = A @ B` of `size`, repeated `reps` times.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// One tenant request: `C = A @ B` of `size`, repeated `reps` times,
+/// submitted under a QoS tier and (optionally) a completion SLO.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GemmRequest {
     /// Caller-visible id (unique per server).
     pub id: u64,
@@ -20,6 +22,38 @@ pub struct GemmRequest {
     pub size: GemmSize,
     /// Repetitions (the paper's workloads repeat each input, §5.1.2).
     pub reps: u32,
+    /// Service tier (weighted fairness between tenants).
+    pub class: QosClass,
+    /// Optional sojourn SLO, seconds from arrival to completion.
+    /// Deadline-aware admission turns the request away (or demotes it,
+    /// per [`super::DeadlinePolicy`]) when the predicted sojourn misses
+    /// this budget.
+    pub deadline_s: Option<f64>,
+}
+
+impl GemmRequest {
+    /// A [`QosClass::Standard`] request with no SLO — the PR 2 shape.
+    pub fn new(id: u64, size: GemmSize, reps: u32) -> Self {
+        GemmRequest {
+            id,
+            size,
+            reps,
+            class: QosClass::Standard,
+            deadline_s: None,
+        }
+    }
+
+    /// Same request under `class`.
+    pub fn with_class(mut self, class: QosClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Same request with a sojourn SLO of `deadline_s` seconds.
+    pub fn with_deadline(mut self, deadline_s: f64) -> Self {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
 }
 
 /// How a request was executed.
@@ -42,6 +76,11 @@ pub enum ExecMode {
     /// Planning was infeasible: the request completes unserved (zero
     /// execution time, empty shares) instead of killing the shard.
     Rejected,
+    /// Deadline-aware admission turned the request away at arrival: its
+    /// SLO was predicted infeasible under
+    /// [`super::DeadlinePolicy::Reject`]. Completes unserved with zero
+    /// execution time, never reaching a shard.
+    Denied,
 }
 
 impl ExecMode {
@@ -62,6 +101,18 @@ impl ExecMode {
     pub fn is_rejected(&self) -> bool {
         matches!(self, ExecMode::Rejected)
     }
+
+    /// True when admission denied the request's SLO at arrival.
+    pub fn is_denied(&self) -> bool {
+        matches!(self, ExecMode::Denied)
+    }
+
+    /// True for any mode that consumed no machine time (planning
+    /// rejection or admission denial) — excluded from the latency and
+    /// throughput aggregates.
+    pub fn is_unserved(&self) -> bool {
+        self.is_rejected() || self.is_denied()
+    }
 }
 
 impl fmt::Display for ExecMode {
@@ -71,6 +122,7 @@ impl fmt::Display for ExecMode {
             ExecMode::Standalone { device } => write!(f, "standalone(d{device})"),
             ExecMode::BypassStandalone { device } => write!(f, "bypass(d{device})"),
             ExecMode::Rejected => write!(f, "rejected"),
+            ExecMode::Denied => write!(f, "denied"),
         }
     }
 }
@@ -84,6 +136,12 @@ pub struct ServedRequest {
     pub size: GemmSize,
     /// Repetitions executed.
     pub reps: u32,
+    /// Service tier the request was ultimately served under (differs
+    /// from the submitted tier when admission down-classed it).
+    pub class: QosClass,
+    /// The sojourn SLO the request was served with (`None` once
+    /// admission strips it under [`super::DeadlinePolicy::Downclass`]).
+    pub deadline_s: Option<f64>,
     /// Execution mode chosen by the gate / bypass.
     pub mode: ExecMode,
     /// Virtual time the request entered the queue.
@@ -112,6 +170,14 @@ impl ServedRequest {
     pub fn queue_wait(&self) -> f64 {
         self.start - self.arrival
     }
+
+    /// SLO verdict: `Some(true)` when a deadline-bound request finished
+    /// within its budget, `Some(false)` when it missed (or was turned
+    /// away), `None` when it carried no deadline.
+    pub fn deadline_met(&self) -> Option<bool> {
+        self.deadline_s
+            .map(|d| !self.mode.is_unserved() && self.latency() <= d + 1e-9)
+    }
 }
 
 /// Per-shard accounting inside a [`ServiceReport`] (one entry per
@@ -126,6 +192,34 @@ pub struct ShardStats {
     pub last_finish: f64,
     /// Requests this shard stole from a busier shard's queue.
     pub stolen: usize,
+    /// Requests this shard completed per QoS class
+    /// ([`QosClass::index`] order; bypass riders count toward their own
+    /// class, so the sum can exceed `dispatches`).
+    pub served_by_class: [usize; super::qos::NUM_CLASSES],
+}
+
+/// Per-class aggregate view of a session (see
+/// [`ServiceReport::class_breakdown`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassBreakdown {
+    /// The class described.
+    pub class: QosClass,
+    /// Requests of this class that actually executed.
+    pub executed: usize,
+    /// Median sojourn (arrival to completion) of the class.
+    pub p50_sojourn: f64,
+    /// Tail sojourn of the class.
+    pub p99_sojourn: f64,
+    /// Mean queueing delay of the class.
+    pub mean_queue_wait: f64,
+    /// Executed deadline-bound requests that met their SLO.
+    pub deadline_hits: usize,
+    /// Executed requests that carried an SLO.
+    pub deadline_bound: usize,
+    /// Requests of this class denied by admission.
+    pub denied: usize,
+    /// Requests of this class rejected at planning time.
+    pub rejected: usize,
 }
 
 /// Aggregate outcome of a service session.
@@ -154,11 +248,11 @@ pub struct ServiceReport {
 
 impl ServiceReport {
     /// The requests that actually executed (everything but
-    /// [`ExecMode::Rejected`]) — the population the latency/throughput
-    /// aggregates describe, so zero-cost rejections cannot inflate
-    /// them.
+    /// [`ExecMode::Rejected`] and [`ExecMode::Denied`]) — the
+    /// population the latency/throughput aggregates describe, so
+    /// zero-cost rejections and denials cannot inflate them.
     fn executed(&self) -> impl Iterator<Item = &ServedRequest> {
-        self.served.iter().filter(|r| !r.mode.is_rejected())
+        self.served.iter().filter(|r| !r.mode.is_unserved())
     }
 
     /// Per-request latencies (arrival to completion) of executed
@@ -229,15 +323,136 @@ impl ServiceReport {
         self.served.iter().filter(|r| r.mode.is_rejected()).count()
     }
 
+    /// Count of requests denied by deadline-aware admission.
+    pub fn denied(&self) -> usize {
+        self.served.iter().filter(|r| r.mode.is_denied()).count()
+    }
+
+    /// Executed requests served under `class`, record order.
+    pub fn class_latencies(&self, class: QosClass) -> Vec<f64> {
+        self.executed()
+            .filter(|r| r.class == class)
+            .map(|r| r.latency())
+            .collect()
+    }
+
+    /// Sojourn percentile of one class, `p` in [0, 100].
+    pub fn class_latency_percentile(&self, class: QosClass, p: f64) -> f64 {
+        percentile(&self.class_latencies(class), p)
+    }
+
+    /// Aggregate one class's view of the session — executed count,
+    /// p50/p99 sojourn, mean queueing delay, deadline hits, denials and
+    /// rejections (see [`ClassBreakdown`]).
+    pub fn class_breakdown(&self, class: QosClass) -> ClassBreakdown {
+        let lat = self.class_latencies(class);
+        let mut hits = 0usize;
+        let mut bound = 0usize;
+        for r in self.executed().filter(|r| r.class == class) {
+            if let Some(met) = r.deadline_met() {
+                bound += 1;
+                if met {
+                    hits += 1;
+                }
+            }
+        }
+        ClassBreakdown {
+            class,
+            executed: lat.len(),
+            p50_sojourn: percentile(&lat, 50.0),
+            p99_sojourn: percentile(&lat, 99.0),
+            mean_queue_wait: mean(
+                &self
+                    .executed()
+                    .filter(|r| r.class == class)
+                    .map(|r| r.queue_wait())
+                    .collect::<Vec<_>>(),
+            ),
+            deadline_hits: hits,
+            deadline_bound: bound,
+            denied: self
+                .served
+                .iter()
+                .filter(|r| r.class == class && r.mode.is_denied())
+                .count(),
+            rejected: self
+                .served
+                .iter()
+                .filter(|r| r.class == class && r.mode.is_rejected())
+                .count(),
+        }
+    }
+
+    /// Fraction of **accepted** deadline-bound requests that finished
+    /// within their SLO (1.0 when none were accepted: vacuously met).
+    /// Denied requests never consumed capacity and are excluded — the
+    /// point of deadline admission is that this rate stays high for
+    /// everything it lets through.
+    pub fn deadline_hit_rate(&self) -> f64 {
+        let mut hits = 0usize;
+        let mut bound = 0usize;
+        for r in self.executed() {
+            if let Some(met) = r.deadline_met() {
+                bound += 1;
+                if met {
+                    hits += 1;
+                }
+            }
+        }
+        if bound == 0 {
+            1.0
+        } else {
+            hits as f64 / bound as f64
+        }
+    }
+
+    /// Render the per-class breakdown as a table.
+    pub fn class_table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &[
+                "class",
+                "weight",
+                "served",
+                "p50",
+                "p99",
+                "mean wait",
+                "deadline",
+                "denied",
+                "rejected",
+            ],
+        );
+        for class in QosClass::ALL {
+            let b = self.class_breakdown(class);
+            t.row(&[
+                class.to_string(),
+                class.weight().to_string(),
+                b.executed.to_string(),
+                crate::report::secs(b.p50_sojourn),
+                crate::report::secs(b.p99_sojourn),
+                crate::report::secs(b.mean_queue_wait),
+                if b.deadline_bound == 0 {
+                    "-".to_string()
+                } else {
+                    format!("{}/{}", b.deadline_hits, b.deadline_bound)
+                },
+                b.denied.to_string(),
+                b.rejected.to_string(),
+            ]);
+        }
+        t
+    }
+
     /// Render the per-request log as a table.
     pub fn table(&self, title: &str) -> Table {
         let mut t = Table::new(
             title,
-            &["req", "size", "mode", "exec", "completion", "latency", "plan"],
+            &["req", "class", "size", "mode", "exec", "completion", "latency", "plan"],
         );
         for r in &self.served {
             t.row(&[
                 format!("#{:03}", r.id),
+                r.class.to_string(),
                 r.size.to_string(),
                 r.mode.to_string(),
                 crate::report::secs(r.exec_s),
@@ -279,6 +494,8 @@ mod tests {
             id,
             size: GemmSize::square(1000),
             reps: 1,
+            class: QosClass::Standard,
+            deadline_s: None,
             mode,
             arrival,
             start,
@@ -307,6 +524,7 @@ mod tests {
                 busy_s: 3.0,
                 last_finish: 3.0,
                 stolen: 0,
+                served_by_class: [0, 3, 0],
             }],
         }
     }
@@ -344,6 +562,11 @@ mod tests {
             "bypass(d0)"
         );
         assert_eq!(ExecMode::Rejected.to_string(), "rejected");
+        assert_eq!(ExecMode::Denied.to_string(), "denied");
+        assert!(ExecMode::Denied.is_denied());
+        assert!(ExecMode::Denied.is_unserved());
+        assert!(ExecMode::Rejected.is_unserved());
+        assert!(!ExecMode::CoExec.is_unserved());
         assert!(!ExecMode::CoExec.is_standalone());
         assert!(ExecMode::Standalone { device: 1 }.is_standalone());
         assert!(ExecMode::BypassStandalone { device: 0 }.is_bypass());
@@ -361,6 +584,61 @@ mod tests {
         assert!((r.queue_wait_percentile(100.0) - 2.0).abs() < 1e-12);
         assert_eq!(r.rejected(), 0);
         assert_eq!(ServiceReport::default().mean_queue_wait(), 0.0);
+    }
+
+    #[test]
+    fn class_breakdown_and_deadline_accounting() {
+        let mut r = report();
+        // Re-class the three executed requests and add a deadline-bound
+        // pair: one hit, one denied.
+        r.served[0].class = QosClass::Interactive;
+        r.served[0].deadline_s = Some(2.5); // latency 2.0: hit
+        r.served[1].class = QosClass::Batch;
+        let mut denied = served(3, 1.0, 1.0, 1.0, ExecMode::Denied);
+        denied.class = QosClass::Interactive;
+        denied.deadline_s = Some(0.1);
+        denied.exec_s = 0.0;
+        r.served.push(denied);
+
+        assert_eq!(r.denied(), 1);
+        assert_eq!(r.rejected(), 0);
+        // Denied requests never enter the latency aggregates.
+        assert_eq!(r.latencies().len(), 3);
+        assert_eq!(r.class_latencies(QosClass::Interactive), vec![2.0]);
+        assert_eq!(r.class_latencies(QosClass::Batch), vec![3.0]);
+
+        let b = r.class_breakdown(QosClass::Interactive);
+        assert_eq!(b.executed, 1);
+        assert_eq!((b.deadline_hits, b.deadline_bound), (1, 1));
+        assert_eq!(b.denied, 1);
+        assert!((b.p50_sojourn - 2.0).abs() < 1e-12);
+        // Accepted SLO requests all hit: rate 1.0; the denial is not a
+        // miss, it is capacity the admission gate protected.
+        assert!((r.deadline_hit_rate() - 1.0).abs() < 1e-12);
+
+        assert_eq!(r.served[0].deadline_met(), Some(true));
+        assert_eq!(r.served[3].deadline_met(), Some(false));
+        assert_eq!(r.served[1].deadline_met(), None);
+
+        let rendered = r.class_table("classes").render();
+        assert!(rendered.contains("interactive"));
+        assert!(rendered.contains("1/1"));
+    }
+
+    #[test]
+    fn empty_deadline_population_is_vacuously_met() {
+        assert_eq!(report().deadline_hit_rate(), 1.0);
+        assert_eq!(ServiceReport::default().deadline_hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn request_builders_default_to_standard() {
+        let r = GemmRequest::new(7, GemmSize::square(100), 2);
+        assert_eq!(r.class, QosClass::Standard);
+        assert!(r.deadline_s.is_none());
+        let r = r.with_class(QosClass::Interactive).with_deadline(1.5);
+        assert_eq!(r.class, QosClass::Interactive);
+        assert_eq!(r.deadline_s, Some(1.5));
     }
 
     #[test]

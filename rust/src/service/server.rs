@@ -16,6 +16,7 @@
 
 use super::admission::Admission;
 use super::cluster::{Cluster, ClusterOptions};
+use super::qos::DeadlinePolicy;
 use super::queue::QueuePolicy;
 use super::request::{GemmRequest, ServiceReport};
 use super::shard::ExecutorShard;
@@ -46,6 +47,16 @@ pub struct ServerOptions {
     /// Close the loop with the dynamic scheduler: refresh the model from
     /// observed executions and invalidate the plan cache on re-plan.
     pub dynamic: bool,
+    /// What deadline-aware admission does with a request whose SLO is
+    /// predicted infeasible at arrival (requests without a deadline are
+    /// never affected).
+    pub deadline_policy: DeadlinePolicy,
+    /// Admission headroom for SLO requests, in (0, 1]: accept only when
+    /// the predicted sojourn fits inside `deadline_slack * deadline_s`.
+    /// The guard band absorbs prediction error (and the bounded
+    /// interleaving the weighted drain allows), so what admission lets
+    /// through actually lands inside the SLO instead of grazing it.
+    pub deadline_slack: f64,
 }
 
 impl Default for ServerOptions {
@@ -58,6 +69,8 @@ impl Default for ServerOptions {
             cache_capacity: 64,
             gate_capacity: 1024,
             dynamic: false,
+            deadline_policy: DeadlinePolicy::Reject,
+            deadline_slack: 0.9,
         }
     }
 }

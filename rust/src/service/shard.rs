@@ -15,6 +15,7 @@
 //! instead of propagating a panic out of the serving loop.
 
 use super::cache::PlanCache;
+use super::qos::{QosClass, NUM_CLASSES};
 use super::queue::{QueuedRequest, RequestQueue};
 use super::request::{ExecMode, ServedRequest, ShardStats};
 use super::server::ServerOptions;
@@ -62,6 +63,8 @@ pub struct ExecutorShard {
     busy_s: f64,
     dispatches: usize,
     stolen: usize,
+    /// Requests completed per QoS class (riders included).
+    served_by_class: [usize; NUM_CLASSES],
 }
 
 impl ExecutorShard {
@@ -90,6 +93,7 @@ impl ExecutorShard {
             busy_s: 0.0,
             dispatches: 0,
             stolen: 0,
+            served_by_class: [0; NUM_CLASSES],
             dynsched,
             opts: opts.clone(),
             model,
@@ -114,9 +118,30 @@ impl ExecutorShard {
     /// Predicted completion of a hypothetical request with service
     /// prediction `predicted_s` routed to this shard at time `now`:
     /// current execution + queued backlog + the request itself. The
-    /// cluster routes each arrival to the shard minimizing this.
+    /// class-blind estimate (every queued second counts at face value).
     pub fn predicted_finish(&self, now: f64, predicted_s: f64) -> f64 {
         self.free_at.max(now) + self.backlog_s() + predicted_s
+    }
+
+    /// Class-weighted predicted completion: like
+    /// [`ExecutorShard::predicted_finish`], but the queued backlog is
+    /// discounted to the interleave the weighted drain actually allows
+    /// ahead of a `class` arrival (see
+    /// [`RequestQueue::backlog_ahead_of`]). The cluster routes (and
+    /// deadline-admits) each arrival by the shard minimizing this.
+    pub fn predicted_finish_for(&self, now: f64, predicted_s: f64, class: QosClass) -> f64 {
+        self.free_at.max(now) + self.queue.backlog_ahead_of(class, predicted_s) + predicted_s
+    }
+
+    /// Predicted backlog of one class's lane on this shard.
+    pub fn class_backlog(&self, class: QosClass) -> f64 {
+        self.queue.class_backlog(class)
+    }
+
+    /// Class-weighted backlog of this shard's queue — the work-stealing
+    /// urgency signal (see [`RequestQueue::weighted_backlog`]).
+    pub fn weighted_backlog(&self) -> f64 {
+        self.queue.weighted_backlog()
     }
 
     /// Dynamic-scheduler re-plans performed so far (0 without `dynamic`).
@@ -131,6 +156,7 @@ impl ExecutorShard {
             busy_s: self.busy_s,
             last_finish: self.free_at,
             stolen: self.stolen,
+            served_by_class: self.served_by_class,
         }
     }
 
@@ -285,10 +311,13 @@ impl ExecutorShard {
         // own busy-until hook backs the shard's utilization accounting.
         self.busy_s += self.sim.busy_until() - sim_start;
         let finish_big = outcome.finish_of(&plan.active_device_indices());
+        self.served_by_class[q.req.class.index()] += 1;
         out.push(ServedRequest {
             id: q.req.id,
             size: q.req.size,
             reps: q.req.reps,
+            class: q.req.class,
+            deadline_s: q.req.deadline_s,
             mode: ExecMode::CoExec,
             arrival: q.arrival,
             start,
@@ -302,10 +331,13 @@ impl ExecutorShard {
             let finish_small = outcome.finish_of(&[host]);
             let mut shares = vec![0.0; self.sim.num_devices()];
             shares[host] = 1.0;
+            self.served_by_class[c.req.class.index()] += 1;
             out.push(ServedRequest {
                 id: c.req.id,
                 size: c.req.size,
                 reps: c.req.reps,
+                class: c.req.class,
+                deadline_s: c.req.deadline_s,
                 mode: ExecMode::BypassStandalone { device: host },
                 arrival: c.arrival,
                 start,
@@ -344,10 +376,13 @@ impl ExecutorShard {
         self.busy_s += self.sim.busy_until() - sim_start;
         let mut shares = vec![0.0; self.sim.num_devices()];
         shares[dev] = 1.0;
+        self.served_by_class[q.req.class.index()] += 1;
         out.push(ServedRequest {
             id: q.req.id,
             size: q.req.size,
             reps: q.req.reps,
+            class: q.req.class,
+            deadline_s: q.req.deadline_s,
             mode: ExecMode::Standalone { device: dev },
             arrival: q.arrival,
             start,
@@ -364,10 +399,13 @@ impl ExecutorShard {
     }
 
     fn serve_rejected(&mut self, q: QueuedRequest, start: f64, out: &mut Vec<ServedRequest>) {
+        self.served_by_class[q.req.class.index()] += 1;
         out.push(ServedRequest {
             id: q.req.id,
             size: q.req.size,
             reps: q.req.reps,
+            class: q.req.class,
+            deadline_s: q.req.deadline_s,
             mode: ExecMode::Rejected,
             arrival: q.arrival,
             start,
@@ -396,7 +434,7 @@ mod tests {
 
     fn queued(id: u64, size: GemmSize, reps: u32, co: bool, predicted_s: f64) -> QueuedRequest {
         QueuedRequest {
-            req: GemmRequest { id, size, reps },
+            req: GemmRequest::new(id, size, reps),
             arrival: 0.0,
             co_execute: co,
             best_device: 2,
@@ -457,6 +495,38 @@ mod tests {
         assert!(r2.finish > 0.0);
         assert_eq!(out[1].id, 8);
         assert!(matches!(out[1].mode, ExecMode::Standalone { .. }));
+    }
+
+    #[test]
+    fn class_aware_predicted_finish_discounts_lighter_lanes() {
+        let mut s = shard(5, ServerOptions::default());
+        let mut batch = queued(0, GemmSize::square(16_000), 1, true, 4.0);
+        batch.req.class = QosClass::Batch;
+        s.enqueue(batch);
+        // Class-blind estimate counts the queued batch second-for-second.
+        assert!((s.predicted_finish(0.0, 1.0) - 5.0).abs() < 1e-12);
+        // A 1s interactive arrival only waits for the interleave the
+        // weighted drain allows (1/4 of its own 1s drain); a batch
+        // arrival waits at face value.
+        assert!((s.predicted_finish_for(0.0, 1.0, QosClass::Interactive) - 1.25).abs() < 1e-12);
+        assert!((s.predicted_finish_for(0.0, 1.0, QosClass::Batch) - 5.0).abs() < 1e-12);
+        assert!((s.class_backlog(QosClass::Batch) - 4.0).abs() < 1e-12);
+        assert!((s.weighted_backlog() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dispatches_are_attributed_to_their_class() {
+        let mut s = shard(6, ServerOptions::default());
+        let mut q1 = queued(0, GemmSize::square(18_000), 2, true, 1.0);
+        q1.req.class = QosClass::Interactive;
+        s.enqueue(q1);
+        s.enqueue(queued(1, GemmSize::square(300), 2, false, 0.5));
+        let mut out = Vec::new();
+        let r = s.dispatch_next(0.0, &mut out).unwrap();
+        s.dispatch_next(r.finish, &mut out);
+        assert_eq!(s.stats().served_by_class, [1, 1, 0]);
+        assert_eq!(out[0].class, QosClass::Interactive);
+        assert_eq!(out[1].class, QosClass::Standard);
     }
 
     #[test]

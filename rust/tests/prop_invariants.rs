@@ -428,6 +428,139 @@ fn prop_plan_cache_epoch_bump_invalidates_all_entries() {
 }
 
 // ---------------------------------------------------------------------
+// QoS invariants (service layer)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_weighted_queue_never_starves_a_nonempty_class() {
+    use poas::service::{GemmRequest, QosClass, QueuePolicy, QueuedRequest, RequestQueue};
+
+    prop("weighted queue no starvation", 300, |rng, _| {
+        let policy = if rng.below(2) == 0 {
+            QueuePolicy::Fifo
+        } else {
+            QueuePolicy::Spjf
+        };
+        let mut rq = RequestQueue::new(policy);
+        let mut id = 0u64;
+        for class in QosClass::ALL {
+            for _ in 0..(1 + rng.below(12)) {
+                rq.push(QueuedRequest {
+                    req: GemmRequest::new(id, GemmSize::square(1000), 1).with_class(class),
+                    arrival: id as f64,
+                    co_execute: true,
+                    best_device: 0,
+                    predicted_s: rng.range(0.1, 5.0),
+                });
+                id += 1;
+            }
+        }
+        let total_w: u64 = QosClass::ALL.iter().map(|c| c.weight()).sum();
+        // Pops a non-empty class can be passed over before it *must* be
+        // served: the smooth weighted round-robin serves class c within
+        // ~total/weight pops; assert a 2x-slack bound, which still
+        // disproves starvation.
+        let bound = |c: QosClass| -> u64 { (2 * total_w).div_ceil(c.weight()) };
+        let mut waited = [0u64; 3];
+        while let Some(got) = rq.pop_next() {
+            waited[got.req.class.index()] = 0;
+            for c in QosClass::ALL {
+                if rq.class_len(c) > 0 && c != got.req.class {
+                    waited[c.index()] += 1;
+                    assert!(
+                        waited[c.index()] <= bound(c),
+                        "{c} waited {} pops (bound {})",
+                        waited[c.index()],
+                        bound(c)
+                    );
+                }
+            }
+        }
+        assert!(rq.is_empty());
+    });
+}
+
+#[test]
+fn prop_deadline_admission_verdicts_replay_deterministically() {
+    use poas::config::presets;
+    use poas::coordinator::Pipeline;
+    use poas::service::{
+        ClassLoad, Cluster, ClusterOptions, DeadlinePolicy, MixedArrivals, QosClass, ServerOptions,
+    };
+
+    // Profile once; each case clones the pipelines so both runs of a
+    // case start from the identical installation state.
+    let p0 = Pipeline::for_simulated_machine(&presets::mach2(), 0);
+    let p1 = Pipeline::for_simulated_machine(&presets::mach2(), 1);
+
+    prop("deadline admission replay", 6, |rng, _| {
+        let rate = rng.range(0.5, 4.0);
+        let deadline = rng.range(0.5, 8.0);
+        let seed = rng.below(1 << 20);
+        let policy = if rng.below(2) == 0 {
+            DeadlinePolicy::Reject
+        } else {
+            DeadlinePolicy::Downclass
+        };
+        let mix = MixedArrivals::new(
+            vec![
+                ClassLoad {
+                    class: QosClass::Interactive,
+                    rate_rps: rate,
+                    menu: vec![(GemmSize::square(16_000), 2), (GemmSize::square(20_000), 2)],
+                    deadline_s: Some(deadline),
+                },
+                ClassLoad {
+                    class: QosClass::Batch,
+                    rate_rps: rate * 2.0,
+                    menu: vec![(GemmSize::square(18_000), 2)],
+                    deadline_s: None,
+                },
+            ],
+            seed,
+        );
+        let run = || {
+            let mut cluster = Cluster::from_pipelines(
+                vec![p0.clone(), p1.clone()],
+                ClusterOptions {
+                    shards: 2,
+                    shard: ServerOptions {
+                        deadline_policy: policy,
+                        ..Default::default()
+                    },
+                    work_stealing: true,
+                },
+            );
+            cluster.submit_trace(&mix.trace(6));
+            cluster.run_to_completion()
+        };
+        let a = run();
+        let b = run();
+        // The whole report — including every accept/deny/downclass
+        // verdict — must replay byte-identically.
+        assert_eq!(a, b);
+        let denied: Vec<u64> = a
+            .served
+            .iter()
+            .filter(|r| r.mode.is_denied())
+            .map(|r| r.id)
+            .collect();
+        let denied_b: Vec<u64> = b
+            .served
+            .iter()
+            .filter(|r| r.mode.is_denied())
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(denied, denied_b, "denial verdicts drifted across replays");
+        if policy == DeadlinePolicy::Downclass {
+            assert!(denied.is_empty(), "downclass policy must never deny");
+        }
+        // Every arrival is accounted for exactly once.
+        assert_eq!(a.served.len(), 12);
+    });
+}
+
+// ---------------------------------------------------------------------
 // End-to-end plan invariant on random workloads
 // ---------------------------------------------------------------------
 

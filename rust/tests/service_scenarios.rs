@@ -15,7 +15,8 @@
 
 use poas::config::{presets, MachineConfig};
 use poas::service::{
-    Cluster, ClusterOptions, PoissonArrivals, QueuePolicy, Server, ServerOptions, ServiceReport,
+    ClassLoad, Cluster, ClusterOptions, MixedArrivals, PoissonArrivals, QosClass, QueuePolicy,
+    Server, ServerOptions, ServiceReport,
 };
 use poas::workload::GemmSize;
 
@@ -444,6 +445,102 @@ fn two_shards_beat_one_on_the_same_trace_and_replay_byte_identically() {
         format!("{replay:?}"),
         "replay must be byte-identical"
     );
+}
+
+// ---------------------------------------------------------------------
+// QoS tiers: weighted fairness and deadline admission under overload
+// ---------------------------------------------------------------------
+
+/// The QoS acceptance scenario: a 2-shard cluster overloaded by a
+/// heavy batch stream, with a light deadline-bound interactive stream
+/// riding on top. Batch arrivals outpace the cluster, so their queue —
+/// and their tail sojourn — grows; the weighted drain and the
+/// class-discounted routing keep interactive requests moving.
+fn qos_overload_report(seed: u64) -> ServiceReport {
+    let m = probe_service_s();
+    let mix = MixedArrivals::new(
+        vec![
+            ClassLoad {
+                class: QosClass::Interactive,
+                rate_rps: 0.6 / m,
+                menu: heavy_menu(),
+                deadline_s: Some(6.0 * m),
+            },
+            ClassLoad {
+                class: QosClass::Batch,
+                rate_rps: 5.0 / m,
+                menu: heavy_menu(),
+                deadline_s: None,
+            },
+        ],
+        seed,
+    );
+    let mut cluster = Cluster::new(
+        &presets::mach2(),
+        0,
+        ClusterOptions {
+            shards: 2,
+            ..Default::default()
+        },
+    );
+    cluster.submit_trace(&mix.trace(16));
+    cluster.run_to_completion()
+}
+
+#[test]
+fn interactive_p99_beats_batch_p99_under_overload() {
+    let report = qos_overload_report(17);
+    assert_eq!(report.served.len(), 32);
+    let p99_i = report.class_latency_percentile(QosClass::Interactive, 99.0);
+    let p99_b = report.class_latency_percentile(QosClass::Batch, 99.0);
+    assert!(p99_i > 0.0 && p99_b > 0.0);
+    assert!(
+        p99_i < p99_b,
+        "interactive tail must beat batch under overload: p99_i {p99_i} vs p99_b {p99_b}"
+    );
+    // The batch stream overloads the cluster: its tail stretches well
+    // past its own median, while interactive stays close to service
+    // time.
+    assert!(p99_b > report.class_latency_percentile(QosClass::Batch, 50.0));
+}
+
+#[test]
+fn deadline_admission_keeps_accepted_slo_requests_inside_their_budget() {
+    let report = qos_overload_report(17);
+    let bi = report.class_breakdown(QosClass::Interactive);
+    // The scenario is calibrated so most interactive requests are
+    // admissible — the property under test is that what admission
+    // accepts, the cluster actually delivers.
+    assert!(
+        bi.deadline_bound >= 12,
+        "too few accepted SLO requests to measure: {}",
+        bi.deadline_bound
+    );
+    assert!(
+        report.deadline_hit_rate() >= 0.95,
+        "accepted SLO requests must land inside their budget: hit rate {}",
+        report.deadline_hit_rate()
+    );
+}
+
+#[test]
+fn qos_overload_scenario_replays_byte_identically() {
+    let a = qos_overload_report(17);
+    let b = qos_overload_report(17);
+    assert_eq!(a, b);
+    assert_eq!(
+        format!("{a:?}"),
+        format!("{b:?}"),
+        "replay must be byte-identical"
+    );
+    // And the per-class accounting is internally consistent: every
+    // served record is attributed to exactly one shard lane.
+    let attributed: usize = a
+        .shards
+        .iter()
+        .map(|s| s.served_by_class.iter().sum::<usize>())
+        .sum();
+    assert_eq!(attributed + a.denied(), a.served.len());
 }
 
 #[test]
