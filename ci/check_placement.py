@@ -1,0 +1,62 @@
+#!/usr/bin/env python3
+"""Gate the bench-smoke placement-quality metric against a committed floor.
+
+Usage: check_placement.py BENCH_cluster.json ci/placement_floor.json
+
+Reads `hetero.per_shard.placement_quality` (realized / predicted service
+seconds on the heterogeneous per-shard-gate leg of cluster_scaling) from
+the freshly regenerated bench summary and fails when it leaves the
+committed [min, max] band. A regression past the ceiling means routing
+is steering work with predictions the machines no longer honour — the
+exact failure mode per-shard admission gates exist to prevent.
+
+Also sanity-checks that the per-shard leg did not lose to the
+cloned-shard-0 ablation on makespan: the whole point of carrying two
+legs is that the trajectory records per-shard routing *winning*.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        bench = json.load(f)
+    with open(sys.argv[2]) as f:
+        floor = json.load(f)
+
+    hetero = bench.get("hetero")
+    if not hetero:
+        print("FAIL: bench summary has no `hetero` section "
+              "(did cluster_scaling run to completion?)")
+        return 1
+
+    quality = hetero["per_shard"]["placement_quality"]
+    lo, hi = floor["min"], floor["max"]
+    print(f"placement quality (per-shard leg): {quality:.4f}  "
+          f"committed band: [{lo}, {hi}]")
+    if not (lo <= quality <= hi):
+        print(f"FAIL: placement quality {quality:.4f} outside [{lo}, {hi}] — "
+              "realized service time has drifted from the per-shard "
+              "predictions routing relies on.")
+        return 1
+
+    per_makespan = hetero["per_shard"]["makespan_s"]
+    s0_makespan = hetero["shard0_gate"]["makespan_s"]
+    print(f"makespan: per-shard {per_makespan:.3f}s vs "
+          f"shard-0 ablation {s0_makespan:.3f}s")
+    if per_makespan >= s0_makespan:
+        print("FAIL: per-shard routing no longer beats the cloned-shard-0 "
+              "baseline on the heterogeneous trace.")
+        return 1
+
+    print("OK: placement quality within the committed band and per-shard "
+          "routing beats the ablation.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,13 +32,22 @@
 //! `DeadlinePolicy::Downclass`, demotes) requests whose SLO cannot be
 //! met — the per-class table shows p50/p99 sojourn per tier and the
 //! deadline-hit rate of everything admission let through.
+//!
+//! Part 4 goes heterogeneous: a `HeterogeneousSpec` assembles a cluster
+//! from three *different* machines (GPU-heavy, CPU-only, single-XPU),
+//! each profiled independently with its own admission gate, and a
+//! bursty Markov-modulated on/off stream arrives. Routing consults each
+//! shard's own model, so shapes sort themselves onto the hardware that
+//! predicts them fastest; the closing shard table prints per-shard
+//! model fingerprints and placement quality (realized vs predicted
+//! service time) — the figure CI gates against a committed floor.
 
 use poas::config::presets;
 use poas::report::secs;
 use poas::rng::Rng;
 use poas::service::{
-    ClassLoad, Cluster, ClusterOptions, GemmRequest, MixedArrivals, PoissonArrivals, QosClass,
-    QueuePolicy, Server, ServerOptions,
+    ClassLoad, Cluster, ClusterOptions, GemmRequest, HeterogeneousSpec, MixedArrivals,
+    OnOffArrivals, PoissonArrivals, QosClass, QueuePolicy, Server, ServerOptions,
 };
 use poas::workload::GemmSize;
 use std::sync::mpsc;
@@ -140,6 +149,7 @@ fn main() {
                 ..Default::default()
             },
             work_stealing: true,
+            ..Default::default()
         },
     );
     let ids = cluster.submit_trace(&trace);
@@ -222,4 +232,50 @@ fn main() {
         qreport.denied(),
     );
     assert_eq!(qreport.served.len(), qos_ids.len());
+
+    // ---- Part 4: a heterogeneous cluster. Three genuinely different
+    // machines — a GPU-heavy node, a CPU-only node and a single-XPU
+    // node — each profiled independently at install time, each with its
+    // own admission gate. A bursty on/off (Markov-modulated) stream of
+    // mixed shapes arrives; routing scores every shard with *that
+    // shard's* predictions, so large GEMMs land on the accelerator
+    // nodes while tiny ones run on the CPU node's stronger host. The
+    // shard table shows the per-shard model fingerprints and placement
+    // quality (realized / predicted service time): near 1.0 means the
+    // machines honour the predictions that routed the work.
+    let mut hetero = HeterogeneousSpec::new(31)
+        .machine(presets::gpu_node())
+        .machine(presets::cpu_node())
+        .machine(presets::xpu_node())
+        .build();
+    let bursty = OnOffArrivals::new(
+        3.0 / unit, // burst: ~3 heavy requests per service time
+        0.3 / unit, // quiet tail
+        4.0 * unit,
+        8.0 * unit,
+        vec![
+            (GemmSize::square(20_000), 2),
+            (GemmSize::square(16_000), 2),
+            (GemmSize::square(448), 2),
+        ],
+        31,
+    );
+    let hids = hetero.submit_trace(&bursty.trace(12));
+    let hreport = hetero.run_to_completion();
+    println!();
+    hreport
+        .table(&format!(
+            "heterogeneous cluster (gpu/cpu/xpu nodes), bursty on/off arrivals ({} requests, {:.1}x burst ratio)",
+            hids.len(),
+            bursty.rate_ratio()
+        ))
+        .print();
+    hreport
+        .shard_table("per-shard models and placement quality")
+        .print();
+    println!(
+        "cluster placement quality: {:.3}   (1.0 = predictions honoured exactly)",
+        hreport.placement_quality()
+    );
+    assert_eq!(hreport.served.len(), hids.len());
 }

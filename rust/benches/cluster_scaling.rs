@@ -15,6 +15,12 @@
 //! 4. do the QoS tiers actually separate: interactive p99 below batch
 //!    p99 on an overloaded mixed-class trace, with the deadline-hit
 //!    rate of accepted SLO requests staying high?
+//! 5. does a genuinely **heterogeneous** cluster exploit its asymmetry:
+//!    per-shard admission gates versus the cloned-shard-0 ablation on
+//!    the same trace, with the routing-honesty figure — placement
+//!    quality, realized / predicted service time — staying near 1.0?
+//!    (CI diffs that figure against the committed floor in
+//!    `ci/placement_floor.json`.)
 //!
 //! Environment knobs (the CI bench-smoke gate sets both):
 //!
@@ -24,10 +30,11 @@
 //!   artifact CI uploads to record the perf trajectory over time.
 
 use poas::config::presets;
+use poas::coordinator::Pipeline;
 use poas::report::{rate, secs, Table};
 use poas::service::{
-    ClassLoad, Cluster, ClusterOptions, MixedArrivals, PoissonArrivals, QosClass, Server,
-    ServerOptions,
+    ClassLoad, Cluster, ClusterOptions, GatePolicy, MixedArrivals, PoissonArrivals, QosClass,
+    Server, ServerOptions, ServiceReport,
 };
 use poas::workload::GemmSize;
 
@@ -172,6 +179,74 @@ fn main() {
         secs(p99_b),
     );
 
+    // ---- Heterogeneous mix: the same trace on a genuinely mixed
+    // cluster (GPU-heavy + CPU-only + XPU node), once with per-shard
+    // admission gates and once with the legacy cloned-shard-0 gate.
+    // Stealing is off so the rows isolate routing quality; the
+    // placement-quality column (realized / predicted service time) is
+    // the figure CI gates on.
+    let hn = if smoke { 10 } else { 24 };
+    let hmenu = vec![
+        (GemmSize::square(20_000), 2),
+        (GemmSize::square(16_000), 2),
+        (GemmSize::square(400), 2),
+    ];
+    let htrace = PoissonArrivals::new(offered, hmenu, 23).trace(hn);
+    // Profile the three machines once; both gate-policy legs then start
+    // from the *identical* fitted models, so the comparison isolates
+    // the gate policy (and the bench pays install-time profiling once).
+    let hpipes: Vec<Pipeline> = presets::hetero_mix()
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| Pipeline::for_simulated_machine(cfg, i as u64))
+        .collect();
+    let run_hetero = |gate: GatePolicy| -> ServiceReport {
+        let mut c = Cluster::from_pipelines(
+            hpipes.clone(),
+            ClusterOptions {
+                gate,
+                work_stealing: false,
+                ..Default::default()
+            },
+        );
+        c.submit_trace(&htrace);
+        c.run_to_completion()
+    };
+    let h_per = run_hetero(GatePolicy::PerShard);
+    let h_s0 = run_hetero(GatePolicy::Shard0);
+    assert_eq!(h_per.served.len(), hn);
+    assert_eq!(h_s0.served.len(), hn);
+    let mut htable = Table::new(
+        &format!("{hn}-request trace on the heterogeneous mix (gpu/cpu/xpu nodes)"),
+        &[
+            "gate",
+            "session time",
+            "throughput",
+            "mean sojourn",
+            "p99 sojourn",
+            "placement quality",
+        ],
+    );
+    for (label, r) in [("per-shard", &h_per), ("shard-0 (ablation)", &h_s0)] {
+        htable.row(&[
+            label.to_string(),
+            secs(r.makespan),
+            rate(r.throughput_rps()),
+            secs(r.mean_completion()),
+            secs(r.latency_percentile(99.0)),
+            format!("{:.3}", r.placement_quality()),
+        ]);
+    }
+    htable.print();
+    println!();
+    h_per.shard_table("per-shard gate: shard accounting").print();
+    println!(
+        "hetero target: per-shard makespan ({}) below the cloned-shard-0 \
+         baseline ({}); placement quality near 1.0.",
+        secs(h_per.makespan),
+        secs(h_s0.makespan),
+    );
+
     // ---- Perf-trajectory artifact: a JSON summary CI records per run.
     if let Ok(path) = std::env::var("POAS_BENCH_JSON") {
         let mut json = String::from("{\n");
@@ -200,9 +275,27 @@ fn main() {
         json.push_str(&format!(
             "  \"qos\": {{\"requests_per_class\": {per_class}, \
              \"interactive_p99_s\": {p99_i}, \"batch_p99_s\": {p99_b}, \
-             \"deadline_hit_rate\": {}, \"denied\": {}}}\n",
+             \"deadline_hit_rate\": {}, \"denied\": {}}},\n",
             qos.deadline_hit_rate(),
             qos.denied()
+        ));
+        let hetero_leg = |r: &ServiceReport| {
+            format!(
+                "{{\"makespan_s\": {}, \"throughput_rps\": {}, \
+                 \"mean_sojourn_s\": {}, \"p99_sojourn_s\": {}, \
+                 \"placement_quality\": {}}}",
+                r.makespan,
+                r.throughput_rps(),
+                r.mean_completion(),
+                r.latency_percentile(99.0),
+                r.placement_quality()
+            )
+        };
+        json.push_str(&format!(
+            "  \"hetero\": {{\"requests\": {hn}, \"per_shard\": {}, \
+             \"shard0_gate\": {}}}\n",
+            hetero_leg(&h_per),
+            hetero_leg(&h_s0)
         ));
         json.push_str("}\n");
         std::fs::write(&path, json).expect("write POAS_BENCH_JSON summary");

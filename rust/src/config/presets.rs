@@ -177,6 +177,63 @@ pub fn mach2() -> MachineConfig {
     }
 }
 
+// ---------------------------------------------------------------------
+// Heterogeneous-cluster node presets
+// ---------------------------------------------------------------------
+//
+// ALP environments are not fleets of clones (Hill & Reddi): a serving
+// cluster mixes accelerator-dense boxes with CPU-only and
+// single-accelerator nodes. These presets describe such *shards* — each
+// is a complete `MachineConfig` a `Cluster` profiles independently at
+// install time, so routing can exploit the asymmetry from per-shard
+// predictions. Device parameters are reused from the calibrated
+// mach1/mach2 tables; only the *composition* differs.
+
+/// `gpu_node`: an accelerator-dense shard — mach1's weak Xeon driving
+/// mach2's well-cooled RTX 3090 + tensor-core 2080 Ti. Large GEMMs
+/// predict ~50x faster here than on [`cpu_node`].
+pub fn gpu_node() -> MachineConfig {
+    let mut m = mach2();
+    m.name = "gpu-node".to_string();
+    // Swap the strong EPYC for mach1's small Xeon: the node's value is
+    // its accelerators, and the weak host makes tiny GEMMs predict
+    // *slower* here than on the CPU node — the asymmetry the routing
+    // tests exercise.
+    m.devices[0] = mach1().devices[0].clone();
+    m
+}
+
+/// `cpu_node`: a CPU-only shard — a single well-fed AMD EPYC 7413, no
+/// accelerators at all. The suitability gate always recommends
+/// standalone here (co-execution needs co-executors), and tiny GEMMs
+/// predict faster than on [`gpu_node`] (no PCIe copies, lower launch
+/// overhead, stronger host cores).
+pub fn cpu_node() -> MachineConfig {
+    let mut m = mach2();
+    m.name = "cpu-node".to_string();
+    m.devices.truncate(1); // keep only the EPYC
+    m
+}
+
+/// `xpu_node`: a single-accelerator shard — mach1's Xeon plus one
+/// properly cooled tensor-core 2080 Ti (mach2's XPU). Sits between
+/// [`gpu_node`] and [`cpu_node`] on heavy shapes.
+pub fn xpu_node() -> MachineConfig {
+    let gpu = gpu_node();
+    MachineConfig {
+        name: "xpu-node".to_string(),
+        devices: vec![gpu.devices[0].clone(), gpu.devices[2].clone()],
+    }
+}
+
+/// The baked heterogeneous mix: one GPU-heavy shard, one CPU-only
+/// shard, one XPU shard — the smallest cluster where per-shard
+/// performance models disagree on *everything* (device count, best
+/// standalone device, co-execution feasibility).
+pub fn hetero_mix() -> Vec<MachineConfig> {
+    vec![gpu_node(), cpu_node(), xpu_node()]
+}
+
 /// A local PJRT testbed for the real-execution path: three "devices"
 /// backed by the host CPU running the AOT artifacts (f32 artifacts for
 /// cpu/gpu, bf16 for xpu). Rates are placeholders — the e2e examples
@@ -267,6 +324,26 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn hetero_nodes_are_valid_and_asymmetric() {
+        for m in hetero_mix() {
+            m.validate().expect("hetero preset must validate");
+        }
+        let gpu = gpu_node();
+        let cpu = cpu_node();
+        let xpu = xpu_node();
+        assert_eq!(gpu.devices.len(), 3);
+        assert_eq!(cpu.devices.len(), 1);
+        assert_eq!(xpu.devices.len(), 2);
+        // The CPU node's host is strictly stronger than the GPU node's.
+        assert!(cpu.devices[0].eff_rate_tops > gpu.devices[0].eff_rate_tops);
+        // The CPU node has no accelerators; the others do.
+        assert!(cpu.device_of_kind(DeviceKind::Gpu).is_none());
+        assert!(cpu.device_of_kind(DeviceKind::Xpu).is_none());
+        assert!(gpu.device_of_kind(DeviceKind::Gpu).is_some());
+        assert!(xpu.device_of_kind(DeviceKind::Xpu).is_some());
     }
 
     #[test]

@@ -98,6 +98,31 @@ impl PerfModel {
         self.devices.iter().map(|d| d.to_model_input()).collect()
     }
 
+    /// Deterministic 64-bit fingerprint of the fitted parameters (FNV-1a
+    /// over every device's regression lines, link figures and priority).
+    /// Two shards profiled on different machines — or re-profiled after
+    /// drift — disagree here, which is how service reports show *which*
+    /// model each shard's predictions came from.
+    pub fn fingerprint(&self) -> u64 {
+        fn eat(mut h: u64, x: u64) -> u64 {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0100_0000_01b3);
+            }
+            h
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        h = eat(h, self.devices.len() as u64);
+        for d in &self.devices {
+            h = eat(h, d.a.to_bits());
+            h = eat(h, d.b.to_bits());
+            h = eat(h, d.bw.to_bits());
+            h = eat(h, d.lat.to_bits());
+            h = eat(h, u64::from(d.priority));
+        }
+        h
+    }
+
     // ------------------------------------------------------------------
     // Text persistence (paper: profile results live in a text file).
     // ------------------------------------------------------------------
@@ -316,6 +341,22 @@ mod tests {
         assert!(PerfModel::from_text("machine m\ndevice x cpu a=zero").is_err());
         assert!(PerfModel::from_text("machine m\ndevice x cpu a=-1").is_err());
         assert!(PerfModel::from_text("machine m\ndevice x cpu q=1").is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_fitted_parameters() {
+        let m = sample();
+        let fp = m.fingerprint();
+        // Deterministic for identical parameters.
+        assert_eq!(fp, sample().fingerprint());
+        // Any fitted figure moving moves the fingerprint.
+        let mut drifted = sample();
+        drifted.devices[1].a *= 1.01;
+        assert_ne!(fp, drifted.fingerprint());
+        // A machine with fewer devices cannot collide by truncation.
+        let mut short = sample();
+        short.devices.truncate(2);
+        assert_ne!(fp, short.fingerprint());
     }
 
     #[test]

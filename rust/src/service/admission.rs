@@ -1,10 +1,15 @@
 //! Admission control: the §6 suitability gate as a front-end component.
 //!
-//! Every request entering the cluster passes the gate exactly once: the
-//! fitted performance model predicts the co-execution makespan and the
-//! best standalone device, and the verdict plus the per-repetition
-//! service prediction are recorded on the [`super::QueuedRequest`] so
-//! queue policies and the routing front-end never re-run the optimizer.
+//! Since heterogeneous clusters landed there is one `Admission` gate
+//! **per shard**, each predicting with *that shard's* installation-time
+//! [`PerfModel`]: the fitted model predicts the co-execution makespan
+//! and the best standalone device on that machine, and the verdict of
+//! the shard a request is finally routed to is recorded on the
+//! [`super::QueuedRequest`] so queue policies and dispatch never re-run
+//! the optimizer. An arrival is scored against every shard's gate (all
+//! memoized), which is exactly what lets the cluster route a large GEMM
+//! to a GPU-heavy shard and a tiny one to a CPU-only shard from
+//! predictions alone.
 //!
 //! Since the QoS tiers landed the gate is also the **deadline
 //! feasibility oracle**: a deadline-bound co-executable request is
@@ -17,12 +22,13 @@
 //! which already computes per-shard backlogs for routing.
 //!
 //! The gate's own LP solve is as cacheable as the plan solve, so
-//! verdicts are memoized by `(shape, epoch)` in a **bounded LRU**: a
-//! lookup refreshes its entry's recency and eviction removes the least
-//! recently used key, so a hot working set survives arbitrarily many
-//! cold shapes streaming past (a wholesale `clear()` at capacity would
-//! discard it). A model refresh (dynamic-scheduler replan on any shard)
-//! bumps the epoch, which retires every memoized verdict at once.
+//! verdicts are memoized by `(shape, reps, shard epoch)` in a **bounded
+//! LRU**: a lookup refreshes its entry's recency and eviction removes
+//! the least recently used key, so a hot working set survives
+//! arbitrarily many cold shapes streaming past (a wholesale `clear()`
+//! at capacity would discard it). A model refresh (this shard's dynamic
+//! scheduler re-planned) bumps the epoch, which retires every memoized
+//! verdict at once — other shards' gates are untouched.
 
 use super::cache::LruMap;
 use crate::optimize::energy::{DevicePower, EnergyProblem};
@@ -33,8 +39,13 @@ use crate::schedule::suitability::{recommend, Recommendation};
 use crate::workload::GemmSize;
 
 /// One memoized gate verdict: (co-execute?, best single device,
-/// predicted seconds per repetition under the verdict).
+/// predicted **total** service seconds for all repetitions under the
+/// verdict).
 pub type GateVerdict = (bool, usize, f64);
+
+/// Key of a memoized gate verdict: shape, repetition count, model
+/// epoch.
+type GateKey = (GemmSize, u32, u64);
 
 /// Key of a memoized deadline-feasibility probe: shape, the per-rep
 /// budget's bit pattern (deadlines are continuous, but SLO streams
@@ -44,14 +55,15 @@ type DeadlineKey = (GemmSize, u64, u64);
 /// The admission component: suitability gate + bounded-LRU memo.
 #[derive(Debug, Clone)]
 pub struct Admission {
-    /// The front-end's view of machine performance (refreshed when a
+    /// This gate's view of its shard's performance (refreshed when the
     /// shard's dynamic scheduler re-plans).
     model: PerfModel,
     epoch: u64,
     min_gain: f64,
     overhead_s: f64,
-    /// Gate-verdict memo (bounded, touch-on-hit LRU).
-    memo: LruMap<(GemmSize, u64), GateVerdict>,
+    /// Gate-verdict memo (bounded, touch-on-hit LRU) keyed
+    /// `(shape, reps, epoch)`.
+    memo: LruMap<GateKey, GateVerdict>,
     /// Deadline-feasibility memo: `(shape, per-rep deadline bits,
     /// epoch)` → can any split meet it? Same bounded-LRU discipline as
     /// the gate memo, so an SLO-bound stream over a stable menu never
@@ -105,31 +117,33 @@ impl Admission {
     }
 
     /// Gate one request: returns (co-execute?, best single device,
-    /// predicted **total** service seconds for all `reps`).
-    pub fn admit(&mut self, size: GemmSize, reps: u32) -> (bool, usize, f64) {
-        let key = (size, self.epoch);
-        let (co_execute, device, t_rep) = match self.memo.get_touch(&key) {
+    /// predicted **total** service seconds for all `reps`). Memoized by
+    /// `(shape, reps, epoch)`, so an SLO-free stream over a stable
+    /// `(shape, reps)` menu solves each entry once per epoch.
+    pub fn admit(&mut self, size: GemmSize, reps: u32) -> GateVerdict {
+        let key = (size, reps, self.epoch);
+        match self.memo.get_touch(&key) {
             Some(&hit) => {
                 self.hits += 1;
                 hit
             }
             None => {
                 self.misses += 1;
+                let scale = reps.max(1) as f64;
                 let fresh = match recommend(&self.model, size, self.min_gain, self.overhead_s) {
                     Recommendation::CoExecute {
                         t_coexec,
                         best_device,
                         ..
-                    } => (true, best_device, t_coexec),
+                    } => (true, best_device, t_coexec * scale),
                     Recommendation::Standalone {
                         device, t_single, ..
-                    } => (false, device, t_single),
+                    } => (false, device, t_single * scale),
                 };
                 self.memo.insert(key, fresh);
                 fresh
             }
-        };
-        (co_execute, device, t_rep * reps.max(1) as f64)
+        }
     }
 
     /// Solve the deadline-constrained split for `size`: the energy
@@ -218,17 +232,36 @@ mod tests {
     }
 
     #[test]
-    fn memoizes_and_scales_by_reps() {
+    fn memoizes_by_shape_and_reps_and_scales_linearly() {
         let mut gate = Admission::new(model(), 1.05, 20e-6, 64);
         let size = GemmSize::square(20_000);
         let (co1, dev1, t1) = gate.admit(size, 1);
+        // A different repetition count is a different memo entry...
         let (co2, dev2, t3) = gate.admit(size, 3);
         assert!(co1, "20K is worth co-executing");
         assert_eq!((co1, dev1), (co2, dev2));
         assert!((t3 / t1 - 3.0).abs() < 1e-9, "reps scale the prediction");
-        assert_eq!(gate.misses, 1);
+        assert_eq!(gate.misses, 2);
+        assert_eq!(gate.len(), 2);
+        // ...and the same (shape, reps) is answered from the memo.
+        let (co3, dev3, t3b) = gate.admit(size, 3);
+        assert_eq!((co3, dev3, t3b), (co2, dev2, t3));
         assert_eq!(gate.hits, 1);
-        assert_eq!(gate.len(), 1);
+        assert_eq!(gate.misses, 2);
+    }
+
+    #[test]
+    fn cpu_only_shard_always_recommends_standalone() {
+        let mut sim = SimMachine::new(&presets::cpu_node(), 0);
+        let m = profile(&mut sim, &ProfileOptions::default()).unwrap();
+        let mut gate = Admission::new(m, 1.05, 20e-6, 16);
+        let (co, dev, t) = gate.admit(GemmSize::square(20_000), 2);
+        assert!(!co, "a single device has no co-executors");
+        assert_eq!(dev, 0);
+        assert!(t > 0.0);
+        // Standalone deadline feasibility compares the prediction.
+        assert!(gate.deadline_feasible(co, t, GemmSize::square(20_000), 2, t * 2.0));
+        assert!(!gate.deadline_feasible(co, t, GemmSize::square(20_000), 2, t * 0.5));
     }
 
     #[test]

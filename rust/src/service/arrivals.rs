@@ -16,6 +16,13 @@
 //!   optional SLO, and the superposed streams merge into one trace (the
 //!   superposition of Poisson processes is Poisson, so the mix stays a
 //!   faithful arrival model);
+//! * [`OnOffArrivals`] — a bursty **Markov-modulated** Poisson process:
+//!   the stream alternates between an "on" (burst) phase and an "off"
+//!   (quiet) phase, each exponentially long, with its own Poisson rate
+//!   inside each phase. Real tenant traffic is bursty, not
+//!   time-homogeneous — this is the canonical two-state MMPP used to
+//!   model it, and it stresses queueing (and work stealing) far harder
+//!   than a Poisson stream of the same average rate;
 //! * [`fixed_trace`] — hand-written `(at, size, reps)` triples for
 //!   replayable regression scenarios.
 //!
@@ -86,6 +93,14 @@ impl PoissonArrivals {
     }
 }
 
+/// One inverse-CDF exponential draw with mean `mean_s`; `1 - u` keeps
+/// the argument in (0, 1] so `ln` never sees zero. Every arrival
+/// process in this module draws gaps (and phase lengths) through this
+/// one helper so the interval convention cannot silently diverge.
+fn exp_draw(rng: &mut Rng, mean_s: f64) -> f64 {
+    -(1.0 - rng.uniform()).ln() * mean_s
+}
+
 /// Draw `n` Poisson arrivals for one class stream.
 fn poisson_stream(
     seed: u64,
@@ -99,9 +114,7 @@ fn poisson_stream(
     let mut t = 0.0_f64;
     (0..n)
         .map(|_| {
-            // Inverse-CDF exponential gap; 1 - u in (0, 1] avoids ln(0).
-            let u = rng.uniform();
-            t += -(1.0 - u).ln() / rate_rps;
+            t += exp_draw(&mut rng, 1.0 / rate_rps);
             let (size, reps) = menu[rng.below(menu.len() as u64) as usize];
             Arrival {
                 at: t,
@@ -112,6 +125,149 @@ fn poisson_stream(
             }
         })
         .collect()
+}
+
+/// One phase of an [`OnOffArrivals`] trace (diagnostics/tests: lets a
+/// caller recompute per-phase empirical rates without re-deriving the
+/// phase timeline).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseSpan {
+    /// True for the burst ("on") phase.
+    pub burst: bool,
+    /// Phase start, virtual seconds.
+    pub start: f64,
+    /// Phase end, virtual seconds.
+    pub end: f64,
+}
+
+/// A deterministic bursty on/off (two-state Markov-modulated Poisson)
+/// arrival process over a shape menu.
+///
+/// The stream starts in the burst phase. Phase durations are
+/// exponential with means `mean_on_s` / `mean_off_s`; within a phase,
+/// inter-arrival gaps are exponential at that phase's rate. Both the
+/// modulation and the arrivals draw from one [`crate::rng::Rng`]
+/// stream, so the same `(seed, rates, means, menu)` always yields the
+/// same trace. The sampler is exact: at a phase switch the pending gap
+/// is discarded and redrawn at the new rate, which is correct by
+/// memorylessness of the exponential.
+#[derive(Debug, Clone)]
+pub struct OnOffArrivals {
+    /// Offered load inside a burst, requests per virtual second.
+    pub rate_on_rps: f64,
+    /// Offered load between bursts, requests per virtual second.
+    pub rate_off_rps: f64,
+    /// Mean burst-phase duration, seconds.
+    pub mean_on_s: f64,
+    /// Mean quiet-phase duration, seconds.
+    pub mean_off_s: f64,
+    /// The shapes tenants submit, drawn uniformly.
+    pub menu: Vec<(GemmSize, u32)>,
+    /// Trace seed.
+    pub seed: u64,
+}
+
+impl OnOffArrivals {
+    /// A burst/quiet process, seeded by `seed`.
+    ///
+    /// Rates and phase means must be positive, the burst rate must
+    /// exceed the quiet rate (otherwise it is not a burst), and `menu`
+    /// must be non-empty.
+    pub fn new(
+        rate_on_rps: f64,
+        rate_off_rps: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+        menu: Vec<(GemmSize, u32)>,
+        seed: u64,
+    ) -> Self {
+        assert!(rate_off_rps > 0.0, "quiet rate must be positive");
+        assert!(
+            rate_on_rps > rate_off_rps,
+            "burst rate must exceed the quiet rate"
+        );
+        assert!(
+            mean_on_s > 0.0 && mean_off_s > 0.0,
+            "phase means must be positive"
+        );
+        assert!(!menu.is_empty(), "arrival menu must be non-empty");
+        OnOffArrivals {
+            rate_on_rps,
+            rate_off_rps,
+            mean_on_s,
+            mean_off_s,
+            menu,
+            seed,
+        }
+    }
+
+    /// The burst-to-quiet rate ratio the process is specified with.
+    pub fn rate_ratio(&self) -> f64 {
+        self.rate_on_rps / self.rate_off_rps
+    }
+
+    /// Long-run average offered rate (phase-mean-weighted).
+    pub fn mean_rate_rps(&self) -> f64 {
+        (self.rate_on_rps * self.mean_on_s + self.rate_off_rps * self.mean_off_s)
+            / (self.mean_on_s + self.mean_off_s)
+    }
+
+    /// Materialize the first `n` arrivals (all [`QosClass::Standard`],
+    /// no SLO).
+    pub fn trace(&self, n: usize) -> Vec<Arrival> {
+        self.trace_with_phases(n).0
+    }
+
+    /// Like [`OnOffArrivals::trace`], but also return the phase
+    /// timeline that generated the arrivals. The final phase is clamped
+    /// to the last arrival, so per-phase empirical rates
+    /// (`count / span`) are unbiased by truncation.
+    pub fn trace_with_phases(&self, n: usize) -> (Vec<Arrival>, Vec<PhaseSpan>) {
+        // Domain-separate from the machine seeds and the plain Poisson
+        // stream.
+        let mut rng = Rng::new(self.seed ^ 0x0F0F_A55A_0B05_7EAD);
+        let mut arrivals = Vec::with_capacity(n);
+        let mut phases: Vec<PhaseSpan> = Vec::new();
+        let mut burst = true;
+        let mut start = 0.0_f64;
+        while arrivals.len() < n {
+            let (rate, mean) = if burst {
+                (self.rate_on_rps, self.mean_on_s)
+            } else {
+                (self.rate_off_rps, self.mean_off_s)
+            };
+            let end = start + exp_draw(&mut rng, mean);
+            let mut at = start;
+            let mut truncated_at = None;
+            loop {
+                let gap = exp_draw(&mut rng, 1.0 / rate);
+                if at + gap > end {
+                    break;
+                }
+                at += gap;
+                let (size, reps) = self.menu[rng.below(self.menu.len() as u64) as usize];
+                arrivals.push(Arrival {
+                    at,
+                    size,
+                    reps,
+                    class: QosClass::Standard,
+                    deadline_s: None,
+                });
+                if arrivals.len() == n {
+                    truncated_at = Some(at);
+                    break;
+                }
+            }
+            phases.push(PhaseSpan {
+                burst,
+                start,
+                end: truncated_at.unwrap_or(end),
+            });
+            start = end;
+            burst = !burst;
+        }
+        (arrivals, phases)
+    }
 }
 
 /// One tier's offered load inside a [`MixedArrivals`] mix.
@@ -247,6 +403,104 @@ mod tests {
                 "menu entry {size:?} never drawn"
             );
         }
+    }
+
+    #[test]
+    fn on_off_trace_is_deterministic_and_time_ordered() {
+        let p = OnOffArrivals::new(8.0, 0.5, 3.0, 6.0, menu(), 13);
+        let a = p.trace(256);
+        assert_eq!(a.len(), 256);
+        assert_eq!(a, p.trace(256));
+        let q = OnOffArrivals::new(8.0, 0.5, 3.0, 6.0, menu(), 14);
+        assert_ne!(a, q.trace(256));
+        let mut prev = 0.0;
+        for x in &a {
+            assert!(x.at > prev, "non-increasing arrival at {}", x.at);
+            prev = x.at;
+        }
+    }
+
+    #[test]
+    fn on_off_empirical_burst_rate_ratio_matches_spec() {
+        // Spec: bursts at 8 req/s for ~3 s, quiet at 0.5 req/s for
+        // ~6 s — a 16x modulation.
+        let p = OnOffArrivals::new(8.0, 0.5, 3.0, 6.0, menu(), 29);
+        assert!((p.rate_ratio() - 16.0).abs() < 1e-12);
+        let (trace, phases) = p.trace_with_phases(6000);
+        assert_eq!(trace.len(), 6000);
+        // Phases tile the timeline, alternating burst/quiet from burst.
+        let mut expect_burst = true;
+        let mut cursor = 0.0;
+        for ph in &phases {
+            assert_eq!(ph.burst, expect_burst);
+            assert!(ph.start >= cursor - 1e-12, "phases overlap");
+            assert!(ph.end >= ph.start);
+            cursor = ph.end;
+            expect_burst = !expect_burst;
+        }
+        // Empirical per-phase rates recover the spec.
+        let (mut t_on, mut t_off) = (0.0_f64, 0.0_f64);
+        let (mut n_on, mut n_off) = (0usize, 0usize);
+        for ph in &phases {
+            let count = trace
+                .iter()
+                .filter(|a| a.at > ph.start && a.at <= ph.end + 1e-12)
+                .count();
+            if ph.burst {
+                t_on += ph.end - ph.start;
+                n_on += count;
+            } else {
+                t_off += ph.end - ph.start;
+                n_off += count;
+            }
+        }
+        assert_eq!(n_on + n_off, 6000, "every arrival belongs to a phase");
+        let rate_on = n_on as f64 / t_on;
+        let rate_off = n_off as f64 / t_off;
+        assert!(
+            (rate_on / 8.0 - 1.0).abs() < 0.15,
+            "burst rate {rate_on} vs spec 8.0"
+        );
+        assert!(
+            (rate_off / 0.5 - 1.0).abs() < 0.30,
+            "quiet rate {rate_off} vs spec 0.5"
+        );
+        let ratio = rate_on / rate_off;
+        assert!(
+            (ratio / p.rate_ratio() - 1.0).abs() < 0.30,
+            "empirical burst ratio {ratio} vs spec {}",
+            p.rate_ratio()
+        );
+        // And the long-run average rate figure is phase-weighted.
+        let avg = p.mean_rate_rps();
+        assert!((avg - (8.0 * 3.0 + 0.5 * 6.0) / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn on_off_burstiness_exceeds_poisson_variance() {
+        // Dispersion check: count arrivals in fixed windows; an MMPP
+        // must be over-dispersed (variance > mean) where Poisson sits
+        // at variance ~= mean. This is what makes the trace a harder
+        // queueing workload at equal average rate.
+        let p = OnOffArrivals::new(8.0, 0.5, 3.0, 6.0, menu(), 5);
+        let trace = p.trace(4000);
+        let horizon = trace.last().unwrap().at;
+        let window = 3.0_f64;
+        let bins = (horizon / window).floor() as usize;
+        let mut counts = vec![0.0_f64; bins];
+        for a in &trace {
+            let b = (a.at / window) as usize;
+            if b < bins {
+                counts[b] += 1.0;
+            }
+        }
+        let mean = counts.iter().sum::<f64>() / bins as f64;
+        let var =
+            counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / bins as f64;
+        assert!(
+            var > 2.0 * mean,
+            "on/off trace not over-dispersed: var {var} mean {mean}"
+        );
     }
 
     #[test]

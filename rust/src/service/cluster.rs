@@ -7,18 +7,24 @@
 //! heap of timestamped events:
 //!
 //! * **arrival** — a request reaches the front-end (either submitted
-//!   "now" or scheduled by an [`super::arrivals`] trace). It passes the
-//!   [`Admission`] gate once; a deadline-bound request then faces
-//!   **deadline admission**: the machine-level feasibility probe (the
-//!   deadline-constrained LP reused from the energy formulation) plus
-//!   the queueing-aware sojourn prediction at the best shard. An SLO
-//!   predicted infeasible is turned away as [`ExecMode::Denied`] or
+//!   "now" or scheduled by an [`super::arrivals`] trace). It is scored
+//!   against **every shard's own [`Admission`] gate** — one gate per
+//!   shard, each predicting with that shard's installation-time
+//!   profile, so a heterogeneous cluster (see
+//!   [`crate::config::presets::hetero_mix`]) routes a large GEMM to its
+//!   GPU-heavy shard and a tiny one to its CPU shard from predictions
+//!   alone. A deadline-bound request then faces **deadline admission**:
+//!   only shards whose *own* model passes the machine-level feasibility
+//!   probe (the deadline-constrained LP reused from the energy
+//!   formulation) are eligible, and the queueing-aware sojourn
+//!   prediction at the chosen shard must fit the slack guard band. An
+//!   SLO no shard can meet is turned away as [`ExecMode::Denied`] or
 //!   demoted to [`QosClass::Batch`] with the SLO stripped, per
 //!   [`super::DeadlinePolicy`]. Accepted requests route to the shard
 //!   with the earliest **class-weighted predicted finish**:
 //!   `max(shard free time, now) + class-discounted backlog + this
-//!   request`, all from admission-time predictions, so routing never
-//!   re-runs the optimizer;
+//!   request under this shard's model`, all from admission-time
+//!   predictions, so routing never re-runs the optimizer;
 //! * **wake** — scheduled behind every arrival at the same timestamp so
 //!   that simultaneous arrivals are all admitted (and visible to queue
 //!   policies and the bypass scan) before any of them starts a machine;
@@ -27,14 +33,17 @@
 //!   (under the victim's own weighted pick, so high classes move first)
 //!   from the shard with the largest *class-weighted* backlog — a
 //!   minute of queued interactive work makes a hotter victim than a
-//!   minute of batch.
+//!   minute of batch. A stolen request is **re-gated under the thief's
+//!   own model** before it is enqueued: the victim's verdict (co-exec
+//!   vs standalone, best device, service prediction) may be wrong —
+//!   even out of device range — on a different machine.
 //!
 //! Ties in virtual time break by submission sequence number, which
 //! keeps every replay byte-identical for a fixed seed. A one-shard
 //! cluster degenerates to exactly the old single-machine behaviour —
 //! [`super::Server`] is now a thin wrapper over `Cluster`.
 
-use super::admission::Admission;
+use super::admission::{Admission, GateVerdict};
 use super::arrivals::Arrival;
 use super::qos::{DeadlinePolicy, QosClass};
 use super::queue::QueuedRequest;
@@ -46,6 +55,25 @@ use crate::coordinator::Pipeline;
 use crate::workload::GemmSize;
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
+
+/// Which performance model the front-end's prediction call sites use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GatePolicy {
+    /// One [`Admission`] gate per shard, each predicting with that
+    /// shard's own installation-time profile. Routing, deadline
+    /// feasibility and steal re-planning all consult the model of the
+    /// shard actually being considered. The only correct choice on a
+    /// heterogeneous cluster, and the default everywhere.
+    #[default]
+    PerShard,
+    /// The pre-heterogeneous behaviour, kept **only** as the ablation
+    /// baseline for benches and acceptance tests: a single gate built
+    /// from shard 0's model predicts for every shard, as if the cluster
+    /// were a fleet of clones. On genuinely mixed machines its
+    /// standalone device pick can be out of range on a smaller shard
+    /// and is clamped so the baseline can run at all.
+    Shard0,
+}
 
 /// Cluster construction options.
 #[derive(Debug, Clone)]
@@ -59,6 +87,9 @@ pub struct ClusterOptions {
     /// Let an idle shard steal queued work from the most backlogged
     /// shard instead of sitting idle.
     pub work_stealing: bool,
+    /// Whose model predicts at the front-end (see [`GatePolicy`];
+    /// default [`GatePolicy::PerShard`]).
+    pub gate: GatePolicy,
 }
 
 impl Default for ClusterOptions {
@@ -67,8 +98,18 @@ impl Default for ClusterOptions {
             shards: 1,
             shard: ServerOptions::default(),
             work_stealing: true,
+            gate: GatePolicy::PerShard,
         }
     }
+}
+
+/// One routing decision: the chosen shard, *its* gate verdict and the
+/// class-weighted predicted finish it was chosen on.
+#[derive(Debug, Clone, Copy)]
+struct Routed {
+    shard: usize,
+    verdict: GateVerdict,
+    finish: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -109,11 +150,77 @@ impl Ord for Event {
     }
 }
 
+/// Assemble a [`Cluster`] from *distinct* machine configs — the
+/// heterogeneous construction path. Each machine becomes one shard,
+/// profiled independently at install time (simulator seeded
+/// `seed + shard index`), so the per-shard admission gates genuinely
+/// disagree wherever the hardware does.
+///
+/// ```no_run
+/// use poas::config::presets;
+/// use poas::service::HeterogeneousSpec;
+///
+/// let cluster = HeterogeneousSpec::new(7)
+///     .machine(presets::gpu_node())
+///     .machines(presets::cpu_node(), 2)
+///     .build();
+/// assert_eq!(cluster.num_shards(), 3);
+/// ```
+#[derive(Debug, Clone)]
+pub struct HeterogeneousSpec {
+    machines: Vec<MachineConfig>,
+    seed: u64,
+    opts: ClusterOptions,
+}
+
+impl HeterogeneousSpec {
+    /// An empty spec; shard `i` will profile on a simulator seeded
+    /// `seed + i`.
+    pub fn new(seed: u64) -> Self {
+        HeterogeneousSpec {
+            machines: Vec::new(),
+            seed,
+            opts: ClusterOptions::default(),
+        }
+    }
+
+    /// Append one shard running `cfg`.
+    pub fn machine(mut self, cfg: MachineConfig) -> Self {
+        self.machines.push(cfg);
+        self
+    }
+
+    /// Append `count` shards all running `cfg` (each still profiles on
+    /// its own seed, so their fitted models differ by profiling noise).
+    pub fn machines(mut self, cfg: MachineConfig, count: usize) -> Self {
+        for _ in 0..count {
+            self.machines.push(cfg.clone());
+        }
+        self
+    }
+
+    /// Replace the serving options (shard count is taken from the
+    /// machine list, not from `opts.shards`).
+    pub fn options(mut self, opts: ClusterOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Profile every machine and build the cluster. Panics when no
+    /// machine was added.
+    pub fn build(self) -> Cluster {
+        Cluster::from_machines(&self.machines, self.seed, self.opts)
+    }
+}
+
 /// A request-serving POAS deployment across one or more machines.
 #[derive(Debug, Clone)]
 pub struct Cluster {
     shards: Vec<ExecutorShard>,
-    admission: Admission,
+    /// Per-shard admission gates under [`GatePolicy::PerShard`]
+    /// (`admissions[i]` predicts with `shards[i].model`); a single
+    /// shard-0 gate under the legacy [`GatePolicy::Shard0`] ablation.
+    admissions: Vec<Admission>,
     opts: ClusterOptions,
     events: BinaryHeap<Reverse<Event>>,
     seq: u64,
@@ -123,13 +230,27 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    /// Build a cluster of `opts.shards` machines from `cfg`: shard `i`
-    /// is profiled at installation time on its own simulator seeded
-    /// `seed + i`; the admission gate predicts with shard 0's profile.
+    /// Build a homogeneous cluster of `opts.shards` machines from
+    /// `cfg`: shard `i` is profiled at installation time on its own
+    /// simulator seeded `seed + i`, and every shard gets its own
+    /// admission gate over its own fitted profile.
     pub fn new(cfg: &MachineConfig, seed: u64, opts: ClusterOptions) -> Self {
         let n = opts.shards.max(1);
         let pipelines = (0..n)
             .map(|i| Pipeline::for_simulated_machine(cfg, seed.wrapping_add(i as u64)))
+            .collect();
+        Self::from_pipelines(pipelines, opts)
+    }
+
+    /// Build a heterogeneous cluster: one shard per machine config,
+    /// each profiled at install time on its own simulator seeded
+    /// `seed + shard index` (see also [`HeterogeneousSpec`]).
+    pub fn from_machines(cfgs: &[MachineConfig], seed: u64, opts: ClusterOptions) -> Self {
+        assert!(!cfgs.is_empty(), "cluster needs at least one machine");
+        let pipelines = cfgs
+            .iter()
+            .enumerate()
+            .map(|(i, cfg)| Pipeline::for_simulated_machine(cfg, seed.wrapping_add(i as u64)))
             .collect();
         Self::from_pipelines(pipelines, opts)
     }
@@ -150,21 +271,35 @@ impl Cluster {
             .enumerate()
             .map(|(i, p)| ExecutorShard::from_pipeline(i, p, &opts.shard))
             .collect();
-        let admission = Admission::new(
-            shards[0].model.clone(),
-            opts.shard.min_gain,
-            opts.shard.overhead_s,
-            opts.shard.gate_capacity,
-        );
+        let gate_of = |model: &crate::predict::PerfModel| {
+            Admission::new(
+                model.clone(),
+                opts.shard.min_gain,
+                opts.shard.overhead_s,
+                opts.shard.gate_capacity,
+            )
+        };
+        let admissions = match opts.gate {
+            GatePolicy::PerShard => shards.iter().map(|s| gate_of(&s.model)).collect(),
+            GatePolicy::Shard0 => vec![gate_of(&shards[0].model)],
+        };
         Cluster {
             shards,
-            admission,
+            admissions,
             opts,
             events: BinaryHeap::new(),
             seq: 0,
             clock: 0.0,
             served: Vec::new(),
             next_id: 0,
+        }
+    }
+
+    /// Index into `admissions` of the gate that predicts for `shard`.
+    fn gate_idx(&self, shard: usize) -> usize {
+        match self.opts.gate {
+            GatePolicy::PerShard => shard,
+            GatePolicy::Shard0 => 0,
         }
     }
 
@@ -183,9 +318,18 @@ impl Cluster {
         &self.shards[i]
     }
 
-    /// The admission component (diagnostics/tests).
+    /// Shard 0's admission gate (diagnostics/tests; exact for the
+    /// single-machine [`super::Server`], which has only one shard).
     pub fn admission(&self) -> &Admission {
-        &self.admission
+        &self.admissions[0]
+    }
+
+    /// The admission gate that predicts for shard `i` (diagnostics /
+    /// tests). Under [`GatePolicy::Shard0`] every shard maps to the one
+    /// legacy gate.
+    pub fn admission_for(&self, i: usize) -> &Admission {
+        assert!(i < self.shards.len(), "no shard {i}");
+        &self.admissions[self.gate_idx(i)]
     }
 
     /// Requests not yet dispatched: queued on shards or still in the
@@ -267,21 +411,81 @@ impl Cluster {
         self.events.push(Reverse(Event { time, seq, kind }));
     }
 
-    /// Route an admitted request to the shard with the earliest
-    /// class-weighted predicted finish (ties: lowest shard index).
-    /// Returns `(shard, predicted finish)` so deadline admission can
-    /// reuse the sojourn estimate without recomputing it.
-    fn route(&self, now: f64, predicted_s: f64, class: QosClass) -> (usize, f64) {
-        let mut best = 0usize;
-        let mut best_t = f64::INFINITY;
-        for (i, sh) in self.shards.iter().enumerate() {
-            let t = sh.predicted_finish_for(now, predicted_s, class);
-            if t < best_t {
-                best_t = t;
-                best = i;
+    /// Gate `req` on shard `s`'s own admission gate and, under the
+    /// legacy [`GatePolicy::Shard0`] ablation, clamp the standalone
+    /// device pick into `s`'s device range (shard 0's model can name a
+    /// device a smaller heterogeneous shard does not have).
+    fn gate_on(&mut self, s: usize, req: &GemmRequest) -> GateVerdict {
+        let g = self.gate_idx(s);
+        let (co_execute, mut best_device, predicted_s) =
+            self.admissions[g].admit(req.size, req.reps);
+        match self.opts.gate {
+            GatePolicy::Shard0 => {
+                best_device = best_device.min(self.shards[s].num_devices() - 1);
+            }
+            GatePolicy::PerShard => {
+                // The shard's own model named the device: out of range
+                // would mean the gate and the machine disagree — a bug
+                // worth failing loudly on, not remapping.
+                debug_assert!(
+                    best_device < self.shards[s].num_devices(),
+                    "shard {s}'s own gate picked device {best_device} of {}",
+                    self.shards[s].num_devices()
+                );
             }
         }
-        (best, best_t)
+        (co_execute, best_device, predicted_s)
+    }
+
+    /// Route `req` to the shard with the earliest class-weighted
+    /// predicted finish **under each shard's own gate verdict** (ties:
+    /// lowest shard index). With `deadline_only`, shards whose own
+    /// model fails the machine-level SLO feasibility probe are skipped
+    /// — `None` then means *no* shard can meet the deadline at all
+    /// (without the restriction a shard is always found). Returns the
+    /// chosen shard, its gate verdict and its predicted finish, so
+    /// deadline admission and the enqueue reuse the same predictions.
+    fn route(&mut self, now: f64, req: &GemmRequest, deadline_only: bool) -> Option<Routed> {
+        let mut best: Option<Routed> = None;
+        for i in 0..self.shards.len() {
+            let verdict = self.gate_on(i, req);
+            if deadline_only {
+                let deadline_s = req.deadline_s.expect("deadline_only needs an SLO");
+                let g = self.gate_idx(i);
+                if !self.admissions[g].deadline_feasible(
+                    verdict.0,
+                    verdict.2,
+                    req.size,
+                    req.reps,
+                    deadline_s,
+                ) {
+                    continue;
+                }
+            }
+            let finish = self.shards[i].predicted_finish_for(now, verdict.2, req.class);
+            let wins = match &best {
+                None => true,
+                Some(b) => finish < b.finish,
+            };
+            if wins {
+                best = Some(Routed {
+                    shard: i,
+                    verdict,
+                    finish,
+                });
+            }
+        }
+        best
+    }
+
+    /// The smallest machine-level service prediction any shard's own
+    /// gate gives `req` — the backlog-free figure denial records carry,
+    /// so the denial log is stable across queue states (every gate
+    /// lookup is memoized, making this an O(shards) memo read).
+    fn best_service_prediction(&mut self, req: &GemmRequest) -> f64 {
+        (0..self.shards.len())
+            .map(|i| self.gate_on(i, req).2)
+            .fold(f64::INFINITY, f64::min)
     }
 
     /// The shard with the largest class-weighted backlog other than
@@ -318,6 +522,7 @@ impl Cluster {
             class: req.class,
             deadline_s: req.deadline_s,
             mode: ExecMode::Denied,
+            shard: None,
             arrival: now,
             start: now,
             finish: now,
@@ -332,11 +537,17 @@ impl Cluster {
         let start = self.shards[s].free_at().max(at);
         if let Some(res) = self.shards[s].dispatch_next(start, &mut self.served) {
             if res.replanned {
-                // A shard observed drift and refreshed its model: the
-                // front-end gate adopts it so future admissions (and
-                // their memoized verdicts) track the live machine.
+                // This shard observed drift and refreshed its model:
+                // *its* gate adopts it so future admissions (and their
+                // memoized verdicts) track the live machine; other
+                // shards' gates are untouched. (Under the legacy
+                // [`GatePolicy::Shard0`] ablation every shard maps to
+                // the one shared gate, which therefore adopts whichever
+                // shard replanned last — exactly the pre-heterogeneous
+                // behaviour the baseline exists to reproduce.)
                 let model = self.shards[s].model.clone();
-                self.admission.refresh(model);
+                let g = self.gate_idx(s);
+                self.admissions[g].refresh(model);
             }
             self.push_event(res.finish, EventKind::ShardFree(s));
         }
@@ -351,27 +562,30 @@ impl Cluster {
         self.clock = self.clock.max(ev.time);
         match ev.kind {
             EventKind::Arrival(mut req) => {
-                let (co_execute, best_device, predicted_s) =
-                    self.admission.admit(req.size, req.reps);
-                let (mut target, finish) = self.route(ev.time, predicted_s, req.class);
-                // Deadline admission: an SLO predicted infeasible —
-                // machine-level (the deadline-constrained LP / service
-                // prediction) or queueing-level (the routed shard's
-                // predicted sojourn, within the slack guard band) — is
-                // turned away (or demoted, per policy) *now*, before it
+                // Deadline admission: an SLO no shard can meet —
+                // machine-level (no shard's own model passes the
+                // deadline-constrained LP / service prediction) or
+                // queueing-level (the best feasible shard's predicted
+                // sojourn overruns the slack guard band) — is turned
+                // away (or demoted, per policy) *now*, before it
                 // consumes queue space it cannot use.
+                let mut routed = None;
                 if let Some(deadline_s) = req.deadline_s {
-                    let feasible = self.admission.deadline_feasible(
-                        co_execute,
-                        predicted_s,
-                        req.size,
-                        req.reps,
-                        deadline_s,
-                    ) && finish - ev.time
-                        <= self.opts.shard.deadline_slack * deadline_s;
-                    if !feasible {
+                    routed = self
+                        .route(ev.time, &req, true)
+                        .filter(|r| {
+                            r.finish - ev.time <= self.opts.shard.deadline_slack * deadline_s
+                        });
+                    if routed.is_none() {
                         match self.opts.shard.deadline_policy {
                             DeadlinePolicy::Reject => {
+                                // Record the denial with the best
+                                // machine-level service prediction any
+                                // shard's own gate offers — backlog-
+                                // free, so the same request denied
+                                // under different queue states logs the
+                                // same figure.
+                                let predicted_s = self.best_service_prediction(&req);
                                 self.deny(ev.time, req, predicted_s);
                                 return true;
                             }
@@ -379,14 +593,28 @@ impl Cluster {
                                 // Best-effort from here on: the SLO is
                                 // given up, not silently missed — and
                                 // the route is recomputed for the new
-                                // class.
+                                // class below.
                                 req.class = QosClass::Batch;
                                 req.deadline_s = None;
-                                target = self.route(ev.time, predicted_s, req.class).0;
                             }
                         }
                     }
                 }
+                // Every shard is scored with its *own* gate's verdict:
+                // on a heterogeneous cluster the per-shard predictions
+                // (and even the co-execute decision) legitimately
+                // disagree, and the enqueue below records the verdict
+                // of the shard actually chosen.
+                let Routed {
+                    shard: target,
+                    verdict: (co_execute, best_device, predicted_s),
+                    ..
+                } = match routed {
+                    Some(r) => r,
+                    None => self
+                        .route(ev.time, &req, false)
+                        .expect("a cluster has at least one shard"),
+                };
                 self.shards[target].enqueue(QueuedRequest {
                     req,
                     arrival: ev.time,
@@ -408,10 +636,62 @@ impl Cluster {
                     self.dispatch_on(s, ev.time);
                 } else if self.opts.work_stealing {
                     if let Some(victim) = self.steal_victim(s) {
-                        if let Some(q) = self.shards[victim].yield_next() {
-                            self.shards[s].note_steal();
-                            self.shards[s].enqueue(q);
-                            self.dispatch_on(s, ev.time);
+                        // Peek the victim's offer before committing:
+                        // popping and then vetoing would burn one of
+                        // the head class's weighted-round-robin turns
+                        // without a dispatch.
+                        let offer = self.shards[victim]
+                            .peek_next()
+                            .map(|q| (q.req, q.arrival));
+                        if let Some((req, arrival)) = offer {
+                            // Re-plan the offered request under the
+                            // thief's own model: the victim's verdict
+                            // (co-exec vs standalone, best device,
+                            // service prediction) was computed against
+                            // a different machine, so the thief re-runs
+                            // its gate (memoized) and dispatch will use
+                            // the thief's PlanCache.
+                            let (co_execute, best_device, predicted_s) =
+                                self.gate_on(s, &req);
+                            // Deadline guard: admission promised this
+                            // SLO against a shard whose own model could
+                            // meet it — a thief whose machine cannot
+                            // (e.g. the CPU node eyeing a GPU-sized
+                            // request) must not un-promise it. The
+                            // budget is what *remains* of the sojourn
+                            // SLO at steal time, under the same slack
+                            // band admission used — time already spent
+                            // queued on the victim is gone. Veto the
+                            // whole attempt (conservative: the victim's
+                            // weighted pick chose this offer; we do not
+                            // scan past it for easier prey).
+                            let slo_safe = match req.deadline_s {
+                                None => true,
+                                Some(d) => {
+                                    let remaining = self.opts.shard.deadline_slack * d
+                                        - (ev.time - arrival);
+                                    let g = self.gate_idx(s);
+                                    self.admissions[g].deadline_feasible(
+                                        co_execute,
+                                        predicted_s,
+                                        req.size,
+                                        req.reps,
+                                        remaining,
+                                    )
+                                }
+                            };
+                            if slo_safe {
+                                let mut q = self.shards[victim]
+                                    .yield_next()
+                                    .expect("peeked offer must still be queued");
+                                debug_assert_eq!(q.req.id, req.id, "offer changed under us");
+                                q.co_execute = co_execute;
+                                q.best_device = best_device;
+                                q.predicted_s = predicted_s;
+                                self.shards[s].note_steal();
+                                self.shards[s].enqueue(q);
+                                self.dispatch_on(s, ev.time);
+                            }
                         }
                     }
                 }
@@ -559,6 +839,77 @@ mod tests {
         ids.sort_unstable();
         let expect: Vec<u64> = (0..19).collect();
         assert_eq!(ids, expect);
+    }
+
+    #[test]
+    fn per_shard_gates_route_by_each_shards_own_predictions() {
+        let mut c = Cluster::from_machines(
+            &[presets::gpu_node(), presets::cpu_node()],
+            0,
+            ClusterOptions::default(),
+        );
+        assert_eq!(c.num_shards(), 2);
+        assert_ne!(
+            c.admission_for(0).model().fingerprint(),
+            c.admission_for(1).model().fingerprint(),
+            "per-shard gates must predict with per-shard models"
+        );
+        assert_eq!(c.shard(1).num_devices(), 1);
+        // Submitted tiny-first so both shards are idle when the tiny
+        // request routes: the decision is purely the per-shard service
+        // predictions, not backlog avoidance.
+        let tiny = c.submit(GemmSize::square(300), 2);
+        let big = c.submit(big(), 2);
+        let report = c.run_to_completion();
+        assert_eq!(report.served.len(), 2);
+        let r_tiny = report.request(tiny).unwrap();
+        let r_big = report.request(big).unwrap();
+        assert_eq!(
+            r_tiny.shard,
+            Some(1),
+            "tiny GEMM belongs on the CPU node (stronger host, no copies)"
+        );
+        assert_eq!(
+            r_big.shard,
+            Some(0),
+            "large GEMM belongs on the GPU-heavy node"
+        );
+        assert_eq!(r_big.mode, ExecMode::CoExec);
+        assert!(matches!(r_tiny.mode, ExecMode::Standalone { device: 0 }));
+        // Device-count asymmetry flows through the records and stats.
+        assert_eq!(r_big.shares.len(), 3);
+        assert_eq!(r_tiny.shares.len(), 1);
+        assert_ne!(report.shards[0].model_fp, report.shards[1].model_fp);
+        assert!(report.placement_quality() > 0.0);
+    }
+
+    #[test]
+    fn shard0_gate_is_the_legacy_uniform_baseline() {
+        let opts = ClusterOptions {
+            gate: GatePolicy::Shard0,
+            ..Default::default()
+        };
+        let mut c = Cluster::from_machines(&[presets::gpu_node(), presets::cpu_node()], 1, opts);
+        // One legacy gate, mapped to every shard.
+        assert_eq!(
+            c.admission_for(0).model().fingerprint(),
+            c.admission_for(1).model().fingerprint(),
+            "the ablation baseline predicts with one model everywhere"
+        );
+        // A standalone-bound request whose best device under shard 0's
+        // model does not exist on the CPU shard must still complete
+        // (clamped), wherever it lands.
+        for _ in 0..4 {
+            c.submit(GemmSize::square(300), 2);
+        }
+        let report = c.run_to_completion();
+        assert_eq!(report.served.len(), 4);
+        for r in &report.served {
+            assert!(matches!(r.mode, ExecMode::Standalone { .. }));
+            if r.shard == Some(1) {
+                assert!(matches!(r.mode, ExecMode::Standalone { device: 0 }));
+            }
+        }
     }
 
     #[test]

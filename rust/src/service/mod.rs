@@ -11,28 +11,36 @@
 //!   (Interactive / Standard / Batch with 4 : 2 : 1 scheduling weights)
 //!   attached to every [`GemmRequest`], plus the [`DeadlinePolicy`]
 //!   deciding whether an infeasible SLO is rejected or down-classed;
-//! * [`admission`] — the [`Admission`] front-end gate: every request
-//!   passes the §6 suitability detector once; verdicts and service
-//!   predictions are memoized in a bounded LRU keyed by
-//!   `(shape, model epoch)`; deadline-bound requests are additionally
-//!   probed with the deadline-constrained LP reused from the energy
-//!   formulation;
+//! * [`admission`] — the [`Admission`] gates: **one per shard**, each
+//!   running the §6 suitability detector against *that shard's*
+//!   installation-time model, so heterogeneous clusters score every
+//!   arrival with the profile of the machine actually being considered;
+//!   verdicts and service predictions are memoized in a bounded LRU
+//!   keyed by `(shape, reps, shard epoch)`; deadline-bound requests are
+//!   additionally probed with the deadline-constrained LP reused from
+//!   the energy formulation, again per shard;
 //! * [`shard`] — the [`ExecutorShard`]: one machine's simulator,
 //!   installation-time profile, [`PlanCache`], local queue and optional
 //!   dynamic-scheduler loop; dispatch (including the standalone bypass
 //!   pairing and per-tenant completion attribution) is shard-local, and
 //!   an infeasible plan completes as [`ExecMode::Rejected`] instead of
 //!   panicking;
-//! * [`cluster`] — the [`Cluster`] front-end: N shards driven by an
-//!   event-driven virtual-time loop (a binary heap of arrival / wake /
-//!   shard-free events), deadline-admitting SLO-bound arrivals against
-//!   the predicted sojourn, routing each accepted request to the shard
-//!   with the earliest class-weighted predicted finish, and letting
-//!   idle shards steal queued work from the shard with the largest
-//!   class-weighted backlog;
+//! * [`cluster`] — the [`Cluster`] front-end: N shards (possibly over
+//!   *different* machines — see [`HeterogeneousSpec`],
+//!   [`Cluster::from_machines`] and the node presets in
+//!   [`crate::config::presets`]) driven by an event-driven virtual-time
+//!   loop (a binary heap of arrival / wake / shard-free events),
+//!   deadline-admitting SLO-bound arrivals against the predicted
+//!   sojourn at shards whose own model can meet the SLO, routing each
+//!   accepted request to the shard with the earliest class-weighted
+//!   predicted finish *under that shard's own gate verdict*, and
+//!   letting idle shards steal queued work from the shard with the
+//!   largest class-weighted backlog (stolen requests are re-gated under
+//!   the thief's model);
 //! * [`arrivals`] — online arrival processes: deterministic Poisson
 //!   traces ([`PoissonArrivals`]), per-class Poisson mixes
-//!   ([`MixedArrivals`]) and replayable fixed traces, so reports
+//!   ([`MixedArrivals`]), bursty Markov-modulated on/off streams
+//!   ([`OnOffArrivals`]) and replayable fixed traces, so reports
 //!   measure queueing delay and p50/p99 sojourn time — per tier —
 //!   under offered load instead of draining a batch;
 //! * [`server`] — the classic single-machine [`Server`], now a thin
@@ -49,9 +57,13 @@
 //!   accounting the router reads, and the scan used by the standalone
 //!   bypass;
 //! * [`request`] — request/outcome records, per-shard stats and the
-//!   per-session latency/throughput report, now with per-class
-//!   breakdowns (p50/p99 sojourn, deadline-hit rate, denials) via
-//!   [`request::ClassBreakdown`].
+//!   per-session latency/throughput report, with per-class breakdowns
+//!   (p50/p99 sojourn, deadline-hit rate, denials) via
+//!   [`request::ClassBreakdown`] and per-shard model fingerprints plus
+//!   the realized-vs-predicted **placement quality** metric
+//!   ([`ShardStats::placement_ratio`],
+//!   [`ServiceReport::placement_quality`]) that shows whether routing's
+//!   per-shard predictions are honoured by the machines.
 //!
 //! See `rust/tests/service_scenarios.rs` for the deterministic scenario
 //! harness (batch and Poisson), `rust/benches/service_throughput.rs`
@@ -69,9 +81,9 @@ pub mod server;
 pub mod shard;
 
 pub use admission::Admission;
-pub use arrivals::{fixed_trace, Arrival, ClassLoad, MixedArrivals, PoissonArrivals};
+pub use arrivals::{fixed_trace, Arrival, ClassLoad, MixedArrivals, OnOffArrivals, PoissonArrivals};
 pub use cache::{LruMap, PlanCache};
-pub use cluster::{Cluster, ClusterOptions};
+pub use cluster::{Cluster, ClusterOptions, GatePolicy, HeterogeneousSpec};
 pub use qos::{DeadlinePolicy, QosClass};
 pub use queue::{QueuePolicy, QueuedRequest, RequestQueue};
 pub use request::{ClassBreakdown, ExecMode, GemmRequest, ServedRequest, ServiceReport, ShardStats};

@@ -169,13 +169,56 @@ impl RequestQueue {
         self.lanes[q.req.class.index()].push_front(q);
     }
 
+    /// The lane [`RequestQueue::pop_next`] would serve right now,
+    /// computed **without mutating** the credit state: compare each
+    /// non-empty lane's post-accrual credit (`credit + weight`).
+    /// Strict `>` keeps ties on the earlier (higher-priority) class —
+    /// exactly the pop's tie-break.
+    fn winning_lane(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for c in QosClass::ALL {
+            let i = c.index();
+            if self.lanes[i].is_empty() {
+                continue;
+            }
+            let credit = self.credit[i] + c.weight() as i64;
+            let wins = match best {
+                None => true,
+                Some(b) => credit > self.credit[b] + QosClass::ALL[b].weight() as i64,
+            };
+            if wins {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// The request [`RequestQueue::pop_next`] would return right now,
+    /// without removing it or advancing the round-robin state. Steal
+    /// offers consult this before committing to the pop: vetoing a
+    /// steal *after* popping would burn one of the head class's
+    /// weighted turns without any dispatch happening.
+    pub fn peek_next(&self) -> Option<&QueuedRequest> {
+        let lane = self.winning_lane()?;
+        match self.policy {
+            QueuePolicy::Fifo => self.lanes[lane].front(),
+            QueuePolicy::Spjf => self.lanes[lane]
+                .iter()
+                .enumerate()
+                .min_by(|(ia, a), (ib, b)| {
+                    a.predicted_s.total_cmp(&b.predicted_s).then(ia.cmp(ib))
+                })
+                .map(|(_, q)| q),
+        }
+    }
+
     /// Remove and return the next request to dispatch: smooth weighted
     /// round-robin across non-empty classes, then the within-class
     /// policy. Deterministic — ties in credit break toward the
-    /// higher-priority class.
+    /// higher-priority class (see [`RequestQueue::winning_lane`]).
     pub fn pop_next(&mut self) -> Option<QueuedRequest> {
+        let lane = self.winning_lane()?;
         let mut total: i64 = 0;
-        let mut best: Option<usize> = None;
         for c in QosClass::ALL {
             let i = c.index();
             if self.lanes[i].is_empty() {
@@ -185,17 +228,7 @@ impl RequestQueue {
             }
             self.credit[i] += c.weight() as i64;
             total += c.weight() as i64;
-            // Strict `>` keeps ties on the earlier (higher-priority)
-            // class.
-            let wins = match best {
-                None => true,
-                Some(b) => self.credit[i] > self.credit[b],
-            };
-            if wins {
-                best = Some(i);
-            }
         }
-        let lane = best?;
         self.credit[lane] -= total;
         self.pop_from_lane(lane)
     }
@@ -318,6 +351,31 @@ mod tests {
         rq.push_front(taken);
         assert_eq!(rq.pop_next().unwrap().req.id, 0);
         assert_eq!(rq.pop_next().unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn peek_next_matches_pop_and_never_mutates() {
+        for policy in [QueuePolicy::Fifo, QueuePolicy::Spjf] {
+            let mut rq = RequestQueue::new(policy);
+            for (id, t, class) in [
+                (0, 5.0, QosClass::Batch),
+                (1, 1.0, QosClass::Interactive),
+                (2, 3.0, QosClass::Interactive),
+                (3, 0.5, QosClass::Standard),
+            ] {
+                rq.push(q_class(id, t, true, class));
+            }
+            // Draining: every peek agrees with the pop that follows,
+            // and peeking repeatedly (a vetoed steal, retried) never
+            // advances the weighted round-robin.
+            while !rq.is_empty() {
+                let peeked = rq.peek_next().unwrap().req.id;
+                assert_eq!(rq.peek_next().unwrap().req.id, peeked, "peek mutated state");
+                let popped = rq.pop_next().unwrap().req.id;
+                assert_eq!(peeked, popped, "peek and pop disagree under {policy:?}");
+            }
+            assert!(rq.peek_next().is_none());
+        }
     }
 
     #[test]

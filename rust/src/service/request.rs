@@ -144,6 +144,10 @@ pub struct ServedRequest {
     pub deadline_s: Option<f64>,
     /// Execution mode chosen by the gate / bypass.
     pub mode: ExecMode,
+    /// Shard that served it (`None` for requests denied at the
+    /// front-end, which never reach a shard). On a heterogeneous
+    /// cluster this is the routing decision itself.
+    pub shard: Option<usize>,
     /// Virtual time the request entered the queue.
     pub arrival: f64,
     /// Virtual time its execution started.
@@ -196,6 +200,32 @@ pub struct ShardStats {
     /// ([`QosClass::index`] order; bypass riders count toward their own
     /// class, so the sum can exceed `dispatches`).
     pub served_by_class: [usize; super::qos::NUM_CLASSES],
+    /// Fingerprint of the [`crate::predict::PerfModel`] this shard
+    /// currently predicts with (see
+    /// [`crate::predict::PerfModel::fingerprint`]). Shards of a
+    /// heterogeneous cluster — or a shard whose dynamic scheduler
+    /// re-profiled after drift — disagree here.
+    pub model_fp: u64,
+    /// Sum of admission-time predicted service seconds over everything
+    /// this shard executed.
+    pub predicted_s: f64,
+    /// Sum of realized execution seconds over the same requests.
+    pub realized_s: f64,
+}
+
+impl ShardStats {
+    /// Placement quality of this shard: realized / predicted execution
+    /// seconds over everything it served. `1.0` means routing's
+    /// predictions matched the machine exactly; above `1.0` the shard
+    /// ran slower than the model that attracted the work (stale or
+    /// drifting profile); `None` before the first execution.
+    pub fn placement_ratio(&self) -> Option<f64> {
+        if self.predicted_s > 0.0 {
+            Some(self.realized_s / self.predicted_s)
+        } else {
+            None
+        }
+    }
 }
 
 /// Per-class aggregate view of a session (see
@@ -443,6 +473,54 @@ impl ServiceReport {
         t
     }
 
+    /// Cluster-wide placement quality: realized / predicted execution
+    /// seconds summed over every shard (`1.0` when nothing executed).
+    /// The benches gate on this — if it regresses far past 1, routing
+    /// is steering work with predictions the machines do not honour.
+    pub fn placement_quality(&self) -> f64 {
+        let predicted: f64 = self.shards.iter().map(|s| s.predicted_s).sum();
+        let realized: f64 = self.shards.iter().map(|s| s.realized_s).sum();
+        if predicted > 0.0 {
+            realized / predicted
+        } else {
+            1.0
+        }
+    }
+
+    /// Render the per-shard accounting — model fingerprint, dispatch
+    /// counts, utilization and placement quality — as a table.
+    pub fn shard_table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &[
+                "shard",
+                "model",
+                "dispatches",
+                "busy",
+                "stolen",
+                "predicted",
+                "realized",
+                "quality",
+            ],
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            t.row(&[
+                i.to_string(),
+                format!("{:016x}", s.model_fp),
+                s.dispatches.to_string(),
+                crate::report::secs(s.busy_s),
+                s.stolen.to_string(),
+                crate::report::secs(s.predicted_s),
+                crate::report::secs(s.realized_s),
+                match s.placement_ratio() {
+                    Some(r) => format!("{r:.3}"),
+                    None => "-".to_string(),
+                },
+            ]);
+        }
+        t
+    }
+
     /// Render the per-request log as a table.
     pub fn table(&self, title: &str) -> Table {
         let mut t = Table::new(
@@ -497,6 +575,7 @@ mod tests {
             class: QosClass::Standard,
             deadline_s: None,
             mode,
+            shard: Some(0),
             arrival,
             start,
             finish,
@@ -525,6 +604,9 @@ mod tests {
                 last_finish: 3.0,
                 stolen: 0,
                 served_by_class: [0, 3, 0],
+                model_fp: 0xDEAD_BEEF,
+                predicted_s: 2.5,
+                realized_s: 3.0,
             }],
         }
     }
@@ -598,6 +680,7 @@ mod tests {
         denied.class = QosClass::Interactive;
         denied.deadline_s = Some(0.1);
         denied.exec_s = 0.0;
+        denied.shard = None;
         r.served.push(denied);
 
         assert_eq!(r.denied(), 1);
@@ -623,6 +706,25 @@ mod tests {
         let rendered = r.class_table("classes").render();
         assert!(rendered.contains("interactive"));
         assert!(rendered.contains("1/1"));
+    }
+
+    #[test]
+    fn placement_quality_aggregates_per_shard_ratios() {
+        let mut r = report();
+        // One shard, predicted 2.5s, realized 3.0s.
+        assert_eq!(r.shards[0].placement_ratio(), Some(1.2));
+        assert!((r.placement_quality() - 1.2).abs() < 1e-12);
+        // A second, idle shard contributes nothing (and has no ratio).
+        r.shards.push(ShardStats::default());
+        assert_eq!(r.shards[1].placement_ratio(), None);
+        assert!((r.placement_quality() - 1.2).abs() < 1e-12);
+        // No executions at all: vacuously perfect.
+        assert_eq!(ServiceReport::default().placement_quality(), 1.0);
+        // The shard table renders fingerprints and ratios.
+        let rendered = r.shard_table("shards").render();
+        assert!(rendered.contains("00000000deadbeef"));
+        assert!(rendered.contains("1.200"));
+        assert!(rendered.contains('-'));
     }
 
     #[test]

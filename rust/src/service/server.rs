@@ -99,6 +99,7 @@ impl Server {
                     shards: 1,
                     shard: opts,
                     work_stealing: false,
+                    ..Default::default()
                 },
             ),
         }

@@ -65,6 +65,12 @@ pub struct ExecutorShard {
     stolen: usize,
     /// Requests completed per QoS class (riders included).
     served_by_class: [usize; NUM_CLASSES],
+    /// Sum of admission-time service predictions over everything this
+    /// shard executed (placement-quality denominator).
+    predicted_sum_s: f64,
+    /// Sum of realized execution seconds over the same requests
+    /// (placement-quality numerator).
+    realized_sum_s: f64,
 }
 
 impl ExecutorShard {
@@ -94,6 +100,8 @@ impl ExecutorShard {
             dispatches: 0,
             stolen: 0,
             served_by_class: [0; NUM_CLASSES],
+            predicted_sum_s: 0.0,
+            realized_sum_s: 0.0,
             dynsched,
             opts: opts.clone(),
             model,
@@ -149,6 +157,12 @@ impl ExecutorShard {
         self.dynsched.as_ref().map(|d| d.replans).unwrap_or(0)
     }
 
+    /// Number of devices on this shard's machine (shards of a
+    /// heterogeneous cluster disagree here).
+    pub fn num_devices(&self) -> usize {
+        self.sim.num_devices()
+    }
+
     /// Snapshot the shard's accounting for the session report.
     pub fn stats(&self) -> ShardStats {
         ShardStats {
@@ -157,12 +171,22 @@ impl ExecutorShard {
             last_finish: self.free_at,
             stolen: self.stolen,
             served_by_class: self.served_by_class,
+            model_fp: self.model.fingerprint(),
+            predicted_s: self.predicted_sum_s,
+            realized_s: self.realized_sum_s,
         }
     }
 
     /// Admit an already-gated request into this shard's queue.
     pub fn enqueue(&mut self, q: QueuedRequest) {
         self.queue.push(q);
+    }
+
+    /// The request this shard would dispatch (or yield to a thief)
+    /// next, without removing it or advancing the queue's round-robin
+    /// state — the steal *offer* a thief inspects before committing.
+    pub fn peek_next(&self) -> Option<&QueuedRequest> {
+        self.queue.peek_next()
     }
 
     /// Give up the request this shard would dispatch next (under its own
@@ -312,6 +336,8 @@ impl ExecutorShard {
         self.busy_s += self.sim.busy_until() - sim_start;
         let finish_big = outcome.finish_of(&plan.active_device_indices());
         self.served_by_class[q.req.class.index()] += 1;
+        self.predicted_sum_s += q.predicted_s;
+        self.realized_sum_s += finish_big;
         out.push(ServedRequest {
             id: q.req.id,
             size: q.req.size,
@@ -319,6 +345,7 @@ impl ExecutorShard {
             class: q.req.class,
             deadline_s: q.req.deadline_s,
             mode: ExecMode::CoExec,
+            shard: Some(self.id),
             arrival: q.arrival,
             start,
             finish: start + finish_big,
@@ -332,6 +359,8 @@ impl ExecutorShard {
             let mut shares = vec![0.0; self.sim.num_devices()];
             shares[host] = 1.0;
             self.served_by_class[c.req.class.index()] += 1;
+            self.predicted_sum_s += rider_host_pred;
+            self.realized_sum_s += finish_small;
             out.push(ServedRequest {
                 id: c.req.id,
                 size: c.req.size,
@@ -339,6 +368,7 @@ impl ExecutorShard {
                 class: c.req.class,
                 deadline_s: c.req.deadline_s,
                 mode: ExecMode::BypassStandalone { device: host },
+                shard: Some(self.id),
                 arrival: c.arrival,
                 start,
                 finish: start + finish_small,
@@ -377,6 +407,8 @@ impl ExecutorShard {
         let mut shares = vec![0.0; self.sim.num_devices()];
         shares[dev] = 1.0;
         self.served_by_class[q.req.class.index()] += 1;
+        self.predicted_sum_s += q.predicted_s;
+        self.realized_sum_s += outcome.makespan;
         out.push(ServedRequest {
             id: q.req.id,
             size: q.req.size,
@@ -384,6 +416,7 @@ impl ExecutorShard {
             class: q.req.class,
             deadline_s: q.req.deadline_s,
             mode: ExecMode::Standalone { device: dev },
+            shard: Some(self.id),
             arrival: q.arrival,
             start,
             finish: start + outcome.makespan,
@@ -407,6 +440,7 @@ impl ExecutorShard {
             class: q.req.class,
             deadline_s: q.req.deadline_s,
             mode: ExecMode::Rejected,
+            shard: Some(self.id),
             arrival: q.arrival,
             start,
             finish: start,
@@ -534,6 +568,7 @@ mod tests {
         let mut s = shard(3, ServerOptions::default());
         s.enqueue(queued(0, GemmSize::square(16_000), 1, true, 2.0));
         s.enqueue(queued(1, GemmSize::square(16_000), 1, true, 3.0));
+        assert_eq!(s.peek_next().unwrap().req.id, 0, "peek shows the offer");
         let stolen = s.yield_next().unwrap();
         assert_eq!(stolen.req.id, 0, "FIFO yields the head");
         assert_eq!(s.pending(), 1);

@@ -529,6 +529,7 @@ fn prop_deadline_admission_verdicts_replay_deterministically() {
                         ..Default::default()
                     },
                     work_stealing: true,
+                    ..Default::default()
                 },
             );
             cluster.submit_trace(&mix.trace(6));
@@ -557,6 +558,61 @@ fn prop_deadline_admission_verdicts_replay_deterministically() {
         }
         // Every arrival is accounted for exactly once.
         assert_eq!(a.served.len(), 12);
+    });
+}
+
+#[test]
+fn prop_hetero_cluster_replay_is_byte_identical() {
+    use poas::config::presets;
+    use poas::coordinator::Pipeline;
+    use poas::service::{Cluster, ClusterOptions, PoissonArrivals};
+
+    // Profile the three distinct machines once; each case clones the
+    // pipelines so both runs of a case start from identical
+    // installation state.
+    let pipes: Vec<Pipeline> = presets::hetero_mix()
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| Pipeline::for_simulated_machine(cfg, 60 + i as u64))
+        .collect();
+    let menu = vec![
+        (GemmSize::square(16_000), 2),
+        (GemmSize::square(20_000), 2),
+        (GemmSize::square(400), 2),
+    ];
+
+    prop("hetero cluster replay", 5, |rng, _| {
+        let rate = rng.range(0.2, 3.0);
+        let seed = rng.below(1 << 20);
+        let stealing = rng.below(2) == 0;
+        let trace = PoissonArrivals::new(rate, menu.clone(), seed).trace(8);
+        let run = || {
+            let mut cluster = Cluster::from_pipelines(
+                pipes.clone(),
+                ClusterOptions {
+                    work_stealing: stealing,
+                    ..Default::default()
+                },
+            );
+            cluster.submit_trace(&trace);
+            cluster.run_to_completion()
+        };
+        let a = run();
+        let b = run();
+        // The whole report — routing decisions, per-shard stats, model
+        // fingerprints, placement accounting — must replay
+        // byte-identically on a heterogeneous cluster.
+        assert_eq!(a, b);
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "hetero replay must be byte-identical"
+        );
+        assert_eq!(a.served.len(), 8);
+        // Per-shard models stay distinct across the replay.
+        let fps: std::collections::HashSet<u64> =
+            a.shards.iter().map(|s| s.model_fp).collect();
+        assert_eq!(fps.len(), 3);
     });
 }
 
