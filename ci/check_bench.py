@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Gate bench-smoke metrics against committed per-metric floor files.
+
+Usage: check_bench.py BENCH_cluster.json FLOOR.json [FLOOR.json ...]
+
+Each floor file declares constraints on dot-separated metric paths into
+the freshly regenerated bench summary:
+
+    {
+      "metrics": {
+        "hetero.per_shard.placement_quality": {"min": 0.70, "max": 1.30},
+        "hetero.per_shard.makespan_s":
+            {"lt": {"of": "hetero.shard0_gate.makespan_s", "ratio": 1.0}},
+        "batching.fused.throughput_rps":
+            {"ge": {"of": "batching.off.throughput_rps", "ratio": 1.10}}
+      }
+    }
+
+Absolute bounds: "min" (value >= min), "max" (value <= max).
+Relative bounds against another metric path: "ge" / "le" (inclusive)
+and "gt" / "lt" (strict), each as {"of": <path>, "ratio": <r>} meaning
+`value <cmp> r * summary[of]`.
+
+Every declared constraint is checked; a missing metric path is itself a
+failure (it means the bench leg silently stopped running), as are a
+floor file that declares no metrics, a spec with no recognized
+constraint, and a spec carrying unrecognized keys (a typo'd key must
+not silently disable the gate). The script replaces the old
+single-purpose check_placement.py — one gate, any number of per-metric
+bands.
+"""
+
+import json
+import sys
+
+
+def lookup(summary, path):
+    node = summary
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            raise KeyError(path)
+        node = node[part]
+    if not isinstance(node, (int, float)) or isinstance(node, bool):
+        raise KeyError(path)
+    return float(node)
+
+
+OPS = {
+    "ge": (lambda v, b: v >= b, ">="),
+    "gt": (lambda v, b: v > b, ">"),
+    "le": (lambda v, b: v <= b, "<="),
+    "lt": (lambda v, b: v < b, "<"),
+}
+
+
+KNOWN_KEYS = frozenset(["min", "max"]) | frozenset(OPS)
+
+
+def check_metric(summary, path, spec):
+    """Yield (ok, message) per constraint declared on one metric."""
+    unknown = sorted(set(spec) - KNOWN_KEYS)
+    if unknown:
+        yield False, f"{path}: unrecognized constraint key(s) {unknown}"
+    if not any(key in KNOWN_KEYS for key in spec):
+        yield False, f"{path}: spec declares no recognized constraint"
+    value = lookup(summary, path)
+    if "min" in spec:
+        ok = value >= spec["min"]
+        yield ok, f"{path} = {value:.6g} >= {spec['min']}"
+    if "max" in spec:
+        ok = value <= spec["max"]
+        yield ok, f"{path} = {value:.6g} <= {spec['max']}"
+    for op, (cmp, sym) in OPS.items():
+        if op not in spec:
+            continue
+        rel = spec[op]
+        other = lookup(summary, rel["of"])
+        bound = rel["ratio"] * other
+        ok = cmp(value, bound)
+        yield ok, (f"{path} = {value:.6g} {sym} "
+                   f"{rel['ratio']} * {rel['of']} ({bound:.6g})")
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        summary = json.load(f)
+
+    failures = 0
+    for floor_path in sys.argv[2:]:
+        with open(floor_path) as f:
+            floor = json.load(f)
+        print(f"== {floor_path}")
+        metrics = floor.get("metrics", {})
+        if not metrics:
+            print("  FAIL  floor file declares no \"metrics\" — the gate "
+                  "would check nothing")
+            failures += 1
+        for path, spec in metrics.items():
+            try:
+                for ok, message in check_metric(summary, path, spec):
+                    print(f"  {'ok  ' if ok else 'FAIL'}  {message}")
+                    if not ok:
+                        failures += 1
+            except KeyError as missing:
+                print(f"  FAIL  metric {missing} absent from bench summary "
+                      "(did that bench leg run to completion?)")
+                failures += 1
+
+    if failures:
+        print(f"FAIL: {failures} bench constraint(s) outside the committed "
+              "bands.")
+        return 1
+    print("OK: every bench metric inside its committed band.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

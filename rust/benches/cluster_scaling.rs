@@ -19,8 +19,14 @@
 //!    per-shard admission gates versus the cloned-shard-0 ablation on
 //!    the same trace, with the routing-honesty figure — placement
 //!    quality, realized / predicted service time — staying near 1.0?
-//!    (CI diffs that figure against the committed floor in
+//!    (CI diffs that figure against the committed band in
 //!    `ci/placement_floor.json`.)
+//! 6. does **admission-time batching** pay: the same small-GEMM-heavy
+//!    trace with `BatchPolicy::Windowed` versus `BatchPolicy::Off`,
+//!    recording throughput, fusion rate, members/batch and the
+//!    interactive p99 / deadline-hit rate? (CI gates the windowed leg
+//!    against `ci/batching_floor.json` — >= 10% throughput over off,
+//!    deadline-hit rate no worse.)
 //!
 //! Environment knobs (the CI bench-smoke gate sets both):
 //!
@@ -33,8 +39,8 @@ use poas::config::presets;
 use poas::coordinator::Pipeline;
 use poas::report::{rate, secs, Table};
 use poas::service::{
-    ClassLoad, Cluster, ClusterOptions, GatePolicy, MixedArrivals, PoissonArrivals, QosClass,
-    Server, ServerOptions, ServiceReport,
+    Arrival, BatchPolicy, BatchWindow, ClassLoad, Cluster, ClusterOptions, GatePolicy,
+    MixedArrivals, PoissonArrivals, QosClass, Server, ServerOptions, ServiceReport,
 };
 use poas::workload::GemmSize;
 
@@ -247,6 +253,104 @@ fn main() {
         secs(h_s0.makespan),
     );
 
+    // ---- Admission-time batching: a small-GEMM-heavy mix on the same
+    // heterogeneous cluster, once with the windowed batch former and
+    // once with batching off. The small stream is one shape class
+    // (every draw a batching candidate); a light SLO-bound interactive
+    // stream of mid-size (unbatchable) requests rides on top, so the
+    // leg also records whether fusion ever costs the interactive tier
+    // its deadlines. CI gates throughput, fusion rate and the
+    // deadline-hit rate against `ci/batching_floor.json`.
+    let small_unit = {
+        let mut probe = Server::new(&presets::gpu_node(), 0, ServerOptions::default());
+        probe.submit(GemmSize::new(2000, 2000, 2000), 2);
+        probe.run_to_completion().makespan
+    };
+    let int_unit = {
+        let mut probe = Server::new(&presets::gpu_node(), 0, ServerOptions::default());
+        probe.submit(GemmSize::square(3200), 2);
+        probe.run_to_completion().makespan
+    };
+    let bn_small = if smoke { 64 } else { 192 };
+    let bn_int = if smoke { 6 } else { 16 };
+    let small_stream = MixedArrivals::new(
+        vec![ClassLoad {
+            class: QosClass::Standard,
+            rate_rps: 6.0 / small_unit,
+            menu: vec![(GemmSize::new(2000, 2000, 2000), 2)],
+            deadline_s: None,
+        }],
+        61,
+    )
+    .trace(bn_small);
+    let small_span = small_stream.last().expect("non-empty stream").at;
+    let int_stream = MixedArrivals::new(
+        vec![ClassLoad {
+            class: QosClass::Interactive,
+            rate_rps: bn_int as f64 / small_span,
+            menu: vec![(GemmSize::square(3200), 2)],
+            deadline_s: Some(30.0 * int_unit),
+        }],
+        62,
+    )
+    .trace(bn_int);
+    let mut btrace: Vec<Arrival> = small_stream;
+    btrace.extend(int_stream);
+    btrace.sort_by(|a, b| a.at.total_cmp(&b.at));
+    let run_batching = |batching: BatchPolicy| -> ServiceReport {
+        let mut c = Cluster::from_pipelines(
+            hpipes.clone(),
+            ClusterOptions {
+                batching,
+                work_stealing: false,
+                ..Default::default()
+            },
+        );
+        c.submit_trace(&btrace);
+        c.run_to_completion()
+    };
+    let b_fused = run_batching(BatchPolicy::Windowed(BatchWindow {
+        window_s: 8.0 * small_unit,
+        max_members: 8,
+        ..Default::default()
+    }));
+    let b_off = run_batching(BatchPolicy::Off);
+    assert_eq!(b_fused.served.len(), btrace.len());
+    assert_eq!(b_off.served.len(), btrace.len());
+    let mut btable = Table::new(
+        &format!(
+            "admission-time batching: {bn_small} small + {bn_int} interactive requests \
+             on the hetero mix"
+        ),
+        &[
+            "batching",
+            "session time",
+            "throughput",
+            "fusion rate",
+            "members/batch",
+            "interactive p99",
+            "deadline hits",
+        ],
+    );
+    for (label, r) in [("windowed", &b_fused), ("off (ablation)", &b_off)] {
+        btable.row(&[
+            label.to_string(),
+            secs(r.makespan),
+            rate(r.throughput_rps()),
+            format!("{:.0}%", 100.0 * r.fusion_rate()),
+            format!("{:.1}", r.mean_batch_members()),
+            secs(r.class_latency_percentile(QosClass::Interactive, 99.0)),
+            format!("{:.0}%", 100.0 * r.deadline_hit_rate()),
+        ]);
+    }
+    btable.print();
+    println!(
+        "batching target: windowed throughput >= 1.10x off ({} vs {}), interactive \
+         deadline-hit rate no worse than off.",
+        rate(b_fused.throughput_rps()),
+        rate(b_off.throughput_rps()),
+    );
+
     // ---- Perf-trajectory artifact: a JSON summary CI records per run.
     if let Ok(path) = std::env::var("POAS_BENCH_JSON") {
         let mut json = String::from("{\n");
@@ -293,9 +397,30 @@ fn main() {
         };
         json.push_str(&format!(
             "  \"hetero\": {{\"requests\": {hn}, \"per_shard\": {}, \
-             \"shard0_gate\": {}}}\n",
+             \"shard0_gate\": {}}},\n",
             hetero_leg(&h_per),
             hetero_leg(&h_s0)
+        ));
+        let batching_leg = |r: &ServiceReport| {
+            format!(
+                "{{\"makespan_s\": {}, \"throughput_rps\": {}, \"fusion_rate\": {}, \
+                 \"mean_batch_members\": {}, \"num_batches\": {}, \
+                 \"interactive_p99_s\": {}, \"deadline_hit_rate\": {}, \"denied\": {}}}",
+                r.makespan,
+                r.throughput_rps(),
+                r.fusion_rate(),
+                r.mean_batch_members(),
+                r.num_batches(),
+                r.class_latency_percentile(QosClass::Interactive, 99.0),
+                r.deadline_hit_rate(),
+                r.denied()
+            )
+        };
+        json.push_str(&format!(
+            "  \"batching\": {{\"small_requests\": {bn_small}, \
+             \"interactive_requests\": {bn_int}, \"fused\": {}, \"off\": {}}}\n",
+            batching_leg(&b_fused),
+            batching_leg(&b_off)
         ));
         json.push_str("}\n");
         std::fs::write(&path, json).expect("write POAS_BENCH_JSON summary");

@@ -21,9 +21,15 @@
 //! side of the sojourn prediction stays with the cluster front-end,
 //! which already computes per-shard backlogs for routing.
 //!
+//! Since admission-time batching landed the gate also scores **fused
+//! batches** ([`Admission::admit_batch`]): a row-stacked batch of small
+//! compatible requests is re-scored as one large GEMM, with the
+//! scheduling overhead charged per member, under the batch-level memo
+//! key `(shape, reps, members, shard epoch)`.
+//!
 //! The gate's own LP solve is as cacheable as the plan solve, so
-//! verdicts are memoized by `(shape, reps, shard epoch)` in a **bounded
-//! LRU**: a lookup refreshes its entry's recency and eviction removes
+//! verdicts are memoized by `(shape, reps, members, shard epoch)` in a
+//! **bounded LRU**: a lookup refreshes its entry's recency and eviction removes
 //! the least recently used key, so a hot working set survives
 //! arbitrarily many cold shapes streaming past (a wholesale `clear()`
 //! at capacity would discard it). A model refresh (this shard's dynamic
@@ -43,9 +49,11 @@ use crate::workload::GemmSize;
 /// verdict).
 pub type GateVerdict = (bool, usize, f64);
 
-/// Key of a memoized gate verdict: shape, repetition count, model
-/// epoch.
-type GateKey = (GemmSize, u32, u64);
+/// Key of a memoized gate verdict: shape, repetition count, fused
+/// member count (1 for a plain request — a batch of `l` members pays
+/// `l` times the scheduling overhead, so its verdict is a distinct
+/// memo entry), model epoch.
+type GateKey = (GemmSize, u32, u32, u64);
 
 /// Key of a memoized deadline-feasibility probe: shape, the per-rep
 /// budget's bit pattern (deadlines are continuous, but SLO streams
@@ -118,10 +126,24 @@ impl Admission {
 
     /// Gate one request: returns (co-execute?, best single device,
     /// predicted **total** service seconds for all `reps`). Memoized by
-    /// `(shape, reps, epoch)`, so an SLO-free stream over a stable
+    /// `(shape, reps, 1, epoch)`, so an SLO-free stream over a stable
     /// `(shape, reps)` menu solves each entry once per epoch.
     pub fn admit(&mut self, size: GemmSize, reps: u32) -> GateVerdict {
-        let key = (size, reps, self.epoch);
+        self.admit_batch(size, reps, 1)
+    }
+
+    /// Gate a **fused batch**: `members` compatible small requests
+    /// row-stacked into one `size` (see [`super::batch`]). The verdict
+    /// has the same shape as [`Admission::admit`] — the batch is
+    /// re-scored as if it were one large GEMM, so a batch that passes
+    /// suitability is split across devices like any large GEMM — but
+    /// the scheduling overhead is charged once per member (each member
+    /// still pays its admission bookkeeping). Memoized under the
+    /// batch-level key `(shape, reps, members, epoch)`, so a steady
+    /// stream of same-composition batches solves once per epoch.
+    pub fn admit_batch(&mut self, size: GemmSize, reps: u32, members: u32) -> GateVerdict {
+        let members = members.max(1);
+        let key = (size, reps, members, self.epoch);
         match self.memo.get_touch(&key) {
             Some(&hit) => {
                 self.hits += 1;
@@ -130,7 +152,8 @@ impl Admission {
             None => {
                 self.misses += 1;
                 let scale = reps.max(1) as f64;
-                let fresh = match recommend(&self.model, size, self.min_gain, self.overhead_s) {
+                let overhead = self.overhead_s * members as f64;
+                let fresh = match recommend(&self.model, size, self.min_gain, overhead) {
                     Recommendation::CoExecute {
                         t_coexec,
                         best_device,
@@ -262,6 +285,29 @@ mod tests {
         // Standalone deadline feasibility compares the prediction.
         assert!(gate.deadline_feasible(co, t, GemmSize::square(20_000), 2, t * 2.0));
         assert!(!gate.deadline_feasible(co, t, GemmSize::square(20_000), 2, t * 0.5));
+    }
+
+    #[test]
+    fn batch_verdicts_are_memoized_under_their_own_key() {
+        let mut gate = Admission::new(model(), 1.05, 20e-6, 64);
+        let size = GemmSize::square(20_000);
+        let plain = gate.admit(size, 2);
+        // Same shape gated as an 8-member batch: a distinct memo entry
+        // (the overhead charge differs), not a hit on the plain one.
+        let batch = gate.admit_batch(size, 2, 8);
+        assert_eq!(gate.misses, 2);
+        assert_eq!(gate.len(), 2);
+        // Both co-execute; the batch's prediction carries 8x overhead,
+        // so it can only be >= the plain one.
+        assert!(plain.0 && batch.0);
+        assert!(batch.2 >= plain.2);
+        // Repeats of either key are memo hits.
+        assert_eq!(gate.admit_batch(size, 2, 8), batch);
+        assert_eq!(gate.admit(size, 2), plain);
+        assert_eq!(gate.hits, 2);
+        // members = 0 clamps to 1: exactly the plain verdict.
+        assert_eq!(gate.admit_batch(size, 2, 0), plain);
+        assert_eq!(gate.hits, 3);
     }
 
     #[test]

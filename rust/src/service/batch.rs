@@ -1,0 +1,574 @@
+//! Admission-time batching: fuse small compatible GEMMs into one
+//! co-execution at the cluster front-end.
+//!
+//! POAS's co-execution premise (paper §4–§6) is that one work unit
+//! split across CPU/GPU/XPU beats any single accelerator — but the
+//! suitability gate correctly sends *small* GEMMs standalone, one at a
+//! time, onto a single device, leaving the other accelerators dark
+//! exactly when accelerator-level parallelism would pay most. The
+//! [`BatchFormer`] closes that gap the way aggregating schedulers do
+//! (HTS amortizes per-task scheduling cost by batching work before
+//! dispatch; Aupy et al.'s co-scheduling packs trade a bounded amount
+//! of per-job latency for throughput): it holds small arrivals in a
+//! short **batch window** and fuses compatible ones into a single
+//! [`FusedBatch`] the §6 gate re-scores *as a batch*.
+//!
+//! ## The compatibility predicate
+//!
+//! Two requests may share a window iff **all** of the following hold
+//! (see [`ShapeClass`]):
+//!
+//! * **same right-hand operand shape** — identical `n` and `k`. Fusing
+//!   is row-stacking: `l` members of shapes `(m_i, n, k)` become one
+//!   GEMM of `(Σ m_i, n, k)`, which is exactly the shared-weight
+//!   serving case (many tenants multiplying against the same `B`, e.g.
+//!   one model layer). Row-stacking is what lets the fused batch copy
+//!   `B` once per accelerator instead of once per member — the
+//!   amortization the throughput win comes from;
+//! * **same `m` magnitude bucket** — `⌊log2 m⌋` must match, so one
+//!   outsized member cannot dominate (and mis-attribute) the fused
+//!   execution;
+//! * **same repetition count** — the simulator runs one global
+//!   repetition loop per work order ([`crate::sim::WorkOrder::merge`]
+//!   enforces the same rule for bypass riders);
+//! * **adjacent QoS classes** — the window's class span may not exceed
+//!   one priority level (Interactive+Standard or Standard+Batch, never
+//!   Interactive+Batch), and the fused batch is queued on the lane of
+//!   its **strictest** member, so riding along never demotes anyone;
+//! * **small enough** — member ops at most
+//!   [`BatchWindow::max_member_ops`]; the cluster additionally requires
+//!   that *no* shard's own gate would co-execute the member alone
+//!   (requests worth splitting by themselves never wait for a window).
+//!
+//! ## Window and flush rules
+//!
+//! A window opens when the first compatible member arrives and flushes
+//! — becoming a [`FusedBatch`] handed back to the cluster front-end —
+//! at the earliest of:
+//!
+//! * **timer**: [`BatchWindow::window_s`] virtual seconds after it
+//!   opened (the bounded latency cost of batching);
+//! * **capacity**: the window reached [`BatchWindow::max_members`];
+//! * **deadline pressure**: an SLO-bound member cannot afford to wait.
+//!   For every member with deadline `d_i` the window must flush by
+//!   `arrival_i + slack·d_i − service`, where `service` is the
+//!   best-shard predicted service time of the fused batch (re-tightened
+//!   on every join as the batch grows); when that bound reaches the
+//!   present, [`BatchFormer::join`] answers
+//!   [`JoinOutcome::FlushNow`] and the cluster flushes immediately —
+//!   batch-window waiting can therefore never, by construction, push an
+//!   admitted SLO request past its deadline.
+//!
+//! A flushed window of one member is not a batch: the cluster admits
+//! the request solo, so `BatchPolicy::Windowed` degenerates gracefully
+//! under light load. The former holds no machine state and iterates
+//! plain vectors, so replays stay byte-identical.
+
+use super::qos::QosClass;
+use super::request::{BatchId, GemmRequest};
+use crate::workload::GemmSize;
+
+/// Whether (and how) the cluster front-end batches small arrivals.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum BatchPolicy {
+    /// No batching: every arrival routes alone (the ablation baseline
+    /// `benches/cluster_scaling.rs` and CI's batching gate compare
+    /// against).
+    #[default]
+    Off,
+    /// Windowed admission-time batching (see the module doc).
+    Windowed(BatchWindow),
+}
+
+impl BatchPolicy {
+    /// Windowed batching with the default window parameters.
+    pub fn windowed() -> Self {
+        BatchPolicy::Windowed(BatchWindow::default())
+    }
+}
+
+/// Parameters of one batch window (see the module doc for the rules).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchWindow {
+    /// Longest a window may stay open, virtual seconds from the first
+    /// member's arrival.
+    pub window_s: f64,
+    /// Flush as soon as this many members have joined.
+    pub max_members: usize,
+    /// Largest member the former will hold (`m·n·k` multiply-adds);
+    /// bigger requests route alone immediately.
+    pub max_member_ops: f64,
+}
+
+impl Default for BatchWindow {
+    fn default() -> Self {
+        BatchWindow {
+            window_s: 0.05,
+            max_members: 8,
+            // ~2520^3: well below the co-execution crossover of the
+            // calibrated machines, comfortably above the shapes the
+            // gate actually bypasses.
+            max_member_ops: 16e9,
+        }
+    }
+}
+
+/// The shape class of the `GemmSize` bucketing: requests fuse only
+/// within one class (see the module doc's compatibility predicate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeClass {
+    /// `⌊log2 m⌋` of the member's row count.
+    pub m_pow2: u32,
+    /// Exact column count (shared `B` operand).
+    pub n: u64,
+    /// Exact inner dimension (shared `B` operand).
+    pub k: u64,
+    /// Exact repetition count (one global rep loop per work order).
+    pub reps: u32,
+}
+
+impl ShapeClass {
+    /// The class `size` (at `reps` repetitions) buckets into.
+    pub fn of(size: GemmSize, reps: u32) -> Self {
+        ShapeClass {
+            m_pow2: size.m.ilog2(),
+            n: size.n,
+            k: size.k,
+            reps,
+        }
+    }
+}
+
+/// One member of a fused batch: the original request plus its true
+/// arrival time (latency accounting runs from here, so time spent
+/// waiting in the window is visible in the member's sojourn).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchMember {
+    /// The member request, untouched (its own class, SLO and id).
+    pub req: GemmRequest,
+    /// Virtual time the member reached the front-end.
+    pub arrival: f64,
+}
+
+/// A flushed batch window: `members` row-stacked into one fused GEMM
+/// the cluster admits, routes, steals and dispatches as a single unit.
+#[derive(Debug, Clone)]
+pub struct FusedBatch {
+    /// Batch identity (carried by every member's
+    /// [`super::ExecMode::Batched`] record).
+    pub id: BatchId,
+    /// The row-stacked shape: `(Σ member m, n, k)`.
+    pub size: GemmSize,
+    /// Shared repetition count.
+    pub reps: u32,
+    /// The strictest member class — the lane the batch queues on.
+    pub class: QosClass,
+    /// Tightest member completion deadline as an **absolute** virtual
+    /// time (`min(arrival_i + d_i)`), `None` when no member carries an
+    /// SLO.
+    pub deadline_abs: Option<f64>,
+    /// The members, join order (row-stack order: member `i` owns rows
+    /// `[Σ_{j<i} m_j, Σ_{j<=i} m_j)` of the fused problem).
+    pub members: Vec<BatchMember>,
+}
+
+impl FusedBatch {
+    /// The synthetic request the front-end admits and routes for the
+    /// whole batch at time `now`: fused shape, strictest class, and the
+    /// tightest member deadline re-expressed relative to `now`.
+    pub fn carrier(&self, now: f64) -> GemmRequest {
+        GemmRequest {
+            id: self.members[0].req.id,
+            size: self.size,
+            reps: self.reps,
+            class: self.class,
+            deadline_s: self.deadline_abs.map(|t| t - now),
+        }
+    }
+}
+
+/// What [`BatchFormer::join`] did with a candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JoinOutcome {
+    /// Joined an open window; the cluster should arm (or re-arm) the
+    /// window's flush timer at `flush_at`.
+    Pending {
+        /// Window id ([`BatchFormer::flush`] takes it back).
+        window: u64,
+        /// Earliest of the timer / deadline-pressure flush bounds.
+        flush_at: f64,
+    },
+    /// Joined a window that must flush immediately: it is full, or an
+    /// SLO member cannot afford any further waiting.
+    FlushNow {
+        /// Window id to flush.
+        window: u64,
+    },
+}
+
+/// One open batch window.
+#[derive(Debug, Clone)]
+struct OpenWindow {
+    id: u64,
+    key: ShapeClass,
+    opened: f64,
+    flush_at: f64,
+    members: Vec<BatchMember>,
+}
+
+/// True when adding `class` keeps the window's class span within one
+/// priority level.
+fn class_span_ok(members: &[BatchMember], class: QosClass) -> bool {
+    let mut lo = class.index();
+    let mut hi = class.index();
+    for m in members {
+        lo = lo.min(m.req.class.index());
+        hi = hi.max(m.req.class.index());
+    }
+    hi - lo <= 1
+}
+
+/// The batch former: the cluster front-end's window bookkeeping (see
+/// the module doc). Pure virtual-time state — no machine access — so it
+/// replays byte-identically.
+#[derive(Debug, Clone)]
+pub struct BatchFormer {
+    cfg: Option<BatchWindow>,
+    /// The admission slack guard band (shared with deadline admission),
+    /// applied to member SLOs when computing flush pressure.
+    slack: f64,
+    windows: Vec<OpenWindow>,
+    next_window: u64,
+}
+
+impl BatchFormer {
+    /// A former for `policy` (inert under [`BatchPolicy::Off`]), using
+    /// `deadline_slack` for the SLO pressure bounds.
+    pub fn new(policy: &BatchPolicy, deadline_slack: f64) -> Self {
+        BatchFormer {
+            cfg: match policy {
+                BatchPolicy::Off => None,
+                BatchPolicy::Windowed(cfg) => Some(*cfg),
+            },
+            slack: deadline_slack,
+            windows: Vec::new(),
+            next_window: 0,
+        }
+    }
+
+    /// True when the former would hold `req` at all: batching is on and
+    /// the request is small enough. (The cluster adds the second half
+    /// of the candidacy test — no shard's own gate co-executes it
+    /// alone.)
+    pub fn candidate(&self, req: &GemmRequest) -> bool {
+        match &self.cfg {
+            Some(cfg) => req.size.ops() <= cfg.max_member_ops,
+            None => false,
+        }
+    }
+
+    /// Members currently waiting in open windows (the cluster counts
+    /// them as pending).
+    pub fn pending(&self) -> usize {
+        self.windows.iter().map(|w| w.members.len()).sum()
+    }
+
+    /// Number of open windows (diagnostics/tests).
+    pub fn open_windows(&self) -> usize {
+        self.windows.len()
+    }
+
+    /// True while window `window` is still open. The cluster checks
+    /// this before honouring a flush timer: a timer for a window that
+    /// already flushed (early, on capacity or SLO pressure) is stale
+    /// and must not even advance the virtual clock.
+    pub fn has_window(&self, window: u64) -> bool {
+        self.windows.iter().any(|w| w.id == window)
+    }
+
+    /// The window `req` would join right now, if any: first open window
+    /// (open order) with the same [`ShapeClass`], spare capacity and a
+    /// compatible class span.
+    fn find(&self, key: &ShapeClass, class: QosClass) -> Option<usize> {
+        let cfg = self.cfg.as_ref()?;
+        self.windows.iter().position(|w| {
+            w.key == *key && w.members.len() < cfg.max_members && class_span_ok(&w.members, class)
+        })
+    }
+
+    /// The fused shape and member count [`BatchFormer::join`] would
+    /// produce for `req` right now — the cluster uses this to compute
+    /// the predicted batch service time it hands `join` as
+    /// `service_hint_s`, without mutating any window.
+    pub fn preview(&self, req: &GemmRequest) -> (GemmSize, u32) {
+        let key = ShapeClass::of(req.size, req.reps);
+        match self.find(&key, req.class) {
+            Some(i) => {
+                let w = &self.windows[i];
+                let m: u64 = w.members.iter().map(|b| b.req.size.m).sum::<u64>() + req.size.m;
+                (GemmSize::new(m, key.n, key.k), w.members.len() as u32 + 1)
+            }
+            None => (req.size, 1),
+        }
+    }
+
+    /// Add `req` (arriving at `now`) to its compatible window, opening
+    /// one if needed. `service_hint_s` is the best-shard predicted
+    /// service time of the fused batch *including* `req` (see
+    /// [`BatchFormer::preview`]); every member's deadline-pressure
+    /// bound is re-tightened under it, so a growing batch can only
+    /// flush earlier, never later.
+    pub fn join(&mut self, req: GemmRequest, now: f64, service_hint_s: f64) -> JoinOutcome {
+        let cfg = self.cfg.expect("join requires BatchPolicy::Windowed");
+        let key = ShapeClass::of(req.size, req.reps);
+        let idx = match self.find(&key, req.class) {
+            Some(i) => i,
+            None => {
+                let id = self.next_window;
+                self.next_window += 1;
+                self.windows.push(OpenWindow {
+                    id,
+                    key,
+                    opened: now,
+                    flush_at: now + cfg.window_s,
+                    members: Vec::new(),
+                });
+                self.windows.len() - 1
+            }
+        };
+        let slack = self.slack;
+        let w = &mut self.windows[idx];
+        w.members.push(BatchMember { req, arrival: now });
+        let mut flush_at = w.opened + cfg.window_s;
+        for m in &w.members {
+            if let Some(d) = m.req.deadline_s {
+                flush_at = flush_at.min(m.arrival + slack * d - service_hint_s);
+            }
+        }
+        w.flush_at = flush_at;
+        let window = w.id;
+        if w.members.len() >= cfg.max_members || flush_at <= now {
+            JoinOutcome::FlushNow { window }
+        } else {
+            JoinOutcome::Pending { window, flush_at }
+        }
+    }
+
+    /// Close window `window` and fuse its members. `None` when the
+    /// window no longer exists (it already flushed — stale timers are
+    /// harmless). A one-member result is the degenerate "batch" the
+    /// cluster admits solo.
+    pub fn flush(&mut self, window: u64) -> Option<FusedBatch> {
+        let idx = self.windows.iter().position(|w| w.id == window)?;
+        let w = self.windows.remove(idx);
+        let m_total: u64 = w.members.iter().map(|b| b.req.size.m).sum();
+        let class = w
+            .members
+            .iter()
+            .map(|b| b.req.class)
+            .min()
+            .expect("a window always holds at least one member");
+        let deadline_abs = w
+            .members
+            .iter()
+            .filter_map(|b| b.req.deadline_s.map(|d| b.arrival + d))
+            .reduce(f64::min);
+        Some(FusedBatch {
+            id: BatchId(w.id),
+            size: GemmSize::new(m_total, w.key.n, w.key.k),
+            reps: w.key.reps,
+            class,
+            deadline_abs,
+            members: w.members,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BatchWindow {
+        BatchWindow {
+            window_s: 1.0,
+            max_members: 4,
+            max_member_ops: 16e9,
+        }
+    }
+
+    fn former() -> BatchFormer {
+        BatchFormer::new(&BatchPolicy::Windowed(cfg()), 0.9)
+    }
+
+    fn small(id: u64, m: u64) -> GemmRequest {
+        GemmRequest::new(id, GemmSize::new(m, 1024, 1024), 2)
+    }
+
+    #[test]
+    fn off_policy_is_inert() {
+        let f = BatchFormer::new(&BatchPolicy::Off, 0.9);
+        assert!(!f.candidate(&small(0, 1024)));
+        assert_eq!(f.pending(), 0);
+        assert_eq!(BatchPolicy::default(), BatchPolicy::Off);
+        assert!(matches!(BatchPolicy::windowed(), BatchPolicy::Windowed(_)));
+    }
+
+    #[test]
+    fn candidate_enforces_the_ops_ceiling() {
+        let f = former();
+        assert!(f.candidate(&small(0, 1024)));
+        // 20000^3 is far past max_member_ops.
+        assert!(!f.candidate(&GemmRequest::new(1, GemmSize::square(20_000), 2)));
+    }
+
+    #[test]
+    fn same_shape_class_members_share_a_window() {
+        let mut f = former();
+        // 1024 and 1536 share ⌊log2⌋ = 10 and the exact (n, k, reps).
+        let a = f.join(small(0, 1024), 0.0, 0.01);
+        let b = f.join(small(1, 1536), 0.1, 0.01);
+        assert!(matches!(a, JoinOutcome::Pending { window: 0, .. }));
+        assert!(matches!(b, JoinOutcome::Pending { window: 0, .. }));
+        assert_eq!(f.open_windows(), 1);
+        assert_eq!(f.pending(), 2);
+        let batch = f.flush(0).unwrap();
+        assert_eq!(batch.size, GemmSize::new(2560, 1024, 1024));
+        assert_eq!(batch.reps, 2);
+        assert_eq!(batch.members.len(), 2);
+        assert_eq!(batch.id, BatchId(0));
+        assert_eq!(f.pending(), 0);
+        // Stale timer: the window is gone.
+        assert!(f.flush(0).is_none());
+    }
+
+    #[test]
+    fn incompatible_shapes_open_separate_windows() {
+        let mut f = former();
+        f.join(small(0, 1024), 0.0, 0.01);
+        // Different n.
+        f.join(GemmRequest::new(1, GemmSize::new(1024, 512, 1024), 2), 0.0, 0.01);
+        // Different k.
+        f.join(GemmRequest::new(2, GemmSize::new(1024, 1024, 512), 2), 0.0, 0.01);
+        // Different reps.
+        f.join(GemmRequest::new(3, GemmSize::new(1024, 1024, 1024), 3), 0.0, 0.01);
+        // Different m bucket (2048 -> ⌊log2⌋ = 11).
+        f.join(small(4, 2048), 0.0, 0.01);
+        assert_eq!(f.open_windows(), 5);
+    }
+
+    #[test]
+    fn class_span_wider_than_one_level_does_not_mix() {
+        let mut f = former();
+        f.join(small(0, 1024).with_class(QosClass::Interactive), 0.0, 0.01);
+        // Standard is adjacent: joins.
+        f.join(small(1, 1024).with_class(QosClass::Standard), 0.0, 0.01);
+        assert_eq!(f.open_windows(), 1);
+        // Batch would stretch the span to 2: a second window opens.
+        f.join(small(2, 1024).with_class(QosClass::Batch), 0.0, 0.01);
+        assert_eq!(f.open_windows(), 2);
+        // The fused lane is the strictest member's.
+        let batch = f.flush(0).unwrap();
+        assert_eq!(batch.class, QosClass::Interactive);
+    }
+
+    #[test]
+    fn full_window_flushes_immediately() {
+        let mut f = former();
+        for i in 0..3u64 {
+            assert!(matches!(
+                f.join(small(i, 1024), 0.0, 0.01),
+                JoinOutcome::Pending { .. }
+            ));
+        }
+        assert_eq!(
+            f.join(small(3, 1024), 0.0, 0.01),
+            JoinOutcome::FlushNow { window: 0 }
+        );
+        let batch = f.flush(0).unwrap();
+        assert_eq!(batch.members.len(), 4);
+        assert_eq!(batch.size.m, 4096);
+    }
+
+    #[test]
+    fn deadline_pressure_tightens_the_flush_bound() {
+        let mut f = former();
+        let relaxed = f.join(small(0, 1024), 0.0, 0.01);
+        match relaxed {
+            JoinOutcome::Pending { flush_at, .. } => assert_eq!(flush_at, 1.0),
+            other => panic!("unexpected {other:?}"),
+        }
+        // An SLO member: must flush by arrival + 0.9*0.5 - hint = 0.40.
+        let pressured = f.join(small(1, 1024).with_deadline(0.5), 0.05, 0.1);
+        match pressured {
+            JoinOutcome::Pending { window, flush_at } => {
+                assert_eq!(window, 0);
+                assert!((flush_at - (0.05 + 0.45 - 0.1)).abs() < 1e-12);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // A grown service hint re-tightens the *existing* member's
+        // bound; here it collapses past `now`, forcing the flush.
+        assert_eq!(
+            f.join(small(2, 1024), 0.3, 0.25),
+            JoinOutcome::FlushNow { window: 0 }
+        );
+    }
+
+    #[test]
+    fn untenable_slo_flushes_at_once() {
+        let mut f = former();
+        // Even an immediate flush is predicted to graze the SLO: the
+        // former refuses to add any window wait.
+        let out = f.join(small(0, 1024).with_deadline(0.05), 1.0, 0.2);
+        assert_eq!(out, JoinOutcome::FlushNow { window: 0 });
+        let batch = f.flush(0).unwrap();
+        assert_eq!(batch.members.len(), 1);
+        // The carrier re-expresses the absolute deadline.
+        assert!((batch.deadline_abs.unwrap() - 1.05).abs() < 1e-12);
+        let carrier = batch.carrier(1.0);
+        assert!((carrier.deadline_s.unwrap() - 0.05).abs() < 1e-12);
+        assert_eq!(carrier.id, 0);
+    }
+
+    #[test]
+    fn flush_fuses_sums_and_takes_the_tightest_deadline() {
+        let mut f = former();
+        f.join(small(0, 1024).with_deadline(2.0), 0.0, 0.01);
+        f.join(small(1, 1536), 0.1, 0.01);
+        f.join(small(2, 1024).with_deadline(1.0), 0.2, 0.01);
+        let batch = f.flush(0).unwrap();
+        assert_eq!(batch.size.m, 1024 + 1536 + 1024);
+        // min(0 + 2.0, 0.2 + 1.0) = 1.2.
+        assert!((batch.deadline_abs.unwrap() - 1.2).abs() < 1e-12);
+        let carrier = batch.carrier(0.5);
+        assert!((carrier.deadline_s.unwrap() - 0.7).abs() < 1e-12);
+        assert_eq!(carrier.size, batch.size);
+        // Member records keep their own arrivals and deadlines.
+        assert_eq!(batch.members[1].arrival, 0.1);
+        assert_eq!(batch.members[2].req.deadline_s, Some(1.0));
+    }
+
+    #[test]
+    fn preview_matches_what_join_would_fuse() {
+        let mut f = former();
+        let first = small(0, 1024);
+        assert_eq!(f.preview(&first), (GemmSize::new(1024, 1024, 1024), 1));
+        f.join(first, 0.0, 0.01);
+        let second = small(1, 1536);
+        assert_eq!(f.preview(&second), (GemmSize::new(2560, 1024, 1024), 2));
+        // An incompatible request previews as a fresh window.
+        let other = GemmRequest::new(2, GemmSize::new(1024, 512, 1024), 2);
+        assert_eq!(f.preview(&other), (GemmSize::new(1024, 512, 1024), 1));
+    }
+
+    #[test]
+    fn shape_class_buckets_by_log2_m_only() {
+        let a = ShapeClass::of(GemmSize::new(1024, 500, 600), 2);
+        let b = ShapeClass::of(GemmSize::new(2047, 500, 600), 2);
+        let c = ShapeClass::of(GemmSize::new(2048, 500, 600), 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, ShapeClass::of(GemmSize::new(1024, 501, 600), 2));
+        assert_ne!(a, ShapeClass::of(GemmSize::new(1024, 500, 600), 3));
+    }
+}

@@ -7,7 +7,16 @@
 //! heap of timestamped events:
 //!
 //! * **arrival** — a request reaches the front-end (either submitted
-//!   "now" or scheduled by an [`super::arrivals`] trace). It is scored
+//!   "now" or scheduled by an [`super::arrivals`] trace). Under
+//!   [`BatchPolicy::Windowed`], a *small* arrival that no shard's own
+//!   gate would co-execute alone first visits the **batch former**
+//!   ([`super::batch::BatchFormer`]): compatible small requests wait in
+//!   a short window and fuse into one row-stacked [`FusedBatch`] that
+//!   is admitted, deadline-checked, routed, stolen and dispatched as a
+//!   single unit (one queue slot on the strictest member's lane),
+//!   fanning back out into per-member completion records at dispatch.
+//!   Everything below treats "request" and "fused batch" uniformly
+//!   through the batch carrier request. Anything else is scored
 //!   against **every shard's own [`Admission`] gate** — one gate per
 //!   shard, each predicting with that shard's installation-time
 //!   profile, so a heterogeneous cluster (see
@@ -28,6 +37,13 @@
 //! * **wake** — scheduled behind every arrival at the same timestamp so
 //!   that simultaneous arrivals are all admitted (and visible to queue
 //!   policies and the bypass scan) before any of them starts a machine;
+//! * **batch-flush** — a batch window's timer fired: the window's
+//!   members fuse and enter admission as one batch. Windows also flush
+//!   early when full or under SLO deadline pressure (see
+//!   [`super::batch`]); a fused batch whose tightest member SLO fails
+//!   batch-level deadline admission is **disbanded** — every member
+//!   re-enters admission solo (with its window wait charged against its
+//!   remaining deadline budget) rather than being denied wholesale;
 //! * **shard-free** — a machine finished its dispatch. It drains its
 //!   own queue first and, when empty, **steals** the next request
 //!   (under the victim's own weighted pick, so high classes move first)
@@ -45,6 +61,7 @@
 
 use super::admission::{Admission, GateVerdict};
 use super::arrivals::Arrival;
+use super::batch::{BatchFormer, BatchPolicy, FusedBatch, JoinOutcome};
 use super::qos::{DeadlinePolicy, QosClass};
 use super::queue::QueuedRequest;
 use super::request::{ExecMode, GemmRequest, ServedRequest, ServiceReport};
@@ -90,6 +107,10 @@ pub struct ClusterOptions {
     /// Whose model predicts at the front-end (see [`GatePolicy`];
     /// default [`GatePolicy::PerShard`]).
     pub gate: GatePolicy,
+    /// Admission-time batching of small standalone-bound arrivals (see
+    /// [`super::batch`]; default [`BatchPolicy::Off`], which reproduces
+    /// the pre-batching behaviour exactly).
+    pub batching: BatchPolicy,
 }
 
 impl Default for ClusterOptions {
@@ -99,6 +120,7 @@ impl Default for ClusterOptions {
             shard: ServerOptions::default(),
             work_stealing: true,
             gate: GatePolicy::PerShard,
+            batching: BatchPolicy::Off,
         }
     }
 }
@@ -120,6 +142,10 @@ enum EventKind {
     Wake(usize),
     /// This shard's machine went idle.
     ShardFree(usize),
+    /// A batch window's flush timer fired. Flush bounds only ever
+    /// tighten, so a timer for a window that already flushed (or whose
+    /// bound moved earlier, arming an earlier timer) is a no-op.
+    BatchFlush(u64),
 }
 
 #[derive(Debug, Clone)]
@@ -222,6 +248,9 @@ pub struct Cluster {
     /// shard-0 gate under the legacy [`GatePolicy::Shard0`] ablation.
     admissions: Vec<Admission>,
     opts: ClusterOptions,
+    /// The admission-time batch former (inert under
+    /// [`BatchPolicy::Off`]).
+    former: BatchFormer,
     events: BinaryHeap<Reverse<Event>>,
     seq: u64,
     clock: f64,
@@ -283,10 +312,12 @@ impl Cluster {
             GatePolicy::PerShard => shards.iter().map(|s| gate_of(&s.model)).collect(),
             GatePolicy::Shard0 => vec![gate_of(&shards[0].model)],
         };
+        let former = BatchFormer::new(&opts.batching, opts.shard.deadline_slack);
         Cluster {
             shards,
             admissions,
             opts,
+            former,
             events: BinaryHeap::new(),
             seq: 0,
             clock: 0.0,
@@ -332,8 +363,8 @@ impl Cluster {
         &self.admissions[self.gate_idx(i)]
     }
 
-    /// Requests not yet dispatched: queued on shards or still in the
-    /// arrival event stream.
+    /// Requests not yet dispatched: queued on shards, waiting in a
+    /// batch window, or still in the arrival event stream.
     pub fn pending(&self) -> usize {
         let queued: usize = self.shards.iter().map(|s| s.pending()).sum();
         let in_flight = self
@@ -341,7 +372,7 @@ impl Cluster {
             .iter()
             .filter(|r| matches!(r.0.kind, EventKind::Arrival(_)))
             .count();
-        queued + in_flight
+        queued + in_flight + self.former.pending()
     }
 
     /// Requests completed so far.
@@ -411,14 +442,15 @@ impl Cluster {
         self.events.push(Reverse(Event { time, seq, kind }));
     }
 
-    /// Gate `req` on shard `s`'s own admission gate and, under the
-    /// legacy [`GatePolicy::Shard0`] ablation, clamp the standalone
-    /// device pick into `s`'s device range (shard 0's model can name a
-    /// device a smaller heterogeneous shard does not have).
-    fn gate_on(&mut self, s: usize, req: &GemmRequest) -> GateVerdict {
+    /// Gate one work unit — a plain request (`members == 1`) or a fused
+    /// batch of `members` — on shard `s`'s own admission gate and,
+    /// under the legacy [`GatePolicy::Shard0`] ablation, clamp the
+    /// standalone device pick into `s`'s device range (shard 0's model
+    /// can name a device a smaller heterogeneous shard does not have).
+    fn gate_on(&mut self, s: usize, size: GemmSize, reps: u32, members: u32) -> GateVerdict {
         let g = self.gate_idx(s);
         let (co_execute, mut best_device, predicted_s) =
-            self.admissions[g].admit(req.size, req.reps);
+            self.admissions[g].admit_batch(size, reps, members);
         match self.opts.gate {
             GatePolicy::Shard0 => {
                 best_device = best_device.min(self.shards[s].num_devices() - 1);
@@ -437,18 +469,26 @@ impl Cluster {
         (co_execute, best_device, predicted_s)
     }
 
-    /// Route `req` to the shard with the earliest class-weighted
-    /// predicted finish **under each shard's own gate verdict** (ties:
-    /// lowest shard index). With `deadline_only`, shards whose own
-    /// model fails the machine-level SLO feasibility probe are skipped
-    /// — `None` then means *no* shard can meet the deadline at all
-    /// (without the restriction a shard is always found). Returns the
-    /// chosen shard, its gate verdict and its predicted finish, so
-    /// deadline admission and the enqueue reuse the same predictions.
-    fn route(&mut self, now: f64, req: &GemmRequest, deadline_only: bool) -> Option<Routed> {
+    /// Route one work unit (`req` is a plain request or a batch
+    /// carrier, gated as `members`) to the shard with the earliest
+    /// class-weighted predicted finish **under each shard's own gate
+    /// verdict** (ties: lowest shard index). With `deadline_only`,
+    /// shards whose own model fails the machine-level SLO feasibility
+    /// probe are skipped — `None` then means *no* shard can meet the
+    /// deadline at all (without the restriction a shard is always
+    /// found). Returns the chosen shard, its gate verdict and its
+    /// predicted finish, so deadline admission and the enqueue reuse
+    /// the same predictions.
+    fn route(
+        &mut self,
+        now: f64,
+        req: &GemmRequest,
+        members: u32,
+        deadline_only: bool,
+    ) -> Option<Routed> {
         let mut best: Option<Routed> = None;
         for i in 0..self.shards.len() {
-            let verdict = self.gate_on(i, req);
+            let verdict = self.gate_on(i, req.size, req.reps, members);
             if deadline_only {
                 let deadline_s = req.deadline_s.expect("deadline_only needs an SLO");
                 let g = self.gate_idx(i);
@@ -479,12 +519,13 @@ impl Cluster {
     }
 
     /// The smallest machine-level service prediction any shard's own
-    /// gate gives `req` — the backlog-free figure denial records carry,
-    /// so the denial log is stable across queue states (every gate
-    /// lookup is memoized, making this an O(shards) memo read).
-    fn best_service_prediction(&mut self, req: &GemmRequest) -> f64 {
+    /// gate gives one work unit — the backlog-free figure denial
+    /// records carry (stable across queue states) and the batch
+    /// former's flush-pressure service hint (every gate lookup is
+    /// memoized, making this an O(shards) memo read).
+    fn best_service_prediction(&mut self, size: GemmSize, reps: u32, members: u32) -> f64 {
         (0..self.shards.len())
-            .map(|i| self.gate_on(i, req).2)
+            .map(|i| self.gate_on(i, size, reps, members).2)
             .fold(f64::INFINITY, f64::min)
     }
 
@@ -514,7 +555,9 @@ impl Cluster {
     /// [`ExecMode::Denied`], consuming no machine time on any shard.
     /// Shares are empty — a denial never touched a machine, and shards
     /// of a heterogeneous cluster disagree on the device count anyway.
-    fn deny(&mut self, now: f64, req: GemmRequest, predicted_s: f64) {
+    /// (`arrival == now` except for disbanded batch members, whose
+    /// window wait stays visible in the record.)
+    fn deny(&mut self, now: f64, req: GemmRequest, arrival: f64, predicted_s: f64) {
         self.served.push(ServedRequest {
             id: req.id,
             size: req.size,
@@ -523,7 +566,7 @@ impl Cluster {
             deadline_s: req.deadline_s,
             mode: ExecMode::Denied,
             shard: None,
-            arrival: now,
+            arrival,
             start: now,
             finish: now,
             exec_s: 0.0,
@@ -531,6 +574,165 @@ impl Cluster {
             cache_hit: false,
             shares: Vec::new(),
         });
+    }
+
+    /// Offer an arrival to the batch former. Returns `false` when the
+    /// request is not a batching candidate (batching off, too big, or
+    /// some shard's own gate would co-execute it alone — a request
+    /// worth splitting by itself never waits for a window) and must be
+    /// admitted solo by the caller.
+    fn try_batch(&mut self, now: f64, req: GemmRequest) -> bool {
+        if !self.former.candidate(&req) {
+            return false;
+        }
+        if (0..self.shards.len()).any(|i| self.gate_on(i, req.size, req.reps, 1).0) {
+            return false;
+        }
+        // Flush-pressure hint: the best-shard predicted service time of
+        // the batch this request would fuse into (memoized gate reads).
+        let (fused, members) = self.former.preview(&req);
+        let hint = self.best_service_prediction(fused, req.reps, members);
+        match self.former.join(req, now, hint) {
+            JoinOutcome::Pending { window, flush_at } => {
+                self.push_event(flush_at, EventKind::BatchFlush(window));
+            }
+            JoinOutcome::FlushNow { window } => self.flush_window(now, window),
+        }
+        true
+    }
+
+    /// Flush a batch window (timer fired, window full, or SLO pressure)
+    /// and hand the fused result to admission. One-member windows admit
+    /// solo — a "batch" of one is just a request that waited.
+    fn flush_window(&mut self, now: f64, window: u64) {
+        let Some(batch) = self.former.flush(window) else {
+            return; // stale timer: the window already flushed
+        };
+        if batch.members.len() == 1 {
+            let m = batch.members[0];
+            self.admit_request(now, m.req, m.arrival);
+        } else {
+            self.admit_fused(now, batch);
+        }
+    }
+
+    /// Admit one plain request at time `now`. `arrival` is its true
+    /// front-end arrival (earlier than `now` for members of a disbanded
+    /// batch, whose window wait is charged against any SLO budget).
+    ///
+    /// Deadline admission: an SLO no shard can meet — machine-level (no
+    /// shard's own model passes the deadline-constrained LP / service
+    /// prediction) or queueing-level (the best feasible shard's
+    /// predicted sojourn overruns the slack guard band) — is turned
+    /// away (or demoted, per policy) *now*, before it consumes queue
+    /// space it cannot use.
+    fn admit_request(&mut self, now: f64, mut req: GemmRequest, arrival: f64) {
+        let mut routed = None;
+        if let Some(deadline_s) = req.deadline_s {
+            // The budget that remains once time already spent waiting
+            // (zero for a fresh arrival) is charged.
+            let remaining = deadline_s - (now - arrival);
+            let mut gate_req = req;
+            gate_req.deadline_s = Some(remaining);
+            routed = if remaining > 0.0 {
+                self.route(now, &gate_req, 1, true)
+                    .filter(|r| r.finish - now <= self.opts.shard.deadline_slack * remaining)
+            } else {
+                None
+            };
+            if routed.is_none() {
+                match self.opts.shard.deadline_policy {
+                    DeadlinePolicy::Reject => {
+                        // Record the denial with the best machine-level
+                        // service prediction any shard's own gate
+                        // offers — backlog-free, so the same request
+                        // denied under different queue states logs the
+                        // same figure.
+                        let predicted_s = self.best_service_prediction(req.size, req.reps, 1);
+                        self.deny(now, req, arrival, predicted_s);
+                        return;
+                    }
+                    DeadlinePolicy::Downclass => {
+                        // Best-effort from here on: the SLO is given
+                        // up, not silently missed — and the route is
+                        // recomputed for the new class below.
+                        req.class = QosClass::Batch;
+                        req.deadline_s = None;
+                    }
+                }
+            }
+        }
+        // Every shard is scored with its *own* gate's verdict: on a
+        // heterogeneous cluster the per-shard predictions (and even the
+        // co-execute decision) legitimately disagree, and the enqueue
+        // below records the verdict of the shard actually chosen.
+        let Routed {
+            shard: target,
+            verdict: (co_execute, best_device, predicted_s),
+            ..
+        } = match routed {
+            Some(r) => r,
+            None => self
+                .route(now, &req, 1, false)
+                .expect("a cluster has at least one shard"),
+        };
+        self.shards[target].enqueue(QueuedRequest {
+            req,
+            arrival,
+            co_execute,
+            best_device,
+            predicted_s,
+            batch: None,
+        });
+        // Defer the dispatch behind simultaneous arrivals so queue
+        // policies and the bypass see the whole burst.
+        self.push_event(now, EventKind::Wake(target));
+    }
+
+    /// Admit a fused batch as one work unit: batch-level gate verdicts
+    /// at every shard, batch-level deadline admission against the
+    /// tightest member SLO, one routing decision, one queue slot. A
+    /// batch whose SLO fails admission is **disbanded** — every member
+    /// re-enters solo admission (where its own SLO is judged with the
+    /// window wait already charged) instead of the whole batch being
+    /// denied.
+    fn admit_fused(&mut self, now: f64, batch: FusedBatch) {
+        let members = batch.members.len() as u32;
+        let carrier = batch.carrier(now);
+        let mut routed = None;
+        if let Some(remaining) = carrier.deadline_s {
+            routed = if remaining > 0.0 {
+                self.route(now, &carrier, members, true)
+                    .filter(|r| r.finish - now <= self.opts.shard.deadline_slack * remaining)
+            } else {
+                None
+            };
+            if routed.is_none() {
+                for m in batch.members {
+                    self.admit_request(now, m.req, m.arrival);
+                }
+                return;
+            }
+        }
+        let Routed {
+            shard: target,
+            verdict: (co_execute, best_device, predicted_s),
+            ..
+        } = match routed {
+            Some(r) => r,
+            None => self
+                .route(now, &carrier, members, false)
+                .expect("a cluster has at least one shard"),
+        };
+        self.shards[target].enqueue(QueuedRequest {
+            req: carrier,
+            arrival: now,
+            co_execute,
+            best_device,
+            predicted_s,
+            batch: Some(batch),
+        });
+        self.push_event(now, EventKind::Wake(target));
     }
 
     fn dispatch_on(&mut self, s: usize, at: f64) {
@@ -559,73 +761,29 @@ impl Cluster {
         let Some(Reverse(ev)) = self.events.pop() else {
             return false;
         };
+        if let EventKind::BatchFlush(window) = ev.kind {
+            // Flush bounds only tighten, so a window that flushed early
+            // (full, SLO pressure, or an earlier re-armed timer) leaves
+            // stale timers behind. They must not even advance the
+            // virtual clock — the flush they were armed for already
+            // happened at an earlier instant.
+            if self.former.has_window(window) {
+                self.clock = self.clock.max(ev.time);
+                self.flush_window(ev.time, window);
+            }
+            return true;
+        }
         self.clock = self.clock.max(ev.time);
         match ev.kind {
-            EventKind::Arrival(mut req) => {
-                // Deadline admission: an SLO no shard can meet —
-                // machine-level (no shard's own model passes the
-                // deadline-constrained LP / service prediction) or
-                // queueing-level (the best feasible shard's predicted
-                // sojourn overruns the slack guard band) — is turned
-                // away (or demoted, per policy) *now*, before it
-                // consumes queue space it cannot use.
-                let mut routed = None;
-                if let Some(deadline_s) = req.deadline_s {
-                    routed = self
-                        .route(ev.time, &req, true)
-                        .filter(|r| {
-                            r.finish - ev.time <= self.opts.shard.deadline_slack * deadline_s
-                        });
-                    if routed.is_none() {
-                        match self.opts.shard.deadline_policy {
-                            DeadlinePolicy::Reject => {
-                                // Record the denial with the best
-                                // machine-level service prediction any
-                                // shard's own gate offers — backlog-
-                                // free, so the same request denied
-                                // under different queue states logs the
-                                // same figure.
-                                let predicted_s = self.best_service_prediction(&req);
-                                self.deny(ev.time, req, predicted_s);
-                                return true;
-                            }
-                            DeadlinePolicy::Downclass => {
-                                // Best-effort from here on: the SLO is
-                                // given up, not silently missed — and
-                                // the route is recomputed for the new
-                                // class below.
-                                req.class = QosClass::Batch;
-                                req.deadline_s = None;
-                            }
-                        }
-                    }
+            EventKind::Arrival(req) => {
+                // Small standalone-bound arrivals visit the batch
+                // former first; everything else (and everything when
+                // batching is off) admits solo.
+                if !self.try_batch(ev.time, req) {
+                    self.admit_request(ev.time, req, ev.time);
                 }
-                // Every shard is scored with its *own* gate's verdict:
-                // on a heterogeneous cluster the per-shard predictions
-                // (and even the co-execute decision) legitimately
-                // disagree, and the enqueue below records the verdict
-                // of the shard actually chosen.
-                let Routed {
-                    shard: target,
-                    verdict: (co_execute, best_device, predicted_s),
-                    ..
-                } = match routed {
-                    Some(r) => r,
-                    None => self
-                        .route(ev.time, &req, false)
-                        .expect("a cluster has at least one shard"),
-                };
-                self.shards[target].enqueue(QueuedRequest {
-                    req,
-                    arrival: ev.time,
-                    co_execute,
-                    best_device,
-                    predicted_s,
-                });
-                // Defer the dispatch behind simultaneous arrivals so
-                // queue policies and the bypass see the whole burst.
-                self.push_event(ev.time, EventKind::Wake(target));
             }
+            EventKind::BatchFlush(_) => unreachable!("handled before the clock advance"),
             EventKind::Wake(s) => {
                 if self.shards[s].free_at() <= ev.time && self.shards[s].pending() > 0 {
                     self.dispatch_on(s, ev.time);
@@ -640,19 +798,24 @@ impl Cluster {
                         // popping and then vetoing would burn one of
                         // the head class's weighted-round-robin turns
                         // without a dispatch.
-                        let offer = self.shards[victim]
-                            .peek_next()
-                            .map(|q| (q.req, q.arrival));
-                        if let Some((req, arrival)) = offer {
-                            // Re-plan the offered request under the
+                        let offer = self.shards[victim].peek_next().map(|q| {
+                            let members =
+                                q.batch.as_ref().map_or(1, |b| b.members.len() as u32);
+                            (q.req, q.arrival, members)
+                        });
+                        if let Some((req, arrival, members)) = offer {
+                            // Re-plan the offered work unit under the
                             // thief's own model: the victim's verdict
                             // (co-exec vs standalone, best device,
                             // service prediction) was computed against
                             // a different machine, so the thief re-runs
                             // its gate (memoized) and dispatch will use
-                            // the thief's PlanCache.
+                            // the thief's PlanCache. A fused batch
+                            // moves whole — `req` is then the batch
+                            // carrier and `members` its size, so the
+                            // thief re-gates it batch-level.
                             let (co_execute, best_device, predicted_s) =
-                                self.gate_on(s, &req);
+                                self.gate_on(s, req.size, req.reps, members);
                             // Deadline guard: admission promised this
                             // SLO against a shard whose own model could
                             // meet it — a thief whose machine cannot
@@ -988,6 +1151,114 @@ mod tests {
             [1, 0, 2],
             "per-class attribution"
         );
+    }
+
+    #[test]
+    fn windowed_batching_fuses_a_simultaneous_small_burst() {
+        use crate::service::batch::{BatchPolicy, BatchWindow};
+        let batching = BatchPolicy::Windowed(BatchWindow {
+            window_s: 10.0,
+            max_members: 8,
+            ..Default::default()
+        });
+        // gpu_node: the weak host cannot make tiny GEMMs co-executable,
+        // so 1024^3 is a standalone-bound batching candidate by every
+        // verdict.
+        let run = |batching: BatchPolicy| {
+            let mut c = Cluster::new(
+                &presets::gpu_node(),
+                6,
+                ClusterOptions {
+                    batching,
+                    ..Default::default()
+                },
+            );
+            for _ in 0..8 {
+                c.submit(GemmSize::square(1024), 2);
+            }
+            c.run_to_completion()
+        };
+        let fused = run(batching);
+        let off = run(BatchPolicy::Off);
+
+        // Off: eight standalone dispatches. Windowed: the burst fills
+        // the window before its timer, so everything fuses into ONE
+        // batch served as one dispatch.
+        assert_eq!(off.served.len(), 8);
+        assert_eq!(fused.served.len(), 8);
+        assert_eq!(off.fused(), 0);
+        assert_eq!(fused.fused(), 8);
+        assert_eq!(fused.num_batches(), 1);
+        assert!((fused.mean_batch_members() - 8.0).abs() < 1e-12);
+        assert!((fused.fusion_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(fused.shards[0].dispatches, 1);
+        assert_eq!(fused.shards[0].batches, 1);
+        assert_eq!(fused.shards[0].served_by_class, [0, 8, 0]);
+        let id = fused.served[0].mode.batch().expect("batched member");
+        assert!(fused.served.iter().all(|r| r.mode.batch() == Some(id)));
+        // The members share the fused execution: one `B` operand
+        // crossing the bus per repetition instead of eight — the
+        // session must end strictly earlier than serving them one by
+        // one.
+        assert!(
+            fused.makespan < off.makespan,
+            "fusion must beat one-by-one dispatch: {} vs {}",
+            fused.makespan,
+            off.makespan
+        );
+        // Per-member accounting stays sane.
+        let mut ids: Vec<u64> = fused.served.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<u64>>());
+        for r in &fused.served {
+            assert_eq!(r.arrival, 0.0);
+            assert!((r.shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn lone_candidate_flushes_on_the_window_timer_and_serves_solo() {
+        use crate::service::batch::{BatchPolicy, BatchWindow};
+        let mut c = Cluster::new(
+            &presets::gpu_node(),
+            6,
+            ClusterOptions {
+                batching: BatchPolicy::Windowed(BatchWindow {
+                    window_s: 0.25,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+        );
+        let id = c.submit(GemmSize::square(1024), 2);
+        assert_eq!(c.pending(), 1, "window members count as pending");
+        let report = c.run_to_completion();
+        let r = report.request(id).unwrap();
+        // A window of one is not a batch: the request admits solo after
+        // the window timer, its wait visible as queueing delay.
+        assert!(matches!(r.mode, ExecMode::Standalone { .. }));
+        assert_eq!(report.fused(), 0);
+        assert!((r.start - 0.25).abs() < 1e-9, "start {}", r.start);
+        assert_eq!(r.arrival, 0.0);
+    }
+
+    #[test]
+    fn co_executable_requests_never_wait_for_a_window() {
+        use crate::service::batch::BatchPolicy;
+        let mut c = Cluster::new(
+            &presets::gpu_node(),
+            6,
+            ClusterOptions {
+                batching: BatchPolicy::windowed(),
+                ..Default::default()
+            },
+        );
+        let id = c.submit(big(), 2);
+        let report = c.run_to_completion();
+        let r = report.request(id).unwrap();
+        assert_eq!(r.mode, ExecMode::CoExec);
+        assert_eq!(r.start, 0.0, "no window wait for co-executable work");
+        assert_eq!(report.fused(), 0);
     }
 
     #[test]

@@ -19,6 +19,15 @@
 //!   keyed by `(shape, reps, shard epoch)`; deadline-bound requests are
 //!   additionally probed with the deadline-constrained LP reused from
 //!   the energy formulation, again per shard;
+//! * [`batch`] — admission-time batching: the [`BatchFormer`] holds
+//!   *small* standalone-bound arrivals in a short window and fuses
+//!   compatible ones (same `GemmSize` shape class, same reps, adjacent
+//!   QoS classes — see the module doc for the full predicate and the
+//!   window/flush rules) into one row-stacked [`FusedBatch`] the gate
+//!   re-scores as a batch, so work that would bypass one device at a
+//!   time co-executes like any large GEMM instead; SLO-bound members
+//!   flush their window early (deadline pressure) so batching never
+//!   pushes an admitted deadline past its budget;
 //! * [`shard`] — the [`ExecutorShard`]: one machine's simulator,
 //!   installation-time profile, [`PlanCache`], local queue and optional
 //!   dynamic-scheduler loop; dispatch (including the standalone bypass
@@ -72,6 +81,7 @@
 
 pub mod admission;
 pub mod arrivals;
+pub mod batch;
 pub mod cache;
 pub mod cluster;
 pub mod qos;
@@ -82,10 +92,13 @@ pub mod shard;
 
 pub use admission::Admission;
 pub use arrivals::{fixed_trace, Arrival, ClassLoad, MixedArrivals, OnOffArrivals, PoissonArrivals};
+pub use batch::{BatchFormer, BatchMember, BatchPolicy, BatchWindow, FusedBatch, ShapeClass};
 pub use cache::{LruMap, PlanCache};
 pub use cluster::{Cluster, ClusterOptions, GatePolicy, HeterogeneousSpec};
 pub use qos::{DeadlinePolicy, QosClass};
 pub use queue::{QueuePolicy, QueuedRequest, RequestQueue};
-pub use request::{ClassBreakdown, ExecMode, GemmRequest, ServedRequest, ServiceReport, ShardStats};
+pub use request::{
+    BatchId, ClassBreakdown, ExecMode, GemmRequest, ServedRequest, ServiceReport, ShardStats,
+};
 pub use server::{Server, ServerOptions};
 pub use shard::{DispatchResult, ExecutorShard};

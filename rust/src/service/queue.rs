@@ -30,6 +30,7 @@
 //! integer-credit arithmetic over a fixed class order, so replays are
 //! byte-identical.
 
+use super::batch::FusedBatch;
 use super::qos::{QosClass, NUM_CLASSES};
 use super::request::GemmRequest;
 use std::collections::VecDeque;
@@ -56,6 +57,11 @@ pub struct QueuedRequest {
     pub best_device: usize,
     /// Predicted total service seconds (all reps) under the verdict.
     pub predicted_s: f64,
+    /// The fused batch behind this entry, when `req` is a batch
+    /// carrier: the batch occupies exactly **one queue slot** on the
+    /// lane of its strictest member, is routed/stolen as one unit, and
+    /// fans out into per-member completion records at dispatch.
+    pub batch: Option<FusedBatch>,
 }
 
 /// The pending-request queue: one lane per [`QosClass`], drained by a
@@ -281,6 +287,7 @@ mod tests {
             co_execute: co,
             best_device: 2,
             predicted_s,
+            batch: None,
         }
     }
 

@@ -56,6 +56,19 @@ impl GemmRequest {
     }
 }
 
+/// Identity of one fused admission-time batch (unique per cluster;
+/// see [`super::batch`]). Every member's completion record carries it
+/// via [`ExecMode::Batched`], which is what ties the per-member fan-out
+/// back together in a [`ServiceReport`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct BatchId(pub u64);
+
+impl fmt::Display for BatchId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "b{}", self.0)
+    }
+}
+
 /// How a request was executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
@@ -72,6 +85,14 @@ pub enum ExecMode {
     BypassStandalone {
         /// The device it ran on.
         device: usize,
+    },
+    /// Served as a member of a fused admission-time batch: the request
+    /// was row-stacked with compatible small requests into one work
+    /// unit the cluster gated, routed and executed as a whole (see
+    /// [`super::batch`]).
+    Batched {
+        /// The batch this request was fused into.
+        batch: BatchId,
     },
     /// Planning was infeasible: the request completes unserved (zero
     /// execution time, empty shares) instead of killing the shard.
@@ -95,6 +116,19 @@ impl ExecMode {
     /// True when the request rode along via the bypass.
     pub fn is_bypass(&self) -> bool {
         matches!(self, ExecMode::BypassStandalone { .. })
+    }
+
+    /// True when the request was served inside a fused batch.
+    pub fn is_batched(&self) -> bool {
+        matches!(self, ExecMode::Batched { .. })
+    }
+
+    /// The fused batch this request was served in, if any.
+    pub fn batch(&self) -> Option<BatchId> {
+        match self {
+            ExecMode::Batched { batch } => Some(*batch),
+            _ => None,
+        }
     }
 
     /// True when planning failed and the request was turned away.
@@ -121,6 +155,7 @@ impl fmt::Display for ExecMode {
             ExecMode::CoExec => write!(f, "co-exec"),
             ExecMode::Standalone { device } => write!(f, "standalone(d{device})"),
             ExecMode::BypassStandalone { device } => write!(f, "bypass(d{device})"),
+            ExecMode::Batched { batch } => write!(f, "batched({batch})"),
             ExecMode::Rejected => write!(f, "rejected"),
             ExecMode::Denied => write!(f, "denied"),
         }
@@ -196,6 +231,9 @@ pub struct ShardStats {
     pub last_finish: f64,
     /// Requests this shard stole from a busier shard's queue.
     pub stolen: usize,
+    /// Fused batches this shard dispatched (each counts once in
+    /// `dispatches`; its members all appear in `served_by_class`).
+    pub batches: usize,
     /// Requests this shard completed per QoS class
     /// ([`QosClass::index`] order; bypass riders count toward their own
     /// class, so the sum can exceed `dispatches`).
@@ -346,6 +384,40 @@ impl ServiceReport {
     /// Count of requests served through the bypass.
     pub fn bypassed(&self) -> usize {
         self.served.iter().filter(|r| r.mode.is_bypass()).count()
+    }
+
+    /// Count of requests served inside a fused admission-time batch.
+    pub fn fused(&self) -> usize {
+        self.served.iter().filter(|r| r.mode.is_batched()).count()
+    }
+
+    /// Number of distinct fused batches dispatched over the session.
+    pub fn num_batches(&self) -> usize {
+        let mut ids: Vec<BatchId> = self.served.iter().filter_map(|r| r.mode.batch()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+
+    /// Mean members per fused batch (0 when nothing fused).
+    pub fn mean_batch_members(&self) -> f64 {
+        let batches = self.num_batches();
+        if batches == 0 {
+            0.0
+        } else {
+            self.fused() as f64 / batches as f64
+        }
+    }
+
+    /// Fraction of executed requests that were served fused — the
+    /// batching bench's headline figure next to throughput.
+    pub fn fusion_rate(&self) -> f64 {
+        let executed = self.executed().count();
+        if executed == 0 {
+            0.0
+        } else {
+            self.fused() as f64 / executed as f64
+        }
     }
 
     /// Count of requests rejected at planning time.
@@ -603,6 +675,7 @@ mod tests {
                 busy_s: 3.0,
                 last_finish: 3.0,
                 stolen: 0,
+                batches: 0,
                 served_by_class: [0, 3, 0],
                 model_fp: 0xDEAD_BEEF,
                 predicted_s: 2.5,
@@ -643,6 +716,10 @@ mod tests {
             ExecMode::BypassStandalone { device: 0 }.to_string(),
             "bypass(d0)"
         );
+        assert_eq!(
+            ExecMode::Batched { batch: BatchId(3) }.to_string(),
+            "batched(b3)"
+        );
         assert_eq!(ExecMode::Rejected.to_string(), "rejected");
         assert_eq!(ExecMode::Denied.to_string(), "denied");
         assert!(ExecMode::Denied.is_denied());
@@ -656,6 +733,33 @@ mod tests {
         assert!(!ExecMode::Rejected.is_standalone());
         assert!(!ExecMode::Rejected.is_bypass());
         assert!(!ExecMode::CoExec.is_rejected());
+        let batched = ExecMode::Batched { batch: BatchId(7) };
+        assert!(batched.is_batched());
+        assert!(!batched.is_standalone());
+        assert!(!batched.is_unserved());
+        assert_eq!(batched.batch(), Some(BatchId(7)));
+        assert_eq!(ExecMode::CoExec.batch(), None);
+    }
+
+    #[test]
+    fn batch_metrics_aggregate_members_and_batches() {
+        let mut r = report();
+        // No batch served yet: everything is zero/empty.
+        assert_eq!(r.fused(), 0);
+        assert_eq!(r.num_batches(), 0);
+        assert_eq!(r.mean_batch_members(), 0.0);
+        assert_eq!(r.fusion_rate(), 0.0);
+        // Two members of batch 0, one member of batch 1.
+        r.served.push(served(3, 0.0, 1.0, 2.0, ExecMode::Batched { batch: BatchId(0) }));
+        r.served.push(served(4, 0.0, 1.0, 2.0, ExecMode::Batched { batch: BatchId(0) }));
+        r.served.push(served(5, 0.5, 1.0, 2.0, ExecMode::Batched { batch: BatchId(1) }));
+        assert_eq!(r.fused(), 3);
+        assert_eq!(r.num_batches(), 2);
+        assert!((r.mean_batch_members() - 1.5).abs() < 1e-12);
+        // 3 fused of 6 executed.
+        assert!((r.fusion_rate() - 0.5).abs() < 1e-12);
+        // Members render with their batch id in the request table.
+        assert!(r.table("batches").render().contains("batched(b1)"));
     }
 
     #[test]

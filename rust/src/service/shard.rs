@@ -14,6 +14,7 @@
 //! [`ExecMode::Rejected`] record (zero execution time, empty shares)
 //! instead of propagating a panic out of the serving loop.
 
+use super::batch::{BatchMember, FusedBatch};
 use super::cache::PlanCache;
 use super::qos::{QosClass, NUM_CLASSES};
 use super::queue::{QueuedRequest, RequestQueue};
@@ -63,6 +64,8 @@ pub struct ExecutorShard {
     busy_s: f64,
     dispatches: usize,
     stolen: usize,
+    /// Fused batches dispatched (each is one entry in `dispatches`).
+    batches: usize,
     /// Requests completed per QoS class (riders included).
     served_by_class: [usize; NUM_CLASSES],
     /// Sum of admission-time service predictions over everything this
@@ -99,6 +102,7 @@ impl ExecutorShard {
             busy_s: 0.0,
             dispatches: 0,
             stolen: 0,
+            batches: 0,
             served_by_class: [0; NUM_CLASSES],
             predicted_sum_s: 0.0,
             realized_sum_s: 0.0,
@@ -170,6 +174,7 @@ impl ExecutorShard {
             busy_s: self.busy_s,
             last_finish: self.free_at,
             stolen: self.stolen,
+            batches: self.batches,
             served_by_class: self.served_by_class,
             model_fp: self.model.fingerprint(),
             predicted_s: self.predicted_sum_s,
@@ -245,13 +250,177 @@ impl ExecutorShard {
     ) -> Option<DispatchResult> {
         let q = self.queue.pop_next()?;
         self.dispatches += 1;
-        let result = if q.co_execute {
+        let result = if q.batch.is_some() {
+            self.serve_batch(q, start, out)
+        } else if q.co_execute {
             self.serve_coexec(q, start, out)
         } else {
             self.serve_standalone(q, start, out)
         };
         self.free_at = result.finish;
         Some(result)
+    }
+
+    /// Serve a fused admission-time batch (see [`super::batch`]): one
+    /// dispatch, one execution of the row-stacked problem, and one
+    /// completion record **per member** — attributed with
+    /// [`crate::sim::ExecOutcome::finish_of`] over the devices that
+    /// computed the member's rows, so a member on the fast device's
+    /// slice finishes before the batch's slowest straggler.
+    fn serve_batch(
+        &mut self,
+        mut q: QueuedRequest,
+        start: f64,
+        out: &mut Vec<ServedRequest>,
+    ) -> DispatchResult {
+        let batch = q.batch.take().expect("serve_batch requires a fused batch");
+        self.batches += 1;
+        if q.co_execute {
+            self.serve_batch_coexec(&q, &batch, start, out)
+        } else {
+            self.serve_batch_standalone(&q, &batch, start, out)
+        }
+    }
+
+    /// One member's slice of a batch fan-out: class attribution plus
+    /// the completion record. The member keeps its own identity,
+    /// arrival and SLO; the carrier prediction is split pro-rata by row
+    /// count (the one attribution rule all batch outcomes share).
+    #[allow(clippy::too_many_arguments)]
+    fn push_member(
+        &mut self,
+        q: &QueuedRequest,
+        m: &BatchMember,
+        mode: ExecMode,
+        start: f64,
+        exec_s: f64,
+        cache_hit: bool,
+        shares: Vec<f64>,
+        out: &mut Vec<ServedRequest>,
+    ) {
+        self.served_by_class[m.req.class.index()] += 1;
+        out.push(ServedRequest {
+            id: m.req.id,
+            size: m.req.size,
+            reps: m.req.reps,
+            class: m.req.class,
+            deadline_s: m.req.deadline_s,
+            mode,
+            shard: Some(self.id),
+            arrival: m.arrival,
+            start,
+            finish: start + exec_s,
+            exec_s,
+            predicted_s: q.predicted_s * m.req.size.m as f64 / q.req.size.m as f64,
+            cache_hit,
+            shares,
+        });
+    }
+
+    /// The fused batch passed the §6 gate: plan and split it across
+    /// devices like any large GEMM (plans come from the shard's
+    /// [`PlanCache`], keyed by the fused shape), then fan completions
+    /// out per member by intersecting each member's row span with the
+    /// per-device assignments.
+    fn serve_batch_coexec(
+        &mut self,
+        q: &QueuedRequest,
+        batch: &FusedBatch,
+        start: f64,
+        out: &mut Vec<ServedRequest>,
+    ) -> DispatchResult {
+        let (plan, cache_hit) = match self.cached_plan(q.req.size) {
+            Ok(pc) => pc,
+            Err(_) => {
+                self.reject_batch(q, batch, start, out);
+                return DispatchResult {
+                    finish: start,
+                    replanned: false,
+                };
+            }
+        };
+        let order = plan.to_work_order(q.req.reps);
+        let sim_start = self.sim.now();
+        let outcome = self.sim.execute(&order);
+        self.busy_s += self.sim.busy_until() - sim_start;
+        // Placement quality treats the batch as the single unit routing
+        // predicted: one predicted figure against one realized figure.
+        let finish_all = outcome.finish_of(&plan.active_device_indices());
+        self.predicted_sum_s += q.predicted_s;
+        self.realized_sum_s += finish_all;
+        let shares = plan.shares();
+        let mut row = 0u64;
+        for m in &batch.members {
+            let span = (row, row + m.req.size.m);
+            row = span.1;
+            let devices: Vec<usize> = plan
+                .assignments
+                .iter()
+                .filter(|a| a.rows > 0 && a.row_offset < span.1 && a.row_offset + a.rows > span.0)
+                .map(|a| a.device)
+                .collect();
+            let finish_m = outcome.finish_of(&devices);
+            let mode = ExecMode::Batched { batch: batch.id };
+            self.push_member(q, m, mode, start, finish_m, cache_hit, shares.clone(), out);
+        }
+        let mut replanned = false;
+        if let Some(ds) = &mut self.dynsched {
+            if ds.observe(&plan, &outcome, q.req.reps) {
+                self.model = ds.model.clone();
+                self.cache.bump_epoch();
+                replanned = true;
+            }
+        }
+        DispatchResult {
+            finish: start + outcome.makespan,
+            replanned,
+        }
+    }
+
+    /// The fused batch stayed standalone-bound: one library call of the
+    /// row-stacked problem on the best device — the shared `B` operand
+    /// still crosses the bus once instead of once per member, which is
+    /// where the throughput win over serving the members one by one
+    /// comes from. Every member finishes with the call.
+    fn serve_batch_standalone(
+        &mut self,
+        q: &QueuedRequest,
+        batch: &FusedBatch,
+        start: f64,
+        out: &mut Vec<ServedRequest>,
+    ) -> DispatchResult {
+        let dev = q.best_device;
+        let sim_start = self.sim.now();
+        let outcome = baselines::standalone(&mut self.sim, dev, q.req.size, q.req.reps);
+        self.busy_s += self.sim.busy_until() - sim_start;
+        self.predicted_sum_s += q.predicted_s;
+        self.realized_sum_s += outcome.makespan;
+        let mut shares = vec![0.0; self.sim.num_devices()];
+        shares[dev] = 1.0;
+        for m in &batch.members {
+            let mode = ExecMode::Batched { batch: batch.id };
+            self.push_member(q, m, mode, start, outcome.makespan, false, shares.clone(), out);
+        }
+        DispatchResult {
+            finish: start + outcome.makespan,
+            replanned: false,
+        }
+    }
+
+    /// The fused plan was infeasible: every member completes as
+    /// [`ExecMode::Rejected`] (zero time, empty shares), mirroring the
+    /// single-request path — the shard and its queue live on.
+    fn reject_batch(
+        &mut self,
+        q: &QueuedRequest,
+        batch: &FusedBatch,
+        start: f64,
+        out: &mut Vec<ServedRequest>,
+    ) {
+        for m in &batch.members {
+            let zero_shares = vec![0.0; self.sim.num_devices()];
+            self.push_member(q, m, ExecMode::Rejected, start, 0.0, false, zero_shares, out);
+        }
     }
 
     fn serve_coexec(
@@ -271,7 +440,11 @@ impl ExecutorShard {
             let budget = q.predicted_s;
             let reps = q.req.reps;
             rider = self.queue.take_first(|c| {
-                !c.co_execute
+                // A fused batch never rides the bypass: its carrier is
+                // one queue slot but fans out per member at dispatch,
+                // which the single-record rider path cannot do.
+                c.batch.is_none()
+                    && !c.co_execute
                     && c.req.reps == reps
                     && predicted_standalone(&inputs[host], c.req.size) * reps.max(1) as f64
                         <= budget
@@ -473,6 +646,34 @@ mod tests {
             co_execute: co,
             best_device: 2,
             predicted_s,
+            batch: None,
+        }
+    }
+
+    /// A hand-fused 2-member batch carrier (the cluster normally builds
+    /// these through the `BatchFormer`).
+    fn queued_batch(m0: u64, m1: u64, n: u64, k: u64, co: bool, dev: usize) -> QueuedRequest {
+        use crate::service::batch::{BatchMember, FusedBatch};
+        use crate::service::request::BatchId;
+        let member = |id: u64, m: u64| BatchMember {
+            req: GemmRequest::new(id, GemmSize::new(m, n, k), 2),
+            arrival: 0.0,
+        };
+        let fused = GemmSize::new(m0 + m1, n, k);
+        QueuedRequest {
+            req: GemmRequest::new(0, fused, 2),
+            arrival: 0.0,
+            co_execute: co,
+            best_device: dev,
+            predicted_s: 1.0,
+            batch: Some(FusedBatch {
+                id: BatchId(0),
+                size: fused,
+                reps: 2,
+                class: QosClass::Standard,
+                deadline_abs: None,
+                members: vec![member(0, m0), member(1, m1)],
+            }),
         }
     }
 
@@ -561,6 +762,69 @@ mod tests {
         assert_eq!(s.stats().served_by_class, [1, 1, 0]);
         assert_eq!(out[0].class, QosClass::Interactive);
         assert_eq!(out[1].class, QosClass::Standard);
+    }
+
+    #[test]
+    fn coexec_batch_fans_out_per_member_with_row_attribution() {
+        let mut s = shard(7, ServerOptions::default());
+        // Two heavy members row-stacked into a co-executable batch.
+        s.enqueue(queued_batch(16_000, 16_000, 16_000, 16_000, true, 0));
+        let mut out = Vec::new();
+        let r = s.dispatch_next(1.0, &mut out).unwrap();
+        assert_eq!(out.len(), 2, "one record per member");
+        assert_eq!(s.stats().dispatches, 1, "the batch is one dispatch");
+        assert_eq!(s.stats().batches, 1);
+        assert_eq!(s.stats().served_by_class, [0, 2, 0]);
+        for m in &out {
+            assert!(matches!(m.mode, ExecMode::Batched { .. }));
+            assert_eq!(m.start, 1.0);
+            assert!(m.finish > m.start);
+            assert!(m.finish <= r.finish + 1e-9, "member outlived the batch");
+            assert!((m.shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(m.predicted_s > 0.0);
+        }
+        // Members keep their own ids and sizes.
+        assert_eq!(out[0].id, 0);
+        assert_eq!(out[1].id, 1);
+        assert_eq!(out[0].size, GemmSize::new(16_000, 16_000, 16_000));
+        // Equal members split the carrier prediction evenly.
+        assert!((out[0].predicted_s - 0.5).abs() < 1e-12);
+        // The plan solved once for the fused shape.
+        assert_eq!(s.cache.misses, 1);
+    }
+
+    #[test]
+    fn standalone_batch_runs_one_fused_call_on_the_best_device() {
+        let mut s = shard(8, ServerOptions::default());
+        s.enqueue(queued_batch(1024, 1536, 1024, 1024, false, 1));
+        let mut out = Vec::new();
+        let r = s.dispatch_next(0.0, &mut out).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(s.stats().batches, 1);
+        for m in &out {
+            assert!(matches!(m.mode, ExecMode::Batched { .. }));
+            assert_eq!(m.finish, r.finish, "a fused call completes together");
+            assert_eq!(m.shares[1], 1.0, "the whole batch ran on device 1");
+            assert!(!m.cache_hit);
+        }
+        // The carrier prediction splits by row share: 1024 : 1536.
+        assert!((out[0].predicted_s - 0.4).abs() < 1e-12);
+        assert!((out[1].predicted_s - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infeasible_batch_plan_rejects_every_member() {
+        let mut s = shard(9, ServerOptions::default());
+        s.rules = Vec::new(); // sabotage planning, as in the single test
+        s.enqueue(queued_batch(16_000, 16_000, 16_000, 16_000, true, 0));
+        let mut out = Vec::new();
+        let r = s.dispatch_next(0.0, &mut out).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(r.finish, 0.0, "rejection consumes no machine time");
+        for m in &out {
+            assert_eq!(m.mode, ExecMode::Rejected);
+            assert_eq!(m.exec_s, 0.0);
+        }
     }
 
     #[test]

@@ -451,6 +451,7 @@ fn prop_weighted_queue_never_starves_a_nonempty_class() {
                     co_execute: true,
                     best_device: 0,
                     predicted_s: rng.range(0.1, 5.0),
+                    batch: None,
                 });
                 id += 1;
             }
@@ -613,6 +614,72 @@ fn prop_hetero_cluster_replay_is_byte_identical() {
         let fps: std::collections::HashSet<u64> =
             a.shards.iter().map(|s| s.model_fp).collect();
         assert_eq!(fps.len(), 3);
+    });
+}
+
+#[test]
+fn prop_batched_cluster_replay_is_byte_identical() {
+    use poas::config::presets;
+    use poas::coordinator::Pipeline;
+    use poas::service::{BatchPolicy, BatchWindow, Cluster, ClusterOptions, PoissonArrivals};
+
+    // Profile the three distinct machines once; each case clones the
+    // pipelines so both runs of a case start from identical
+    // installation state.
+    let pipes: Vec<Pipeline> = presets::hetero_mix()
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| Pipeline::for_simulated_machine(cfg, 80 + i as u64))
+        .collect();
+    // Small-GEMM-heavy menu: most arrivals are batching candidates
+    // (one shared (n, k) shape class), with a heavy co-exec shape and a
+    // shape-class outlier mixed in.
+    let menu = vec![
+        (GemmSize::new(1600, 2000, 2000), 2),
+        (GemmSize::new(2000, 2000, 2000), 2),
+        (GemmSize::new(1792, 1024, 1024), 2),
+        (GemmSize::square(16_000), 2),
+    ];
+
+    prop("batched cluster replay", 4, |rng, _| {
+        let rate = rng.range(20.0, 400.0);
+        let seed = rng.below(1 << 20);
+        let window_s = rng.range(0.002, 0.1);
+        let n = 14;
+        let trace = PoissonArrivals::new(rate, menu.clone(), seed).trace(n);
+        let run = || {
+            let mut cluster = Cluster::from_pipelines(
+                pipes.clone(),
+                ClusterOptions {
+                    batching: BatchPolicy::Windowed(BatchWindow {
+                        window_s,
+                        max_members: 4,
+                        ..Default::default()
+                    }),
+                    ..Default::default()
+                },
+            );
+            cluster.submit_trace(&trace);
+            cluster.run_to_completion()
+        };
+        let a = run();
+        let b = run();
+        // The whole report — window formation, flush timing, batch
+        // routing, member fan-out — must replay byte-identically.
+        assert_eq!(a, b);
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "batched replay must be byte-identical"
+        );
+        // Every member is served exactly once, whatever it fused into.
+        assert_eq!(a.served.len(), n);
+        let mut ids: Vec<u64> = a.served.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<u64>>());
+        // Fused members and their batches agree across the replay.
+        assert_eq!(a.fused(), b.fused());
+        assert_eq!(a.num_batches(), b.num_batches());
     });
 }
 

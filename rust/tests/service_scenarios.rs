@@ -15,8 +15,8 @@
 
 use poas::config::{presets, MachineConfig};
 use poas::service::{
-    ClassLoad, Cluster, ClusterOptions, GatePolicy, MixedArrivals, PoissonArrivals, QosClass,
-    QueuePolicy, Server, ServerOptions, ServiceReport,
+    Arrival, BatchPolicy, BatchWindow, ClassLoad, Cluster, ClusterOptions, GatePolicy,
+    MixedArrivals, PoissonArrivals, QosClass, QueuePolicy, Server, ServerOptions, ServiceReport,
 };
 use poas::workload::GemmSize;
 
@@ -703,6 +703,179 @@ fn hetero_cluster_steals_are_replanned_under_the_thief() {
         assert!(r.shard.is_some(), "executed requests carry their shard");
         assert!((r.shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
     }
+}
+
+// ---------------------------------------------------------------------
+// Admission-time batching: throughput acceptance and SLO safety
+// ---------------------------------------------------------------------
+
+/// Seconds one batchable small GEMM takes served alone on the GPU node
+/// — the virtual-time unit the batching scenarios are calibrated in.
+fn small_unit_s() -> f64 {
+    let mut srv = Server::new(&presets::gpu_node(), 0, ServerOptions::default());
+    srv.submit(GemmSize::new(2000, 2000, 2000), 2);
+    srv.run_to_completion().makespan
+}
+
+/// Seconds one (unbatchable) interactive request takes served alone on
+/// the GPU node.
+fn interactive_unit_s() -> f64 {
+    let mut srv = Server::new(&presets::gpu_node(), 0, ServerOptions::default());
+    srv.submit(GemmSize::square(3200), 2);
+    srv.run_to_completion().makespan
+}
+
+/// The batching acceptance load on the heterogeneous mix: a saturating
+/// Standard stream of one small shape class (every draw a batching
+/// candidate) with a light SLO-bound Interactive stream of mid-size
+/// requests riding on top (too big to batch — fusion must help them
+/// only by shortening the queues they share).
+fn batching_trace(n_small: usize, n_int: usize) -> Vec<Arrival> {
+    let t_small = small_unit_s();
+    let t_int = interactive_unit_s();
+    let smalls = MixedArrivals::new(
+        vec![ClassLoad {
+            class: QosClass::Standard,
+            rate_rps: 6.0 / t_small,
+            menu: vec![(GemmSize::new(2000, 2000, 2000), 2)],
+            deadline_s: None,
+        }],
+        61,
+    )
+    .trace(n_small);
+    let span = smalls.last().expect("non-empty small stream").at;
+    let inter = MixedArrivals::new(
+        vec![ClassLoad {
+            class: QosClass::Interactive,
+            rate_rps: n_int as f64 / span,
+            menu: vec![(GemmSize::square(3200), 2)],
+            deadline_s: Some(30.0 * t_int),
+        }],
+        62,
+    )
+    .trace(n_int);
+    let mut trace = smalls;
+    trace.extend(inter);
+    trace.sort_by(|a, b| a.at.total_cmp(&b.at));
+    trace
+}
+
+fn batching_report(batching: BatchPolicy, trace: &[Arrival]) -> ServiceReport {
+    let mut cluster = Cluster::from_machines(
+        &presets::hetero_mix(),
+        19,
+        ClusterOptions {
+            batching,
+            // Stealing off: the comparison isolates what fusion does to
+            // throughput, not what a slow node stealing a whole batch
+            // does to the tail.
+            work_stealing: false,
+            ..Default::default()
+        },
+    );
+    cluster.submit_trace(trace);
+    cluster.run_to_completion()
+}
+
+/// The batching acceptance criterion: under a small-GEMM-heavy Poisson
+/// mix on `hetero_mix`, `BatchPolicy::Windowed` beats
+/// `BatchPolicy::Off` by >= 10% throughput while the interactive
+/// deadline-hit rate stays at least as high as unbatched. CI's
+/// bench-smoke job enforces the same band on the regenerated
+/// `benches/cluster_scaling.rs` figures via `ci/check_bench.py`.
+#[test]
+fn windowed_batching_beats_off_by_ten_percent_throughput_on_hetero_mix() {
+    let t_small = small_unit_s();
+    let trace = batching_trace(64, 6);
+    let windowed = BatchPolicy::Windowed(BatchWindow {
+        window_s: 8.0 * t_small,
+        max_members: 8,
+        ..Default::default()
+    });
+    let fused = batching_report(windowed, &trace);
+    let off = batching_report(BatchPolicy::Off, &trace);
+
+    assert_eq!(fused.served.len(), trace.len());
+    assert_eq!(off.served.len(), trace.len());
+    // The windowed leg genuinely fused the small stream...
+    assert_eq!(off.fused(), 0);
+    assert!(
+        fused.fusion_rate() >= 0.5,
+        "most small requests must fuse: rate {}",
+        fused.fusion_rate()
+    );
+    assert!(fused.mean_batch_members() >= 2.0);
+    // ...and converts the fusion into the headline throughput win.
+    assert!(
+        fused.throughput_rps() >= 1.10 * off.throughput_rps(),
+        "windowed batching must beat off by >= 10%: {} vs {} req/s",
+        fused.throughput_rps(),
+        off.throughput_rps()
+    );
+    // SLO safety: batching never costs the interactive tier its
+    // deadlines.
+    assert!(
+        fused.deadline_hit_rate() >= off.deadline_hit_rate() - 1e-12,
+        "batched hit rate {} fell below unbatched {}",
+        fused.deadline_hit_rate(),
+        off.deadline_hit_rate()
+    );
+    // Per-member accounting survives the fan-out: every arrival served
+    // exactly once in both legs.
+    for report in [&fused, &off] {
+        let mut ids: Vec<u64> = report.served.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..trace.len() as u64).collect::<Vec<u64>>());
+    }
+}
+
+/// Batching x deadlines: an SLO-bound interactive request is *never*
+/// delayed past its deadline by batch-window waiting. The window here
+/// is 10 virtual seconds — forty times the SLO — so only
+/// flush-on-deadline-pressure can save the request.
+#[test]
+fn batch_window_never_delays_an_slo_request_past_its_deadline() {
+    let mut c = Cluster::new(
+        &presets::gpu_node(),
+        11,
+        ClusterOptions {
+            batching: BatchPolicy::Windowed(BatchWindow {
+                window_s: 10.0,
+                max_members: 8,
+                ..Default::default()
+            }),
+            work_stealing: false,
+            ..Default::default()
+        },
+    );
+    // Three deadline-free smalls open a window...
+    for _ in 0..3 {
+        c.submit(GemmSize::square(1024), 2);
+    }
+    // ...and an SLO-bound small joins it. Without deadline pressure the
+    // window would sit open for 10 s and the SLO would be dead on
+    // arrival.
+    let slo = c.submit_qos(GemmSize::square(1024), 2, QosClass::Interactive, Some(0.25));
+    let report = c.run_to_completion();
+    assert_eq!(report.served.len(), 4);
+    let r = report.request(slo).unwrap();
+    assert!(
+        r.mode.is_batched(),
+        "the SLO request still fused with its window: {:?}",
+        r.mode
+    );
+    assert_eq!(
+        r.deadline_met(),
+        Some(true),
+        "batch-window waiting broke the SLO: latency {}",
+        r.latency()
+    );
+    assert!(r.latency() <= 0.25 + 1e-9);
+    // The pressure flush dragged the deadline-free members along.
+    assert_eq!(report.fused(), 4);
+    assert_eq!(report.num_batches(), 1);
+    // The session ended far inside the 10 s window.
+    assert!(report.makespan < 1.0, "makespan {}", report.makespan);
 }
 
 #[test]
