@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Gate the scenario corpus: diff freshly produced digests against the
+blessed ci/scenario_digests.json.
+
+Usage: check_digests.py PRODUCED BLESSED
+
+PRODUCED is the runner's output for this commit; BLESSED is the
+committed reference. Both are JSON objects mapping scenario name ->
+digest object. The comparison is an exact deep equality per scenario,
+plus set equality on the scenario names, so any behavioural drift --
+new scenario, dropped scenario, or a single changed counter -- fails
+the job until the new digests are deliberately blessed (copy the
+produced file over ci/scenario_digests.json and commit it with the
+change that moved it).
+
+Bootstrap: a blessed file holding an empty object {} means "not yet
+blessed" (the corpus was introduced from an environment that could not
+run the binary). In that state the script prints the produced digests
+and passes, so the first toolchain-equipped run can bless them from
+the uploaded artifact.
+"""
+
+import json
+import sys
+
+
+def deep_diff(path, a, b, out):
+    """Collect human-readable leaf differences between a and b."""
+    if isinstance(a, dict) and isinstance(b, dict):
+        for k in sorted(set(a) | set(b)):
+            if k not in a:
+                out.append(f"{path}.{k}: missing in blessed, produced {b[k]!r}")
+            elif k not in b:
+                out.append(f"{path}.{k}: blessed {a[k]!r}, missing in produced")
+            else:
+                deep_diff(f"{path}.{k}", a[k], b[k], out)
+    elif isinstance(a, list) and isinstance(b, list):
+        if len(a) != len(b):
+            out.append(f"{path}: length {len(a)} (blessed) vs {len(b)} (produced)")
+        for i, (x, y) in enumerate(zip(a, b)):
+            deep_diff(f"{path}[{i}]", x, y, out)
+    elif a != b:
+        out.append(f"{path}: blessed {a!r}, produced {b!r}")
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    produced_path, blessed_path = sys.argv[1], sys.argv[2]
+    with open(produced_path) as f:
+        produced = json.load(f)
+    with open(blessed_path) as f:
+        blessed = json.load(f)
+    if not isinstance(produced, dict) or not produced:
+        print(f"FAIL: {produced_path} is empty or not an object")
+        return 1
+
+    if blessed == {}:
+        print(f"WARN: {blessed_path} is the unblessed sentinel {{}} -- skipping the diff.")
+        print("Bless the corpus by committing the produced digests:")
+        print(json.dumps(produced, indent=2, sort_keys=True))
+        return 0
+
+    failures = []
+    for name in sorted(set(blessed) | set(produced)):
+        if name not in produced:
+            failures.append(f"{name}: in blessed file but not produced by the runner")
+            continue
+        if name not in blessed:
+            failures.append(f"{name}: produced by the runner but not blessed")
+            continue
+        diffs = []
+        deep_diff(name, blessed[name], produced[name], diffs)
+        if diffs:
+            failures.extend(diffs)
+        else:
+            print(f"PASS {name}")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} difference(s) vs {blessed_path}:")
+        for f_ in failures:
+            print(f"  {f_}")
+        print(
+            "\nIf the change is intended, bless it: copy the produced digests "
+            f"(CI artifact) over {blessed_path} and commit."
+        )
+        return 1
+    print(f"\nOK: {len(produced)} scenario digest(s) match {blessed_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,6 +50,13 @@
 //! re-scores as a batch). The comparison prints the fusion rate,
 //! members per batch, and the throughput delta — the batching band
 //! CI's `ci/check_bench.py` gates on.
+//!
+//! Part 6 loads a declarative scenario: the committed
+//! `scenarios/crash_mid_burst.toml` describes a cluster, an arrival
+//! mix and a crash/restart schedule in one TOML file; `Scenario::run`
+//! executes it on the same event loop and the stable JSON digest it
+//! prints is exactly what `scenario_runner` emits for CI's corpus
+//! gate (see `docs/scenarios.md`).
 
 use poas::config::presets;
 use poas::report::secs;
@@ -238,7 +245,7 @@ fn main() {
         secs(qreport.class_latency_percentile(QosClass::Interactive, 99.0)),
         secs(qreport.class_latency_percentile(QosClass::Batch, 99.0)),
         100.0 * qreport.deadline_hit_rate(),
-        qreport.denied(),
+        qreport.denied,
     );
     assert_eq!(qreport.served.len(), qos_ids.len());
 
@@ -354,5 +361,42 @@ fn main() {
     assert!(
         b_on.throughput_rps() > b_off.throughput_rps(),
         "batching must not lose throughput on a small-GEMM flood"
+    );
+
+    // ---- Part 6: a declarative fault scenario. The whole session —
+    // cluster, arrival mix, crash-and-restart schedule — lives in one
+    // committed TOML file; running it here and printing the digest
+    // shows exactly what the CI corpus gate diffs.
+    use poas::service::scenario::{digest, Scenario};
+    // The corpus sits at the workspace root; fall back one level so
+    // `cargo run --example gemm_service` works from `rust/` too.
+    let path = ["scenarios/crash_mid_burst.toml", "../scenarios/crash_mid_burst.toml"]
+        .iter()
+        .map(std::path::Path::new)
+        .find(|p| p.exists())
+        .expect("scenarios/crash_mid_burst.toml not found");
+    let sc = Scenario::from_file(path).expect("scenario parses");
+    let scenario_report = sc.run();
+    println!(
+        "\nscenario `{}`: {} served, {} requeued by the crash, makespan {}",
+        sc.name,
+        scenario_report.served.len(),
+        scenario_report.requeued,
+        secs(scenario_report.makespan),
+    );
+    println!("  digest: {}", digest(&scenario_report));
+    assert_eq!(
+        scenario_report.served.len(),
+        sc.trace().len(),
+        "every scenario arrival must complete exactly once"
+    );
+    assert!(
+        scenario_report.requeued > 0,
+        "the mid-burst crash must displace work"
+    );
+    assert_eq!(
+        digest(&scenario_report),
+        digest(&sc.run()),
+        "scenario replay must be digest-identical"
     );
 }

@@ -174,7 +174,7 @@ fn main() {
     println!(
         "deadline-hit rate (accepted SLO requests): {:.0}%   denied: {}",
         100.0 * qos.deadline_hit_rate(),
-        qos.denied()
+        qos.denied
     );
 
     println!(
@@ -381,7 +381,7 @@ fn main() {
              \"interactive_p99_s\": {p99_i}, \"batch_p99_s\": {p99_b}, \
              \"deadline_hit_rate\": {}, \"denied\": {}}},\n",
             qos.deadline_hit_rate(),
-            qos.denied()
+            qos.denied
         ));
         let hetero_leg = |r: &ServiceReport| {
             format!(
@@ -413,7 +413,7 @@ fn main() {
                 r.num_batches(),
                 r.class_latency_percentile(QosClass::Interactive, 99.0),
                 r.deadline_hit_rate(),
-                r.denied()
+                r.denied
             )
         };
         json.push_str(&format!(

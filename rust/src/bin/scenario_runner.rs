@@ -1,0 +1,112 @@
+//! Run the committed scenario corpus and emit per-scenario digests.
+//!
+//! ```text
+//! scenario_runner [--out FILE] [PATH ...]
+//! ```
+//!
+//! Each `PATH` is a scenario file or a directory (expanded to its
+//! `*.toml` entries, sorted by file name); with no paths the runner
+//! looks for `scenarios/`, falling back to `../scenarios/` so
+//! `cargo run --bin scenario_runner` works from `rust/` too. The
+//! output is one JSON object mapping scenario name to its digest (see
+//! [`poas::service::scenario::digest`]), keys sorted, one digest per
+//! line — CI diffs it against the blessed `ci/scenario_digests.json`
+//! (see `docs/scenarios.md` for the blessing workflow). Any parse or
+//! I/O error, duplicate scenario name or empty corpus exits non-zero.
+
+use poas::service::scenario::{digest, Scenario};
+use std::path::PathBuf;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("scenario_runner: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<(), String> {
+    let mut out: Option<PathBuf> = None;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--out" => {
+                let f = it.next().ok_or("--out needs a file argument")?;
+                out = Some(PathBuf::from(f));
+            }
+            "--help" | "-h" => {
+                println!("usage: scenario_runner [--out FILE] [PATH ...]");
+                return Ok(());
+            }
+            other if other.starts_with('-') => {
+                return Err(format!("unknown flag `{other}`"));
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+    }
+    if paths.is_empty() {
+        let default = PathBuf::from("scenarios");
+        paths.push(if default.is_dir() {
+            default
+        } else {
+            PathBuf::from("../scenarios")
+        });
+    }
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in &paths {
+        if p.is_dir() {
+            let mut entries: Vec<PathBuf> = std::fs::read_dir(p)
+                .map_err(|e| format!("{}: {e}", p.display()))?
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|e| e.extension().is_some_and(|x| x == "toml"))
+                .collect();
+            entries.sort();
+            files.extend(entries);
+        } else {
+            files.push(p.clone());
+        }
+    }
+    if files.is_empty() {
+        return Err(format!(
+            "no scenario files under {}",
+            paths
+                .iter()
+                .map(|p| p.display().to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+    }
+
+    let mut entries: Vec<(String, String)> = Vec::new();
+    for file in &files {
+        let sc = Scenario::from_file(file).map_err(|e| e.to_string())?;
+        if entries.iter().any(|(name, _)| *name == sc.name) {
+            return Err(format!(
+                "duplicate scenario name `{}` (second copy in {})",
+                sc.name,
+                file.display()
+            ));
+        }
+        eprintln!("running {} ({})", sc.name, file.display());
+        let report = sc.run();
+        entries.push((sc.name, digest(&report)));
+    }
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+
+    let mut json = String::from("{\n");
+    for (i, (name, d)) in entries.iter().enumerate() {
+        json.push_str(&format!("  \"{name}\": {d}"));
+        json.push_str(if i + 1 < entries.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("}\n");
+
+    match out {
+        Some(path) => {
+            std::fs::write(&path, &json).map_err(|e| format!("{}: {e}", path.display()))?
+        }
+        None => print!("{json}"),
+    }
+    Ok(())
+}

@@ -25,29 +25,31 @@
 use super::{DeviceKind, DeviceSpec, MachineConfig, ThermalSpec};
 use crate::error::{Error, Result};
 
-/// One parsed `key = value` with the raw value token.
+/// One parsed `key = value` with the raw value token. Shared with the
+/// scenario parser ([`crate::service::scenario`]), which reads the same
+/// TOML subset with its own section headers.
 #[derive(Debug, Clone)]
-enum Value {
+pub(crate) enum Value {
     Str(String),
     Num(f64),
 }
 
 impl Value {
-    fn as_str(&self, key: &str) -> Result<&str> {
+    pub(crate) fn as_str(&self, key: &str) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
             Value::Num(_) => Err(Error::Config(format!("key `{key}` must be a string"))),
         }
     }
 
-    fn as_f64(&self, key: &str) -> Result<f64> {
+    pub(crate) fn as_f64(&self, key: &str) -> Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
             Value::Str(_) => Err(Error::Config(format!("key `{key}` must be a number"))),
         }
     }
 
-    fn as_u64(&self, key: &str) -> Result<u64> {
+    pub(crate) fn as_u64(&self, key: &str) -> Result<u64> {
         let n = self.as_f64(key)?;
         if n < 0.0 || n.fract() != 0.0 {
             return Err(Error::Config(format!(
@@ -72,21 +74,76 @@ fn parse_value(raw: &str, line_no: usize) -> Result<Value> {
 }
 
 /// Key-value map for one section, preserving dotted keys verbatim.
-type Section = Vec<(String, Value)>;
+pub(crate) type Section = Vec<(String, Value)>;
 
-fn get<'a>(sec: &'a Section, key: &str) -> Option<&'a Value> {
+pub(crate) fn get<'a>(sec: &'a Section, key: &str) -> Option<&'a Value> {
     sec.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v)
 }
 
-fn req<'a>(sec: &'a Section, key: &str, what: &str) -> Result<&'a Value> {
+pub(crate) fn req<'a>(sec: &'a Section, key: &str, what: &str) -> Result<&'a Value> {
     get(sec, key).ok_or_else(|| Error::Config(format!("{what}: missing key `{key}`")))
 }
 
-fn num_or(sec: &Section, key: &str, default: f64) -> Result<f64> {
+pub(crate) fn num_or(sec: &Section, key: &str, default: f64) -> Result<f64> {
     match get(sec, key) {
         Some(v) => v.as_f64(key),
         None => Ok(default),
     }
+}
+
+/// Split TOML-subset text into its top-level section plus one `(header
+/// name, section)` entry per `[[header]]` table, in document order.
+/// `headers` names the accepted tables (without brackets); anything
+/// else errors. The machine parser below and the scenario parser
+/// ([`crate::service::scenario`]) share this splitter, so both dialects
+/// get identical comment, string and number handling.
+pub(crate) fn split_sections(
+    text: &str,
+    headers: &[&str],
+) -> Result<(Section, Vec<(String, Section)>)> {
+    let mut top: Section = Vec::new();
+    let mut tables: Vec<(String, Section)> = Vec::new();
+    for (i, raw_line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = match raw_line.find('#') {
+            // Only strip comments outside of strings — our values never
+            // contain `#`, so a simple check suffices: keep the `#` if
+            // it appears inside quotes.
+            Some(pos) if raw_line[..pos].matches('"').count() % 2 == 0 => &raw_line[..pos],
+            _ => raw_line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line
+            .strip_prefix("[[")
+            .and_then(|rest| rest.strip_suffix("]]"))
+        {
+            if !headers.contains(&name) {
+                return Err(Error::Config(format!(
+                    "line {line_no}: unsupported table header `{line}`"
+                )));
+            }
+            tables.push((name.to_string(), Vec::new()));
+            continue;
+        }
+        if line.starts_with('[') {
+            return Err(Error::Config(format!(
+                "line {line_no}: unsupported table header `{line}`"
+            )));
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| Error::Config(format!("line {line_no}: expected `key = value`")))?;
+        let key = line[..eq].trim().to_string();
+        let value = parse_value(&line[eq + 1..], line_no)?;
+        match tables.last_mut() {
+            Some((_, sec)) => sec.push((key, value)),
+            None => top.push((key, value)),
+        }
+    }
+    Ok((top, tables))
 }
 
 fn build_device(sec: &Section) -> Result<DeviceSpec> {
@@ -155,45 +212,12 @@ fn build_device(sec: &Section) -> Result<DeviceSpec> {
 
 /// Parse a machine config from TOML-subset text.
 pub fn parse_machine(text: &str) -> Result<MachineConfig> {
-    // Two passes: first split the text into sections (index 0 = top
-    // level, one section per `[[device]]` header), then build the structs.
-    let mut sections: Vec<Section> = vec![Vec::new()];
-    let mut cur = 0usize;
-    for (i, raw_line) in text.lines().enumerate() {
-        let line_no = i + 1;
-        let line = match raw_line.find('#') {
-            // Only strip comments outside of strings — our values never
-            // contain `#`, so a simple check suffices: keep the `#` if it
-            // appears inside quotes.
-            Some(pos) if raw_line[..pos].matches('"').count() % 2 == 0 => &raw_line[..pos],
-            _ => raw_line,
-        };
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        if line == "[[device]]" {
-            sections.push(Vec::new());
-            cur = sections.len() - 1;
-            continue;
-        }
-        if line.starts_with('[') {
-            return Err(Error::Config(format!(
-                "line {line_no}: unsupported table header `{line}`"
-            )));
-        }
-        let eq = line
-            .find('=')
-            .ok_or_else(|| Error::Config(format!("line {line_no}: expected `key = value`")))?;
-        let key = line[..eq].trim().to_string();
-        let value = parse_value(&line[eq + 1..], line_no)?;
-        sections[cur].push((key, value));
-    }
-
-    let top = &sections[0];
-    let name = req(top, "name", "machine")?.as_str("name")?.to_string();
+    // Two passes: first split the text into sections (top level plus
+    // one per `[[device]]` header), then build the structs.
+    let (top, tables) = split_sections(text, &["device"])?;
+    let name = req(&top, "name", "machine")?.as_str("name")?.to_string();
     let mut devs = Vec::new();
-    for sec in &sections[1..] {
+    for (_, sec) in &tables {
         devs.push(build_device(sec)?);
     }
     let machine = MachineConfig {

@@ -52,12 +52,31 @@
 //!   minute of batch. A stolen request is **re-gated under the thief's
 //!   own model** before it is enqueued: the victim's verdict (co-exec
 //!   vs standalone, best device, service prediction) may be wrong —
-//!   even out of device range — on a different machine.
+//!   even out of device range — on a different machine;
+//! * **faults** — injected by the scenario layer (see
+//!   [`super::scenario`]) through [`Cluster::inject_crash`],
+//!   [`Cluster::inject_restart`] and [`Cluster::inject_slowdown`]. A
+//!   **crash** kills one shard mid-run: its queue drains and its
+//!   in-flight work (completion records written at dispatch time with
+//!   future finishes) is aborted, rolled back out of the shard's
+//!   accounting, and every displaced request **re-enters front-end
+//!   admission** — original arrival time kept, elapsed wait charged
+//!   against any remaining SLO budget, re-gated under the surviving
+//!   shards' own models; members of a displaced fused batch disband
+//!   and re-admit solo. A **restart** brings the shard back (and
+//!   releases requests parked while every machine was down). A
+//!   **rate-scale** multiplies one machine's device rates — the
+//!   straggler/degraded-machine hook: realized times drift away from
+//!   the model fitted at install time until the dynamic loop (or a
+//!   recovery event) closes the gap.
 //!
 //! Ties in virtual time break by submission sequence number, which
 //! keeps every replay byte-identical for a fixed seed. A one-shard
 //! cluster degenerates to exactly the old single-machine behaviour —
-//! [`super::Server`] is now a thin wrapper over `Cluster`.
+//! [`super::Server`] is now a thin wrapper over `Cluster`. A run with
+//! no injected faults behaves byte-identically to a build without the
+//! fault machinery: every guard below is a no-op while no shard is
+//! down.
 
 use super::admission::{Admission, GateVerdict};
 use super::arrivals::Arrival;
@@ -146,6 +165,17 @@ enum EventKind {
     /// tighten, so a timer for a window that already flushed (or whose
     /// bound moved earlier, arming an earlier timer) is a no-op.
     BatchFlush(u64),
+    /// Injected fault: this shard's machine dies. Queued and in-flight
+    /// work re-enters admission; a crash of an already-down shard is a
+    /// no-op.
+    Crash(usize),
+    /// Injected fault recovery: a crashed shard rejoins the cluster
+    /// (no-op when the shard is up).
+    Restart(usize),
+    /// Injected fault: multiply every device rate on this shard's
+    /// machine by the factor (straggler onset `< 1`, recovery `> 1`;
+    /// scales compose multiplicatively).
+    RateScale(usize, f64),
 }
 
 #[derive(Debug, Clone)]
@@ -256,6 +286,17 @@ pub struct Cluster {
     clock: f64,
     served: Vec<ServedRequest>,
     next_id: u64,
+    /// Per-shard down flags (crashed and not yet restarted). All-false
+    /// on every fault-free run, where the fault guards are no-ops.
+    down: Vec<bool>,
+    /// Requests that arrived while *every* shard was down, parked at
+    /// the front-end with their true arrival times until a restart
+    /// re-admits them (their wait keeps charging against any SLO).
+    parked: Vec<(GemmRequest, f64)>,
+    /// Requests displaced by crashes and re-admitted (batch members
+    /// counted individually; a request moved by two crashes counts
+    /// twice).
+    requeued: usize,
 }
 
 impl Cluster {
@@ -313,6 +354,7 @@ impl Cluster {
             GatePolicy::Shard0 => vec![gate_of(&shards[0].model)],
         };
         let former = BatchFormer::new(&opts.batching, opts.shard.deadline_slack);
+        let down = vec![false; shards.len()];
         Cluster {
             shards,
             admissions,
@@ -323,6 +365,9 @@ impl Cluster {
             clock: 0.0,
             served: Vec::new(),
             next_id: 0,
+            down,
+            parked: Vec::new(),
+            requeued: 0,
         }
     }
 
@@ -363,8 +408,20 @@ impl Cluster {
         &self.admissions[self.gate_idx(i)]
     }
 
+    /// True while shard `i` is crashed and not yet restarted.
+    pub fn is_down(&self, i: usize) -> bool {
+        self.down[i]
+    }
+
+    /// Requests displaced by crashes and re-admitted so far (batch
+    /// members counted individually).
+    pub fn requeued(&self) -> usize {
+        self.requeued
+    }
+
     /// Requests not yet dispatched: queued on shards, waiting in a
-    /// batch window, or still in the arrival event stream.
+    /// batch window, parked behind an all-shards-down outage, or still
+    /// in the arrival event stream.
     pub fn pending(&self) -> usize {
         let queued: usize = self.shards.iter().map(|s| s.pending()).sum();
         let in_flight = self
@@ -372,7 +429,7 @@ impl Cluster {
             .iter()
             .filter(|r| matches!(r.0.kind, EventKind::Arrival(_)))
             .count();
-        queued + in_flight + self.former.pending()
+        queued + in_flight + self.former.pending() + self.parked.len()
     }
 
     /// Requests completed so far.
@@ -442,6 +499,36 @@ impl Cluster {
         self.events.push(Reverse(Event { time, seq, kind }));
     }
 
+    /// Schedule shard `shard` to crash at virtual time `at` (clamped to
+    /// the present, like every submission). Queued and in-flight work
+    /// re-enters admission when the event fires; crashing a shard that
+    /// is already down is a no-op.
+    pub fn inject_crash(&mut self, at: f64, shard: usize) {
+        assert!(shard < self.shards.len(), "no shard {shard}");
+        self.push_event(at.max(self.clock), EventKind::Crash(shard));
+    }
+
+    /// Schedule shard `shard` to restart at virtual time `at` (no-op if
+    /// the shard is up when the event fires).
+    pub fn inject_restart(&mut self, at: f64, shard: usize) {
+        assert!(shard < self.shards.len(), "no shard {shard}");
+        self.push_event(at.max(self.clock), EventKind::Restart(shard));
+    }
+
+    /// Schedule shard `shard`'s machine to change speed at virtual time
+    /// `at`: every device rate is multiplied by `factor` (`< 1` makes
+    /// it a straggler whose realized times drift away from the model
+    /// that routes work to it; a later event with `1 / factor` restores
+    /// the original rate, since scales compose multiplicatively).
+    pub fn inject_slowdown(&mut self, at: f64, shard: usize, factor: f64) {
+        assert!(shard < self.shards.len(), "no shard {shard}");
+        assert!(
+            factor.is_finite() && factor > 0.0,
+            "rate factor must be finite and positive, got {factor}"
+        );
+        self.push_event(at.max(self.clock), EventKind::RateScale(shard, factor));
+    }
+
     /// Gate one work unit — a plain request (`members == 1`) or a fused
     /// batch of `members` — on shard `s`'s own admission gate and,
     /// under the legacy [`GatePolicy::Shard0`] ablation, clamp the
@@ -488,6 +575,9 @@ impl Cluster {
     ) -> Option<Routed> {
         let mut best: Option<Routed> = None;
         for i in 0..self.shards.len() {
+            if self.down[i] {
+                continue; // a crashed shard takes no new work
+            }
             let verdict = self.gate_on(i, req.size, req.reps, members);
             if deadline_only {
                 let deadline_s = req.deadline_s.expect("deadline_only needs an SLO");
@@ -536,6 +626,8 @@ impl Cluster {
     fn steal_victim(&self, thief: usize) -> Option<usize> {
         let mut best: Option<usize> = None;
         for (i, sh) in self.shards.iter().enumerate() {
+            // A crashed shard's queue drained at the crash, so the
+            // `pending` check also skips down shards.
             if i == thief || sh.pending() == 0 {
                 continue;
             }
@@ -585,7 +677,9 @@ impl Cluster {
         if !self.former.candidate(&req) {
             return false;
         }
-        if (0..self.shards.len()).any(|i| self.gate_on(i, req.size, req.reps, 1).0) {
+        if (0..self.shards.len())
+            .any(|i| !self.down[i] && self.gate_on(i, req.size, req.reps, 1).0)
+        {
             return false;
         }
         // Flush-pressure hint: the best-shard predicted service time of
@@ -627,6 +721,14 @@ impl Cluster {
     /// away (or demoted, per policy) *now*, before it consumes queue
     /// space it cannot use.
     fn admit_request(&mut self, now: f64, mut req: GemmRequest, arrival: f64) {
+        if self.down.iter().all(|&d| d) {
+            // Total outage: every machine is down, so there is nowhere
+            // to route. Park the request at the front-end — original
+            // arrival kept, so the outage keeps charging against any
+            // SLO budget — until a restart re-admits it.
+            self.parked.push((req, arrival));
+            return;
+        }
         let mut routed = None;
         if let Some(deadline_s) = req.deadline_s {
             // The budget that remains once time already spent waiting
@@ -697,6 +799,15 @@ impl Cluster {
     /// window wait already charged) instead of the whole batch being
     /// denied.
     fn admit_fused(&mut self, now: f64, batch: FusedBatch) {
+        if self.down.iter().all(|&d| d) {
+            // Total outage: the batch disbands and its members park
+            // solo (fusing again after the outage would misattribute
+            // the window wait).
+            for m in batch.members {
+                self.parked.push((m.req, m.arrival));
+            }
+            return;
+        }
         let members = batch.members.len() as u32;
         let carrier = batch.carrier(now);
         let mut routed = None;
@@ -733,6 +844,89 @@ impl Cluster {
             batch: Some(batch),
         });
         self.push_event(now, EventKind::Wake(target));
+    }
+
+    /// A [`EventKind::Crash`] fired: kill shard `s` at virtual time
+    /// `now` and displace its work.
+    ///
+    /// In-flight work first: completion records are written into
+    /// `served` at **dispatch** time with future finishes, and
+    /// dispatches are serialized per shard, so everything still running
+    /// on `s` is exactly the records with `finish > now`. Those records
+    /// are removed (the results are lost), rolled back out of the
+    /// shard's accounting ([`ExecutorShard::abort_record`]), and
+    /// re-admitted — so each displaced request appears **exactly once**
+    /// in the final report, under whatever outcome its re-admission
+    /// earns. Members of an aborted fused batch each had their own
+    /// record and re-admit **solo** (only fresh arrivals visit the
+    /// batch former). Then the queue drains in the shard's own
+    /// dispatch order, queued batch carriers disbanding the same way.
+    ///
+    /// Every re-admission goes through [`Cluster::admit_request`] with
+    /// its *original* arrival time: elapsed wait is charged against any
+    /// remaining SLO budget, and the surviving shards' own gates re-plan
+    /// the work from scratch.
+    fn crash_shard(&mut self, s: usize, now: f64) {
+        if self.down[s] {
+            return;
+        }
+        self.down[s] = true;
+        let mut aborted = Vec::new();
+        let mut kept = Vec::with_capacity(self.served.len());
+        for r in std::mem::take(&mut self.served) {
+            if r.shard == Some(s) && r.finish > now && !r.mode.is_unserved() {
+                aborted.push(r);
+            } else {
+                kept.push(r);
+            }
+        }
+        self.served = kept;
+        for r in &aborted {
+            self.shards[s].abort_record(r);
+        }
+        let drained = self.shards[s].crash(now);
+        let displaced = aborted.len()
+            + drained
+                .iter()
+                .map(|q| q.batch.as_ref().map_or(1, |b| b.members.len()))
+                .sum::<usize>();
+        self.shards[s].note_requeued(displaced);
+        self.requeued += displaced;
+        for r in aborted {
+            let req = GemmRequest {
+                id: r.id,
+                size: r.size,
+                reps: r.reps,
+                class: r.class,
+                deadline_s: r.deadline_s,
+            };
+            self.admit_request(now, req, r.arrival);
+        }
+        for q in drained {
+            match q.batch {
+                Some(b) => {
+                    for m in b.members {
+                        self.admit_request(now, m.req, m.arrival);
+                    }
+                }
+                None => self.admit_request(now, q.req, q.arrival),
+            }
+        }
+    }
+
+    /// A [`EventKind::Restart`] fired: shard `s` rejoins at `now`.
+    /// Requests parked behind a total outage re-enter admission, and a
+    /// shard-free event lets the shard pick up routed or stealable work
+    /// immediately.
+    fn restart_shard(&mut self, s: usize, now: f64) {
+        if !self.down[s] {
+            return;
+        }
+        self.down[s] = false;
+        for (req, arrival) in std::mem::take(&mut self.parked) {
+            self.admit_request(now, req, arrival);
+        }
+        self.push_event(now, EventKind::ShardFree(s));
     }
 
     fn dispatch_on(&mut self, s: usize, at: f64) {
@@ -784,13 +978,22 @@ impl Cluster {
                 }
             }
             EventKind::BatchFlush(_) => unreachable!("handled before the clock advance"),
+            EventKind::Crash(s) => self.crash_shard(s, ev.time),
+            EventKind::Restart(s) => self.restart_shard(s, ev.time),
+            EventKind::RateScale(s, factor) => self.shards[s].sim.scale_rates(factor),
             EventKind::Wake(s) => {
-                if self.shards[s].free_at() <= ev.time && self.shards[s].pending() > 0 {
+                if !self.down[s]
+                    && self.shards[s].free_at() <= ev.time
+                    && self.shards[s].pending() > 0
+                {
                     self.dispatch_on(s, ev.time);
                 }
             }
             EventKind::ShardFree(s) => {
-                if self.shards[s].pending() > 0 {
+                if self.down[s] {
+                    // Stale free event from a dispatch the crash
+                    // aborted: the machine is gone, nothing to do.
+                } else if self.shards[s].pending() > 0 {
                     self.dispatch_on(s, ev.time);
                 } else if self.opts.work_stealing {
                     if let Some(victim) = self.steal_victim(s) {
@@ -879,6 +1082,9 @@ impl Cluster {
             cache_misses: 0,
             epoch_bumps: 0,
             replans: 0,
+            denied: self.served.iter().filter(|r| r.mode.is_denied()).count(),
+            rejected: self.served.iter().filter(|r| r.mode.is_rejected()).count(),
+            requeued: self.requeued,
             shards: self.shards.iter().map(|s| s.stats()).collect(),
         };
         for s in &self.shards {
@@ -1088,7 +1294,7 @@ mod tests {
         assert_eq!(r.mode, ExecMode::Denied);
         assert_eq!(r.exec_s, 0.0);
         assert_eq!(r.finish, r.arrival, "denial consumes no time");
-        assert_eq!(report.denied(), 1);
+        assert_eq!(report.denied, 1);
         assert_eq!(report.request(ok).unwrap().mode, ExecMode::CoExec);
         // The denial never reached a shard.
         assert_eq!(report.shards[0].dispatches, 1);
@@ -1113,7 +1319,7 @@ mod tests {
         assert_eq!(r.mode, ExecMode::CoExec);
         assert_eq!(r.class, QosClass::Batch);
         assert_eq!(r.deadline_s, None);
-        assert_eq!(report.denied(), 0);
+        assert_eq!(report.denied, 0);
         assert_eq!(r.deadline_met(), None, "stripped SLO is not a miss");
     }
 

@@ -52,6 +52,13 @@
 //!   ([`OnOffArrivals`]) and replayable fixed traces, so reports
 //!   measure queueing delay and p50/p99 sojourn time — per tier —
 //!   under offered load instead of draining a batch;
+//! * [`scenario`] — declarative fault-injection scenarios: a TOML
+//!   file describing the cluster, the arrival mix and a schedule of
+//!   injected faults (shard crashes/restarts, straggler drift, load
+//!   spikes), executed deterministically on the cluster's event loop
+//!   via [`scenario::Scenario`] and folded into stable JSON digests
+//!   ([`scenario::digest`]) that the `scenario_runner` binary diffs
+//!   against the blessed corpus in CI (see `docs/scenarios.md`);
 //! * [`server`] — the classic single-machine [`Server`], now a thin
 //!   wrapper over a 1-shard cluster (same submit / run-to-completion /
 //!   report surface; the old public fields and `step()` gave way to
@@ -87,6 +94,7 @@ pub mod cluster;
 pub mod qos;
 pub mod queue;
 pub mod request;
+pub mod scenario;
 pub mod server;
 pub mod shard;
 
@@ -100,5 +108,6 @@ pub use queue::{QueuePolicy, QueuedRequest, RequestQueue};
 pub use request::{
     BatchId, ClassBreakdown, ExecMode, GemmRequest, ServedRequest, ServiceReport, ShardStats,
 };
+pub use scenario::{Fault, FixedRequest, Scenario, StreamKind, StreamSpec};
 pub use server::{Server, ServerOptions};
 pub use shard::{DispatchResult, ExecutorShard};

@@ -238,6 +238,16 @@ pub struct ShardStats {
     /// ([`QosClass::index`] order; bypass riders count toward their own
     /// class, so the sum can exceed `dispatches`).
     pub served_by_class: [usize; super::qos::NUM_CLASSES],
+    /// Requests this shard turned away at planning time (infeasible
+    /// plans complete as [`ExecMode::Rejected`] with zero machine
+    /// time). Admission denials have no per-shard entry — a denied
+    /// request never reaches a shard (`shard: None`) — so `ShardStats`
+    /// deliberately carries no `denied` counter.
+    pub rejected: usize,
+    /// Requests displaced off this shard by a crash and re-admitted
+    /// elsewhere: queued entries plus aborted in-flight work, with the
+    /// members of a disbanded fused batch counted individually.
+    pub requeued: usize,
     /// Fingerprint of the [`crate::predict::PerfModel`] this shard
     /// currently predicts with (see
     /// [`crate::predict::PerfModel::fingerprint`]). Shards of a
@@ -309,6 +319,18 @@ pub struct ServiceReport {
     pub epoch_bumps: u64,
     /// Dynamic-scheduler replans observed (0 without `dynamic`).
     pub replans: usize,
+    /// Requests denied by deadline-aware admission
+    /// ([`ExecMode::Denied`]); always equals the count of `Denied`
+    /// records in `served`.
+    pub denied: usize,
+    /// Requests rejected at planning time ([`ExecMode::Rejected`]);
+    /// always equals the count of `Rejected` records in `served`.
+    pub rejected: usize,
+    /// Requests re-admitted after a shard crash. Each displaced request
+    /// counts once per crash that moved it, so this can exceed the
+    /// number of distinct requests touched by faults; it is **not**
+    /// derivable from `served`, which records only final outcomes.
+    pub requeued: usize,
     /// Per-shard accounting (shard order; one entry for the classic
     /// single-machine [`super::Server`]).
     pub shards: Vec<ShardStats>,
@@ -418,16 +440,6 @@ impl ServiceReport {
         } else {
             self.fused() as f64 / executed as f64
         }
-    }
-
-    /// Count of requests rejected at planning time.
-    pub fn rejected(&self) -> usize {
-        self.served.iter().filter(|r| r.mode.is_rejected()).count()
-    }
-
-    /// Count of requests denied by deadline-aware admission.
-    pub fn denied(&self) -> usize {
-        self.served.iter().filter(|r| r.mode.is_denied()).count()
     }
 
     /// Executed requests served under `class`, record order.
@@ -670,6 +682,9 @@ mod tests {
             cache_misses: 1,
             epoch_bumps: 0,
             replans: 0,
+            denied: 0,
+            rejected: 0,
+            requeued: 0,
             shards: vec![ShardStats {
                 dispatches: 2,
                 busy_s: 3.0,
@@ -677,6 +692,8 @@ mod tests {
                 stolen: 0,
                 batches: 0,
                 served_by_class: [0, 3, 0],
+                rejected: 0,
+                requeued: 0,
                 model_fp: 0xDEAD_BEEF,
                 predicted_s: 2.5,
                 realized_s: 3.0,
@@ -768,7 +785,7 @@ mod tests {
         assert_eq!(r.queue_waits(), vec![0.0, 2.0, 0.0]);
         assert!((r.mean_queue_wait() - 2.0 / 3.0).abs() < 1e-12);
         assert!((r.queue_wait_percentile(100.0) - 2.0).abs() < 1e-12);
-        assert_eq!(r.rejected(), 0);
+        assert_eq!(r.rejected, 0);
         assert_eq!(ServiceReport::default().mean_queue_wait(), 0.0);
     }
 
@@ -786,9 +803,15 @@ mod tests {
         denied.exec_s = 0.0;
         denied.shard = None;
         r.served.push(denied);
+        r.denied += 1;
 
-        assert_eq!(r.denied(), 1);
-        assert_eq!(r.rejected(), 0);
+        assert_eq!(r.denied, 1);
+        assert_eq!(r.rejected, 0);
+        // The headline counters mirror the record modes exactly.
+        assert_eq!(
+            r.denied,
+            r.served.iter().filter(|s| s.mode.is_denied()).count()
+        );
         // Denied requests never enter the latency aggregates.
         assert_eq!(r.latencies().len(), 3);
         assert_eq!(r.class_latencies(QosClass::Interactive), vec![2.0]);

@@ -1,0 +1,132 @@
+//! Stable JSON digests of a [`ServiceReport`].
+//!
+//! The digest is the regression surface of the scenario corpus: one
+//! compact JSON object per scenario capturing counts, per-class tail
+//! latencies, deadline accounting, placement quality and per-shard
+//! activity. Everything is emitted in a fixed key order with floats
+//! rounded to six decimals, so two runs of the same binary on the same
+//! scenario produce byte-identical strings and CI can diff the
+//! runner's output against the blessed `ci/scenario_digests.json`.
+
+use crate::service::qos::QosClass;
+use crate::service::request::ServiceReport;
+
+/// A float as a JSON token: fixed six-decimal form, with non-finite
+/// values (empty percentiles, 0/0 rates) mapped to `null` so the
+/// output stays valid JSON.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Fold a report into its one-line JSON digest (fixed key order,
+/// deterministic for a deterministic report).
+pub fn digest(report: &ServiceReport) -> String {
+    let executed = report
+        .served
+        .iter()
+        .filter(|r| !r.mode.is_unserved())
+        .count();
+    let mut out = String::with_capacity(1024);
+    out.push('{');
+    out.push_str(&format!("\"served\":{}", report.served.len()));
+    out.push_str(&format!(",\"executed\":{executed}"));
+    out.push_str(&format!(",\"denied\":{}", report.denied));
+    out.push_str(&format!(",\"rejected\":{}", report.rejected));
+    out.push_str(&format!(",\"requeued\":{}", report.requeued));
+    out.push_str(&format!(",\"fused\":{}", report.fused()));
+    out.push_str(&format!(",\"batches\":{}", report.num_batches()));
+    out.push_str(&format!(",\"bypassed\":{}", report.bypassed()));
+    out.push_str(&format!(",\"fusion_rate\":{}", num(report.fusion_rate())));
+    out.push_str(&format!(
+        ",\"deadline_hit_rate\":{}",
+        num(report.deadline_hit_rate())
+    ));
+    out.push_str(&format!(
+        ",\"placement_quality\":{}",
+        num(report.placement_quality())
+    ));
+    out.push_str(&format!(",\"makespan_s\":{}", num(report.makespan)));
+    out.push_str(&format!(",\"replans\":{}", report.replans));
+    out.push_str(&format!(",\"epoch_bumps\":{}", report.epoch_bumps));
+
+    out.push_str(",\"classes\":{");
+    for (i, class) in QosClass::ALL.into_iter().enumerate() {
+        let b = report.class_breakdown(class);
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\"{}\":{{\"executed\":{},\"p50_sojourn_s\":{},\"p99_sojourn_s\":{},\
+             \"deadline_hits\":{},\"deadline_bound\":{},\"denied\":{},\"rejected\":{}}}",
+            class.label(),
+            b.executed,
+            num(b.p50_sojourn),
+            num(b.p99_sojourn),
+            b.deadline_hits,
+            b.deadline_bound,
+            b.denied,
+            b.rejected,
+        ));
+    }
+    out.push('}');
+
+    out.push_str(",\"shards\":[");
+    for (i, s) in report.shards.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let served: usize = s.served_by_class.iter().sum();
+        out.push_str(&format!(
+            "{{\"dispatches\":{},\"served\":{},\"stolen\":{},\"batches\":{},\
+             \"rejected\":{},\"requeued\":{},\"busy_s\":{}}}",
+            s.dispatches, served, s.stolen, s.batches, s.rejected, s.requeued,
+            num(s.busy_s),
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_report_digest_is_valid_and_stable() {
+        let report = ServiceReport::default();
+        let d = digest(&report);
+        assert_eq!(d, digest(&report), "digest must be deterministic");
+        assert!(d.starts_with('{') && d.ends_with('}'));
+        // Empty aggregates have defined values (1.0 / 0.0), never NaN.
+        assert!(d.contains("\"deadline_hit_rate\":1.000000"));
+        assert!(d.contains("\"placement_quality\":1.000000"));
+        assert!(!d.contains("NaN"));
+        assert!(d.contains("\"served\":0"));
+        assert!(d.contains("\"classes\":{\"interactive\":"));
+        assert!(d.contains("\"shards\":[]"));
+    }
+
+    #[test]
+    fn digest_reflects_a_real_run() {
+        let sc: crate::service::scenario::Scenario = r#"
+            name = "digesttest"
+            seed = 3
+            [[shard]]
+            preset = "mach1"
+            [[arrivals]]
+            rate_rps = 20.0
+            count = 3
+            menu = "256"
+        "#
+        .parse()
+        .unwrap();
+        let d = digest(&sc.run());
+        assert!(d.contains("\"served\":3"));
+        assert!(d.contains("\"requeued\":0"));
+        assert_eq!(d, digest(&sc.run()), "same scenario, same digest");
+    }
+}

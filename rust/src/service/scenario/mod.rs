@@ -1,0 +1,432 @@
+//! Declarative fault-injection scenarios for the serving cluster.
+//!
+//! A scenario is a TOML file (the same minimal subset
+//! [`crate::config::parser`] reads for machine configs) that describes
+//! an entire service session in one place:
+//!
+//! * **the cluster** — `[[shard]]` tables naming node presets from
+//!   [`crate::config::presets`] (`mach1`, `mach2`, `gpu_node`,
+//!   `cpu_node`, `xpu_node`), plus top-level knobs for queue policy,
+//!   work stealing, gate policy, deadline policy and admission-time
+//!   batching;
+//! * **the offered load** — `[[arrivals]]` streams (deterministic
+//!   Poisson or bursty on/off, per QoS class, each with a shape menu
+//!   and optional SLO) and `[[request]]` entries for hand-placed
+//!   arrivals;
+//! * **the event schedule** — `[[fault]]` tables injecting shard
+//!   crashes and restarts, straggler slowdowns (realized rates drift
+//!   away from the fitted model mid-run) and load spikes at given
+//!   virtual times.
+//!
+//! [`Scenario::run`] realizes the streams into one merged arrival
+//! trace, builds the [`Cluster`] and executes everything on the same
+//! event-driven virtual-time loop the rest of the serving layer uses —
+//! faults are ordinary heap events, so a run is exactly as
+//! deterministic as the fault-free simulator: the same file and seed
+//! always produce the same [`ServiceReport`], and a scenario with no
+//! `[[fault]]` tables is byte-identical to driving the equivalent
+//! cluster directly (property-tested in `tests/prop_invariants.rs`).
+//!
+//! [`digest`] folds a report into a stable JSON summary; the
+//! `scenario_runner` binary runs the committed corpus under
+//! `scenarios/` and CI diffs its output against the blessed
+//! `ci/scenario_digests.json` (see `docs/scenarios.md` for the schema
+//! and the blessing workflow).
+//!
+//! ```no_run
+//! use poas::service::scenario::Scenario;
+//!
+//! let sc = Scenario::from_file(std::path::Path::new("scenarios/crash_mid_burst.toml"))?;
+//! let report = sc.run();
+//! println!("{}", poas::service::scenario::digest(&report));
+//! # Ok::<(), poas::Error>(())
+//! ```
+
+mod digest;
+mod parser;
+
+pub use digest::digest;
+
+use crate::config::MachineConfig;
+use crate::error::{Error, Result};
+use crate::service::arrivals::{Arrival, ClassLoad, MixedArrivals, OnOffArrivals};
+use crate::service::cluster::{Cluster, ClusterOptions};
+use crate::service::qos::QosClass;
+use crate::service::request::ServiceReport;
+use crate::workload::GemmSize;
+use std::path::Path;
+
+/// How one `[[arrivals]]` stream generates inter-arrival times.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamKind {
+    /// A deterministic Poisson stream ([`MixedArrivals`] with a single
+    /// [`ClassLoad`]).
+    Poisson {
+        /// Offered load, requests per virtual second.
+        rate_rps: f64,
+    },
+    /// A bursty Markov-modulated on/off stream ([`OnOffArrivals`]);
+    /// the scenario's class and SLO are stamped onto the realized
+    /// arrivals afterwards.
+    OnOff {
+        /// Arrival rate while the source is ON.
+        rate_on_rps: f64,
+        /// Arrival rate while the source is OFF (must be positive and
+        /// below the ON rate).
+        rate_off_rps: f64,
+        /// Mean ON-phase duration, virtual seconds.
+        mean_on_s: f64,
+        /// Mean OFF-phase duration, virtual seconds.
+        mean_off_s: f64,
+    },
+}
+
+/// One `[[arrivals]]` table: a generated request stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSpec {
+    /// The arrival process.
+    pub kind: StreamKind,
+    /// QoS tier of every request in the stream.
+    pub class: QosClass,
+    /// Number of arrivals to realize.
+    pub count: usize,
+    /// SLO attached to every request (`None` = no deadline).
+    pub deadline_s: Option<f64>,
+    /// Shapes drawn uniformly per arrival (see the menu DSL in
+    /// `docs/scenarios.md`: `MxNxK*reps` or square `S*reps`).
+    pub menu: Vec<(GemmSize, u32)>,
+}
+
+/// One `[[request]]` table: a hand-placed arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FixedRequest {
+    /// Arrival time, virtual seconds.
+    pub at: f64,
+    /// The GEMM shape.
+    pub size: GemmSize,
+    /// Repetitions.
+    pub reps: u32,
+    /// QoS tier.
+    pub class: QosClass,
+    /// Optional sojourn SLO.
+    pub deadline_s: Option<f64>,
+}
+
+/// One `[[fault]]` table: a scheduled disturbance.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// Shard `shard` crashes at `at`: queued and in-flight work is
+    /// displaced and re-enters admission on the surviving shards (see
+    /// [`Cluster::inject_crash`]).
+    Crash {
+        /// Virtual time of the crash.
+        at: f64,
+        /// Shard index.
+        shard: usize,
+    },
+    /// Shard `shard` comes back at `at` and parked arrivals re-enter
+    /// admission (see [`Cluster::inject_restart`]).
+    Restart {
+        /// Virtual time of the restart.
+        at: f64,
+        /// Shard index.
+        shard: usize,
+    },
+    /// Straggler / degraded machine: shard `shard`'s realized device
+    /// rates are multiplied by `factor` at `at`, so executions drift
+    /// away from the installation-time model until a dynamic replan
+    /// refreshes it (see [`Cluster::inject_slowdown`]).
+    Slow {
+        /// Virtual time the drift starts.
+        at: f64,
+        /// Shard index.
+        shard: usize,
+        /// Rate multiplier in (0, ∞); `< 1` slows the machine down.
+        factor: f64,
+    },
+    /// A load spike: an extra Poisson burst superposed on the
+    /// scenario's streams starting at `at`. Realized in
+    /// [`Scenario::trace`], not as a heap event.
+    Spike {
+        /// Virtual time the burst starts.
+        at: f64,
+        /// Burst arrival rate, requests per virtual second.
+        rate_rps: f64,
+        /// Number of burst arrivals.
+        count: usize,
+        /// QoS tier of the burst.
+        class: QosClass,
+        /// Optional SLO on every burst request.
+        deadline_s: Option<f64>,
+        /// Shapes drawn uniformly per burst arrival.
+        menu: Vec<(GemmSize, u32)>,
+    },
+}
+
+/// A parsed scenario: cluster + offered load + fault schedule.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Scenario name (the digest key in the runner's output).
+    pub name: String,
+    /// Master seed: drives shard profiling (shard `i` profiles on a
+    /// simulator seeded `seed + i`) and every arrival stream.
+    pub seed: u64,
+    /// One entry per shard, expanded from the `[[shard]]` presets.
+    pub machines: Vec<MachineConfig>,
+    /// Cluster/serving options assembled from the top-level keys
+    /// (`opts.shards` is overridden by `machines.len()` at build time).
+    pub opts: ClusterOptions,
+    /// Generated arrival streams, document order.
+    pub streams: Vec<StreamSpec>,
+    /// Hand-placed arrivals, document order.
+    pub requests: Vec<FixedRequest>,
+    /// Scheduled faults, document order.
+    pub faults: Vec<Fault>,
+}
+
+/// Seed for stream `index`: domain-separated from the master seed so
+/// adding a stream never perturbs the ones before it.
+fn stream_seed(base: u64, index: usize) -> u64 {
+    base ^ (index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+impl Scenario {
+    /// Parse a scenario from TOML-subset text (see `docs/scenarios.md`
+    /// for the schema). Also available as [`std::str::FromStr`].
+    pub fn parse(text: &str) -> Result<Self> {
+        parser::parse_scenario(text)
+    }
+
+    /// Read and parse a scenario file.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        Self::parse(&text)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))
+    }
+
+    /// Realize every stream, spike and fixed request into one merged
+    /// arrival trace, time-ordered with a stable sort (ties keep
+    /// document order: streams, then spikes, then fixed requests).
+    pub fn trace(&self) -> Vec<Arrival> {
+        let mut all = Vec::new();
+        let mut next_stream = 0usize;
+        for s in &self.streams {
+            let seed = stream_seed(self.seed, next_stream);
+            next_stream += 1;
+            match s.kind {
+                StreamKind::Poisson { rate_rps } => {
+                    let load = ClassLoad {
+                        class: s.class,
+                        rate_rps,
+                        menu: s.menu.clone(),
+                        deadline_s: s.deadline_s,
+                    };
+                    all.extend(MixedArrivals::new(vec![load], seed).trace(s.count));
+                }
+                StreamKind::OnOff {
+                    rate_on_rps,
+                    rate_off_rps,
+                    mean_on_s,
+                    mean_off_s,
+                } => {
+                    // `OnOffArrivals` realizes Standard/no-SLO arrivals;
+                    // the stream's tier and deadline are stamped on here.
+                    let mut t = OnOffArrivals::new(
+                        rate_on_rps,
+                        rate_off_rps,
+                        mean_on_s,
+                        mean_off_s,
+                        s.menu.clone(),
+                        seed,
+                    )
+                    .trace(s.count);
+                    for a in &mut t {
+                        a.class = s.class;
+                        a.deadline_s = s.deadline_s;
+                    }
+                    all.extend(t);
+                }
+            }
+        }
+        for f in &self.faults {
+            if let Fault::Spike {
+                at,
+                rate_rps,
+                count,
+                class,
+                deadline_s,
+                menu,
+            } = f
+            {
+                let seed = stream_seed(self.seed, next_stream);
+                next_stream += 1;
+                let load = ClassLoad {
+                    class: *class,
+                    rate_rps: *rate_rps,
+                    menu: menu.clone(),
+                    deadline_s: *deadline_s,
+                };
+                let mut t = MixedArrivals::new(vec![load], seed).trace(*count);
+                for a in &mut t {
+                    a.at += at;
+                }
+                all.extend(t);
+            }
+        }
+        for r in &self.requests {
+            all.push(Arrival {
+                at: r.at,
+                size: r.size,
+                reps: r.reps,
+                class: r.class,
+                deadline_s: r.deadline_s,
+            });
+        }
+        all.sort_by(|a, b| a.at.total_cmp(&b.at));
+        all
+    }
+
+    /// Build the cluster and schedule the heap faults (crash, restart,
+    /// slowdown). Spikes live in [`Scenario::trace`] instead. The
+    /// returned cluster has no arrivals submitted yet.
+    pub fn build(&self) -> Cluster {
+        let mut cluster = Cluster::from_machines(&self.machines, self.seed, self.opts.clone());
+        for f in &self.faults {
+            match f {
+                Fault::Crash { at, shard } => cluster.inject_crash(*at, *shard),
+                Fault::Restart { at, shard } => cluster.inject_restart(*at, *shard),
+                Fault::Slow { at, shard, factor } => cluster.inject_slowdown(*at, *shard, *factor),
+                Fault::Spike { .. } => {}
+            }
+        }
+        cluster
+    }
+
+    /// Execute the scenario to completion: build, submit the realized
+    /// trace, drain the event loop. Deterministic: same file, same
+    /// seed, same report.
+    pub fn run(&self) -> ServiceReport {
+        let mut cluster = self.build();
+        cluster.submit_trace(&self.trace());
+        cluster.run_to_completion()
+    }
+}
+
+impl std::str::FromStr for Scenario {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Scenario::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = r#"
+        name = "minimal"
+        seed = 7
+
+        [[shard]]
+        preset = "mach1"
+
+        [[arrivals]]
+        process = "poisson"
+        class = "standard"
+        rate_rps = 50.0
+        count = 4
+        menu = "256*2, 192x256x128"
+    "#;
+
+    #[test]
+    fn minimal_scenario_parses_and_runs() {
+        let sc: Scenario = MINIMAL.parse().expect("parse");
+        assert_eq!(sc.name, "minimal");
+        assert_eq!(sc.seed, 7);
+        assert_eq!(sc.machines.len(), 1);
+        assert_eq!(sc.streams.len(), 1);
+        assert_eq!(sc.trace().len(), 4);
+        let report = sc.run();
+        assert_eq!(report.served.len(), 4);
+        assert_eq!(report.requeued, 0);
+    }
+
+    #[test]
+    fn trace_is_time_ordered_and_deterministic() {
+        let sc: Scenario = MINIMAL.parse().unwrap();
+        let t1 = sc.trace();
+        let t2 = sc.trace();
+        assert_eq!(t1, t2);
+        for w in t1.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn spike_arrivals_are_offset_and_merged() {
+        let text = r#"
+            name = "spiked"
+            [[shard]]
+            preset = "mach1"
+            [[fault]]
+            kind = "spike"
+            at = 2.5
+            rate_rps = 100.0
+            count = 3
+            class = "interactive"
+            deadline_s = 1.0
+            menu = "128"
+        "#;
+        let sc: Scenario = text.parse().unwrap();
+        let t = sc.trace();
+        assert_eq!(t.len(), 3);
+        assert!(t.iter().all(|a| a.at >= 2.5));
+        assert!(t.iter().all(|a| a.class == QosClass::Interactive));
+        assert!(t.iter().all(|a| a.deadline_s == Some(1.0)));
+    }
+
+    #[test]
+    fn adding_a_stream_does_not_perturb_earlier_streams() {
+        let one: Scenario = MINIMAL.parse().unwrap();
+        let two: Scenario = format!(
+            "{MINIMAL}\n[[arrivals]]\nprocess = \"poisson\"\nclass = \"batch\"\nrate_rps = 5.0\ncount = 2\nmenu = \"512\"\n"
+        )
+        .parse()
+        .unwrap();
+        let t1 = one.trace();
+        let mut t2 = two.trace();
+        t2.retain(|a| a.class == QosClass::Standard);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn faults_schedule_on_the_cluster() {
+        let text = r#"
+            name = "faulty"
+            [[shard]]
+            preset = "mach1"
+            count = 2
+            [[fault]]
+            kind = "crash"
+            at = 0.5
+            shard = 1
+            [[fault]]
+            kind = "restart"
+            at = 1.5
+            shard = 1
+            [[fault]]
+            kind = "slow"
+            at = 0.25
+            shard = 0
+            factor = 0.5
+        "#;
+        let sc: Scenario = text.parse().unwrap();
+        assert_eq!(sc.machines.len(), 2);
+        assert_eq!(sc.faults.len(), 3);
+        // Runs to completion with zero arrivals: fault events drain.
+        let report = sc.run();
+        assert_eq!(report.served.len(), 0);
+    }
+}

@@ -1,0 +1,513 @@
+//! TOML-subset parser for scenario files.
+//!
+//! Reuses [`crate::config::parser`]'s splitter so scenarios get the
+//! exact comment/string/number handling of machine configs, with the
+//! section headers `[[shard]]`, `[[arrivals]]`, `[[request]]` and
+//! `[[fault]]`. See `docs/scenarios.md` for the full schema and a
+//! worked example.
+
+use super::{Fault, FixedRequest, Scenario, StreamKind, StreamSpec};
+use crate::config::parser::{get, num_or, req, split_sections, Section};
+use crate::config::{presets, MachineConfig};
+use crate::error::{Error, Result};
+use crate::service::batch::{BatchPolicy, BatchWindow};
+use crate::service::cluster::{ClusterOptions, GatePolicy};
+use crate::service::qos::{DeadlinePolicy, QosClass};
+use crate::service::queue::QueuePolicy;
+use crate::workload::GemmSize;
+
+const HEADERS: [&str; 4] = ["shard", "arrivals", "request", "fault"];
+
+/// Parse one scenario document.
+pub(super) fn parse_scenario(text: &str) -> Result<Scenario> {
+    let (top, tables) = split_sections(text, &HEADERS)?;
+
+    let name = req(&top, "name", "scenario")?.as_str("name")?.to_string();
+    if name.is_empty() {
+        return Err(Error::Config("scenario: `name` must not be empty".into()));
+    }
+    let seed = match get(&top, "seed") {
+        Some(v) => v.as_u64("seed")?,
+        None => 0,
+    };
+    let opts = parse_options(&top)?;
+
+    let mut machines = Vec::new();
+    let mut streams = Vec::new();
+    let mut requests = Vec::new();
+    let mut faults = Vec::new();
+    for (header, sec) in &tables {
+        match header.as_str() {
+            "shard" => parse_shard(sec, &mut machines)?,
+            "arrivals" => streams.push(parse_arrivals(sec)?),
+            "request" => requests.push(parse_request(sec)?),
+            "fault" => faults.push(parse_fault(sec)?),
+            _ => unreachable!("split_sections only yields accepted headers"),
+        }
+    }
+    if machines.is_empty() {
+        return Err(Error::Config(format!(
+            "scenario `{name}`: needs at least one [[shard]] table"
+        )));
+    }
+    for f in &faults {
+        let shard = match f {
+            Fault::Crash { shard, .. }
+            | Fault::Restart { shard, .. }
+            | Fault::Slow { shard, .. } => *shard,
+            Fault::Spike { .. } => continue,
+        };
+        if shard >= machines.len() {
+            return Err(Error::Config(format!(
+                "scenario `{name}`: fault targets shard {shard} but the cluster has {} shards",
+                machines.len()
+            )));
+        }
+    }
+
+    Ok(Scenario {
+        name,
+        seed,
+        machines,
+        opts,
+        streams,
+        requests,
+        faults,
+    })
+}
+
+fn flag(sec: &Section, key: &str, default: bool) -> Result<bool> {
+    Ok(num_or(sec, key, if default { 1.0 } else { 0.0 })? != 0.0)
+}
+
+fn parse_options(top: &Section) -> Result<ClusterOptions> {
+    let mut opts = ClusterOptions::default();
+
+    if let Some(v) = get(top, "queue") {
+        opts.shard.policy = match v.as_str("queue")? {
+            "fifo" => QueuePolicy::Fifo,
+            "spjf" => QueuePolicy::Spjf,
+            other => {
+                return Err(Error::Config(format!(
+                    "`queue` must be \"fifo\" or \"spjf\", got \"{other}\""
+                )))
+            }
+        };
+    }
+    if let Some(v) = get(top, "gate") {
+        opts.gate = match v.as_str("gate")? {
+            "per_shard" => GatePolicy::PerShard,
+            "shard0" => GatePolicy::Shard0,
+            other => {
+                return Err(Error::Config(format!(
+                    "`gate` must be \"per_shard\" or \"shard0\", got \"{other}\""
+                )))
+            }
+        };
+    }
+    if let Some(v) = get(top, "deadline_policy") {
+        opts.shard.deadline_policy = match v.as_str("deadline_policy")? {
+            "reject" => DeadlinePolicy::Reject,
+            "downclass" => DeadlinePolicy::Downclass,
+            other => {
+                return Err(Error::Config(format!(
+                    "`deadline_policy` must be \"reject\" or \"downclass\", got \"{other}\""
+                )))
+            }
+        };
+    }
+    opts.work_stealing = flag(top, "work_stealing", opts.work_stealing)?;
+    opts.shard.standalone_bypass = flag(top, "standalone_bypass", opts.shard.standalone_bypass)?;
+    opts.shard.dynamic = flag(top, "dynamic", opts.shard.dynamic)?;
+    opts.shard.min_gain = num_or(top, "min_gain", opts.shard.min_gain)?;
+    opts.shard.overhead_s = num_or(top, "overhead_s", opts.shard.overhead_s)?;
+    opts.shard.deadline_slack = num_or(top, "deadline_slack", opts.shard.deadline_slack)?;
+    if !(opts.shard.deadline_slack > 0.0 && opts.shard.deadline_slack <= 1.0) {
+        return Err(Error::Config(format!(
+            "`deadline_slack` must be in (0, 1], got {}",
+            opts.shard.deadline_slack
+        )));
+    }
+    if let Some(v) = get(top, "cache_capacity") {
+        opts.shard.cache_capacity = v.as_u64("cache_capacity")? as usize;
+    }
+    if let Some(v) = get(top, "gate_capacity") {
+        opts.shard.gate_capacity = v.as_u64("gate_capacity")? as usize;
+    }
+
+    // Presence of any batching knob switches windowed batching on;
+    // unspecified knobs keep the `BatchWindow` defaults.
+    let batch_keys = ["batch_window_s", "batch_max_members", "batch_max_member_ops"];
+    if batch_keys.iter().any(|k| get(top, k).is_some()) {
+        let defaults = BatchWindow::default();
+        let window = BatchWindow {
+            window_s: num_or(top, "batch_window_s", defaults.window_s)?,
+            max_members: match get(top, "batch_max_members") {
+                Some(v) => v.as_u64("batch_max_members")? as usize,
+                None => defaults.max_members,
+            },
+            max_member_ops: num_or(top, "batch_max_member_ops", defaults.max_member_ops)?,
+        };
+        if !(window.window_s > 0.0) || window.max_members < 2 || !(window.max_member_ops > 0.0) {
+            return Err(Error::Config(
+                "batching knobs must satisfy batch_window_s > 0, batch_max_members >= 2, \
+                 batch_max_member_ops > 0"
+                    .into(),
+            ));
+        }
+        opts.batching = BatchPolicy::Windowed(window);
+    }
+
+    Ok(opts)
+}
+
+fn preset_config(name: &str) -> Result<MachineConfig> {
+    match name {
+        "mach1" => Ok(presets::mach1()),
+        "mach2" => Ok(presets::mach2()),
+        "gpu_node" => Ok(presets::gpu_node()),
+        "cpu_node" => Ok(presets::cpu_node()),
+        "xpu_node" => Ok(presets::xpu_node()),
+        other => Err(Error::Config(format!(
+            "[[shard]]: unknown preset \"{other}\" (expected mach1, mach2, gpu_node, cpu_node \
+             or xpu_node)"
+        ))),
+    }
+}
+
+fn parse_shard(sec: &Section, machines: &mut Vec<MachineConfig>) -> Result<()> {
+    let preset = req(sec, "preset", "[[shard]]")?.as_str("preset")?;
+    let count = match get(sec, "count") {
+        Some(v) => v.as_u64("count")? as usize,
+        None => 1,
+    };
+    if count == 0 {
+        return Err(Error::Config("[[shard]]: `count` must be >= 1".into()));
+    }
+    for _ in 0..count {
+        machines.push(preset_config(preset)?);
+    }
+    Ok(())
+}
+
+fn parse_class(sec: &Section, what: &str) -> Result<QosClass> {
+    match get(sec, "class") {
+        None => Ok(QosClass::Standard),
+        Some(v) => match v.as_str("class")? {
+            "interactive" => Ok(QosClass::Interactive),
+            "standard" => Ok(QosClass::Standard),
+            "batch" => Ok(QosClass::Batch),
+            other => Err(Error::Config(format!(
+                "{what}: `class` must be \"interactive\", \"standard\" or \"batch\", \
+                 got \"{other}\""
+            ))),
+        },
+    }
+}
+
+fn parse_deadline(sec: &Section, what: &str) -> Result<Option<f64>> {
+    match get(sec, "deadline_s") {
+        None => Ok(None),
+        Some(v) => {
+            let d = v.as_f64("deadline_s")?;
+            if !(d.is_finite() && d > 0.0) {
+                return Err(Error::Config(format!(
+                    "{what}: `deadline_s` must be finite and positive, got {d}"
+                )));
+            }
+            Ok(Some(d))
+        }
+    }
+}
+
+/// One menu/size token: `MxNxK` or square `S`, dimensions >= 1.
+fn parse_size(tok: &str, what: &str) -> Result<GemmSize> {
+    let dims: Vec<&str> = tok.split('x').collect();
+    let dim = |d: &str| -> Result<u64> {
+        let n = d
+            .trim()
+            .parse::<u64>()
+            .map_err(|_| Error::Config(format!("{what}: bad dimension `{d}` in `{tok}`")))?;
+        if n == 0 {
+            return Err(Error::Config(format!(
+                "{what}: dimensions must be >= 1 in `{tok}`"
+            )));
+        }
+        Ok(n)
+    };
+    match dims.as_slice() {
+        [s] => {
+            let s = dim(s)?;
+            Ok(GemmSize::new(s, s, s))
+        }
+        [m, n, k] => Ok(GemmSize::new(dim(m)?, dim(n)?, dim(k)?)),
+        _ => Err(Error::Config(format!(
+            "{what}: size must be `MxNxK` or square `S`, got `{tok}`"
+        ))),
+    }
+}
+
+/// The menu DSL: comma-separated `MxNxK*reps` / `S*reps` items, reps
+/// defaulting to 1.
+fn parse_menu(raw: &str, what: &str) -> Result<Vec<(GemmSize, u32)>> {
+    let mut menu = Vec::new();
+    for item in raw.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        let (size_tok, reps) = match item.split_once('*') {
+            Some((s, r)) => {
+                let reps = r.trim().parse::<u32>().map_err(|_| {
+                    Error::Config(format!("{what}: bad reps `{r}` in menu item `{item}`"))
+                })?;
+                (s.trim(), reps)
+            }
+            None => (item, 1),
+        };
+        if reps == 0 {
+            return Err(Error::Config(format!(
+                "{what}: reps must be >= 1 in menu item `{item}`"
+            )));
+        }
+        menu.push((parse_size(size_tok, what)?, reps));
+    }
+    if menu.is_empty() {
+        return Err(Error::Config(format!("{what}: `menu` must not be empty")));
+    }
+    Ok(menu)
+}
+
+fn parse_positive(sec: &Section, key: &str, what: &str) -> Result<f64> {
+    let v = req(sec, key, what)?.as_f64(key)?;
+    if !(v.is_finite() && v > 0.0) {
+        return Err(Error::Config(format!(
+            "{what}: `{key}` must be finite and positive, got {v}"
+        )));
+    }
+    Ok(v)
+}
+
+fn parse_arrivals(sec: &Section) -> Result<StreamSpec> {
+    const WHAT: &str = "[[arrivals]]";
+    let process = match get(sec, "process") {
+        None => "poisson",
+        Some(v) => v.as_str("process")?,
+    };
+    let kind = match process {
+        "poisson" => StreamKind::Poisson {
+            rate_rps: parse_positive(sec, "rate_rps", WHAT)?,
+        },
+        "onoff" => {
+            let rate_on_rps = parse_positive(sec, "rate_on_rps", WHAT)?;
+            let rate_off_rps = parse_positive(sec, "rate_off_rps", WHAT)?;
+            if rate_on_rps <= rate_off_rps {
+                return Err(Error::Config(format!(
+                    "{WHAT}: `rate_on_rps` ({rate_on_rps}) must exceed `rate_off_rps` \
+                     ({rate_off_rps})"
+                )));
+            }
+            StreamKind::OnOff {
+                rate_on_rps,
+                rate_off_rps,
+                mean_on_s: parse_positive(sec, "mean_on_s", WHAT)?,
+                mean_off_s: parse_positive(sec, "mean_off_s", WHAT)?,
+            }
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "{WHAT}: `process` must be \"poisson\" or \"onoff\", got \"{other}\""
+            )))
+        }
+    };
+    let count = req(sec, "count", WHAT)?.as_u64("count")? as usize;
+    if count == 0 {
+        return Err(Error::Config(format!("{WHAT}: `count` must be >= 1")));
+    }
+    Ok(StreamSpec {
+        kind,
+        class: parse_class(sec, WHAT)?,
+        count,
+        deadline_s: parse_deadline(sec, WHAT)?,
+        menu: parse_menu(req(sec, "menu", WHAT)?.as_str("menu")?, WHAT)?,
+    })
+}
+
+fn parse_at(sec: &Section, what: &str) -> Result<f64> {
+    let at = num_or(sec, "at", 0.0)?;
+    if !(at.is_finite() && at >= 0.0) {
+        return Err(Error::Config(format!(
+            "{what}: `at` must be finite and non-negative, got {at}"
+        )));
+    }
+    Ok(at)
+}
+
+fn parse_request(sec: &Section) -> Result<FixedRequest> {
+    const WHAT: &str = "[[request]]";
+    let reps = match get(sec, "reps") {
+        Some(v) => v.as_u64("reps")? as u32,
+        None => 1,
+    };
+    if reps == 0 {
+        return Err(Error::Config(format!("{WHAT}: `reps` must be >= 1")));
+    }
+    Ok(FixedRequest {
+        at: parse_at(sec, WHAT)?,
+        size: parse_size(req(sec, "size", WHAT)?.as_str("size")?, WHAT)?,
+        reps,
+        class: parse_class(sec, WHAT)?,
+        deadline_s: parse_deadline(sec, WHAT)?,
+    })
+}
+
+fn parse_fault(sec: &Section) -> Result<Fault> {
+    const WHAT: &str = "[[fault]]";
+    let kind = req(sec, "kind", WHAT)?.as_str("kind")?;
+    let at = parse_at(sec, WHAT)?;
+    let shard = |sec: &Section| -> Result<usize> {
+        Ok(req(sec, "shard", WHAT)?.as_u64("shard")? as usize)
+    };
+    match kind {
+        "crash" => Ok(Fault::Crash {
+            at,
+            shard: shard(sec)?,
+        }),
+        "restart" => Ok(Fault::Restart {
+            at,
+            shard: shard(sec)?,
+        }),
+        "slow" => Ok(Fault::Slow {
+            at,
+            shard: shard(sec)?,
+            factor: parse_positive(sec, "factor", WHAT)?,
+        }),
+        "spike" => {
+            let count = req(sec, "count", WHAT)?.as_u64("count")? as usize;
+            if count == 0 {
+                return Err(Error::Config(format!("{WHAT}: spike `count` must be >= 1")));
+            }
+            Ok(Fault::Spike {
+                at,
+                rate_rps: parse_positive(sec, "rate_rps", WHAT)?,
+                count,
+                class: parse_class(sec, WHAT)?,
+                deadline_s: parse_deadline(sec, WHAT)?,
+                menu: parse_menu(req(sec, "menu", WHAT)?.as_str("menu")?, WHAT)?,
+            })
+        }
+        other => Err(Error::Config(format!(
+            "{WHAT}: `kind` must be \"crash\", \"restart\", \"slow\" or \"spike\", \
+             got \"{other}\""
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<Scenario> {
+        parse_scenario(text)
+    }
+
+    #[test]
+    fn full_schema_round_trips_into_types() {
+        let sc = parse(
+            r#"
+            name = "everything"
+            seed = 42
+            queue = "spjf"
+            gate = "per_shard"
+            work_stealing = 1
+            standalone_bypass = 1
+            dynamic = 1
+            deadline_policy = "downclass"
+            deadline_slack = 0.8
+            min_gain = 1.1
+            batch_window_s = 0.02
+            batch_max_members = 4
+
+            [[shard]]
+            preset = "gpu_node"
+            count = 2
+
+            [[shard]]
+            preset = "cpu_node"
+
+            [[arrivals]]
+            process = "onoff"
+            class = "batch"
+            rate_on_rps = 40.0
+            rate_off_rps = 2.0
+            mean_on_s = 0.5
+            mean_off_s = 1.0
+            count = 6
+            menu = "512x256x128*2"
+
+            [[request]]
+            at = 0.1
+            size = "1024"
+            reps = 3
+            class = "interactive"
+            deadline_s = 0.5
+
+            [[fault]]
+            kind = "slow"
+            at = 1.0
+            shard = 2
+            factor = 0.4
+        "#,
+        )
+        .expect("parse");
+        assert_eq!(sc.machines.len(), 3);
+        assert_eq!(sc.opts.shard.policy, QueuePolicy::Spjf);
+        assert_eq!(sc.opts.shard.deadline_policy, DeadlinePolicy::Downclass);
+        assert!(sc.opts.shard.dynamic);
+        assert!(matches!(
+            sc.opts.batching,
+            BatchPolicy::Windowed(w) if w.max_members == 4 && w.window_s == 0.02
+        ));
+        assert!(matches!(sc.streams[0].kind, StreamKind::OnOff { .. }));
+        assert_eq!(sc.requests[0].size, GemmSize::new(1024, 1024, 1024));
+        assert_eq!(sc.requests[0].deadline_s, Some(0.5));
+        assert!(matches!(sc.faults[0], Fault::Slow { shard: 2, .. }));
+    }
+
+    #[test]
+    fn menu_dsl_parses_squares_and_triples() {
+        let menu = parse_menu("256*4, 512x256x128, 64 * 2", "test").unwrap();
+        assert_eq!(menu[0], (GemmSize::new(256, 256, 256), 4));
+        assert_eq!(menu[1], (GemmSize::new(512, 256, 128), 1));
+        assert_eq!(menu[2], (GemmSize::new(64, 64, 64), 2));
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        // Missing name.
+        assert!(parse("seed = 1\n[[shard]]\npreset = \"mach1\"").is_err());
+        // No shards.
+        assert!(parse("name = \"x\"").is_err());
+        // Unknown preset.
+        assert!(parse("name = \"x\"\n[[shard]]\npreset = \"nope\"").is_err());
+        // Fault shard out of range.
+        assert!(parse(
+            "name = \"x\"\n[[shard]]\npreset = \"mach1\"\n[[fault]]\nkind = \"crash\"\nat = 1.0\nshard = 3"
+        )
+        .is_err());
+        // Unknown fault kind.
+        assert!(parse(
+            "name = \"x\"\n[[shard]]\npreset = \"mach1\"\n[[fault]]\nkind = \"meteor\"\nat = 1.0"
+        )
+        .is_err());
+        // onoff with on-rate below off-rate.
+        assert!(parse(
+            "name = \"x\"\n[[shard]]\npreset = \"mach1\"\n[[arrivals]]\nprocess = \"onoff\"\nrate_on_rps = 1.0\nrate_off_rps = 2.0\nmean_on_s = 1.0\nmean_off_s = 1.0\ncount = 1\nmenu = \"64\""
+        )
+        .is_err());
+        // Zero-dimension size.
+        assert!(parse_size("0x2x3", "test").is_err());
+        // Empty menu.
+        assert!(parse_menu(" , ", "test").is_err());
+    }
+}

@@ -68,6 +68,11 @@ pub struct ExecutorShard {
     batches: usize,
     /// Requests completed per QoS class (riders included).
     served_by_class: [usize; NUM_CLASSES],
+    /// Requests this shard rejected at planning time.
+    rejected: usize,
+    /// Requests displaced off this shard by a crash (see
+    /// [`ExecutorShard::crash`] and [`ExecutorShard::note_requeued`]).
+    requeued: usize,
     /// Sum of admission-time service predictions over everything this
     /// shard executed (placement-quality denominator).
     predicted_sum_s: f64,
@@ -104,6 +109,8 @@ impl ExecutorShard {
             stolen: 0,
             batches: 0,
             served_by_class: [0; NUM_CLASSES],
+            rejected: 0,
+            requeued: 0,
             predicted_sum_s: 0.0,
             realized_sum_s: 0.0,
             dynsched,
@@ -176,6 +183,8 @@ impl ExecutorShard {
             stolen: self.stolen,
             batches: self.batches,
             served_by_class: self.served_by_class,
+            rejected: self.rejected,
+            requeued: self.requeued,
             model_fp: self.model.fingerprint(),
             predicted_s: self.predicted_sum_s,
             realized_s: self.realized_sum_s,
@@ -203,6 +212,48 @@ impl ExecutorShard {
     /// Record that this shard stole a request from a busier one.
     pub fn note_steal(&mut self) {
         self.stolen += 1;
+    }
+
+    /// Record that `n` requests were displaced off this shard by a
+    /// crash and re-admitted elsewhere.
+    pub fn note_requeued(&mut self, n: usize) {
+        self.requeued += n;
+    }
+
+    /// Kill this shard's machine at virtual time `now`: drain and
+    /// return every queued request (in the order the shard's own policy
+    /// would have dispatched them — deterministic) and stop the busy
+    /// clock at the crash instant. In-flight work is rolled back
+    /// separately, record by record, via
+    /// [`ExecutorShard::abort_record`]; the cluster owns those records.
+    ///
+    /// `busy_s` keeps the machine-seconds actually elapsed before the
+    /// crash (dispatches are serialized, so the only execution spanning
+    /// `now` is the one ending at `free_at`) — the un-elapsed tail of
+    /// that execution never happened and is subtracted.
+    pub fn crash(&mut self, now: f64) -> Vec<QueuedRequest> {
+        self.busy_s -= (self.free_at - now).max(0.0);
+        self.free_at = now;
+        let mut drained = Vec::new();
+        while let Some(q) = self.queue.pop_next() {
+            drained.push(q);
+        }
+        drained
+    }
+
+    /// Roll one aborted in-flight completion record back out of this
+    /// shard's accounting, so its re-admission elsewhere cannot
+    /// double-count: the class attribution and the placement sums
+    /// (predicted / realized) are reversed. For a fused-batch member
+    /// the reversal is pro-rata by the member's own record — close to,
+    /// but not exactly, the carrier-level figure the dispatch added —
+    /// so both sums clamp at zero. `dispatches`/`batches` stay: the
+    /// dispatch did happen, its results were just lost.
+    pub fn abort_record(&mut self, r: &ServedRequest) {
+        let lane = &mut self.served_by_class[r.class.index()];
+        *lane = lane.saturating_sub(1);
+        self.predicted_sum_s = (self.predicted_sum_s - r.predicted_s).max(0.0);
+        self.realized_sum_s = (self.realized_sum_s - r.exec_s).max(0.0);
     }
 
     /// The device the bypass frees for standalone riders: the slowest
@@ -419,6 +470,7 @@ impl ExecutorShard {
     ) {
         for m in &batch.members {
             let zero_shares = vec![0.0; self.sim.num_devices()];
+            self.rejected += 1;
             self.push_member(q, m, ExecMode::Rejected, start, 0.0, false, zero_shares, out);
         }
     }
@@ -606,6 +658,7 @@ impl ExecutorShard {
 
     fn serve_rejected(&mut self, q: QueuedRequest, start: f64, out: &mut Vec<ServedRequest>) {
         self.served_by_class[q.req.class.index()] += 1;
+        self.rejected += 1;
         out.push(ServedRequest {
             id: q.req.id,
             size: q.req.size,

@@ -186,6 +186,24 @@ impl SimMachine {
         self.devices.len()
     }
 
+    /// Scale every device's effective compute rate by `factor` — the
+    /// fault-injection hook behind stragglers (`factor < 1`: realized
+    /// times drift slower than any model fitted before the change) and
+    /// their recovery (`factor > 1` restores the original rate, since
+    /// scales compose multiplicatively). Takes effect on the next
+    /// `compute` call; in-flight work orders are not revisited. The
+    /// machine's fitted [`crate::predict::PerfModel`] knows nothing of
+    /// this — closing that gap is the dynamic scheduler's job.
+    pub fn scale_rates(&mut self, factor: f64) {
+        assert!(
+            factor.is_finite() && factor > 0.0,
+            "rate factor must be finite and positive, got {factor}"
+        );
+        for d in &mut self.devices {
+            d.spec.eff_rate_tops *= factor;
+        }
+    }
+
     /// Current virtual time.
     pub fn now(&self) -> f64 {
         self.now

@@ -711,3 +711,123 @@ fn prop_random_workloads_always_covered() {
         assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
     });
 }
+
+// ---------------------------------------------------------------------
+// Scenario-engine invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_faultfree_scenario_equals_direct_cluster() {
+    use poas::service::scenario::Scenario;
+    use poas::service::Cluster;
+
+    // A scenario with no [[fault]] tables must be indistinguishable —
+    // field for field, `PartialEq` on the whole `ServiceReport` — from
+    // building the equivalent cluster by hand and submitting the same
+    // realized trace. The fault machinery must be a strict no-op when
+    // no fault fires.
+    prop("fault-free scenario == direct cluster", 3, |rng, _| {
+        let seed = rng.below(1 << 16);
+        let rate = rng.range(0.5, 3.0);
+        let stealing = rng.below(2);
+        let text = format!(
+            r#"
+            name = "equiv"
+            seed = {seed}
+            work_stealing = {stealing}
+
+            [[shard]]
+            preset = "mach1"
+            count = 2
+
+            [[arrivals]]
+            process = "poisson"
+            class = "standard"
+            rate_rps = {rate}
+            count = 6
+            menu = "16000*2, 12000x18000x14000*2"
+
+            [[arrivals]]
+            process = "poisson"
+            class = "interactive"
+            rate_rps = 1.0
+            count = 3
+            deadline_s = 60.0
+            menu = "10000*2"
+            "#
+        );
+        let sc: Scenario = text.parse().expect("scenario parses");
+        assert!(sc.faults.is_empty());
+
+        let via_scenario = sc.run();
+        let mut direct = Cluster::from_machines(&sc.machines, sc.seed, sc.opts.clone());
+        direct.submit_trace(&sc.trace());
+        let via_cluster = direct.run_to_completion();
+
+        assert_eq!(via_scenario, via_cluster);
+        assert_eq!(
+            format!("{via_scenario:?}"),
+            format!("{via_cluster:?}"),
+            "fault-free scenario must be byte-identical to the direct cluster"
+        );
+        assert_eq!(via_scenario.requeued, 0);
+    });
+}
+
+#[test]
+fn prop_fault_scenario_replay_is_deterministic() {
+    use poas::service::scenario::{digest, Scenario};
+
+    // Crash + restart + straggler drift, replayed: same file, same
+    // seed, same digest — the determinism promise the CI corpus gate
+    // (two back-to-back runner executions) enforces on every commit.
+    prop("fault scenario replay determinism", 3, |rng, _| {
+        let seed = rng.below(1 << 16);
+        let rate = rng.range(1.0, 3.0);
+        let text = format!(
+            r#"
+            name = "faulted"
+            seed = {seed}
+            dynamic = 1
+
+            [[shard]]
+            preset = "mach1"
+            count = 2
+
+            [[arrivals]]
+            process = "poisson"
+            class = "standard"
+            rate_rps = {rate}
+            count = 8
+            menu = "16000*2, 20000*2"
+
+            [[fault]]
+            kind = "slow"
+            at = 0.5
+            shard = 0
+            factor = 0.5
+
+            [[fault]]
+            kind = "crash"
+            at = 1.0
+            shard = 1
+
+            [[fault]]
+            kind = "restart"
+            at = 4.0
+            shard = 1
+            "#
+        );
+        let sc: Scenario = text.parse().expect("scenario parses");
+        let a = sc.run();
+        let b = sc.run();
+        assert_eq!(a, b, "fault-laden replay must produce identical reports");
+        assert_eq!(digest(&a), digest(&b), "and identical digests");
+        // Every arrival is still accounted for exactly once.
+        assert_eq!(a.served.len(), 8);
+        let mut ids: Vec<u64> = a.served.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 8, "no request may be duplicated by a crash");
+    });
+}

@@ -1,0 +1,297 @@
+//! Fault-injection accounting on the serving cluster: crash requeue
+//! invariants (PR 6 satellite) and straggler-drift behaviour under the
+//! dynamic loop.
+//!
+//! Everything here runs on the event-driven virtual-time loop with
+//! injected [`Cluster::inject_crash`] / [`Cluster::inject_restart`] /
+//! [`Cluster::inject_slowdown`] events, so each test is exactly
+//! replayable. The companion scenario-level invariants (fault-free
+//! equivalence, digest determinism) live in `prop_invariants.rs`.
+
+use poas::config::presets;
+use poas::service::batch::{BatchPolicy, BatchWindow};
+use poas::service::{Cluster, ClusterOptions, DeadlinePolicy, QosClass, ServerOptions};
+use poas::workload::GemmSize;
+
+fn heavy() -> GemmSize {
+    GemmSize::square(16_000)
+}
+
+// ---------------------------------------------------------------------
+// Crash requeue accounting
+// ---------------------------------------------------------------------
+
+#[test]
+fn crash_requeues_onto_surviving_shard_with_original_arrival() {
+    // Two identical shards, six heavy requests in one burst at t = 0 —
+    // routing splits them — then shard 1 dies long before anything
+    // heavy can finish. Every displaced request (its in-flight job and
+    // its queue) must re-enter admission and complete on shard 0.
+    let mut c = Cluster::from_machines(
+        &[presets::mach1(), presets::mach1()],
+        9,
+        ClusterOptions::default(),
+    );
+    let slo = 1e6;
+    let ids: Vec<u64> = (0..5).map(|_| c.submit(heavy(), 2)).collect();
+    let bound = c.submit_qos(heavy(), 2, QosClass::Interactive, Some(slo));
+    c.inject_crash(0.01, 1);
+    let report = c.run_to_completion();
+
+    // Exactly once each: no request is lost or duplicated by the crash.
+    assert_eq!(report.served.len(), 6);
+    let mut seen: Vec<u64> = report.served.iter().map(|r| r.id).collect();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), 6);
+
+    // Shard 1 had work at t = 0.01 (the burst split), and every
+    // executed record landed on the survivor.
+    assert!(report.requeued >= 1, "shard 1 must have been displaced");
+    assert_eq!(report.shards[1].requeued, report.requeued);
+    assert_eq!(report.shards[0].requeued, 0);
+    for r in &report.served {
+        assert!(!r.mode.is_unserved(), "nothing should be denied here");
+        assert_eq!(r.shard, Some(0), "request {} served on the dead shard", r.id);
+        assert_eq!(r.arrival, 0.0, "requeue must keep the original arrival");
+    }
+    // Shard 1's per-class lanes were rolled back with its aborted work.
+    assert_eq!(report.shards[1].served_by_class, [0, 0, 0]);
+
+    // The SLO request was re-gated with its budget still charged from
+    // the original arrival: deadline and class survive the requeue.
+    let r = report.request(bound).unwrap();
+    assert_eq!(r.class, QosClass::Interactive);
+    assert_eq!(r.deadline_s, Some(slo));
+    assert_eq!(r.deadline_met(), Some(r.finish - r.arrival <= slo));
+    for id in ids {
+        assert_eq!(report.request(id).unwrap().deadline_s, None);
+    }
+}
+
+#[test]
+fn total_outage_parks_arrivals_and_restart_readmits_once() {
+    // One shard: three requests at t = 0 (one dispatches, two queue),
+    // the shard crashes at 0.01, a fourth request arrives while the
+    // whole cluster is down, and the shard returns at 0.5.
+    let mut c = Cluster::new(&presets::mach1(), 12, ClusterOptions::default());
+    for _ in 0..3 {
+        c.submit(heavy(), 2);
+    }
+    c.inject_crash(0.01, 0);
+    c.submit_request_at(
+        0.02,
+        poas::service::GemmRequest::new(100, heavy(), 2),
+    );
+    c.inject_restart(0.5, 0);
+    let report = c.run_to_completion();
+
+    assert_eq!(report.served.len(), 4);
+    // Displacement counts the crash victims only: the t = 0.02 arrival
+    // was parked at the front door, never displaced off a shard.
+    assert_eq!(report.requeued, 3);
+    assert_eq!(report.shards[0].requeued, 3);
+    for r in &report.served {
+        assert!(!r.mode.is_unserved());
+        // Nothing can start before the restart — the pre-crash
+        // dispatch was aborted and re-done.
+        assert!(
+            r.start >= 0.5,
+            "request {} started at {} while the shard was down",
+            r.id,
+            r.start
+        );
+    }
+    // Original arrivals survive the park/requeue round-trip.
+    assert_eq!(report.request(100).unwrap().arrival, 0.02);
+    assert!(report
+        .served
+        .iter()
+        .filter(|r| r.id != 100)
+        .all(|r| r.arrival == 0.0));
+}
+
+#[test]
+fn crash_mid_flight_disbands_batch_and_members_readmit_solo() {
+    // Two gpu_nodes with windowed batching: four simultaneous small
+    // standalone-bound requests fuse into one batch (see
+    // `windowed_batching_fuses_a_simultaneous_small_burst`) and
+    // dispatch on one shard. A probe run discovers the batch's shard
+    // and flight window; the real run crashes that shard mid-flight,
+    // so the in-flight `ExecMode::Batched` records must be aborted and
+    // every member re-admitted *solo* on the survivor.
+    let build = || {
+        let mut c = Cluster::from_machines(
+            &[presets::gpu_node(), presets::gpu_node()],
+            21,
+            ClusterOptions {
+                batching: BatchPolicy::Windowed(BatchWindow {
+                    window_s: 0.05,
+                    max_members: 4,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+        );
+        for _ in 0..4 {
+            c.submit(GemmSize::square(1024), 2);
+        }
+        c
+    };
+
+    // Probe: where did the batch fly, and when?
+    let probe = build().run_to_completion();
+    assert_eq!(probe.fused(), 4, "probe burst must fuse into one batch");
+    assert_eq!(probe.num_batches(), 1);
+    let members: Vec<_> = probe.served.iter().filter(|r| r.mode.is_batched()).collect();
+    let shard = members[0].shard.expect("batched members carry their shard");
+    let start = members[0].start;
+    let min_finish = members
+        .iter()
+        .map(|r| r.finish)
+        .fold(f64::INFINITY, f64::min);
+    assert!(min_finish > start);
+    let mid = 0.5 * (start + min_finish);
+
+    // Real run: same construction, crash at mid-flight.
+    let mut c = build();
+    c.inject_crash(mid, shard);
+    let report = c.run_to_completion();
+
+    assert_eq!(report.served.len(), 4);
+    assert_eq!(report.requeued, 4, "all four members displaced at once");
+    assert_eq!(report.shards[shard].requeued, 4);
+    let survivor = 1 - shard;
+    for r in &report.served {
+        assert!(
+            !r.mode.is_batched(),
+            "member {} re-fused after the crash; re-admission must route solo",
+            r.id
+        );
+        assert!(!r.mode.is_unserved());
+        assert_eq!(r.shard, Some(survivor));
+        assert_eq!(r.arrival, 0.0, "members keep their original arrival");
+        assert!(r.start >= mid, "nothing re-dispatches before the crash");
+    }
+    assert_eq!(report.fused(), 0, "the aborted batch leaves no fused records");
+    // The dead shard's lanes rolled back with the aborted members.
+    assert_eq!(report.shards[shard].served_by_class, [0, 0, 0]);
+    assert_eq!(
+        report.shards[survivor].served_by_class.iter().sum::<usize>(),
+        4
+    );
+}
+
+// ---------------------------------------------------------------------
+// Straggler drift under the dynamic loop
+// ---------------------------------------------------------------------
+
+#[test]
+fn slowdown_drift_triggers_replan_and_gate_epoch_bump() {
+    // The machine runs at 40% of its fitted model from t = 0 — a 2.5x
+    // drift, far past the 2% replan threshold. With the dynamic loop
+    // closed the first observed execution forces a replan, the shard's
+    // admission gate adopts the refreshed model (epoch bump), and
+    // placement quality recovers toward 1. The static ablation keeps
+    // predicting with the stale model and stays near 2.5.
+    let run = |dynamic: bool| {
+        let mut c = Cluster::new(
+            &presets::mach1(),
+            31,
+            ClusterOptions {
+                shard: ServerOptions {
+                    dynamic,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let epoch_before = c.admission_for(0).epoch();
+        c.inject_slowdown(0.0, 0, 0.4);
+        for _ in 0..8 {
+            c.submit(heavy(), 3);
+        }
+        let report = c.run_to_completion();
+        let epoch_after = c.admission_for(0).epoch();
+        (report, epoch_after - epoch_before)
+    };
+
+    let (dyn_report, dyn_epochs) = run(true);
+    let (static_report, static_epochs) = run(false);
+
+    assert!(dyn_report.replans > 0, "2.5x drift must force a replan");
+    assert!(dyn_report.epoch_bumps > 0, "replans invalidate the plan cache");
+    assert!(
+        dyn_epochs > 0,
+        "the shard's admission gate must adopt the refreshed model"
+    );
+    assert_eq!(static_report.replans, 0);
+    assert_eq!(static_epochs, 0);
+
+    let dyn_q = dyn_report.placement_quality();
+    let static_q = static_report.placement_quality();
+    assert!(
+        static_q > 1.5,
+        "stale model must mispredict the slowed machine: quality {static_q}"
+    );
+    assert!(
+        (dyn_q - 1.0).abs() < (static_q - 1.0).abs(),
+        "dynamic loop must recover placement quality: {dyn_q} vs static {static_q}"
+    );
+    // Both runs serve everything exactly once either way.
+    assert_eq!(dyn_report.served.len(), 8);
+    assert_eq!(static_report.served.len(), 8);
+}
+
+#[test]
+fn deadline_policy_is_honored_under_drift() {
+    // A machine slowed to 30% and a request whose SLO was never
+    // feasible: Reject must deny it (no shard, no machine time);
+    // Downclass must demote it to best-effort Batch instead — denial
+    // is impossible under Downclass, drift or not.
+    let run = |policy: DeadlinePolicy| {
+        let mut c = Cluster::new(
+            &presets::mach2(),
+            41,
+            ClusterOptions {
+                shard: ServerOptions {
+                    deadline_policy: policy,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        c.inject_slowdown(0.0, 0, 0.3);
+        let ok = c.submit(heavy(), 2);
+        let tight = c.submit_qos(heavy(), 2, QosClass::Interactive, Some(1e-3));
+        let report = c.run_to_completion();
+        (report, ok, tight)
+    };
+
+    let (rej, ok_r, tight_r) = run(DeadlinePolicy::Reject);
+    assert_eq!(rej.denied, 1);
+    let denied = rej.request(tight_r).unwrap();
+    assert!(denied.mode.is_denied());
+    assert_eq!(denied.shard, None, "denials never reach a shard");
+    assert_eq!(denied.class, QosClass::Interactive, "denial keeps the tier");
+    assert!(!rej.request(ok_r).unwrap().mode.is_unserved());
+
+    let (down, ok_d, tight_d) = run(DeadlinePolicy::Downclass);
+    assert_eq!(down.denied, 0, "Downclass never denies");
+    let demoted = down.request(tight_d).unwrap();
+    assert!(!demoted.mode.is_unserved(), "demoted work still executes");
+    assert_eq!(demoted.class, QosClass::Batch, "demotion lands in Batch");
+    assert_eq!(demoted.deadline_s, None, "the SLO is given up, not missed");
+    assert!(!down.request(ok_d).unwrap().mode.is_unserved());
+    // The explicit counters mirror the records in both runs.
+    for r in [&rej, &down] {
+        assert_eq!(
+            r.denied,
+            r.served.iter().filter(|s| s.mode.is_denied()).count()
+        );
+        assert_eq!(
+            r.rejected,
+            r.served.iter().filter(|s| s.mode.is_rejected()).count()
+        );
+    }
+}

@@ -540,7 +540,19 @@ fn qos_overload_scenario_replays_byte_identically() {
         .iter()
         .map(|s| s.served_by_class.iter().sum::<usize>())
         .sum();
-    assert_eq!(attributed + a.denied(), a.served.len());
+    assert_eq!(attributed + a.denied, a.served.len());
+    // The explicit outcome counters mirror the served records exactly
+    // (and nothing was displaced by a crash in a fault-free session).
+    assert_eq!(
+        a.denied,
+        a.served.iter().filter(|r| r.mode.is_denied()).count()
+    );
+    assert_eq!(
+        a.rejected,
+        a.served.iter().filter(|r| r.mode.is_rejected()).count()
+    );
+    assert_eq!(a.requeued, 0);
+    assert_eq!(a.shards.iter().map(|s| s.requeued).sum::<usize>(), 0);
 }
 
 // ---------------------------------------------------------------------
@@ -661,7 +673,7 @@ fn steal_cannot_move_an_slo_request_onto_a_shard_that_would_miss_it() {
     let b2 = c.submit_qos(GemmSize::square(20_000), 2, QosClass::Batch, None);
     let report = c.run_to_completion();
     assert_eq!(report.served.len(), 5);
-    assert_eq!(report.denied(), 0, "the GPU node can meet both SLOs");
+    assert_eq!(report.denied, 0, "the GPU node can meet both SLOs");
     assert_eq!(report.request(tiny).unwrap().shard, Some(1));
     for id in [i1, i2] {
         let r = report.request(id).unwrap();
