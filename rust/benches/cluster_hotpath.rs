@@ -1,0 +1,323 @@
+//! Front-end hot path: what does one scheduling decision cost, and how
+//! does it scale with shard count?
+//!
+//! POAS's pitch is that the framework's own overhead is negligible next
+//! to the workload, and HTS (PAPERS.md) argues schedulers only reach
+//! ALP scale when per-decision cost is driven toward nanoseconds via
+//! aggregation/indexing rather than per-arrival scans. This regenerator
+//! measures exactly that boundary (hand-rolled harness, no criterion —
+//! the offline build has no dependencies):
+//!
+//! 1. **simulated arrivals/sec** — one tiny-GEMM Poisson trace replayed
+//!    end to end (admission, routing, dispatch, completion) on clusters
+//!    of 4 / 64 / 256 identical shards, once with the exact full-scan
+//!    router (`RoutePolicy::Full`) and once with power-of-d-choices
+//!    sampling (`RoutePolicy::Sampled { d: 3 }`). The CI gate holds the
+//!    sampled leg to >= 3x the full-scan arrival rate at 256 shards;
+//! 2. **ns/decision** — `Cluster::probe_route` in a tight loop on a
+//!    warmed, idle 256-shard cluster: the pure front-end decision cost
+//!    with dispatch excluded. Full scans all shards per probe; sampled
+//!    pays O(d + log shards) via the tournament index;
+//! 3. **steady-state allocations** — a counting global allocator wraps
+//!    the probe loops (after warmup): the decision path must allocate
+//!    **zero** times under either policy, which CI gates at `max: 0`;
+//! 4. **placement quality at small scale** — a mixed SLO trace on 4
+//!    heterogeneously seeded shards under Full vs `Sampled { d: 2 }`:
+//!    sampling must not cost placement quality or deadline-hit rate
+//!    (the committed band in `ci/hotpath_floor.json`).
+//!
+//! Environment knobs (the CI bench-smoke gate sets both):
+//!
+//! * `POAS_BENCH_SMOKE=1` — fewer arrivals/probes so the regenerator
+//!   finishes in seconds on a CI runner;
+//! * `POAS_BENCH_JSON=<path>` — merge a `"hotpath"` section into the
+//!   summary JSON (appending to `cluster_scaling`'s output when the
+//!   file already exists, standalone otherwise).
+
+use poas::config::presets;
+use poas::coordinator::Pipeline;
+use poas::report::Table;
+use poas::service::{
+    Cluster, ClusterOptions, GemmRequest, PoissonArrivals, QosClass, RoutePolicy, Server,
+    ServerOptions, ServiceReport,
+};
+use poas::workload::GemmSize;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Counts heap allocations while armed: the zero-alloc claim on the
+/// decision path is measured, not asserted by eye. Counting is gated on
+/// a flag so the workload-side legs (records, queues, traces) do not
+/// drown the signal.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static COUNTING: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Arm the counter, run `f`, return the allocations it performed.
+fn count_allocs<R>(f: impl FnOnce() -> R) -> (R, u64) {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    COUNTING.store(true, Ordering::Relaxed);
+    let out = f();
+    COUNTING.store(false, Ordering::Relaxed);
+    (out, ALLOCS.load(Ordering::Relaxed) - before)
+}
+
+fn main() {
+    let smoke = std::env::var("POAS_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    let cfg = presets::mach2();
+
+    // One fitted pipeline, cloned per shard: construction cost is paid
+    // once and every shard starts from the identical model, so the two
+    // router legs differ only in routing policy.
+    let pipe = Pipeline::for_simulated_machine(&cfg, 7);
+    let tiny = GemmSize::square(400);
+    let menu = vec![(tiny, 1u32)];
+
+    // Calibrate the offered rate off one tiny request served alone.
+    let unit = {
+        let mut srv = Server::new(&cfg, 0, ServerOptions::default());
+        srv.submit(tiny, 1);
+        srv.run_to_completion().makespan
+    };
+
+    let n = if smoke { 600 } else { 3000 };
+    let build = |shards: usize, route: RoutePolicy| -> Cluster {
+        let mut c = Cluster::from_pipelines(
+            vec![pipe.clone(); shards],
+            ClusterOptions {
+                route,
+                // Stealing is measured elsewhere; off here so the two
+                // legs isolate routing cost.
+                work_stealing: false,
+                ..Default::default()
+            },
+        );
+        // Pre-solve every (shape, reps) x shard gate verdict outside
+        // the timed region: both legs route from warm memos, which is
+        // the steady state the gate cares about.
+        c.warm_gates(&menu);
+        c
+    };
+
+    // ---- Leg 1: simulated arrivals/sec at 4 / 64 / 256 shards.
+    let mut table = Table::new(
+        &format!(
+            "{n}-arrival tiny-GEMM Poisson trace, full-scan vs sampled (d=3) routing{}",
+            if smoke { " (smoke)" } else { "" }
+        ),
+        &[
+            "shards",
+            "full arrivals/s",
+            "sampled arrivals/s",
+            "speedup",
+        ],
+    );
+    let mut scale_rows: Vec<(usize, f64, f64)> = Vec::new();
+    for shards in [4usize, 64, 256] {
+        // Half the cluster's aggregate capacity: busy but not swamped.
+        let offered = 0.5 * shards as f64 / unit;
+        let trace = PoissonArrivals::new(offered, menu.clone(), 3).trace(n);
+        let mut best = [0.0_f64; 2];
+        for (slot, route) in [RoutePolicy::Full, RoutePolicy::Sampled { d: 3 }]
+            .into_iter()
+            .enumerate()
+        {
+            // Best of three: the regenerator reports capability, not
+            // scheduler jitter on a shared CI runner.
+            for _ in 0..3 {
+                let mut c = build(shards, route);
+                let started = Instant::now();
+                c.submit_trace(&trace);
+                let report = c.run_to_completion();
+                let elapsed = started.elapsed().as_secs_f64();
+                assert_eq!(report.served.len(), n);
+                best[slot] = best[slot].max(n as f64 / elapsed);
+            }
+        }
+        let (full_rps, sampled_rps) = (best[0], best[1]);
+        table.row(&[
+            shards.to_string(),
+            format!("{full_rps:.0}"),
+            format!("{sampled_rps:.0}"),
+            format!("{:.1}x", sampled_rps / full_rps),
+        ]);
+        scale_rows.push((shards, full_rps, sampled_rps));
+    }
+    table.print();
+
+    // ---- Leg 2 + 3: ns/decision and the zero-alloc check, 256 shards.
+    let probes = if smoke { 5_000 } else { 40_000 };
+    let probe_req = GemmRequest::new(u64::MAX, tiny, 1);
+    let mut decision = [0.0_f64; 2];
+    let mut decision_allocs = 0u64;
+    for (slot, route) in [RoutePolicy::Full, RoutePolicy::Sampled { d: 3 }]
+        .into_iter()
+        .enumerate()
+    {
+        let mut c = build(256, route);
+        // Warmup: fault in the sampled candidate buffer and every memo
+        // read the loop will touch, so what follows is steady state.
+        for _ in 0..64 {
+            c.probe_route(&probe_req).expect("an idle shard routes");
+        }
+        let ((), allocs) = count_allocs(|| {
+            for _ in 0..probes {
+                c.probe_route(&probe_req);
+            }
+        });
+        let started = Instant::now();
+        for _ in 0..probes {
+            c.probe_route(&probe_req);
+        }
+        decision[slot] = started.elapsed().as_secs_f64() * 1e9 / probes as f64;
+        decision_allocs += allocs;
+    }
+    let (ns_full, ns_sampled) = (decision[0], decision[1]);
+    println!(
+        "\ndecision cost at 256 shards ({probes} probes): full scan {ns_full:.0} ns, \
+         sampled {ns_sampled:.0} ns, steady-state allocations {decision_allocs} \
+         (gate: 0)"
+    );
+
+    // ---- Leg 4: placement quality and deadline hits at 4 shards.
+    // Heterogeneously seeded shards (same machine, independent
+    // profiling noise) and a mixed SLO trace: the small-scale regime
+    // where sampling must not cost decision quality.
+    let qpipes: Vec<Pipeline> = (0..4)
+        .map(|i| Pipeline::for_simulated_machine(&cfg, 100 + i))
+        .collect();
+    let qn = if smoke { 24 } else { 48 };
+    let qunit = {
+        let mut srv = Server::new(&cfg, 0, ServerOptions::default());
+        srv.submit(GemmSize::square(16_000), 2);
+        srv.run_to_completion().makespan
+    };
+    let qmenu = vec![
+        (GemmSize::square(16_000), 2u32),
+        (GemmSize::square(20_000), 2),
+        (GemmSize::square(400), 2),
+    ];
+    let qtrace = PoissonArrivals::new(2.0 / qunit, qmenu, 41).trace(qn);
+    let run_quality = |route: RoutePolicy| -> ServiceReport {
+        let mut c = Cluster::from_pipelines(
+            qpipes.clone(),
+            ClusterOptions {
+                route,
+                ..Default::default()
+            },
+        );
+        for (i, a) in qtrace.iter().enumerate() {
+            // Every other request carries a generous SLO so the leg
+            // exercises deadline admission under both routers.
+            let req = if i % 2 == 0 {
+                GemmRequest::new(i as u64, a.size, a.reps).with_deadline(12.0 * qunit)
+            } else {
+                GemmRequest::new(i as u64, a.size, a.reps).with_class(QosClass::Batch)
+            };
+            c.submit_request_at(a.at, req);
+        }
+        c.run_to_completion()
+    };
+    let q_full = run_quality(RoutePolicy::Full);
+    let q_sampled = run_quality(RoutePolicy::Sampled { d: 2 });
+    let mut qtable = Table::new(
+        &format!("{qn}-request mixed SLO trace on 4 shards: does sampling cost quality?"),
+        &["router", "placement quality", "deadline hits", "denied"],
+    );
+    for (label, r) in [("full", &q_full), ("sampled (d=2)", &q_sampled)] {
+        qtable.row(&[
+            label.to_string(),
+            format!("{:.3}", r.placement_quality()),
+            format!("{:.0}%", 100.0 * r.deadline_hit_rate()),
+            r.denied.to_string(),
+        ]);
+    }
+    qtable.print();
+    println!(
+        "targets: sampled >= 3x full-scan arrivals/sec at 256 shards; zero \
+         steady-state decision-path allocations; sampled placement quality \
+         and deadline-hit rate inside the committed band at 4 shards."
+    );
+
+    // ---- Perf-trajectory artifact: merge into the shared summary.
+    if let Ok(path) = std::env::var("POAS_BENCH_JSON") {
+        let mut hotpath = String::from("  \"hotpath\": {\n");
+        hotpath.push_str(&format!("    \"smoke\": {smoke},\n"));
+        hotpath.push_str(&format!("    \"arrivals\": {n},\n"));
+        for (shards, full_rps, sampled_rps) in &scale_rows {
+            hotpath.push_str(&format!(
+                "    \"shards_{shards}\": {{\"full\": {{\"arrivals_per_sec\": {full_rps}}}, \
+                 \"sampled\": {{\"arrivals_per_sec\": {sampled_rps}}}}},\n"
+            ));
+        }
+        hotpath.push_str(&format!(
+            "    \"decision\": {{\"probes\": {probes}, \
+             \"ns_per_route_full_256\": {ns_full}, \
+             \"ns_per_route_sampled_256\": {ns_sampled}, \
+             \"allocs\": {decision_allocs}}},\n"
+        ));
+        let quality_leg = |r: &ServiceReport| {
+            format!(
+                "{{\"placement_quality\": {}, \"deadline_hit_rate\": {}, \"denied\": {}}}",
+                r.placement_quality(),
+                r.deadline_hit_rate(),
+                r.denied
+            )
+        };
+        hotpath.push_str(&format!(
+            "    \"quality_4\": {{\"requests\": {qn}, \"full\": {}, \"sampled\": {}}}\n",
+            quality_leg(&q_full),
+            quality_leg(&q_sampled)
+        ));
+        hotpath.push_str("  }\n}\n");
+        // `cluster_scaling` writes the summary first in CI; splice the
+        // hotpath section into it rather than clobbering, so one JSON
+        // artifact carries every bench leg. Standalone runs (file
+        // absent) still produce a valid summary.
+        let json = match std::fs::read_to_string(&path) {
+            Ok(existing) => {
+                let trimmed = existing.trim_end();
+                let base = trimmed
+                    .strip_suffix('}')
+                    .expect("existing bench summary ends with '}'")
+                    .trim_end();
+                format!("{base},\n{hotpath}")
+            }
+            Err(_) => format!("{{\n  \"bench\": \"cluster_hotpath\",\n{hotpath}"),
+        };
+        std::fs::write(&path, json).expect("write POAS_BENCH_JSON summary");
+        println!("wrote {path}");
+    }
+}

@@ -25,18 +25,22 @@
 //! batches** ([`Admission::admit_batch`]): a row-stacked batch of small
 //! compatible requests is re-scored as one large GEMM, with the
 //! scheduling overhead charged per member, under the batch-level memo
-//! key `(shape, reps, members, shard epoch)`.
+//! key `(shape id, reps, members)`.
 //!
 //! The gate's own LP solve is as cacheable as the plan solve, so
-//! verdicts are memoized by `(shape, reps, members, shard epoch)` in a
+//! verdicts are memoized by `(shape id, reps, members)` in a
 //! **bounded LRU**: a lookup refreshes its entry's recency and eviction removes
 //! the least recently used key, so a hot working set survives
 //! arbitrarily many cold shapes streaming past (a wholesale `clear()`
-//! at capacity would discard it). A model refresh (this shard's dynamic
-//! scheduler re-planned) bumps the epoch, which retires every memoized
-//! verdict at once — other shards' gates are untouched.
+//! at capacity would discard it). Shapes are **interned** to dense
+//! `u32` ids ([`FxHashMap`]-backed), so a hot lookup hashes three
+//! machine words instead of rebuilding the full shape tuple per
+//! arrival. A model refresh (this shard's dynamic scheduler
+//! re-planned) clears both memos eagerly — which is what retires every
+//! memoized verdict at once (keys no longer carry the epoch) — and
+//! other shards' gates are untouched.
 
-use super::cache::LruMap;
+use super::cache::{FxHashMap, LruMap};
 use crate::optimize::energy::{DevicePower, EnergyProblem};
 use crate::optimize::problem::BusModel;
 use crate::optimize::SplitSolution;
@@ -49,16 +53,26 @@ use crate::workload::GemmSize;
 /// verdict).
 pub type GateVerdict = (bool, usize, f64);
 
-/// Key of a memoized gate verdict: shape, repetition count, fused
-/// member count (1 for a plain request — a batch of `l` members pays
-/// `l` times the scheduling overhead, so its verdict is a distinct
-/// memo entry), model epoch.
-type GateKey = (GemmSize, u32, u32, u64);
+/// Interned handle for a `GemmSize` this gate has seen: hot memo keys
+/// hash three machine words of dense ids instead of rebuilding and
+/// hashing the full shape tuple on every lookup. Ids are assigned
+/// densely in first-seen order and never reused, so two keys collide
+/// iff their shapes are identical.
+type ShapeId = u32;
 
-/// Key of a memoized deadline-feasibility probe: shape, the per-rep
-/// budget's bit pattern (deadlines are continuous, but SLO streams
-/// reuse a handful of values), and the model epoch.
-type DeadlineKey = (GemmSize, u64, u64);
+/// Key of a memoized gate verdict: interned shape, repetition count,
+/// fused member count (1 for a plain request — a batch of `l` members
+/// pays `l` times the scheduling overhead, so its verdict is a distinct
+/// memo entry). The model epoch is *not* part of the key:
+/// [`Admission::refresh`] clears both memos eagerly, so a stale-epoch
+/// entry can never be observed.
+type GateKey = (ShapeId, u32, u32);
+
+/// Key of a memoized deadline-feasibility probe: interned shape and the
+/// per-rep budget's bit pattern (deadlines are continuous, but SLO
+/// streams reuse a handful of values). Epoch-free for the same reason
+/// as [`GateKey`].
+type DeadlineKey = (ShapeId, u64);
 
 /// The admission component: suitability gate + bounded-LRU memo.
 #[derive(Debug, Clone)]
@@ -69,12 +83,17 @@ pub struct Admission {
     epoch: u64,
     min_gain: f64,
     overhead_s: f64,
+    /// Dense [`ShapeId`] per distinct `GemmSize` seen. Kept across
+    /// [`Admission::refresh`] (ids stay stable, memos are cleared
+    /// anyway) and grows with the number of *distinct* shapes, which a
+    /// serving menu keeps small.
+    shapes: FxHashMap<GemmSize, ShapeId>,
     /// Gate-verdict memo (bounded, touch-on-hit LRU) keyed
-    /// `(shape, reps, epoch)`.
+    /// `(shape id, reps, members)`.
     memo: LruMap<GateKey, GateVerdict>,
-    /// Deadline-feasibility memo: `(shape, per-rep deadline bits,
-    /// epoch)` → can any split meet it? Same bounded-LRU discipline as
-    /// the gate memo, so an SLO-bound stream over a stable menu never
+    /// Deadline-feasibility memo: `(shape id, per-rep deadline bits)`
+    /// → can any split meet it? Same bounded-LRU discipline as the
+    /// gate memo, so an SLO-bound stream over a stable menu never
     /// re-solves the deadline LP per arrival.
     deadline_memo: LruMap<DeadlineKey, bool>,
     /// Gate lookups answered from the memo.
@@ -96,12 +115,25 @@ impl Admission {
             epoch: 0,
             min_gain,
             overhead_s,
+            shapes: FxHashMap::default(),
             memo: LruMap::new(capacity),
             deadline_memo: LruMap::new(capacity),
             hits: 0,
             misses: 0,
             deadline_lp_solves: 0,
         }
+    }
+
+    /// The interned id for `size`, assigning the next dense id on first
+    /// sight. O(1) amortized; the hot path pays one small Fx hash of
+    /// the shape instead of carrying the full tuple into every memo key.
+    fn shape_id(&mut self, size: GemmSize) -> ShapeId {
+        if let Some(&id) = self.shapes.get(&size) {
+            return id;
+        }
+        let id = u32::try_from(self.shapes.len()).expect("more than u32::MAX distinct shapes");
+        self.shapes.insert(size, id);
+        id
     }
 
     /// The current model epoch (bumped on every [`Admission::refresh`]).
@@ -126,7 +158,7 @@ impl Admission {
 
     /// Gate one request: returns (co-execute?, best single device,
     /// predicted **total** service seconds for all `reps`). Memoized by
-    /// `(shape, reps, 1, epoch)`, so an SLO-free stream over a stable
+    /// `(shape id, reps, 1)`, so an SLO-free stream over a stable
     /// `(shape, reps)` menu solves each entry once per epoch.
     pub fn admit(&mut self, size: GemmSize, reps: u32) -> GateVerdict {
         self.admit_batch(size, reps, 1)
@@ -139,11 +171,11 @@ impl Admission {
     /// suitability is split across devices like any large GEMM — but
     /// the scheduling overhead is charged once per member (each member
     /// still pays its admission bookkeeping). Memoized under the
-    /// batch-level key `(shape, reps, members, epoch)`, so a steady
+    /// batch-level key `(shape id, reps, members)`, so a steady
     /// stream of same-composition batches solves once per epoch.
     pub fn admit_batch(&mut self, size: GemmSize, reps: u32, members: u32) -> GateVerdict {
         let members = members.max(1);
-        let key = (size, reps, members, self.epoch);
+        let key = (self.shape_id(size), reps, members);
         match self.memo.get_touch(&key) {
             Some(&hit) => {
                 self.hits += 1;
@@ -200,7 +232,7 @@ impl Admission {
     /// this machine finish `reps` repetitions within `deadline_s`
     /// *ignoring queueing*? Co-executable requests are probed with the
     /// deadline-constrained LP ([`Admission::deadline_plan`]), memoized
-    /// by `(shape, per-rep budget, epoch)` so a steady SLO stream never
+    /// by `(shape id, per-rep budget)` so a steady SLO stream never
     /// re-solves per arrival; standalone-bound requests simply compare
     /// their predicted service time. Queueing is the front-end's half
     /// of the verdict (it owns the per-shard backlogs).
@@ -219,7 +251,7 @@ impl Admission {
             return predicted_s <= deadline_s;
         }
         let per_rep = deadline_s / reps.max(1) as f64;
-        let key = (size, per_rep.to_bits(), self.epoch);
+        let key = (self.shape_id(size), per_rep.to_bits());
         if let Some(&feasible) = self.deadline_memo.get_touch(&key) {
             return feasible;
         }
@@ -231,12 +263,13 @@ impl Admission {
 
     /// The model changed (a shard's dynamic scheduler re-planned):
     /// adopt the refreshed model and retire every memoized verdict.
+    /// Memo keys do not carry the epoch, so the eager clear here is
+    /// what makes stale verdicts unobservable; the epoch counter
+    /// remains as a diagnostic. The shape interner survives the
+    /// refresh — ids name shapes, not verdicts.
     pub fn refresh(&mut self, model: PerfModel) {
         self.model = model;
         self.epoch += 1;
-        // Old-epoch entries can never be read again (the key carries
-        // the epoch); drop them eagerly rather than waiting for LRU
-        // pressure.
         self.memo.clear();
         self.deadline_memo.clear();
     }
@@ -425,5 +458,19 @@ mod tests {
         assert_eq!(gate.len(), 1);
         let (_, _, _) = gate.admit(GemmSize::square(20_000), 1);
         assert_eq!(gate.hits, 1);
+    }
+
+    #[test]
+    fn shape_ids_are_dense_stable_and_survive_refresh() {
+        let mut gate = Admission::new(model(), 1.05, 20e-6, 64);
+        let a = GemmSize::square(10_000);
+        let b = GemmSize::square(12_000);
+        assert_eq!(gate.shape_id(a), 0);
+        assert_eq!(gate.shape_id(b), 1);
+        assert_eq!(gate.shape_id(a), 0, "interning is stable");
+        let m = gate.model().clone();
+        gate.refresh(m);
+        assert_eq!(gate.shape_id(b), 1, "ids survive a model refresh");
+        assert_eq!(gate.shape_id(GemmSize::square(14_000)), 2);
     }
 }

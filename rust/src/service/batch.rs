@@ -63,6 +63,15 @@
 //! the request solo, so `BatchPolicy::Windowed` degenerates gracefully
 //! under light load. The former holds no machine state and iterates
 //! plain vectors, so replays stay byte-identical.
+//!
+//! ## Carrier reuse
+//!
+//! Member vectors are the only per-window allocation. Callers that
+//! consume a [`FusedBatch`] without shipping its members onward (solo
+//! degenerate flushes, disbanded batches) hand the vector back via
+//! [`BatchFormer::recycle`]; newly opened windows pop from that spare
+//! pool, so the light-load steady state — windows opening and flushing
+//! solo over and over — allocates no carriers at all.
 
 use super::qos::QosClass;
 use super::request::{BatchId, GemmRequest};
@@ -239,7 +248,14 @@ pub struct BatchFormer {
     slack: f64,
     windows: Vec<OpenWindow>,
     next_window: u64,
+    /// Retired member carriers awaiting reuse (see the module doc's
+    /// carrier-reuse section). Bounded so a one-off burst of windows
+    /// cannot pin memory forever.
+    spare: Vec<Vec<BatchMember>>,
 }
+
+/// Most retired carrier vectors [`BatchFormer::recycle`] will hold.
+const SPARE_CARRIERS: usize = 16;
 
 impl BatchFormer {
     /// A former for `policy` (inert under [`BatchPolicy::Off`]), using
@@ -253,6 +269,19 @@ impl BatchFormer {
             slack: deadline_slack,
             windows: Vec::new(),
             next_window: 0,
+            spare: Vec::new(),
+        }
+    }
+
+    /// Hand a consumed batch's member vector back for reuse by the next
+    /// window. Callers that forward members into served records skip
+    /// this (the data outlives the former); callers that merely unpack
+    /// them — solo flushes, disbanded batches — should not leak the
+    /// capacity.
+    pub fn recycle(&mut self, mut members: Vec<BatchMember>) {
+        members.clear();
+        if members.capacity() > 0 && self.spare.len() < SPARE_CARRIERS {
+            self.spare.push(members);
         }
     }
 
@@ -331,7 +360,8 @@ impl BatchFormer {
                     key,
                     opened: now,
                     flush_at: now + cfg.window_s,
-                    members: Vec::new(),
+                    // Reuse a retired carrier when one is pooled.
+                    members: self.spare.pop().unwrap_or_default(),
                 });
                 self.windows.len() - 1
             }
@@ -559,6 +589,25 @@ mod tests {
         // An incompatible request previews as a fresh window.
         let other = GemmRequest::new(2, GemmSize::new(1024, 512, 1024), 2);
         assert_eq!(f.preview(&other), (GemmSize::new(1024, 512, 1024), 1));
+    }
+
+    #[test]
+    fn recycled_carriers_are_reused_by_new_windows() {
+        let mut f = former();
+        f.join(small(0, 1024), 0.0, 0.01);
+        let batch = f.flush(0).unwrap();
+        assert_eq!(batch.members.len(), 1);
+        let ptr = batch.members.as_ptr();
+        f.recycle(batch.members);
+        // The next window pops the retired carrier instead of
+        // allocating: same buffer, cleared.
+        f.join(small(1, 1024), 1.0, 0.01);
+        let again = f.flush(1).unwrap();
+        assert_eq!(again.members.as_ptr(), ptr, "carrier buffer was reused");
+        assert_eq!(again.members.len(), 1);
+        assert_eq!(again.members[0].req.id, 1);
+        // Recycling an empty (capacity-0) vector is a no-op.
+        f.recycle(Vec::new());
     }
 
     #[test]

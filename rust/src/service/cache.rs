@@ -18,7 +18,91 @@ use crate::predict::PerfModel;
 use crate::schedule::{build_plan, PlanOptions, SchedulePlan};
 use crate::workload::GemmSize;
 use std::collections::HashMap;
-use std::hash::Hash;
+use std::hash::{BuildHasher, Hash, Hasher};
+
+/// A fast, deterministic multiply-rotate hasher (the FxHash scheme) for
+/// the small `Copy` keys the front-end memos use.
+///
+/// The default `HashMap` hasher (SipHash) is keyed for HashDoS
+/// resistance, which the hot path does not need: memo keys are
+/// scheduler-internal shape handles, not attacker-controlled strings.
+/// Fx hashes a small fixed-size key in a few cycles and — unlike the
+/// randomly seeded default — is deterministic across processes, which
+/// keeps replay behaviour easy to reason about.
+#[derive(Debug, Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+/// Odd multiplier from the FxHash scheme (a 64-bit truncation of pi).
+const FX_SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(FX_SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for chunk in &mut chunks {
+            let mut buf = [0u8; 8];
+            buf.copy_from_slice(chunk);
+            self.add(u64::from_le_bytes(buf));
+        }
+        let rest = chunks.remainder();
+        if !rest.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rest.len()].copy_from_slice(rest);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`]; plugs into `HashMap::default()`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FxBuildHasher;
+
+impl BuildHasher for FxBuildHasher {
+    type Hasher = FxHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> FxHasher {
+        FxHasher::default()
+    }
+}
+
+/// A `HashMap` hashed with [`FxHasher`] — the front-end's map type for
+/// scheduler-internal keys.
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
 
 /// A bounded map with touch-on-hit LRU eviction — the storage
 /// primitive behind [`PlanCache`] and the [`super::Admission`] memos,
@@ -28,11 +112,13 @@ use std::hash::Hash;
 /// entry, so the hit path ([`LruMap::get_touch`]) is O(1); the O(len)
 /// scan for the least recently used entry happens only on an eviction.
 /// Stamps are unique, so eviction order is deterministic even though
-/// the underlying `HashMap` iteration order is not.
+/// the underlying `HashMap` iteration order is not. Keys are hashed
+/// with [`FxHasher`], so a hot-path memo lookup costs a few cycles of
+/// hashing instead of a full SipHash round.
 #[derive(Debug, Clone)]
 pub struct LruMap<K, V> {
     /// Value plus the stamp of its most recent touch (hit or insert).
-    map: HashMap<K, (V, u64)>,
+    map: FxHashMap<K, (V, u64)>,
     stamp: u64,
     capacity: usize,
 }
@@ -41,7 +127,7 @@ impl<K: Hash + Eq + Copy, V> LruMap<K, V> {
     /// An empty map holding at most `capacity` entries (min 1).
     pub fn new(capacity: usize) -> Self {
         LruMap {
-            map: HashMap::new(),
+            map: FxHashMap::default(),
             stamp: 0,
             capacity: capacity.max(1),
         }
@@ -304,5 +390,23 @@ mod tests {
         assert_eq!(cache.len(), 1);
         let (_, hit) = cache.get_or_build(&model, size, &rules, &opts).unwrap();
         assert!(hit);
+    }
+
+    #[test]
+    fn fx_hasher_is_deterministic_and_discriminating() {
+        fn hash_of<T: std::hash::Hash>(v: &T) -> u64 {
+            let mut h = FxBuildHasher.build_hasher();
+            v.hash(&mut h);
+            h.finish()
+        }
+        // Same value, same hash — across independently built hashers
+        // (no per-process random seed, unlike the default hasher).
+        assert_eq!(hash_of(&(7u32, 3u32, 1u32)), hash_of(&(7u32, 3u32, 1u32)));
+        // Nearby keys separate.
+        assert_ne!(hash_of(&(7u32, 3u32, 1u32)), hash_of(&(7u32, 3u32, 2u32)));
+        assert_ne!(hash_of(&42u64), hash_of(&43u64));
+        // The byte-slice path agrees with itself on uneven lengths.
+        assert_eq!(hash_of(&[1u8, 2, 3]), hash_of(&[1u8, 2, 3]));
+        assert_ne!(hash_of(&[1u8, 2, 3]), hash_of(&[1u8, 2, 4]));
     }
 }

@@ -77,10 +77,20 @@
 //! no injected faults behaves byte-identically to a build without the
 //! fault machinery: every guard below is a no-op while no shard is
 //! down.
+//!
+//! **The front-end hot path** (see `docs/hotpath.md`) keeps decision
+//! cost sublinear in shard count: routing can sample d candidates
+//! ([`RoutePolicy::Sampled`]) seeded by a [`TournamentTree`] index
+//! over each shard's predicted-finish proxy, steal victims come from a
+//! second tree over class-weighted backlog (both kept incrementally
+//! current by `reindex` on every queue/fault mutation), and the event
+//! loop batch-drains same-timestamp events through a reusable buffer
+//! so the steady state allocates nothing per decision.
 
 use super::admission::{Admission, GateVerdict};
 use super::arrivals::Arrival;
 use super::batch::{BatchFormer, BatchPolicy, FusedBatch, JoinOutcome};
+use super::index::{Ranking, TournamentTree};
 use super::qos::{DeadlinePolicy, QosClass};
 use super::queue::QueuedRequest;
 use super::request::{ExecMode, GemmRequest, ServedRequest, ServiceReport};
@@ -88,9 +98,24 @@ use super::server::ServerOptions;
 use super::shard::ExecutorShard;
 use crate::config::MachineConfig;
 use crate::coordinator::Pipeline;
+use crate::rng::Rng;
 use crate::workload::GemmSize;
 use std::cmp::{Ordering, Reverse};
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Seed of the router's candidate-sampling stream. A fixed constant —
+/// not derived from workload seeds — so two identically-constructed
+/// clusters replay byte-identically; the stream is consumed **only**
+/// when [`RoutePolicy::Sampled`] actually samples (never under
+/// [`RoutePolicy::Full`], and never when `d` covers every live shard).
+const ROUTER_RNG_SEED: u64 = 0x504f_4153_726f_7574; // "POASrout"
+
+/// Minimum affinity advantage (ratio) a runner-up steal victim's head
+/// request must offer before a thief abandons the backlog winner for
+/// it. Wide enough that profiling noise between clone shards of a
+/// homogeneous cluster never moves the pick — only genuinely different
+/// hardware (a GPU node eyeing CPU-planned work, or vice versa) does.
+const HETERO_STEAL_TILT: f64 = 1.25;
 
 /// Which performance model the front-end's prediction call sites use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -109,6 +134,34 @@ pub enum GatePolicy {
     /// standalone device pick can be out of range on a smaller shard
     /// and is clamped so the baseline can run at all.
     Shard0,
+}
+
+/// How the front-end picks the target shard for an admitted work unit.
+///
+/// Both policies score candidates **exactly** the same way (per-shard
+/// gate verdict, class-weighted predicted finish, ties to the lowest
+/// index); they differ only in *which* shards are scored. See
+/// `docs/hotpath.md` for the determinism contract and the measured
+/// cost of each.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Gate and score every live shard — the exact argmin, O(shards)
+    /// per decision. The default, and the ablation baseline the
+    /// sampled router is benched against.
+    #[default]
+    Full,
+    /// Power-of-d-choices: score only `d` candidates — the routing
+    /// index's winner (the shard with the smallest request-independent
+    /// finish proxy) plus `d - 1` distinct live shards drawn from the
+    /// deterministic router stream — for O(d + log shards) decisions.
+    /// Whenever `d` covers every live shard the router takes the exact
+    /// full scan instead and consumes **no** randomness, so
+    /// `Sampled { d >= shards }` is byte-identical to [`Full`]
+    /// (`RoutePolicy::Full`).
+    Sampled {
+        /// Candidates scored per decision (the index winner included).
+        d: usize,
+    },
 }
 
 /// Cluster construction options.
@@ -130,6 +183,9 @@ pub struct ClusterOptions {
     /// [`super::batch`]; default [`BatchPolicy::Off`], which reproduces
     /// the pre-batching behaviour exactly).
     pub batching: BatchPolicy,
+    /// Shard-selection policy (see [`RoutePolicy`]; default
+    /// [`RoutePolicy::Full`], the exact scan).
+    pub route: RoutePolicy,
 }
 
 impl Default for ClusterOptions {
@@ -140,6 +196,7 @@ impl Default for ClusterOptions {
             work_stealing: true,
             gate: GatePolicy::PerShard,
             batching: BatchPolicy::Off,
+            route: RoutePolicy::Full,
         }
     }
 }
@@ -282,10 +339,31 @@ pub struct Cluster {
     /// [`BatchPolicy::Off`]).
     former: BatchFormer,
     events: BinaryHeap<Reverse<Event>>,
+    /// Same-timestamp events batch-drained off the heap, consumed
+    /// before the next heap pop. Reuses its capacity run-long, so the
+    /// steady-state event path performs no per-event allocation.
+    drain: VecDeque<Event>,
     seq: u64,
     clock: f64,
     served: Vec<ServedRequest>,
+    /// All-time completion-record count. Tracks `served.len()` while
+    /// records accumulate, but survives [`Cluster::run_to_completion`]
+    /// moving the records into the returned report.
+    finished: usize,
     next_id: u64,
+    /// Min-tree over each live shard's request-independent finish
+    /// proxy (`free_at + class-blind backlog`), kept current by
+    /// [`Cluster::reindex`]; seeds the sampled router's candidate set.
+    route_idx: TournamentTree,
+    /// Max-tree over the class-weighted backlog of shards with queued
+    /// work (empty or down shards are disabled); serves steal-victim
+    /// selection in O(log shards).
+    steal_idx: TournamentTree,
+    /// Deterministic candidate-sampling stream (see
+    /// [`ROUTER_RNG_SEED`]).
+    router_rng: Rng,
+    /// Reusable scratch for the sampled router's candidate set.
+    cand_buf: Vec<usize>,
     /// Per-shard down flags (crashed and not yet restarted). All-false
     /// on every fault-free run, where the fault guards are no-ops.
     down: Vec<bool>,
@@ -355,20 +433,86 @@ impl Cluster {
         };
         let former = BatchFormer::new(&opts.batching, opts.shard.deadline_slack);
         let down = vec![false; shards.len()];
+        let n = shards.len();
+        let mut route_idx = TournamentTree::new(n, Ranking::Min);
+        for i in 0..n {
+            // Every shard starts idle and empty: finish proxy 0.
+            route_idx.update(i, 0.0);
+        }
+        // Nothing is queued yet, so every steal leaf starts disabled.
+        let steal_idx = TournamentTree::new(n, Ranking::Max);
         Cluster {
             shards,
             admissions,
             opts,
             former,
             events: BinaryHeap::new(),
+            drain: VecDeque::new(),
             seq: 0,
             clock: 0.0,
             served: Vec::new(),
+            finished: 0,
             next_id: 0,
+            route_idx,
+            steal_idx,
+            router_rng: Rng::new(ROUTER_RNG_SEED),
+            cand_buf: Vec::new(),
             down,
             parked: Vec::new(),
             requeued: 0,
         }
+    }
+
+    /// Recompute shard `s`'s keys in both front-end indexes — called
+    /// after every mutation that can move them (enqueue, dispatch,
+    /// steal transfer, crash, restart). Down shards are disabled in
+    /// both trees; a shard with nothing queued is disabled as a steal
+    /// victim. O(log shards).
+    fn reindex(&mut self, s: usize) {
+        if self.down[s] {
+            self.route_idx.disable(s);
+            self.steal_idx.disable(s);
+            return;
+        }
+        let sh = &self.shards[s];
+        self.route_idx.update(s, sh.free_at() + sh.backlog_s());
+        if sh.pending() > 0 {
+            self.steal_idx.update(s, sh.weighted_backlog());
+        } else {
+            self.steal_idx.disable(s);
+        }
+    }
+
+    /// Debug-only invariant: the incremental index keys must equal a
+    /// from-scratch recomputation (and the tree winners their linear
+    /// scans) after every processed event. Compiled out of release
+    /// builds, so the hot path never pays for it; every debug test run
+    /// exercises it on every event of every scenario.
+    #[cfg(debug_assertions)]
+    fn verify_indexes(&self) {
+        for (s, sh) in self.shards.iter().enumerate() {
+            if self.down[s] {
+                debug_assert!(!self.route_idx.is_enabled(s), "down shard {s} routable");
+                debug_assert!(!self.steal_idx.is_enabled(s), "down shard {s} stealable");
+                continue;
+            }
+            debug_assert_eq!(
+                self.route_idx.key(s),
+                sh.free_at() + sh.backlog_s(),
+                "stale route key for shard {s}"
+            );
+            if sh.pending() > 0 {
+                debug_assert_eq!(
+                    self.steal_idx.key(s),
+                    sh.weighted_backlog(),
+                    "stale steal key for shard {s}"
+                );
+            } else {
+                debug_assert!(!self.steal_idx.is_enabled(s), "empty shard {s} stealable");
+            }
+        }
+        debug_assert_eq!(self.route_idx.winner(), self.route_idx.scan_winner());
+        debug_assert_eq!(self.steal_idx.winner(), self.steal_idx.scan_winner());
     }
 
     /// Index into `admissions` of the gate that predicts for `shard`.
@@ -428,13 +572,20 @@ impl Cluster {
             .events
             .iter()
             .filter(|r| matches!(r.0.kind, EventKind::Arrival(_)))
-            .count();
+            .count()
+            + self
+                .drain
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::Arrival(_)))
+                .count();
         queued + in_flight + self.former.pending() + self.parked.len()
     }
 
-    /// Requests completed so far.
+    /// Requests completed so far (still correct after
+    /// [`Cluster::run_to_completion`] has moved the records into its
+    /// report).
     pub fn completed(&self) -> usize {
-        self.served.len()
+        self.finished
     }
 
     /// Submit a [`QosClass::Standard`] request with no SLO arriving at
@@ -573,39 +724,145 @@ impl Cluster {
         members: u32,
         deadline_only: bool,
     ) -> Option<Routed> {
-        let mut best: Option<Routed> = None;
-        for i in 0..self.shards.len() {
-            if self.down[i] {
-                continue; // a crashed shard takes no new work
+        let n = self.shards.len();
+        let live = n - self.down.iter().filter(|&&d| d).count();
+        let d = match self.opts.route {
+            RoutePolicy::Full => live,
+            RoutePolicy::Sampled { d } => d,
+        };
+        if d >= live {
+            // Exact path (always under `Full`): score every live shard
+            // in index order. No randomness is consumed here, so
+            // `Sampled { d >= live shards }` stays byte-identical to
+            // `Full` — the contract the routing-equivalence property
+            // tests pin.
+            return self.route_among(now, req, members, deadline_only, None);
+        }
+        // Power-of-d-choices: the routing index's winner — the shard
+        // with the smallest request-independent finish proxy — is
+        // always a candidate, plus d-1 distinct live shards from the
+        // deterministic router stream. Rejection sampling terminates
+        // because live > d. Candidates are sorted so ties in the exact
+        // scoring below break toward the lowest index, exactly like
+        // the full scan.
+        let mut cands = std::mem::take(&mut self.cand_buf);
+        cands.clear();
+        if let Some(w) = self.route_idx.winner() {
+            cands.push(w);
+        }
+        while cands.len() < d {
+            let i = self.router_rng.below(n as u64) as usize;
+            if !self.down[i] && !cands.contains(&i) {
+                cands.push(i);
             }
-            let verdict = self.gate_on(i, req.size, req.reps, members);
-            if deadline_only {
-                let deadline_s = req.deadline_s.expect("deadline_only needs an SLO");
-                let g = self.gate_idx(i);
-                if !self.admissions[g].deadline_feasible(
-                    verdict.0,
-                    verdict.2,
-                    req.size,
-                    req.reps,
-                    deadline_s,
-                ) {
-                    continue;
+        }
+        cands.sort_unstable();
+        let best = self.route_among(now, req, members, deadline_only, Some(&cands));
+        self.cand_buf = cands;
+        if best.is_none() && deadline_only {
+            // A `None` here must mean *no* shard can meet the SLO —
+            // never that the sample happened to miss the feasible
+            // ones. Fall back to the exact scan before the caller
+            // turns the request away.
+            return self.route_among(now, req, members, deadline_only, None);
+        }
+        best
+    }
+
+    /// Score candidate shards `cands` (every shard when `None`)
+    /// exactly: per-shard gate verdict, optional machine-level
+    /// deadline-feasibility filter, class-weighted predicted finish.
+    /// Smallest finish wins; ties break to the lowest shard index
+    /// (callers pass candidates in ascending index order).
+    fn route_among(
+        &mut self,
+        now: f64,
+        req: &GemmRequest,
+        members: u32,
+        deadline_only: bool,
+        cands: Option<&[usize]>,
+    ) -> Option<Routed> {
+        let mut best: Option<Routed> = None;
+        match cands {
+            Some(list) => {
+                for &i in list {
+                    self.consider_shard(now, req, members, deadline_only, i, &mut best);
                 }
             }
-            let finish = self.shards[i].predicted_finish_for(now, verdict.2, req.class);
-            let wins = match &best {
-                None => true,
-                Some(b) => finish < b.finish,
-            };
-            if wins {
-                best = Some(Routed {
-                    shard: i,
-                    verdict,
-                    finish,
-                });
+            None => {
+                for i in 0..self.shards.len() {
+                    self.consider_shard(now, req, members, deadline_only, i, &mut best);
+                }
             }
         }
         best
+    }
+
+    /// Score shard `i` for `req` and fold it into `best` (smallest
+    /// class-weighted predicted finish; ties keep the earlier shard).
+    fn consider_shard(
+        &mut self,
+        now: f64,
+        req: &GemmRequest,
+        members: u32,
+        deadline_only: bool,
+        i: usize,
+        best: &mut Option<Routed>,
+    ) {
+        if self.down[i] {
+            return; // a crashed shard takes no new work
+        }
+        let verdict = self.gate_on(i, req.size, req.reps, members);
+        if deadline_only {
+            let deadline_s = req.deadline_s.expect("deadline_only needs an SLO");
+            let g = self.gate_idx(i);
+            if !self.admissions[g].deadline_feasible(
+                verdict.0,
+                verdict.2,
+                req.size,
+                req.reps,
+                deadline_s,
+            ) {
+                return;
+            }
+        }
+        let finish = self.shards[i].predicted_finish_for(now, verdict.2, req.class);
+        let wins = match best {
+            None => true,
+            Some(b) => finish < b.finish,
+        };
+        if wins {
+            *best = Some(Routed {
+                shard: i,
+                verdict,
+                finish,
+            });
+        }
+    }
+
+    /// The routing decision the front-end would make for `req` right
+    /// now — chosen shard and class-weighted predicted finish —
+    /// **without** admitting anything: no queue mutation, no events.
+    /// This is the exact per-arrival decision the hot-path bench times
+    /// and allocation-counts; it also answers "where would this go?"
+    /// diagnostics. Under [`RoutePolicy::Sampled`] it consumes the
+    /// router stream just like a real admission.
+    pub fn probe_route(&mut self, req: &GemmRequest) -> Option<(usize, f64)> {
+        self.route(self.clock, req, 1, false)
+            .map(|r| (r.shard, r.finish))
+    }
+
+    /// Pre-populate every shard's gate memo for the given
+    /// `(size, reps)` menu. After a warming pass, steady-state routing
+    /// of these shapes is pure memo reads: no optimizer solves and no
+    /// allocation on the decision path (the zero-alloc property the
+    /// hot-path bench gates).
+    pub fn warm_gates(&mut self, menu: &[(GemmSize, u32)]) {
+        for &(size, reps) in menu {
+            for s in 0..self.shards.len() {
+                let _ = self.gate_on(s, size, reps, 1);
+            }
+        }
     }
 
     /// The smallest machine-level service prediction any shard's own
@@ -619,28 +876,57 @@ impl Cluster {
             .fold(f64::INFINITY, f64::min)
     }
 
-    /// The shard with the largest class-weighted backlog other than
-    /// `thief` (ties: lowest index), if any has queued work to give up.
-    /// Weighting by class makes stealing relieve the queue whose
-    /// waiting work is most latency-sensitive, not merely the longest.
-    fn steal_victim(&self, thief: usize) -> Option<usize> {
-        let mut best: Option<usize> = None;
-        for (i, sh) in self.shards.iter().enumerate() {
-            // A crashed shard's queue drained at the crash, so the
-            // `pending` check also skips down shards.
-            if i == thief || sh.pending() == 0 {
-                continue;
-            }
-            match best {
-                None => best = Some(i),
-                Some(b) => {
-                    if sh.weighted_backlog() > self.shards[b].weighted_backlog() {
-                        best = Some(i);
-                    }
-                }
-            }
+    /// The steal victim for idle `thief`: the shard with the largest
+    /// class-weighted backlog, answered by the steal index in O(log
+    /// shards) instead of the old O(shards) scan (ties: lowest index —
+    /// the tournament tree preserves the scan's tie-break). Weighting
+    /// by class makes stealing relieve the queue whose waiting work is
+    /// most latency-sensitive, not merely the longest.
+    ///
+    /// On heterogeneous clusters the pick is tilted by **affinity**:
+    /// when the runner-up victim's head request is one the thief's own
+    /// hardware serves disproportionately well — at least
+    /// [`HETERO_STEAL_TILT`] times the affinity of the backlog
+    /// winner's head — the thief takes that one instead, so work
+    /// migrates toward machines that are actually fast at it. Clone
+    /// shards tie well inside the margin, leaving homogeneous picks
+    /// unchanged.
+    fn steal_victim(&mut self, thief: usize) -> Option<usize> {
+        // The thief is idle with an empty queue, so its own leaf is
+        // disabled and the winner (if any) is a genuine victim. Down
+        // and empty shards are disabled too.
+        let first = self.steal_idx.winner()?;
+        debug_assert_ne!(first, thief, "an idle thief cannot be a steal victim");
+        let second = match self.steal_idx.winner_excluding(first) {
+            Some(s) if s != thief => s,
+            _ => return Some(first),
+        };
+        let aff_first = self.steal_affinity(thief, first);
+        let aff_second = self.steal_affinity(thief, second);
+        if aff_second > aff_first * HETERO_STEAL_TILT {
+            Some(second)
+        } else {
+            Some(first)
         }
-        best
+    }
+
+    /// How disproportionately well `thief`'s hardware would serve the
+    /// head of `victim`'s queue: the victim-recorded service
+    /// prediction over the thief's own (memoized) gate prediction.
+    /// `> 1` means the thief beats the plan of record; the ratio is
+    /// reps-invariant, so heads of different depths compare fairly.
+    fn steal_affinity(&mut self, thief: usize, victim: usize) -> f64 {
+        let Some((size, reps, members, recorded)) = self.shards[victim].peek_next().map(|q| {
+            let members = q.batch.as_ref().map_or(1, |b| b.members.len() as u32);
+            (q.req.size, q.req.reps, members, q.predicted_s)
+        }) else {
+            return 0.0;
+        };
+        let mine = self.gate_on(thief, size, reps, members).2;
+        if mine <= 0.0 {
+            return 0.0;
+        }
+        recorded / mine
     }
 
     /// Record an admission denial: the request completes immediately as
@@ -650,6 +936,7 @@ impl Cluster {
     /// (`arrival == now` except for disbanded batch members, whose
     /// window wait stays visible in the record.)
     fn deny(&mut self, now: f64, req: GemmRequest, arrival: f64, predicted_s: f64) {
+        self.finished += 1;
         self.served.push(ServedRequest {
             id: req.id,
             size: req.size,
@@ -704,6 +991,10 @@ impl Cluster {
         };
         if batch.members.len() == 1 {
             let m = batch.members[0];
+            // The degenerate "batch" is unpacked right here, so its
+            // carrier goes back to the former's spare pool: the
+            // light-load open/flush-solo cycle allocates no carriers.
+            self.former.recycle(batch.members);
             self.admit_request(now, m.req, m.arrival);
         } else {
             self.admit_fused(now, batch);
@@ -786,9 +1077,16 @@ impl Cluster {
             predicted_s,
             batch: None,
         });
+        self.reindex(target);
         // Defer the dispatch behind simultaneous arrivals so queue
-        // policies and the bypass see the whole burst.
-        self.push_event(now, EventKind::Wake(target));
+        // policies and the bypass see the whole burst. A shard still
+        // executing needs no wake at all: its pending shard-free event
+        // (at `free_at > now`) will drain the queue, and the wake
+        // would be a no-op — skipping it halves the event volume under
+        // sustained load.
+        if self.shards[target].free_at() <= now {
+            self.push_event(now, EventKind::Wake(target));
+        }
     }
 
     /// Admit a fused batch as one work unit: batch-level gate verdicts
@@ -798,14 +1096,16 @@ impl Cluster {
     /// re-enters solo admission (where its own SLO is judged with the
     /// window wait already charged) instead of the whole batch being
     /// denied.
-    fn admit_fused(&mut self, now: f64, batch: FusedBatch) {
+    fn admit_fused(&mut self, now: f64, mut batch: FusedBatch) {
         if self.down.iter().all(|&d| d) {
             // Total outage: the batch disbands and its members park
             // solo (fusing again after the outage would misattribute
             // the window wait).
-            for m in batch.members {
+            let freed = std::mem::take(&mut batch.members);
+            for m in &freed {
                 self.parked.push((m.req, m.arrival));
             }
+            self.former.recycle(freed);
             return;
         }
         let members = batch.members.len() as u32;
@@ -819,9 +1119,13 @@ impl Cluster {
                 None
             };
             if routed.is_none() {
-                for m in batch.members {
+                // Disband: members re-enter admission solo and the
+                // carrier returns to the former's spare pool.
+                let freed = std::mem::take(&mut batch.members);
+                for m in &freed {
                     self.admit_request(now, m.req, m.arrival);
                 }
+                self.former.recycle(freed);
                 return;
             }
         }
@@ -843,7 +1147,10 @@ impl Cluster {
             predicted_s,
             batch: Some(batch),
         });
-        self.push_event(now, EventKind::Wake(target));
+        self.reindex(target);
+        if self.shards[target].free_at() <= now {
+            self.push_event(now, EventKind::Wake(target));
+        }
     }
 
     /// A [`EventKind::Crash`] fired: kill shard `s` at virtual time
@@ -871,6 +1178,7 @@ impl Cluster {
             return;
         }
         self.down[s] = true;
+        self.reindex(s);
         let mut aborted = Vec::new();
         let mut kept = Vec::with_capacity(self.served.len());
         for r in std::mem::take(&mut self.served) {
@@ -881,6 +1189,9 @@ impl Cluster {
             }
         }
         self.served = kept;
+        // The aborted completions never happened; their re-admissions
+        // below re-count them under whatever outcome they earn.
+        self.finished -= aborted.len();
         for r in &aborted {
             self.shards[s].abort_record(r);
         }
@@ -905,9 +1216,10 @@ impl Cluster {
         for q in drained {
             match q.batch {
                 Some(b) => {
-                    for m in b.members {
+                    for m in &b.members {
                         self.admit_request(now, m.req, m.arrival);
                     }
+                    self.former.recycle(b.members);
                 }
                 None => self.admit_request(now, q.req, q.arrival),
             }
@@ -923,6 +1235,7 @@ impl Cluster {
             return;
         }
         self.down[s] = false;
+        self.reindex(s);
         for (req, arrival) in std::mem::take(&mut self.parked) {
             self.admit_request(now, req, arrival);
         }
@@ -931,6 +1244,7 @@ impl Cluster {
 
     fn dispatch_on(&mut self, s: usize, at: f64) {
         let start = self.shards[s].free_at().max(at);
+        let before = self.served.len();
         if let Some(res) = self.shards[s].dispatch_next(start, &mut self.served) {
             if res.replanned {
                 // This shard observed drift and refreshed its model:
@@ -947,13 +1261,40 @@ impl Cluster {
             }
             self.push_event(res.finish, EventKind::ShardFree(s));
         }
+        self.finished += self.served.len() - before;
+        self.reindex(s);
     }
 
     /// Process the earliest pending event. Returns `false` when the
     /// event heap is empty (every submitted request has completed).
     pub fn step_event(&mut self) -> bool {
-        let Some(Reverse(ev)) = self.events.pop() else {
-            return false;
+        #[cfg(debug_assertions)]
+        self.verify_indexes();
+        let ev = match self.drain.pop_front() {
+            Some(ev) => ev,
+            None => {
+                let Some(Reverse(ev)) = self.events.pop() else {
+                    return false;
+                };
+                // Batch-drain everything else sharing this instant into
+                // the reusable buffer: one O(log heap) pop per distinct
+                // timestamp instead of per event. Events pushed while
+                // processing carry strictly larger sequence numbers
+                // than anything drained, so the (time, seq) order is
+                // preserved: the drained prefix is consumed first, new
+                // same-instant events pop from the heap after it.
+                while let Some(Reverse(next)) = self.events.peek() {
+                    if next.time == ev.time {
+                        let Some(Reverse(n)) = self.events.pop() else {
+                            unreachable!("peeked event vanished");
+                        };
+                        self.drain.push_back(n);
+                    } else {
+                        break;
+                    }
+                }
+                ev
+            }
         };
         if let EventKind::BatchFlush(window) = ev.kind {
             // Flush bounds only tighten, so a window that flushed early
@@ -1054,8 +1395,10 @@ impl Cluster {
                                 q.co_execute = co_execute;
                                 q.best_device = best_device;
                                 q.predicted_s = predicted_s;
+                                self.reindex(victim);
                                 self.shards[s].note_steal();
                                 self.shards[s].enqueue(q);
+                                self.reindex(s);
                                 self.dispatch_on(s, ev.time);
                             }
                         }
@@ -1067,23 +1410,37 @@ impl Cluster {
     }
 
     /// Drain every event (arrivals included) and return the session
-    /// report.
+    /// report. The completion records are **moved** into the report —
+    /// no O(served) clone — so repeated end-of-run extraction stays
+    /// linear; [`Cluster::completed`] remains correct afterwards, and
+    /// a subsequent mid-run [`Cluster::report`] snapshot starts empty.
     pub fn run_to_completion(&mut self) -> ServiceReport {
         while self.step_event() {}
-        self.report()
+        let served = std::mem::take(&mut self.served);
+        self.build_report(served)
     }
 
-    /// Snapshot the session statistics, aggregated across shards.
+    /// Snapshot the session statistics, aggregated across shards. This
+    /// **clones** the completion records accumulated so far — the
+    /// mid-run diagnostic path; end-of-run extraction goes through
+    /// [`Cluster::run_to_completion`], which moves them instead.
     pub fn report(&self) -> ServiceReport {
+        self.build_report(self.served.clone())
+    }
+
+    /// Assemble a [`ServiceReport`] around an owned record set.
+    fn build_report(&self, served: Vec<ServedRequest>) -> ServiceReport {
+        let denied = served.iter().filter(|r| r.mode.is_denied()).count();
+        let rejected = served.iter().filter(|r| r.mode.is_rejected()).count();
         let mut report = ServiceReport {
-            served: self.served.clone(),
+            served,
             makespan: self.clock,
             cache_hits: 0,
             cache_misses: 0,
             epoch_bumps: 0,
             replans: 0,
-            denied: self.served.iter().filter(|r| r.mode.is_denied()).count(),
-            rejected: self.served.iter().filter(|r| r.mode.is_rejected()).count(),
+            denied,
+            rejected,
             requeued: self.requeued,
             shards: self.shards.iter().map(|s| s.stats()).collect(),
         };
@@ -1465,6 +1822,178 @@ mod tests {
         assert_eq!(r.mode, ExecMode::CoExec);
         assert_eq!(r.start, 0.0, "no window wait for co-executable work");
         assert_eq!(report.fused(), 0);
+    }
+
+    /// A mixed workload — classes, SLOs, staggered arrivals — used by
+    /// the routing-policy equivalence tests.
+    fn mixed_trace(c: &mut Cluster) {
+        for i in 0..12u64 {
+            let (size, reps, class, slo) = match i % 4 {
+                0 => (big(), 2, QosClass::Interactive, Some(1e5)),
+                1 => (GemmSize::square(300), 3, QosClass::Standard, None),
+                2 => (big(), 1, QosClass::Batch, None),
+                _ => (GemmSize::square(16_000), 2, QosClass::Interactive, Some(1e-9)),
+            };
+            let mut req = GemmRequest::new(i, size, reps).with_class(class);
+            req.deadline_s = slo;
+            c.submit_request_at(0.3 * i as f64, req);
+        }
+    }
+
+    #[test]
+    fn sampled_with_d_covering_the_cluster_matches_full_exactly() {
+        // `Sampled { d >= shards }` must take the exact scan and touch
+        // no randomness: the whole session replays byte-identically to
+        // `Full`, denials and SLO decisions included.
+        let run = |route: RoutePolicy| {
+            let opts = ClusterOptions {
+                shards: 4,
+                route,
+                ..Default::default()
+            };
+            let mut c = Cluster::new(&presets::mach2(), 9, opts);
+            mixed_trace(&mut c);
+            c.run_to_completion()
+        };
+        let full = run(RoutePolicy::Full);
+        let sampled = run(RoutePolicy::Sampled { d: 4 });
+        assert_eq!(full, sampled);
+        assert_eq!(format!("{full:?}"), format!("{sampled:?}"));
+    }
+
+    #[test]
+    fn sampled_routing_with_small_d_serves_everything_deterministically() {
+        let run = || {
+            let opts = ClusterOptions {
+                shards: 8,
+                route: RoutePolicy::Sampled { d: 2 },
+                ..Default::default()
+            };
+            let mut c = Cluster::new(&presets::mach2(), 11, opts);
+            mixed_trace(&mut c);
+            c.run_to_completion()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "sampled routing must replay exactly");
+        assert_eq!(a.served.len(), 12);
+        let mut ids: Vec<u64> = a.served.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+        // The impossible SLOs are denied under sampling too: the
+        // deadline path falls back to the exact scan before denying.
+        assert_eq!(a.denied, 3);
+        // Sampling spread load: more than one shard worked.
+        assert!(a.shards.iter().filter(|s| s.dispatches > 0).count() > 1);
+    }
+
+    #[test]
+    fn probe_route_inspects_without_admitting() {
+        let opts = ClusterOptions {
+            shards: 2,
+            ..Default::default()
+        };
+        let mut c = Cluster::new(&presets::mach2(), 0, opts);
+        let req = GemmRequest::new(0, big(), 2);
+        let (shard, finish) = c.probe_route(&req).unwrap();
+        assert!(shard < 2);
+        assert!(finish > 0.0);
+        assert_eq!(c.pending(), 0, "a probe admits nothing");
+        assert_eq!(c.completed(), 0);
+        // On the idle cluster the probe names where a real admission
+        // then goes (`Full` consumes no randomness between the two).
+        let id = c.submit(big(), 2);
+        let report = c.run_to_completion();
+        assert_eq!(report.request(id).unwrap().shard, Some(shard));
+    }
+
+    #[test]
+    fn end_of_run_report_moves_records_and_keeps_counters() {
+        let mut c = Cluster::new(&presets::mach2(), 0, ClusterOptions::default());
+        c.submit(big(), 2);
+        let report = c.run_to_completion();
+        assert_eq!(report.served.len(), 1);
+        assert_eq!(c.completed(), 1, "the move must not lose the count");
+        // The records moved into `report`; a later snapshot starts
+        // empty but keeps the shard-level aggregates.
+        let snap = c.report();
+        assert!(snap.served.is_empty());
+        assert_eq!(snap.shards[0].dispatches, 1);
+    }
+
+    #[test]
+    fn hetero_thief_steals_work_its_hardware_serves_disproportionately_well() {
+        // Shard 0: GPU node (idle thief). Shards 1, 2: CPU nodes, each
+        // with one queued request. Shard 1 holds a deep tiny-GEMM job
+        // (the larger class-weighted backlog — the plain winner);
+        // shard 2 holds a big GEMM the CPU planned slowly but the GPU
+        // thief would serve far faster. The affinity tilt must send
+        // the thief to shard 2.
+        let mut c = Cluster::from_machines(
+            &[presets::gpu_node(), presets::cpu_node(), presets::cpu_node()],
+            0,
+            ClusterOptions::default(),
+        );
+        let tiny = GemmSize::square(300);
+        let tiny_pred = c.gate_on(1, tiny, 1, 1).2;
+        let (big_co, big_dev, big_pred) = c.gate_on(2, big(), 1, 1);
+        // Enough repetitions that the tiny job's backlog strictly
+        // out-weighs the big one's.
+        let reps = ((big_pred / tiny_pred) * 2.0).ceil().max(2.0) as u32;
+        let (tiny_co, tiny_dev, tiny_deep_pred) = c.gate_on(1, tiny, reps, 1);
+        c.shards[1].enqueue(QueuedRequest {
+            req: GemmRequest::new(0, tiny, reps),
+            arrival: 0.0,
+            co_execute: tiny_co,
+            best_device: tiny_dev,
+            predicted_s: tiny_deep_pred,
+            batch: None,
+        });
+        c.reindex(1);
+        c.shards[2].enqueue(QueuedRequest {
+            req: GemmRequest::new(1, big(), 1),
+            arrival: 0.0,
+            co_execute: big_co,
+            best_device: big_dev,
+            predicted_s: big_pred,
+            batch: None,
+        });
+        c.reindex(2);
+        assert!(c.shards[1].weighted_backlog() > c.shards[2].weighted_backlog());
+        assert_eq!(c.steal_idx.winner(), Some(1), "backlog alone picks shard 1");
+        assert_eq!(
+            c.steal_victim(0),
+            Some(2),
+            "the GPU thief must prefer the GPU-friendly head"
+        );
+    }
+
+    #[test]
+    fn homogeneous_steal_pick_is_unchanged_by_the_affinity_tilt() {
+        // Three clone shards: the thief's affinity for both victims'
+        // heads differs only by profiling noise, far inside the tilt
+        // margin — the class-weighted backlog winner must stand.
+        let opts = ClusterOptions {
+            shards: 3,
+            ..Default::default()
+        };
+        let mut c = Cluster::new(&presets::mach2(), 2, opts);
+        for victim in [1usize, 2] {
+            let (co, dev, pred) = c.gate_on(victim, big(), 2, 1);
+            let depth = if victim == 1 { 2 } else { 1 };
+            for j in 0..depth {
+                c.shards[victim].enqueue(QueuedRequest {
+                    req: GemmRequest::new((victim * 10 + j) as u64, big(), 2),
+                    arrival: 0.0,
+                    co_execute: co,
+                    best_device: dev,
+                    predicted_s: pred,
+                    batch: None,
+                });
+            }
+            c.reindex(victim);
+        }
+        assert_eq!(c.steal_victim(0), Some(1), "deeper backlog wins on clones");
     }
 
     #[test]

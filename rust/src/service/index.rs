@@ -1,0 +1,288 @@
+//! Incremental tournament-tree indexes over per-shard scalar keys.
+//!
+//! The cluster front-end answers two argmin/argmax questions on every
+//! hot-path decision: *which shard has the earliest predicted finish*
+//! (routing) and *which shard has the largest class-weighted backlog*
+//! (steal-victim selection). Scanning every shard per decision is
+//! O(shards) — fine at 4, hopeless at 400 (HTS, PAPERS.md, argues
+//! scheduler decisions only reach ALP scale through aggregation /
+//! indexing, not per-arrival scans). A [`TournamentTree`] keeps the
+//! winner in O(1) with O(log shards) updates, so the cluster pays the
+//! scan cost once per *mutation* of a shard's key, not once per
+//! *decision*.
+//!
+//! The tree is a classic segment tree of winners: leaf `i` holds shard
+//! `i`'s key, every internal node holds the index of the winning leaf
+//! of its subtree. Ties break toward the **lower index**, which is
+//! exactly the tie-break the old linear scans used (first strict
+//! improvement wins), so swapping the scans for the tree changes no
+//! decision. Shards that must not win (down, empty queue) park on the
+//! sentinel key ([`TournamentTree::disable`]), and [`winner`] returns
+//! `None` when every leaf is disabled.
+
+/// Whether the tree tracks the minimum or the maximum key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ranking {
+    /// Winner is the leaf with the smallest key (router: earliest
+    /// predicted finish).
+    Min,
+    /// Winner is the leaf with the largest key (stealing: largest
+    /// weighted backlog).
+    Max,
+}
+
+/// A fixed-capacity tournament (winner) tree over `f64` keys.
+///
+/// Built once for `n` leaves; `update` is O(log n), `winner` is O(1),
+/// `winner_excluding` is O(log n). See the module doc for why the
+/// cluster keeps two of these instead of scanning shards.
+#[derive(Debug, Clone)]
+pub struct TournamentTree {
+    ranking: Ranking,
+    /// Per-leaf keys; disabled leaves hold `sentinel()`.
+    keys: Vec<f64>,
+    /// Winner index per internal node, 1-based heap layout: node 1 is
+    /// the root, node `i`'s children are `2i` and `2i+1`. Leaves start
+    /// at `base`.
+    tree: Vec<usize>,
+    /// First leaf slot in `tree` (a power of two >= n).
+    base: usize,
+    /// Leaf marker for "no shard here" padding slots.
+    invalid: usize,
+}
+
+impl TournamentTree {
+    /// An index over `n` leaves, all starting disabled.
+    pub fn new(n: usize, ranking: Ranking) -> Self {
+        let base = n.max(1).next_power_of_two();
+        let mut t = TournamentTree {
+            ranking,
+            keys: vec![f64::NAN; n],
+            tree: vec![n; 2 * base],
+            base,
+            invalid: n,
+        };
+        for i in 0..n {
+            t.keys[i] = t.sentinel();
+            t.tree[t.base + i] = i;
+        }
+        for node in (1..t.base).rev() {
+            t.tree[node] = t.play(t.tree[2 * node], t.tree[2 * node + 1]);
+        }
+        t
+    }
+
+    /// Number of leaves.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// True when the tree has no leaves.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// The key that can never win: +inf for [`Ranking::Min`], -inf for
+    /// [`Ranking::Max`].
+    fn sentinel(&self) -> f64 {
+        match self.ranking {
+            Ranking::Min => f64::INFINITY,
+            Ranking::Max => f64::NEG_INFINITY,
+        }
+    }
+
+    /// Winner of a two-leaf match. Lower index wins ties, matching the
+    /// first-strict-improvement tie-break of the linear scans this tree
+    /// replaces.
+    fn play(&self, a: usize, b: usize) -> usize {
+        if a == self.invalid {
+            return b;
+        }
+        if b == self.invalid {
+            return a;
+        }
+        let (ka, kb) = (self.keys[a], self.keys[b]);
+        let b_wins = match self.ranking {
+            Ranking::Min => kb < ka,
+            Ranking::Max => kb > ka,
+        };
+        if b_wins ^ (b < a) {
+            // Exactly one of "b strictly beats a" / "b is the lower
+            // index" holds; strict beat dominates, otherwise lower
+            // index keeps the slot.
+            if b_wins {
+                b
+            } else {
+                a
+            }
+        } else if b_wins {
+            b
+        } else {
+            a
+        }
+    }
+
+    /// Set leaf `i`'s key and replay its path to the root. O(log n).
+    pub fn update(&mut self, i: usize, key: f64) {
+        debug_assert!(!key.is_nan(), "tournament keys must be orderable");
+        self.keys[i] = key;
+        let mut node = (self.base + i) / 2;
+        while node >= 1 {
+            self.tree[node] = self.play(self.tree[2 * node], self.tree[2 * node + 1]);
+            node /= 2;
+        }
+    }
+
+    /// Park leaf `i` on the sentinel so it cannot win (down shard,
+    /// empty queue).
+    pub fn disable(&mut self, i: usize) {
+        let s = self.sentinel();
+        self.update(i, s);
+    }
+
+    /// Leaf `i`'s current key (the sentinel when disabled).
+    pub fn key(&self, i: usize) -> f64 {
+        self.keys[i]
+    }
+
+    /// True when leaf `i` holds a real key (not the sentinel).
+    pub fn is_enabled(&self, i: usize) -> bool {
+        self.keys[i] != self.sentinel()
+    }
+
+    /// The winning leaf, or `None` when every leaf is disabled. O(1).
+    pub fn winner(&self) -> Option<usize> {
+        let w = self.tree[1];
+        (w != self.invalid && self.is_enabled(w)).then_some(w)
+    }
+
+    /// The winning leaf with leaf `skip` excluded — the steal path's
+    /// "best victim that is not the thief". O(log n): temporarily
+    /// parks `skip` on the sentinel and restores it.
+    pub fn winner_excluding(&mut self, skip: usize) -> Option<usize> {
+        let saved = self.keys[skip];
+        self.disable(skip);
+        let w = self.winner();
+        self.update(skip, saved);
+        w
+    }
+
+    /// Recompute the winner of every leaf by linear scan — the oracle
+    /// the incremental tree must agree with (debug assertions and the
+    /// property tests call this).
+    pub fn scan_winner(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.keys.len() {
+            if !self.is_enabled(i) {
+                continue;
+            }
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    let better = match self.ranking {
+                        Ranking::Min => self.keys[i] < self.keys[b],
+                        Ranking::Max => self.keys[i] > self.keys[b],
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn empty_and_all_disabled_have_no_winner() {
+        let t = TournamentTree::new(0, Ranking::Min);
+        assert!(t.is_empty());
+        assert_eq!(t.winner(), None);
+        let t = TournamentTree::new(5, Ranking::Max);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.winner(), None);
+        assert_eq!(t.scan_winner(), None);
+    }
+
+    #[test]
+    fn min_tree_tracks_updates_and_ties_break_low() {
+        let mut t = TournamentTree::new(4, Ranking::Min);
+        t.update(2, 3.0);
+        assert_eq!(t.winner(), Some(2));
+        t.update(0, 3.0); // tie: lower index wins
+        assert_eq!(t.winner(), Some(0));
+        t.update(3, 1.0);
+        assert_eq!(t.winner(), Some(3));
+        t.disable(3);
+        assert_eq!(t.winner(), Some(0));
+        assert!(!t.is_enabled(3));
+        assert_eq!(t.key(0), 3.0);
+    }
+
+    #[test]
+    fn max_tree_and_winner_excluding() {
+        let mut t = TournamentTree::new(3, Ranking::Max);
+        t.update(0, 5.0);
+        t.update(1, 9.0);
+        t.update(2, 7.0);
+        assert_eq!(t.winner(), Some(1));
+        assert_eq!(t.winner_excluding(1), Some(2));
+        // The exclusion is transient: the winner is restored after.
+        assert_eq!(t.winner(), Some(1));
+        assert_eq!(t.key(1), 9.0);
+        assert_eq!(t.winner_excluding(0), Some(1));
+    }
+
+    #[test]
+    fn single_leaf_tree() {
+        let mut t = TournamentTree::new(1, Ranking::Min);
+        assert_eq!(t.winner(), None);
+        t.update(0, 2.0);
+        assert_eq!(t.winner(), Some(0));
+        assert_eq!(t.winner_excluding(0), None);
+        assert_eq!(t.winner(), Some(0));
+    }
+
+    #[test]
+    fn tree_agrees_with_linear_scan_after_every_mutation() {
+        // Deterministic fuzz across sizes (including non-powers of two)
+        // and both rankings: after every update/disable the incremental
+        // winner must equal the from-scratch scan.
+        for &n in &[1usize, 2, 3, 5, 8, 13, 64, 100] {
+            for ranking in [Ranking::Min, Ranking::Max] {
+                let mut t = TournamentTree::new(n, ranking);
+                let mut rng = Rng::new(0xA11CE ^ n as u64);
+                for step in 0..400 {
+                    let i = rng.below(n as u64) as usize;
+                    if rng.below(5) == 0 {
+                        t.disable(i);
+                    } else {
+                        // Coarse keys force plenty of exact ties.
+                        t.update(i, rng.below(8) as f64);
+                    }
+                    assert_eq!(
+                        t.winner(),
+                        t.scan_winner(),
+                        "n={n} {ranking:?} step={step}"
+                    );
+                    if n > 1 {
+                        let skip = rng.below(n as u64) as usize;
+                        let saved = t.key(skip);
+                        let want = {
+                            let mut probe = t.clone();
+                            probe.disable(skip);
+                            probe.scan_winner()
+                        };
+                        assert_eq!(t.winner_excluding(skip), want);
+                        assert_eq!(t.key(skip), saved, "exclusion must restore the key");
+                    }
+                }
+            }
+        }
+    }
+}

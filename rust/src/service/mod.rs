@@ -16,9 +16,9 @@
 //!   installation-time model, so heterogeneous clusters score every
 //!   arrival with the profile of the machine actually being considered;
 //!   verdicts and service predictions are memoized in a bounded LRU
-//!   keyed by `(shape, reps, shard epoch)`; deadline-bound requests are
-//!   additionally probed with the deadline-constrained LP reused from
-//!   the energy formulation, again per shard;
+//!   keyed by interned `(shape id, reps, members)` handles; deadline-bound
+//!   requests are additionally probed with the deadline-constrained LP
+//!   reused from the energy formulation, again per shard;
 //! * [`batch`] — admission-time batching: the [`BatchFormer`] holds
 //!   *small* standalone-bound arrivals in a short window and fuses
 //!   compatible ones (same `GemmSize` shape class, same reps, adjacent
@@ -42,10 +42,18 @@
 //!   deadline-admitting SLO-bound arrivals against the predicted
 //!   sojourn at shards whose own model can meet the SLO, routing each
 //!   accepted request to the shard with the earliest class-weighted
-//!   predicted finish *under that shard's own gate verdict*, and
+//!   predicted finish *under that shard's own gate verdict* (exact
+//!   full scan by default, or sampled power-of-d-choices routing via
+//!   [`RoutePolicy::Sampled`] at scale — see `docs/hotpath.md`), and
 //!   letting idle shards steal queued work from the shard with the
 //!   largest class-weighted backlog (stolen requests are re-gated under
-//!   the thief's model);
+//!   the thief's model, and thieves prefer work their own hardware
+//!   serves disproportionately well);
+//! * [`index`] — the [`TournamentTree`]: incremental argmin/argmax
+//!   indexes over per-shard keys (predicted finish for routing,
+//!   weighted backlog for stealing), so front-end decisions cost
+//!   O(log shards) maintenance instead of an O(shards) scan per
+//!   arrival;
 //! * [`arrivals`] — online arrival processes: deterministic Poisson
 //!   traces ([`PoissonArrivals`]), per-class Poisson mixes
 //!   ([`MixedArrivals`]), bursty Markov-modulated on/off streams
@@ -91,6 +99,7 @@ pub mod arrivals;
 pub mod batch;
 pub mod cache;
 pub mod cluster;
+pub mod index;
 pub mod qos;
 pub mod queue;
 pub mod request;
@@ -102,7 +111,8 @@ pub use admission::Admission;
 pub use arrivals::{fixed_trace, Arrival, ClassLoad, MixedArrivals, OnOffArrivals, PoissonArrivals};
 pub use batch::{BatchFormer, BatchMember, BatchPolicy, BatchWindow, FusedBatch, ShapeClass};
 pub use cache::{LruMap, PlanCache};
-pub use cluster::{Cluster, ClusterOptions, GatePolicy, HeterogeneousSpec};
+pub use cluster::{Cluster, ClusterOptions, GatePolicy, HeterogeneousSpec, RoutePolicy};
+pub use index::{Ranking, TournamentTree};
 pub use qos::{DeadlinePolicy, QosClass};
 pub use queue::{QueuePolicy, QueuedRequest, RequestQueue};
 pub use request::{

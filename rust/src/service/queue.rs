@@ -29,6 +29,18 @@
 //! policy decisions never re-run the optimizer. Everything here is
 //! integer-credit arithmetic over a fixed class order, so replays are
 //! byte-identical.
+//!
+//! Backlog views ([`RequestQueue::class_backlog`] and friends) are
+//! maintained **incrementally**: every push adds the entry's predicted
+//! seconds to its lane's running total, every removal subtracts it, and
+//! a lane that empties snaps back to exactly `0.0` so an idle lane is
+//! bit-identical to a never-used one. That makes the per-arrival
+//! routing probe ([`ExecutorShard::predicted_finish_for`]) O(1) in
+//! queue depth instead of re-summing the lanes on every candidate —
+//! the front-end hot path asks these questions once per candidate per
+//! arrival.
+//!
+//! [`ExecutorShard::predicted_finish_for`]: super::shard::ExecutorShard::predicted_finish_for
 
 use super::batch::FusedBatch;
 use super::qos::{QosClass, NUM_CLASSES};
@@ -74,6 +86,10 @@ pub struct RequestQueue {
     /// non-empty classes accrue; an emptied class resets to zero so a
     /// long-idle tier cannot bank an unbounded burst.
     credit: [i64; NUM_CLASSES],
+    /// Running sum of `predicted_s` per lane, kept current on every
+    /// push/pop/removal (snapped to exactly `0.0` when a lane empties)
+    /// so the backlog views are O(1).
+    lane_backlog: [f64; NUM_CLASSES],
 }
 
 impl RequestQueue {
@@ -83,6 +99,7 @@ impl RequestQueue {
             policy,
             lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
             credit: [0; NUM_CLASSES],
+            lane_backlog: [0.0; NUM_CLASSES],
         }
     }
 
@@ -108,14 +125,14 @@ impl RequestQueue {
 
     /// Sum of the admission-time service predictions of everything
     /// pending — the backlog a routing front-end adds to a shard's
-    /// predicted finish.
+    /// predicted finish. O(1): read from the incremental lane totals.
     pub fn predicted_backlog(&self) -> f64 {
-        self.iter().map(|q| q.predicted_s).sum()
+        self.lane_backlog.iter().sum()
     }
 
-    /// Predicted backlog of one class's lane.
+    /// Predicted backlog of one class's lane. O(1).
     pub fn class_backlog(&self, class: QosClass) -> f64 {
-        self.lanes[class.index()].iter().map(|q| q.predicted_s).sum()
+        self.lane_backlog[class.index()]
     }
 
     /// Class-weighted backlog: each lane's predicted seconds scaled by
@@ -166,13 +183,30 @@ impl RequestQueue {
 
     /// Admit a request at the tail of its class lane.
     pub fn push(&mut self, q: QueuedRequest) {
-        self.lanes[q.req.class.index()].push_back(q);
+        let lane = q.req.class.index();
+        self.lane_backlog[lane] += q.predicted_s;
+        self.lanes[lane].push_back(q);
     }
 
     /// Put a request back at the head of its class lane (used when a
     /// bypass pairing has to be undone).
     pub fn push_front(&mut self, q: QueuedRequest) {
-        self.lanes[q.req.class.index()].push_front(q);
+        let lane = q.req.class.index();
+        self.lane_backlog[lane] += q.predicted_s;
+        self.lanes[lane].push_front(q);
+    }
+
+    /// Settle the incremental backlog after removing an entry with
+    /// prediction `predicted_s` from `lane`: subtract it, and snap an
+    /// emptied lane back to exactly `0.0` so float residue from the
+    /// running sum can never distinguish an idle lane from a fresh one
+    /// (symmetric shards must stay bit-identical for routing ties).
+    fn settle_removal(&mut self, lane: usize, predicted_s: f64) {
+        if self.lanes[lane].is_empty() {
+            self.lane_backlog[lane] = 0.0;
+        } else {
+            self.lane_backlog[lane] -= predicted_s;
+        }
     }
 
     /// The lane [`RequestQueue::pop_next`] would serve right now,
@@ -240,7 +274,7 @@ impl RequestQueue {
     }
 
     fn pop_from_lane(&mut self, lane: usize) -> Option<QueuedRequest> {
-        match self.policy {
+        let popped = match self.policy {
             QueuePolicy::Fifo => self.lanes[lane].pop_front(),
             QueuePolicy::Spjf => {
                 let idx = self.lanes[lane]
@@ -252,7 +286,11 @@ impl RequestQueue {
                     .map(|(i, _)| i)?;
                 self.lanes[lane].remove(idx)
             }
+        };
+        if let Some(q) = &popped {
+            self.settle_removal(lane, q.predicted_s);
         }
+        popped
     }
 
     /// Remove and return the first pending request (class-major scan
@@ -262,9 +300,13 @@ impl RequestQueue {
         &mut self,
         mut pred: F,
     ) -> Option<QueuedRequest> {
-        for lane in self.lanes.iter_mut() {
-            if let Some(idx) = lane.iter().position(|q| pred(q)) {
-                return lane.remove(idx);
+        for lane in 0..NUM_CLASSES {
+            if let Some(idx) = self.lanes[lane].iter().position(|q| pred(q)) {
+                let taken = self.lanes[lane].remove(idx);
+                if let Some(q) = &taken {
+                    self.settle_removal(lane, q.predicted_s);
+                }
+                return taken;
             }
         }
         None
@@ -446,6 +488,48 @@ mod tests {
         assert!((rq.backlog_ahead_of(QosClass::Interactive, 1.0) - (2.0 + 0.75)).abs() < 1e-12);
         assert!((rq.backlog_ahead_of(QosClass::Batch, 1.0) - 5.0).abs() < 1e-12);
         assert_eq!(rq.class_len(QosClass::Interactive), 1);
+    }
+
+    #[test]
+    fn incremental_backlog_matches_recomputation_on_every_path() {
+        // Exercise every mutation path (push, push_front, pop_next,
+        // take_first) and check the O(1) lane totals against a
+        // from-scratch re-sum; an emptied lane must read exactly 0.0.
+        let mut rq = RequestQueue::new(QueuePolicy::Spjf);
+        let recompute = |rq: &RequestQueue, c: QosClass| -> f64 {
+            rq.iter()
+                .filter(|q| q.req.class == c)
+                .map(|q| q.predicted_s)
+                .sum()
+        };
+        let check = |rq: &RequestQueue| {
+            for c in QosClass::ALL {
+                assert!(
+                    (rq.class_backlog(c) - recompute(rq, c)).abs() < 1e-12,
+                    "lane {c:?} drifted"
+                );
+            }
+        };
+        for (id, t, class) in [
+            (0, 0.5, QosClass::Interactive),
+            (1, 2.25, QosClass::Standard),
+            (2, 1.75, QosClass::Standard),
+            (3, 4.0, QosClass::Batch),
+        ] {
+            rq.push(q_class(id, t, id % 2 == 0, class));
+            check(&rq);
+        }
+        let taken = rq.take_first(|q| !q.co_execute).unwrap();
+        check(&rq);
+        rq.push_front(taken);
+        check(&rq);
+        while let Some(_q) = rq.pop_next() {
+            check(&rq);
+        }
+        for c in QosClass::ALL {
+            assert_eq!(rq.class_backlog(c), 0.0, "emptied lane must be exact");
+        }
+        assert_eq!(rq.predicted_backlog(), 0.0);
     }
 
     #[test]

@@ -130,6 +130,9 @@ impl ExecutorShard {
     }
 
     /// Sum of admission-time predictions of everything queued here.
+    /// O(1): the queue maintains per-lane totals incrementally, so the
+    /// cluster's routing/steal indexes can read backlogs per mutation
+    /// without scanning the queue.
     pub fn backlog_s(&self) -> f64 {
         self.queue.predicted_backlog()
     }

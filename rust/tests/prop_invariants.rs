@@ -831,3 +831,109 @@ fn prop_fault_scenario_replay_is_deterministic() {
         assert_eq!(ids.len(), 8, "no request may be duplicated by a crash");
     });
 }
+
+// ---------------------------------------------------------------------
+// Sampled routing: exactness at full coverage, determinism under faults
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_sampled_router_with_full_coverage_equals_full_scan() {
+    use poas::config::presets;
+    use poas::coordinator::Pipeline;
+    use poas::service::{Cluster, ClusterOptions, PoissonArrivals, RoutePolicy};
+
+    // Profile the three distinct machines once; each case clones the
+    // pipelines so every run starts from identical installation state.
+    let pipes: Vec<Pipeline> = presets::hetero_mix()
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| Pipeline::for_simulated_machine(cfg, 90 + i as u64))
+        .collect();
+    let menu = vec![
+        (GemmSize::square(16_000), 2),
+        (GemmSize::square(20_000), 2),
+        (GemmSize::square(400), 2),
+    ];
+
+    prop("sampled d >= shards == full scan", 5, |rng, _| {
+        let rate = rng.range(0.2, 3.0);
+        let seed = rng.below(1 << 20);
+        let stealing = rng.below(2) == 0;
+        // d at or above the live shard count: the sampled router's
+        // exact path must reproduce the full scan bit for bit — same
+        // routing, same stealing, same report — on a heterogeneous
+        // cluster where a wrong pick would be visible.
+        let d = 3 + rng.below(4) as usize;
+        let trace = PoissonArrivals::new(rate, menu.clone(), seed).trace(8);
+        let run = |route: RoutePolicy| {
+            let mut cluster = Cluster::from_pipelines(
+                pipes.clone(),
+                ClusterOptions {
+                    route,
+                    work_stealing: stealing,
+                    ..Default::default()
+                },
+            );
+            cluster.submit_trace(&trace);
+            cluster.run_to_completion()
+        };
+        let full = run(RoutePolicy::Full);
+        let sampled = run(RoutePolicy::Sampled { d });
+        assert_eq!(full, sampled);
+        assert_eq!(
+            format!("{full:?}"),
+            format!("{sampled:?}"),
+            "d >= shards must be byte-identical to the full scan"
+        );
+    });
+}
+
+#[test]
+fn prop_sampled_router_replay_is_deterministic_under_faults() {
+    use poas::config::presets;
+    use poas::coordinator::Pipeline;
+    use poas::service::scenario::digest;
+    use poas::service::{Cluster, ClusterOptions, PoissonArrivals, RoutePolicy};
+
+    // Four same-machine shards with independent profiling seeds; the
+    // sampled router (d below the shard count, so the rejection-sampling
+    // path is live) plus a crash and a restart must still replay to an
+    // identical report and digest.
+    let pipes: Vec<Pipeline> = (0..4u64)
+        .map(|i| Pipeline::for_simulated_machine(&presets::mach2(), 110 + i))
+        .collect();
+    let menu = vec![(GemmSize::square(16_000), 2), (GemmSize::square(400), 2)];
+
+    prop("sampled replay under faults", 4, |rng, _| {
+        let rate = rng.range(0.5, 3.0);
+        let seed = rng.below(1 << 20);
+        let victim = rng.below(4) as usize;
+        let crash_at = rng.range(0.2, 2.0);
+        let restart_at = crash_at + rng.range(0.5, 3.0);
+        let trace = PoissonArrivals::new(rate, menu.clone(), seed).trace(10);
+        let run = || {
+            let mut cluster = Cluster::from_pipelines(
+                pipes.clone(),
+                ClusterOptions {
+                    route: RoutePolicy::Sampled { d: 2 },
+                    work_stealing: true,
+                    ..Default::default()
+                },
+            );
+            cluster.inject_crash(crash_at, victim);
+            cluster.inject_restart(restart_at, victim);
+            cluster.submit_trace(&trace);
+            cluster.run_to_completion()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "sampled replay with crash/restart must be identical");
+        assert_eq!(digest(&a), digest(&b), "and digest-deterministic");
+        // Every arrival is accounted for exactly once despite the fault.
+        assert_eq!(a.served.len(), 10);
+        let mut ids: Vec<u64> = a.served.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 10, "no request may be duplicated by the crash");
+    });
+}
