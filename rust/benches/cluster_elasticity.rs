@@ -1,0 +1,181 @@
+//! Elasticity: what does autoscaled membership buy on a diurnal trace?
+//!
+//! The pack-and-resize literature (PAPERS.md) frames capacity as
+//! something a scheduler should breathe with load rather than size for
+//! the peak. This regenerator measures that trade-off on the cluster's
+//! membership machinery (hand-rolled harness, no criterion — the
+//! offline build has no dependencies): one deterministic day/night
+//! phase cycle ([`PhasedArrivals`]) of SLO-bound heavy GEMMs, replayed
+//! on two builds —
+//!
+//! * **static** — three always-on shards, sized for the day phase: the
+//!   overprovisioned reference that pays for the night valleys too;
+//! * **autoscaled** — one always-on shard plus a two-entry preset pool
+//!   driven by [`AutoscalerPolicy`]: pressure pulls pool shards in as a
+//!   day phase builds, hysteresis drains them a couple of evaluations
+//!   into each night.
+//!
+//! The CI gate (`ci/elasticity_floor.json`, checked by
+//! `ci/check_bench.py`) holds the autoscaled build to the
+//! overprovisioned deadline-hit rate (within one point) at no more
+//! than 80% of its machine-seconds bill — elasticity must buy real
+//! savings without costing SLOs.
+//!
+//! Environment knobs (the CI bench-smoke gate sets both):
+//!
+//! * `POAS_BENCH_SMOKE=1` — fewer day/night cycles so the regenerator
+//!   finishes in seconds on a CI runner;
+//! * `POAS_BENCH_JSON=<path>` — merge an `"elasticity"` section into
+//!   the summary JSON (appending to the earlier bench legs' output
+//!   when the file already exists, standalone otherwise).
+
+use poas::config::presets;
+use poas::report::{secs, Table};
+use poas::service::{
+    AutoscalerPolicy, Cluster, ClusterOptions, GemmRequest, Phase, PhasedArrivals, QosClass,
+    Server, ServerOptions, ServiceReport,
+};
+use poas::workload::GemmSize;
+
+fn main() {
+    let smoke = std::env::var("POAS_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    let cfg = presets::mach2();
+    let heavy = GemmSize::square(16_000);
+
+    // Calibrate the service-time unit: one heavy request served alone.
+    let unit = {
+        let mut srv = Server::new(&cfg, 0, ServerOptions::default());
+        srv.submit(heavy, 2);
+        srv.run_to_completion().makespan
+    };
+
+    // The diurnal trace: day phases offer ~2.2 requests per unit
+    // (needs three shards at ~73% utilization), nights drop to 0.2
+    // (one shard at 20%). Every request carries a 6-unit sojourn SLO.
+    let cycles = if smoke { 2 } else { 4 };
+    let day_rate = 2.2 / unit;
+    let night_rate = 0.2 / unit;
+    let phase_s = 8.0 * unit;
+    let n = (cycles as f64 * phase_s * (day_rate + night_rate)).round() as usize;
+    let trace = PhasedArrivals::new(
+        vec![
+            Phase {
+                rate_rps: day_rate,
+                dur_s: phase_s,
+            },
+            Phase {
+                rate_rps: night_rate,
+                dur_s: phase_s,
+            },
+        ],
+        vec![(heavy, 2)],
+        1213,
+    )
+    .trace(n);
+    let deadline = 6.0 * unit;
+
+    let replay = |mut c: Cluster| -> ServiceReport {
+        for (i, a) in trace.iter().enumerate() {
+            c.submit_request_at(
+                a.at,
+                GemmRequest::new(i as u64, a.size, a.reps)
+                    .with_class(QosClass::Interactive)
+                    .with_deadline(deadline),
+            );
+        }
+        c.run_to_completion()
+    };
+
+    // Leg 1: statically overprovisioned for the day phase.
+    let static3 = replay(Cluster::from_machines(
+        &[presets::mach2(), presets::mach2(), presets::mach2()],
+        5,
+        ClusterOptions::default(),
+    ));
+
+    // Leg 2: one always-on shard plus a two-entry autoscaler pool.
+    let mut policy = AutoscalerPolicy::new(vec![presets::mach2(), presets::mach2()]);
+    policy.eval_interval_s = 0.5 * unit;
+    policy.scale_up_pressure_s = 1.5 * unit;
+    policy.scale_down_pressure_s = 0.25 * unit;
+    policy.scale_down_evals = 2;
+    let autoscaled = replay(Cluster::new(
+        &cfg,
+        5,
+        ClusterOptions {
+            autoscaler: Some(policy),
+            ..Default::default()
+        },
+    ));
+
+    let mut table = Table::new(
+        &format!(
+            "{n}-request diurnal SLO trace ({cycles} day/night cycles): \
+             static overprovisioning vs the autoscaler"
+        ),
+        &[
+            "build",
+            "shards",
+            "machine-seconds",
+            "utilization",
+            "deadline hits",
+            "denied",
+            "makespan",
+        ],
+    );
+    for (label, r) in [("static x3", &static3), ("autoscaled 1+2", &autoscaled)] {
+        table.row(&[
+            label.to_string(),
+            r.shards.len().to_string(),
+            secs(r.machine_seconds),
+            format!("{:.0}%", 100.0 * r.utilization()),
+            format!("{:.0}%", 100.0 * r.deadline_hit_rate()),
+            r.denied.to_string(),
+            secs(r.makespan),
+        ]);
+    }
+    table.print();
+    println!(
+        "targets: autoscaled deadline-hit rate within one point of the static \
+         build's at <= 80% of its machine-seconds."
+    );
+
+    // ---- Perf-trajectory artifact: merge into the shared summary.
+    if let Ok(path) = std::env::var("POAS_BENCH_JSON") {
+        let leg = |r: &ServiceReport| {
+            format!(
+                "{{\"shards\": {}, \"machine_seconds\": {}, \"utilization\": {}, \
+                 \"deadline_hit_rate\": {}, \"denied\": {}, \"makespan_s\": {}}}",
+                r.shards.len(),
+                r.machine_seconds,
+                r.utilization(),
+                r.deadline_hit_rate(),
+                r.denied,
+                r.makespan
+            )
+        };
+        let mut section = String::from("  \"elasticity\": {\n");
+        section.push_str(&format!("    \"smoke\": {smoke},\n"));
+        section.push_str(&format!("    \"arrivals\": {n},\n"));
+        section.push_str(&format!("    \"static\": {},\n", leg(&static3)));
+        section.push_str(&format!("    \"autoscaled\": {}\n", leg(&autoscaled)));
+        section.push_str("  }\n}\n");
+        // Earlier bench legs write the summary first in CI; splice the
+        // elasticity section into it rather than clobbering, so one
+        // JSON artifact carries every bench leg. Standalone runs (file
+        // absent) still produce a valid summary.
+        let json = match std::fs::read_to_string(&path) {
+            Ok(existing) => {
+                let trimmed = existing.trim_end();
+                let base = trimmed
+                    .strip_suffix('}')
+                    .expect("existing bench summary ends with '}'")
+                    .trim_end();
+                format!("{base},\n{section}")
+            }
+            Err(_) => format!("{{\n  \"bench\": \"cluster_elasticity\",\n{section}"),
+        };
+        std::fs::write(&path, json).expect("write POAS_BENCH_JSON summary");
+        println!("wrote {path}");
+    }
+}

@@ -23,6 +23,14 @@
 //!   time-homogeneous — this is the canonical two-state MMPP used to
 //!   model it, and it stresses queueing (and work stealing) far harder
 //!   than a Poisson stream of the same average rate;
+//! * [`PhasedArrivals`] — a **scheduled** piecewise-Poisson process:
+//!   a fixed cycle of phases, each with its own rate and duration,
+//!   repeating for as long as the trace needs (day/night diurnal
+//!   cycles, ramp profiles). Unlike the Markov-modulated
+//!   [`OnOffArrivals`] the phase timeline is deterministic *by
+//!   construction*, which is exactly what an autoscaler acceptance
+//!   test wants: the load shape is part of the spec, only the arrival
+//!   instants inside each phase are random;
 //! * [`fixed_trace`] — hand-written `(at, size, reps)` triples for
 //!   replayable regression scenarios.
 //!
@@ -270,6 +278,112 @@ impl OnOffArrivals {
     }
 }
 
+/// One phase of a [`PhasedArrivals`] schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Phase {
+    /// Offered load during this phase, requests per virtual second.
+    pub rate_rps: f64,
+    /// Fixed phase duration, virtual seconds.
+    pub dur_s: f64,
+}
+
+/// A deterministic scheduled piecewise-Poisson process: the phase
+/// cycle (rates and durations) is fixed, and the cycle repeats until
+/// the trace has enough arrivals.
+///
+/// Within each phase, inter-arrival gaps are exponential at the
+/// phase's rate; at a phase boundary the pending gap is discarded and
+/// redrawn at the new rate (correct by memorylessness, the same
+/// convention [`OnOffArrivals`] uses at its modulation switches). The
+/// same `(seed, phases, menu)` always yields the same trace.
+///
+/// This is the diurnal / flash-crowd generator the autoscaler
+/// (see [`super::elastic`]) is exercised against: a day/night cycle is
+/// two phases, a ramp is several, and because the timeline is part of
+/// the spec, a test can assert on per-phase behaviour without
+/// re-deriving random phase boundaries.
+#[derive(Debug, Clone)]
+pub struct PhasedArrivals {
+    /// The repeating phase cycle, in order (at least one phase).
+    pub phases: Vec<Phase>,
+    /// The shapes tenants submit, drawn uniformly.
+    pub menu: Vec<(GemmSize, u32)>,
+    /// Trace seed.
+    pub seed: u64,
+}
+
+impl PhasedArrivals {
+    /// A scheduled process cycling through `phases`, seeded by `seed`.
+    ///
+    /// Every phase needs a positive finite rate and duration, and
+    /// `menu` must be non-empty.
+    pub fn new(phases: Vec<Phase>, menu: Vec<(GemmSize, u32)>, seed: u64) -> Self {
+        assert!(!phases.is_empty(), "phase cycle must be non-empty");
+        for p in &phases {
+            assert!(
+                p.rate_rps.is_finite() && p.rate_rps > 0.0,
+                "phase rate must be finite and positive, got {}",
+                p.rate_rps
+            );
+            assert!(
+                p.dur_s.is_finite() && p.dur_s > 0.0,
+                "phase duration must be finite and positive, got {}",
+                p.dur_s
+            );
+        }
+        assert!(!menu.is_empty(), "arrival menu must be non-empty");
+        PhasedArrivals { phases, menu, seed }
+    }
+
+    /// Duration of one full cycle, virtual seconds.
+    pub fn cycle_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.dur_s).sum()
+    }
+
+    /// Long-run average offered rate (duration-weighted over a cycle).
+    pub fn mean_rate_rps(&self) -> f64 {
+        self.phases.iter().map(|p| p.rate_rps * p.dur_s).sum::<f64>() / self.cycle_s()
+    }
+
+    /// Materialize the first `n` arrivals (all [`QosClass::Standard`],
+    /// no SLO — the scenario layer stamps class and deadline on top,
+    /// exactly as for [`OnOffArrivals`]).
+    pub fn trace(&self, n: usize) -> Vec<Arrival> {
+        // Domain-separate from the machine seeds and the other arrival
+        // processes.
+        let mut rng = Rng::new(self.seed ^ 0xD1CE_0FF0_A55A_7EA5);
+        let mut arrivals = Vec::with_capacity(n);
+        let mut start = 0.0_f64;
+        let mut k = 0usize;
+        while arrivals.len() < n {
+            let ph = self.phases[k % self.phases.len()];
+            let end = start + ph.dur_s;
+            let mut at = start;
+            loop {
+                let gap = exp_draw(&mut rng, 1.0 / ph.rate_rps);
+                if at + gap > end {
+                    break;
+                }
+                at += gap;
+                let (size, reps) = self.menu[rng.below(self.menu.len() as u64) as usize];
+                arrivals.push(Arrival {
+                    at,
+                    size,
+                    reps,
+                    class: QosClass::Standard,
+                    deadline_s: None,
+                });
+                if arrivals.len() == n {
+                    break;
+                }
+            }
+            start = end;
+            k += 1;
+        }
+        arrivals
+    }
+}
+
 /// One tier's offered load inside a [`MixedArrivals`] mix.
 #[derive(Debug, Clone)]
 pub struct ClassLoad {
@@ -500,6 +614,87 @@ mod tests {
         assert!(
             var > 2.0 * mean,
             "on/off trace not over-dispersed: var {var} mean {mean}"
+        );
+    }
+
+    #[test]
+    fn phased_trace_is_deterministic_and_time_ordered() {
+        let p = PhasedArrivals::new(
+            vec![
+                Phase {
+                    rate_rps: 6.0,
+                    dur_s: 10.0,
+                },
+                Phase {
+                    rate_rps: 0.5,
+                    dur_s: 10.0,
+                },
+            ],
+            menu(),
+            21,
+        );
+        let a = p.trace(512);
+        assert_eq!(a.len(), 512);
+        assert_eq!(a, p.trace(512));
+        let q = PhasedArrivals::new(p.phases.clone(), menu(), 22);
+        assert_ne!(a, q.trace(512));
+        let mut prev = 0.0;
+        for x in &a {
+            assert!(x.at > prev, "non-increasing arrival at {}", x.at);
+            prev = x.at;
+        }
+        assert!((p.cycle_s() - 20.0).abs() < 1e-12);
+        assert!((p.mean_rate_rps() - 3.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phased_per_phase_empirical_rates_match_schedule() {
+        // Day at 8 req/s for 20 s, night at 0.4 req/s for 20 s: the
+        // phase boundaries are *fixed*, so arrivals can be binned
+        // against the schedule directly.
+        let p = PhasedArrivals::new(
+            vec![
+                Phase {
+                    rate_rps: 8.0,
+                    dur_s: 20.0,
+                },
+                Phase {
+                    rate_rps: 0.4,
+                    dur_s: 20.0,
+                },
+            ],
+            menu(),
+            37,
+        );
+        let trace = p.trace(4000);
+        let horizon = trace.last().unwrap().at;
+        let cycles = (horizon / p.cycle_s()).floor();
+        assert!(cycles >= 10.0, "trace should span many cycles");
+        let (mut n_day, mut n_night) = (0usize, 0usize);
+        let mut t_day = 0.0_f64;
+        let mut t_night = 0.0_f64;
+        // Count only whole cycles so truncation cannot bias the split.
+        for a in &trace {
+            if a.at >= cycles * p.cycle_s() {
+                break;
+            }
+            if a.at % p.cycle_s() < 20.0 {
+                n_day += 1;
+            } else {
+                n_night += 1;
+            }
+        }
+        t_day += cycles * 20.0;
+        t_night += cycles * 20.0;
+        let day_rate = n_day as f64 / t_day;
+        let night_rate = n_night as f64 / t_night;
+        assert!(
+            (day_rate / 8.0 - 1.0).abs() < 0.10,
+            "day rate {day_rate} vs schedule 8.0"
+        );
+        assert!(
+            (night_rate / 0.4 - 1.0).abs() < 0.35,
+            "night rate {night_rate} vs schedule 0.4"
         );
     }
 

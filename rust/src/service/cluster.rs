@@ -68,7 +68,23 @@
 //!   **rate-scale** multiplies one machine's device rates — the
 //!   straggler/degraded-machine hook: realized times drift away from
 //!   the model fitted at install time until the dynamic loop (or a
-//!   recovery event) closes the gap.
+//!   recovery event) closes the gap;
+//! * **membership** — the shard *set* itself changes mid-run (see
+//!   [`super::elastic`]). A **join** ([`Cluster::inject_join`])
+//!   provisions a new shard at the event instant: its machine is
+//!   profiled then (installation time), it gets its own admission gate
+//!   and a cold [`super::PlanCache`], and both tournament-tree indexes
+//!   are rebuilt one leaf wider (a rare event — the steady state still
+//!   allocates nothing). A **graceful drain**
+//!   ([`Cluster::inject_drain`]) is the voluntary opposite of a crash:
+//!   the shard is disabled in both indexes so no new work lands, its
+//!   **in-flight execution runs to completion untouched** (zero
+//!   displaced records — the machine-seconds meter stops only once it
+//!   finishes), and only *queued* work is redistributed through
+//!   front-end admission with original arrivals and SLO budgets. A
+//!   configured [`AutoscalerPolicy`] arms a recurring evaluation event
+//!   that drives joins/drains/revivals from predicted backlog and
+//!   deadline-risk.
 //!
 //! Ties in virtual time break by submission sequence number, which
 //! keeps every replay byte-identical for a fixed seed. A one-shard
@@ -90,6 +106,7 @@
 use super::admission::{Admission, GateVerdict};
 use super::arrivals::Arrival;
 use super::batch::{BatchFormer, BatchPolicy, FusedBatch, JoinOutcome};
+use super::elastic::{Autoscaler, AutoscalerPolicy};
 use super::index::{Ranking, TournamentTree};
 use super::qos::{DeadlinePolicy, QosClass};
 use super::queue::QueuedRequest;
@@ -186,6 +203,12 @@ pub struct ClusterOptions {
     /// Shard-selection policy (see [`RoutePolicy`]; default
     /// [`RoutePolicy::Full`], the exact scan).
     pub route: RoutePolicy,
+    /// Elastic-membership policy (see [`super::elastic`]): when set,
+    /// a recurring evaluation event provisions/drains shards from the
+    /// policy's preset pool against predicted backlog and
+    /// deadline-risk. `None` (the default) arms nothing and reproduces
+    /// fixed membership exactly.
+    pub autoscaler: Option<AutoscalerPolicy>,
 }
 
 impl Default for ClusterOptions {
@@ -197,6 +220,7 @@ impl Default for ClusterOptions {
             gate: GatePolicy::PerShard,
             batching: BatchPolicy::Off,
             route: RoutePolicy::Full,
+            autoscaler: None,
         }
     }
 }
@@ -233,6 +257,22 @@ enum EventKind {
     /// machine by the factor (straggler onset `< 1`, recovery `> 1`;
     /// scales compose multiplicatively).
     RateScale(usize, f64),
+    /// Membership: a new shard joins the cluster, its machine profiled
+    /// at the event instant on the carried seed (boxed — joins are
+    /// rare, and the config must not widen every heap event).
+    Join(Box<MachineConfig>, u64),
+    /// Membership: gracefully drain this shard — stop routing to it,
+    /// let its in-flight execution finish untouched, redistribute its
+    /// *queued* work through admission. A drain of a shard that is
+    /// already down (crashed or drained), or that has not joined yet,
+    /// is a no-op.
+    Drain(usize),
+    /// Recurring autoscaler evaluation (armed only when
+    /// [`ClusterOptions::autoscaler`] is set). Like
+    /// [`EventKind::BatchFlush`], a terminal tick — nothing pending,
+    /// every machine idle — must not advance the virtual clock, so the
+    /// makespan stays the instant real work last moved.
+    AutoscaleEval,
 }
 
 #[derive(Debug, Clone)]
@@ -375,6 +415,14 @@ pub struct Cluster {
     /// counted individually; a request moved by two crashes counts
     /// twice).
     requeued: usize,
+    /// Joins scheduled but not necessarily fired yet: lets fault
+    /// injection target a shard index that will only exist once its
+    /// join event fires (the scenario layer validates against
+    /// `machines + joins`).
+    joins_scheduled: usize,
+    /// Autoscaler runtime state (see [`super::elastic`]); `None`
+    /// without a configured policy.
+    scaler: Option<Autoscaler>,
 }
 
 impl Cluster {
@@ -441,7 +489,8 @@ impl Cluster {
         }
         // Nothing is queued yet, so every steal leaf starts disabled.
         let steal_idx = TournamentTree::new(n, Ranking::Max);
-        Cluster {
+        let scaler = opts.autoscaler.clone().map(Autoscaler::new);
+        let mut cluster = Cluster {
             shards,
             admissions,
             opts,
@@ -460,7 +509,14 @@ impl Cluster {
             down,
             parked: Vec::new(),
             requeued: 0,
+            joins_scheduled: 0,
+            scaler,
+        };
+        if let Some(scaler) = &cluster.scaler {
+            let first = scaler.policy.eval_interval_s;
+            cluster.push_event(first, EventKind::AutoscaleEval);
         }
+        cluster
     }
 
     /// Recompute shard `s`'s keys in both front-end indexes — called
@@ -650,19 +706,32 @@ impl Cluster {
         self.events.push(Reverse(Event { time, seq, kind }));
     }
 
+    /// Largest shard index a scheduled fault may legally name: every
+    /// constructed shard plus every join already scheduled (a joined
+    /// shard exists only once its event fires, but faults targeting it
+    /// must be schedulable up front — the scenario layer does exactly
+    /// that). A fault that fires before its target shard has joined is
+    /// a deterministic no-op.
+    fn addressable_shards(&self) -> usize {
+        self.shards.len() + self.joins_scheduled
+    }
+
     /// Schedule shard `shard` to crash at virtual time `at` (clamped to
     /// the present, like every submission). Queued and in-flight work
     /// re-enters admission when the event fires; crashing a shard that
-    /// is already down is a no-op.
+    /// is already down is a no-op. `shard` may name a shard whose
+    /// [`Cluster::inject_join`] is scheduled but has not fired yet.
     pub fn inject_crash(&mut self, at: f64, shard: usize) {
-        assert!(shard < self.shards.len(), "no shard {shard}");
+        assert!(shard < self.addressable_shards(), "no shard {shard}");
         self.push_event(at.max(self.clock), EventKind::Crash(shard));
     }
 
     /// Schedule shard `shard` to restart at virtual time `at` (no-op if
-    /// the shard is up when the event fires).
+    /// the shard is up when the event fires). Restarting a *drained*
+    /// shard revives it: a fresh provisioned span starts on the
+    /// machine-seconds meter and routing resumes.
     pub fn inject_restart(&mut self, at: f64, shard: usize) {
-        assert!(shard < self.shards.len(), "no shard {shard}");
+        assert!(shard < self.addressable_shards(), "no shard {shard}");
         self.push_event(at.max(self.clock), EventKind::Restart(shard));
     }
 
@@ -672,12 +741,36 @@ impl Cluster {
     /// that routes work to it; a later event with `1 / factor` restores
     /// the original rate, since scales compose multiplicatively).
     pub fn inject_slowdown(&mut self, at: f64, shard: usize, factor: f64) {
-        assert!(shard < self.shards.len(), "no shard {shard}");
+        assert!(shard < self.addressable_shards(), "no shard {shard}");
         assert!(
             factor.is_finite() && factor > 0.0,
             "rate factor must be finite and positive, got {factor}"
         );
         self.push_event(at.max(self.clock), EventKind::RateScale(shard, factor));
+    }
+
+    /// Schedule a new shard running `cfg` to join the cluster at
+    /// virtual time `at`. The machine is profiled when the event fires
+    /// (installation happens at provision time) on `profile_seed`, so
+    /// replays are exact; the new shard takes the next free index —
+    /// joins are numbered in event order (time, then injection order).
+    pub fn inject_join(&mut self, at: f64, cfg: MachineConfig, profile_seed: u64) {
+        self.joins_scheduled += 1;
+        self.push_event(
+            at.max(self.clock),
+            EventKind::Join(Box::new(cfg), profile_seed),
+        );
+    }
+
+    /// Schedule shard `shard` to drain gracefully at virtual time `at`:
+    /// routing stops, the in-flight execution (if any) finishes
+    /// untouched, queued work redistributes through front-end admission
+    /// with original arrivals and SLO budgets. Draining a shard that is
+    /// already down is a no-op; like [`Cluster::inject_crash`], `shard`
+    /// may name a scheduled-but-not-yet-fired join.
+    pub fn inject_drain(&mut self, at: f64, shard: usize) {
+        assert!(shard < self.addressable_shards(), "no shard {shard}");
+        self.push_event(at.max(self.clock), EventKind::Drain(shard));
     }
 
     /// Gate one work unit — a plain request (`members == 1`) or a fused
@@ -1229,17 +1322,187 @@ impl Cluster {
     /// A [`EventKind::Restart`] fired: shard `s` rejoins at `now`.
     /// Requests parked behind a total outage re-enter admission, and a
     /// shard-free event lets the shard pick up routed or stealable work
-    /// immediately.
+    /// immediately. A *drained* shard revives the same way — its
+    /// machine-seconds meter starts a fresh provisioned span
+    /// ([`ExecutorShard::unretire`]; a no-op after a crash, which never
+    /// stopped the meter).
     fn restart_shard(&mut self, s: usize, now: f64) {
         if !self.down[s] {
             return;
         }
         self.down[s] = false;
+        self.shards[s].unretire(now);
         self.reindex(s);
         for (req, arrival) in std::mem::take(&mut self.parked) {
             self.admit_request(now, req, arrival);
         }
         self.push_event(now, EventKind::ShardFree(s));
+    }
+
+    /// A [`EventKind::Join`] fired: provision a new shard running `cfg`
+    /// at virtual time `now`. Installation happens here — the machine
+    /// is profiled on `profile_seed` (deterministic), the shard starts
+    /// with a cold [`super::PlanCache`] and, under
+    /// [`GatePolicy::PerShard`], its own admission gate over its own
+    /// fitted model. Both tournament-tree indexes are rebuilt one leaf
+    /// wider and every key re-derived — a rare O(shards log shards)
+    /// event that keeps the steady state allocation-free. A join ends a
+    /// total outage the way a restart does: parked requests re-enter
+    /// admission, and a shard-free event lets the newcomer steal backlog
+    /// immediately.
+    fn join_shard(&mut self, cfg: &MachineConfig, profile_seed: u64, now: f64) -> usize {
+        let idx = self.shards.len();
+        let pipeline = Pipeline::for_simulated_machine(cfg, profile_seed);
+        let mut shard = ExecutorShard::from_pipeline(idx, pipeline, &self.opts.shard);
+        shard.provision(now);
+        if self.opts.gate == GatePolicy::PerShard {
+            self.admissions.push(Admission::new(
+                shard.model.clone(),
+                self.opts.shard.min_gain,
+                self.opts.shard.overhead_s,
+                self.opts.shard.gate_capacity,
+            ));
+        }
+        self.shards.push(shard);
+        self.down.push(false);
+        // One source of truth for the shard count, as at construction.
+        self.opts.shards = self.shards.len();
+        let n = self.shards.len();
+        self.route_idx = TournamentTree::new(n, Ranking::Min);
+        self.steal_idx = TournamentTree::new(n, Ranking::Max);
+        for s in 0..n {
+            self.reindex(s);
+        }
+        for (req, arrival) in std::mem::take(&mut self.parked) {
+            self.admit_request(now, req, arrival);
+        }
+        self.push_event(now, EventKind::ShardFree(idx));
+        idx
+    }
+
+    /// A [`EventKind::Drain`] fired: gracefully retire shard `s` at
+    /// virtual time `now`. The voluntary counterpart of
+    /// [`Cluster::crash_shard`], with the crucial difference that
+    /// **zero in-flight work is displaced**: completion records on `s`
+    /// (including any with `finish > now`) stand, the machine runs its
+    /// current execution to the end (its machine-seconds meter stops at
+    /// that finish — [`ExecutorShard::retire`]), and only *queued* work
+    /// is redistributed through [`Cluster::admit_request`] with its
+    /// original arrival time and SLO budget (queued batch carriers
+    /// disband; members re-admit solo). The down flag reuses every
+    /// routing/wake/steal exclusion a crash uses, so no new work can
+    /// land; the shard's eventual shard-free event is a no-op.
+    fn drain_shard(&mut self, s: usize, now: f64) {
+        if self.down[s] {
+            return;
+        }
+        self.down[s] = true;
+        self.shards[s].retire(now);
+        self.reindex(s);
+        let drained = self.shards[s].drain_queue();
+        let displaced: usize = drained
+            .iter()
+            .map(|q| q.batch.as_ref().map_or(1, |b| b.members.len()))
+            .sum();
+        self.shards[s].note_requeued(displaced);
+        self.requeued += displaced;
+        for q in drained {
+            match q.batch {
+                Some(b) => {
+                    for m in &b.members {
+                        self.admit_request(now, m.req, m.arrival);
+                    }
+                    self.former.recycle(b.members);
+                }
+                None => self.admit_request(now, q.req, q.arrival),
+            }
+        }
+    }
+
+    /// Mean pressure across live shards at `now`: residual execution
+    /// plus queued backlog, in predicted seconds — the autoscaler's
+    /// load signal. Infinite when nothing is live (a total outage is
+    /// maximal pressure).
+    fn mean_live_pressure(&self, now: f64) -> f64 {
+        let mut live = 0usize;
+        let mut pressure = 0.0;
+        for (s, sh) in self.shards.iter().enumerate() {
+            if self.down[s] {
+                continue;
+            }
+            live += 1;
+            pressure += (sh.free_at() - now).max(0.0) + sh.backlog_s();
+        }
+        if live == 0 {
+            f64::INFINITY
+        } else {
+            pressure / live as f64
+        }
+    }
+
+    /// An [`EventKind::AutoscaleEval`] fired mid-run: read the load
+    /// signals and move membership at most one shard per evaluation
+    /// (see [`super::elastic`] for the policy). Scale-up provisions the
+    /// first pool entry that is not live — never-joined entries join
+    /// fresh, drained entries revive. Scale-down needs a full
+    /// hysteresis streak and drains the lowest-pressure live pool
+    /// shard; construction-time shards are never drained.
+    fn autoscale_eval(&mut self, now: f64) {
+        // Take the state out so the handler can call membership methods
+        // on `self`; put it back at the end.
+        let Some(mut scaler) = self.scaler.take() else {
+            return;
+        };
+        let pressure = self.mean_live_pressure(now);
+        let denied_now = self.served.iter().filter(|r| r.mode.is_denied()).count();
+        let deadline_risk = denied_now > scaler.last_denied;
+        scaler.last_denied = denied_now;
+        if pressure > scaler.policy.scale_up_pressure_s || deadline_risk {
+            scaler.low_streak = 0;
+            let slot = (0..scaler.policy.pool.len()).find(|&k| match scaler.pool_shard[k] {
+                None => true,
+                Some(s) => self.down[s],
+            });
+            if let Some(k) = slot {
+                match scaler.pool_shard[k] {
+                    None => {
+                        let cfg = scaler.policy.pool[k].clone();
+                        let seed = scaler.policy.profile_seed.wrapping_add(k as u64);
+                        scaler.pool_shard[k] = Some(self.join_shard(&cfg, seed, now));
+                    }
+                    Some(s) => self.restart_shard(s, now),
+                }
+            }
+        } else if pressure < scaler.policy.scale_down_pressure_s {
+            scaler.low_streak += 1;
+            if scaler.low_streak >= scaler.policy.scale_down_evals {
+                scaler.low_streak = 0;
+                // Lowest-pressure live pool shard; ties to the lowest
+                // index (deterministic).
+                let mut pick: Option<(usize, f64)> = None;
+                for slot in scaler.pool_shard.iter().flatten() {
+                    let s = *slot;
+                    if self.down[s] {
+                        continue;
+                    }
+                    let sh = &self.shards[s];
+                    let p = (sh.free_at() - now).max(0.0) + sh.backlog_s();
+                    let better = match pick {
+                        None => true,
+                        Some((_, best)) => p < best,
+                    };
+                    if better {
+                        pick = Some((s, p));
+                    }
+                }
+                if let Some((s, _)) = pick {
+                    self.drain_shard(s, now);
+                }
+            }
+        } else {
+            scaler.low_streak = 0;
+        }
+        self.scaler = Some(scaler);
     }
 
     fn dispatch_on(&mut self, s: usize, at: f64) {
@@ -1308,6 +1571,25 @@ impl Cluster {
             }
             return true;
         }
+        if let EventKind::AutoscaleEval = ev.kind {
+            // Terminal tick: nothing pending anywhere and every machine
+            // idle. Like a stale batch timer, it must not advance the
+            // clock (the session's real work ended earlier — the
+            // makespan, and every live shard's machine-seconds span,
+            // close at that instant) and it does not re-arm, so the
+            // event heap drains and the run completes.
+            let idle = self.pending() == 0 && self.shards.iter().all(|s| s.free_at() <= ev.time);
+            if idle {
+                return true;
+            }
+            self.clock = self.clock.max(ev.time);
+            self.autoscale_eval(ev.time);
+            if let Some(scaler) = &self.scaler {
+                let next = ev.time + scaler.policy.eval_interval_s;
+                self.push_event(next, EventKind::AutoscaleEval);
+            }
+            return true;
+        }
         self.clock = self.clock.max(ev.time);
         match ev.kind {
             EventKind::Arrival(req) => {
@@ -1318,10 +1600,38 @@ impl Cluster {
                     self.admit_request(ev.time, req, ev.time);
                 }
             }
-            EventKind::BatchFlush(_) => unreachable!("handled before the clock advance"),
-            EventKind::Crash(s) => self.crash_shard(s, ev.time),
-            EventKind::Restart(s) => self.restart_shard(s, ev.time),
-            EventKind::RateScale(s, factor) => self.shards[s].sim.scale_rates(factor),
+            EventKind::BatchFlush(_) | EventKind::AutoscaleEval => {
+                unreachable!("handled before the clock advance")
+            }
+            // Faults may legally target a scheduled join that has not
+            // fired yet (see `addressable_shards`); firing before the
+            // target exists is a deterministic no-op.
+            EventKind::Crash(s) => {
+                if s < self.shards.len() {
+                    self.crash_shard(s, ev.time);
+                }
+            }
+            EventKind::Restart(s) => {
+                if s < self.shards.len() {
+                    self.restart_shard(s, ev.time);
+                }
+            }
+            EventKind::RateScale(s, factor) => {
+                if s < self.shards.len() {
+                    self.shards[s].sim.scale_rates(factor);
+                }
+            }
+            EventKind::Join(cfg, profile_seed) => {
+                // The scheduled join materializes: it stops being a
+                // promise and becomes a real shard index.
+                self.joins_scheduled -= 1;
+                self.join_shard(&cfg, profile_seed, ev.time);
+            }
+            EventKind::Drain(s) => {
+                if s < self.shards.len() {
+                    self.drain_shard(s, ev.time);
+                }
+            }
             EventKind::Wake(s) => {
                 if !self.down[s]
                     && self.shards[s].free_at() <= ev.time
@@ -1442,13 +1752,20 @@ impl Cluster {
             denied,
             rejected,
             requeued: self.requeued,
+            machine_seconds: 0.0,
             shards: self.shards.iter().map(|s| s.stats()).collect(),
         };
-        for s in &self.shards {
+        for (i, s) in self.shards.iter().enumerate() {
             report.cache_hits += s.cache.hits;
             report.cache_misses += s.cache.misses;
             report.epoch_bumps += s.cache.invalidations;
             report.replans += s.replans();
+            // Close every still-provisioned span at the report clock
+            // (shard-local stats closed it at the shard's own free_at,
+            // which undercounts idle tails).
+            let provisioned = s.provisioned_s(self.clock);
+            report.shards[i].provisioned_s = provisioned;
+            report.machine_seconds += provisioned;
         }
         report
     }

@@ -1,0 +1,146 @@
+//! Elastic membership policy: the autoscaler that provisions and
+//! drains shards against offered load.
+//!
+//! PR 6's crash/restart faults cover *involuntary* churn; this module
+//! is the voluntary kind — the cluster breathing with load the way the
+//! co-scheduling literature frames as pack-and-resize (Aupy et al.)
+//! and HTS's dynamic reallocation of resources between queued tasks
+//! (Hegde et al.). The mechanism lives on the cluster event loop
+//! ([`super::Cluster::inject_join`] / [`super::Cluster::inject_drain`],
+//! or the recurring autoscaler-evaluation event a configured
+//! [`AutoscalerPolicy`] arms); this module owns the *policy*:
+//!
+//! * **scale up** when the mean shard pressure (residual execution +
+//!   queued backlog, in predicted seconds) crosses
+//!   [`AutoscalerPolicy::scale_up_pressure_s`], or when admission
+//!   denied a deadline since the last evaluation (deadline-risk: the
+//!   gate is already turning away SLOs, so capacity is short *now*).
+//!   One shard per evaluation, taken from the configured preset
+//!   [`AutoscalerPolicy::pool`] — a never-provisioned entry joins
+//!   fresh (profiled at provision time on its own seed, cold plan
+//!   cache); a previously drained entry is revived instead, keeping
+//!   its warmed cache and installation-time profile;
+//! * **scale down** when mean pressure has stayed below
+//!   [`AutoscalerPolicy::scale_down_pressure_s`] for
+//!   [`AutoscalerPolicy::scale_down_evals`] consecutive evaluations
+//!   with no new denials: the lowest-pressure live *pool* shard drains
+//!   gracefully (never a static construction-time shard, so the
+//!   configured floor capacity is untouchable).
+//!
+//! Every decision reads only deterministic cluster state at a
+//! deterministic virtual instant, so autoscaled runs replay
+//! byte-identically like everything else on the event loop. The bill
+//! lands on [`super::ServiceReport`]: `machine_seconds` (what the
+//! cluster paid for) against [`super::ServiceReport::utilization`] and
+//! the deadline-hit rate (what it bought) — the trade-off
+//! `ci/elasticity_floor.json` gates in CI (autoscaled must match the
+//! statically-overprovisioned hit rate at materially fewer
+//! machine-seconds on the diurnal trace).
+
+use crate::config::MachineConfig;
+
+/// Autoscaler configuration (see the module docs for the policy it
+/// drives). Attach one via
+/// [`super::ClusterOptions::autoscaler`]; `None` (the default)
+/// reproduces the fixed-membership behaviour exactly — no evaluation
+/// events are ever armed.
+#[derive(Debug, Clone)]
+pub struct AutoscalerPolicy {
+    /// The preset machines the autoscaler may provision, in priority
+    /// order. Each entry is at most one live shard at a time; a
+    /// drained entry can be revived.
+    pub pool: Vec<MachineConfig>,
+    /// Virtual seconds between policy evaluations (must be finite and
+    /// positive). The first evaluation fires one interval into the
+    /// run.
+    pub eval_interval_s: f64,
+    /// Scale up when mean live-shard pressure (residual execution +
+    /// queued backlog, predicted seconds) exceeds this.
+    pub scale_up_pressure_s: f64,
+    /// Arm scale-down only while mean pressure sits below this.
+    pub scale_down_pressure_s: f64,
+    /// Consecutive below-threshold evaluations required before one
+    /// pool shard drains — the hysteresis that keeps a diurnal valley
+    /// from flapping.
+    pub scale_down_evals: u32,
+    /// Base seed for profiling provisioned machines: pool entry `k`
+    /// profiles on `profile_seed + k`, so autoscaled membership is as
+    /// replayable as construction-time membership.
+    pub profile_seed: u64,
+}
+
+impl AutoscalerPolicy {
+    /// A policy over `pool` with neutral thresholds: evaluate every
+    /// virtual second, scale up above 2 s of mean pressure, drain
+    /// after 3 consecutive evaluations under 0.25 s. Callers tune the
+    /// thresholds to their trace's service-time unit.
+    pub fn new(pool: Vec<MachineConfig>) -> Self {
+        AutoscalerPolicy {
+            pool,
+            eval_interval_s: 1.0,
+            scale_up_pressure_s: 2.0,
+            scale_down_pressure_s: 0.25,
+            scale_down_evals: 3,
+            profile_seed: 0x504f_4153_u64, // "POAS"
+        }
+    }
+}
+
+/// Runtime autoscaler state the cluster carries between evaluation
+/// events. Constructed from the policy at cluster build time; all
+/// mutation happens inside the cluster's evaluation handler.
+#[derive(Debug, Clone)]
+pub(crate) struct Autoscaler {
+    pub(crate) policy: AutoscalerPolicy,
+    /// Shard index each pool entry is provisioned as (`None` until its
+    /// first join). An entry with a shard index may still be drained —
+    /// the cluster's down flag is the live/retired truth.
+    pub(crate) pool_shard: Vec<Option<usize>>,
+    /// Consecutive evaluations below the scale-down threshold.
+    pub(crate) low_streak: u32,
+    /// Denial count at the previous evaluation (deadline-risk signal:
+    /// any increase means admission is already refusing SLOs).
+    pub(crate) last_denied: usize,
+}
+
+impl Autoscaler {
+    pub(crate) fn new(policy: AutoscalerPolicy) -> Self {
+        assert!(
+            policy.eval_interval_s.is_finite() && policy.eval_interval_s > 0.0,
+            "autoscaler eval_interval_s must be finite and positive, got {}",
+            policy.eval_interval_s
+        );
+        let slots = policy.pool.len();
+        Autoscaler {
+            policy,
+            pool_shard: vec![None; slots],
+            low_streak: 0,
+            last_denied: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn policy_defaults_are_sane() {
+        let p = AutoscalerPolicy::new(vec![presets::mach1(), presets::gpu_node()]);
+        assert_eq!(p.pool.len(), 2);
+        assert!(p.eval_interval_s > 0.0);
+        assert!(p.scale_up_pressure_s > p.scale_down_pressure_s);
+        let a = Autoscaler::new(p);
+        assert_eq!(a.pool_shard, vec![None, None]);
+        assert_eq!(a.low_streak, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_interval_is_rejected() {
+        let mut p = AutoscalerPolicy::new(vec![presets::mach1()]);
+        p.eval_interval_s = 0.0;
+        let _ = Autoscaler::new(p);
+    }
+}

@@ -57,13 +57,26 @@
 //! * [`arrivals`] — online arrival processes: deterministic Poisson
 //!   traces ([`PoissonArrivals`]), per-class Poisson mixes
 //!   ([`MixedArrivals`]), bursty Markov-modulated on/off streams
-//!   ([`OnOffArrivals`]) and replayable fixed traces, so reports
+//!   ([`OnOffArrivals`]), scheduled piecewise-Poisson phase cycles
+//!   ([`PhasedArrivals`] — diurnal day/night and ramp profiles with a
+//!   deterministic timeline) and replayable fixed traces, so reports
 //!   measure queueing delay and p50/p99 sojourn time — per tier —
 //!   under offered load instead of draining a batch;
+//! * [`elastic`] — elastic membership: the cluster's shard *set*
+//!   changes mid-run through join events (a new shard is profiled at
+//!   provision time, gets its own gate and a cold cache, and both
+//!   tournament trees grow a leaf) and graceful drains (routing stops,
+//!   in-flight work finishes untouched, queued work redistributes
+//!   through admission), plus the [`AutoscalerPolicy`] that drives
+//!   both from predicted backlog and deadline-risk against a preset
+//!   machine pool — billed as machine-seconds and utilization on the
+//!   [`ServiceReport`];
 //! * [`scenario`] — declarative fault-injection scenarios: a TOML
-//!   file describing the cluster, the arrival mix and a schedule of
-//!   injected faults (shard crashes/restarts, straggler drift, load
-//!   spikes), executed deterministically on the cluster's event loop
+//!   file describing the cluster, the arrival mix, an optional
+//!   autoscaler pool and a schedule of injected faults (shard
+//!   crashes/restarts, straggler drift, load spikes, membership joins
+//!   and graceful drains), executed deterministically on the cluster's
+//!   event loop
 //!   via [`scenario::Scenario`] and folded into stable JSON digests
 //!   ([`scenario::digest`]) that the `scenario_runner` binary diffs
 //!   against the blessed corpus in CI (see `docs/scenarios.md`);
@@ -99,6 +112,7 @@ pub mod arrivals;
 pub mod batch;
 pub mod cache;
 pub mod cluster;
+pub mod elastic;
 pub mod index;
 pub mod qos;
 pub mod queue;
@@ -108,10 +122,14 @@ pub mod server;
 pub mod shard;
 
 pub use admission::Admission;
-pub use arrivals::{fixed_trace, Arrival, ClassLoad, MixedArrivals, OnOffArrivals, PoissonArrivals};
+pub use arrivals::{
+    fixed_trace, Arrival, ClassLoad, MixedArrivals, OnOffArrivals, Phase, PhasedArrivals,
+    PoissonArrivals,
+};
 pub use batch::{BatchFormer, BatchMember, BatchPolicy, BatchWindow, FusedBatch, ShapeClass};
 pub use cache::{LruMap, PlanCache};
 pub use cluster::{Cluster, ClusterOptions, GatePolicy, HeterogeneousSpec, RoutePolicy};
+pub use elastic::AutoscalerPolicy;
 pub use index::{Ranking, TournamentTree};
 pub use qos::{DeadlinePolicy, QosClass};
 pub use queue::{QueuePolicy, QueuedRequest, RequestQueue};

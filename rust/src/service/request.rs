@@ -259,6 +259,13 @@ pub struct ShardStats {
     pub predicted_s: f64,
     /// Sum of realized execution seconds over the same requests.
     pub realized_s: f64,
+    /// Machine-seconds this shard was provisioned for: from its
+    /// provision instant (0 for construction-time shards, the join
+    /// instant for scale-outs) to its drain-retirement instant, or the
+    /// report clock while still live. The elasticity bill — what a
+    /// statically-overprovisioned cluster pays for and an autoscaled
+    /// one saves.
+    pub provisioned_s: f64,
 }
 
 impl ShardStats {
@@ -326,11 +333,18 @@ pub struct ServiceReport {
     /// Requests rejected at planning time ([`ExecMode::Rejected`]);
     /// always equals the count of `Rejected` records in `served`.
     pub rejected: usize,
-    /// Requests re-admitted after a shard crash. Each displaced request
-    /// counts once per crash that moved it, so this can exceed the
-    /// number of distinct requests touched by faults; it is **not**
-    /// derivable from `served`, which records only final outcomes.
+    /// Requests re-admitted after a shard crash or graceful drain. Each
+    /// displaced request counts once per fault that moved it, so this
+    /// can exceed the number of distinct requests touched by faults; it
+    /// is **not** derivable from `served`, which records only final
+    /// outcomes.
     pub requeued: usize,
+    /// Total machine-seconds provisioned across shards (the sum of
+    /// [`ShardStats::provisioned_s`], precomputed at report time with
+    /// every live span closed at `makespan`). Under elastic membership
+    /// this is what the cluster *pays for*; [`ShardStats::busy_s`] is
+    /// what it *uses* — see [`ServiceReport::utilization`].
+    pub machine_seconds: f64,
     /// Per-shard accounting (shard order; one entry for the classic
     /// single-machine [`super::Server`]).
     pub shards: Vec<ShardStats>,
@@ -385,6 +399,19 @@ impl ServiceReport {
             0.0
         } else {
             self.executed().count() as f64 / self.makespan
+        }
+    }
+
+    /// Fraction of provisioned machine-seconds actually spent
+    /// executing: `Σ busy_s / machine_seconds`. The
+    /// utilization-vs-SLO trade-off an autoscaler navigates — an
+    /// overprovisioned cluster buys its deadline-hit rate with a low
+    /// figure here; 0 before any machine time was provisioned.
+    pub fn utilization(&self) -> f64 {
+        if self.machine_seconds <= 0.0 {
+            0.0
+        } else {
+            self.shards.iter().map(|s| s.busy_s).sum::<f64>() / self.machine_seconds
         }
     }
 
@@ -581,6 +608,7 @@ impl ServiceReport {
                 "model",
                 "dispatches",
                 "busy",
+                "provisioned",
                 "stolen",
                 "predicted",
                 "realized",
@@ -593,6 +621,7 @@ impl ServiceReport {
                 format!("{:016x}", s.model_fp),
                 s.dispatches.to_string(),
                 crate::report::secs(s.busy_s),
+                crate::report::secs(s.provisioned_s),
                 s.stolen.to_string(),
                 crate::report::secs(s.predicted_s),
                 crate::report::secs(s.realized_s),
@@ -685,6 +714,7 @@ mod tests {
             denied: 0,
             rejected: 0,
             requeued: 0,
+            machine_seconds: 3.0,
             shards: vec![ShardStats {
                 dispatches: 2,
                 busy_s: 3.0,
@@ -697,6 +727,7 @@ mod tests {
                 model_fp: 0xDEAD_BEEF,
                 predicted_s: 2.5,
                 realized_s: 3.0,
+                provisioned_s: 3.0,
             }],
         }
     }
@@ -720,6 +751,21 @@ mod tests {
         assert_eq!(r.throughput_rps(), 0.0);
         assert_eq!(r.cache_hit_rate(), 0.0);
         assert_eq!(r.latency_percentile(99.0), 0.0);
+        assert_eq!(r.utilization(), 0.0);
+    }
+
+    #[test]
+    fn utilization_is_busy_over_provisioned() {
+        let mut r = report();
+        // One shard busy 3.0s of 3.0 provisioned machine-seconds.
+        assert!((r.utilization() - 1.0).abs() < 1e-12);
+        // An idle shard provisioned for the same span halves it.
+        r.machine_seconds += 3.0;
+        r.shards.push(ShardStats {
+            provisioned_s: 3.0,
+            ..ShardStats::default()
+        });
+        assert!((r.utilization() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -50,6 +50,11 @@ pub fn digest(report: &ServiceReport) -> String {
         num(report.placement_quality())
     ));
     out.push_str(&format!(",\"makespan_s\":{}", num(report.makespan)));
+    out.push_str(&format!(
+        ",\"machine_seconds\":{}",
+        num(report.machine_seconds)
+    ));
+    out.push_str(&format!(",\"utilization\":{}", num(report.utilization())));
     out.push_str(&format!(",\"replans\":{}", report.replans));
     out.push_str(&format!(",\"epoch_bumps\":{}", report.epoch_bumps));
 
@@ -82,9 +87,15 @@ pub fn digest(report: &ServiceReport) -> String {
         let served: usize = s.served_by_class.iter().sum();
         out.push_str(&format!(
             "{{\"dispatches\":{},\"served\":{},\"stolen\":{},\"batches\":{},\
-             \"rejected\":{},\"requeued\":{},\"busy_s\":{}}}",
-            s.dispatches, served, s.stolen, s.batches, s.rejected, s.requeued,
+             \"rejected\":{},\"requeued\":{},\"busy_s\":{},\"provisioned_s\":{}}}",
+            s.dispatches,
+            served,
+            s.stolen,
+            s.batches,
+            s.rejected,
+            s.requeued,
             num(s.busy_s),
+            num(s.provisioned_s),
         ));
     }
     out.push_str("]}");
@@ -106,6 +117,8 @@ mod tests {
         assert!(d.contains("\"placement_quality\":1.000000"));
         assert!(!d.contains("NaN"));
         assert!(d.contains("\"served\":0"));
+        assert!(d.contains("\"machine_seconds\":0.000000"));
+        assert!(d.contains("\"utilization\":0.000000"));
         assert!(d.contains("\"classes\":{\"interactive\":"));
         assert!(d.contains("\"shards\":[]"));
     }

@@ -10,13 +10,19 @@
 //!   work stealing, gate policy, deadline policy and admission-time
 //!   batching;
 //! * **the offered load** — `[[arrivals]]` streams (deterministic
-//!   Poisson or bursty on/off, per QoS class, each with a shape menu
-//!   and optional SLO) and `[[request]]` entries for hand-placed
-//!   arrivals;
+//!   Poisson, bursty on/off, or scheduled piecewise-Poisson phase
+//!   cycles for diurnal day/night profiles, per QoS class, each with a
+//!   shape menu and optional SLO) and `[[request]]` entries for
+//!   hand-placed arrivals;
 //! * **the event schedule** — `[[fault]]` tables injecting shard
 //!   crashes and restarts, straggler slowdowns (realized rates drift
-//!   away from the fitted model mid-run) and load spikes at given
-//!   virtual times.
+//!   away from the fitted model mid-run), load spikes, and membership
+//!   events — scale-out joins (a new preset machine is profiled and
+//!   inserted mid-run) and graceful drains — at given virtual times;
+//! * **the autoscaler** — an optional `[[autoscaler]]` table arming
+//!   the elastic policy of [`crate::service::elastic`] with a preset
+//!   machine pool and pressure thresholds, so membership follows the
+//!   offered load instead of a fixed schedule.
 //!
 //! [`Scenario::run`] realizes the streams into one merged arrival
 //! trace, builds the [`Cluster`] and executes everything on the same
@@ -49,7 +55,9 @@ pub use digest::digest;
 
 use crate::config::MachineConfig;
 use crate::error::{Error, Result};
-use crate::service::arrivals::{Arrival, ClassLoad, MixedArrivals, OnOffArrivals};
+use crate::service::arrivals::{
+    Arrival, ClassLoad, MixedArrivals, OnOffArrivals, Phase, PhasedArrivals,
+};
 use crate::service::cluster::{Cluster, ClusterOptions};
 use crate::service::qos::QosClass;
 use crate::service::request::ServiceReport;
@@ -78,6 +86,14 @@ pub enum StreamKind {
         mean_on_s: f64,
         /// Mean OFF-phase duration, virtual seconds.
         mean_off_s: f64,
+    },
+    /// A scheduled piecewise-Poisson phase cycle ([`PhasedArrivals`]):
+    /// fixed-duration phases (e.g. day/night) cycling for as long as
+    /// the requested arrival count lasts. Like on/off, the scenario's
+    /// class and SLO are stamped onto the realized arrivals.
+    Phased {
+        /// The repeating phase schedule, in order.
+        phases: Vec<Phase>,
     },
 }
 
@@ -161,6 +177,30 @@ pub enum Fault {
         /// Shapes drawn uniformly per burst arrival.
         menu: Vec<(GemmSize, u32)>,
     },
+    /// Scale-out: a new shard built from `machine` joins the cluster at
+    /// `at` — profiled at provision time, own admission gate, cold plan
+    /// cache (see [`Cluster::inject_join`]). Joined shards are numbered
+    /// after the construction-time ones, in `[[fault]]` document order.
+    Join {
+        /// Virtual time the shard comes online.
+        at: f64,
+        /// The machine to provision.
+        machine: MachineConfig,
+        /// Profiling seed; `None` derives one deterministically from
+        /// the scenario seed and the join's ordinal.
+        seed: Option<u64>,
+    },
+    /// Graceful drain: shard `shard` leaves the routing set at `at`,
+    /// in-flight work runs to completion, and queued work redistributes
+    /// through front-end admission (see [`Cluster::inject_drain`]).
+    /// Unlike [`Fault::Crash`], zero in-flight work is displaced.
+    Drain {
+        /// Virtual time the drain starts.
+        at: f64,
+        /// Shard index (may target a not-yet-joined shard; if the drain
+        /// fires before its join, it is a deterministic no-op).
+        shard: usize,
+    },
 }
 
 /// A parsed scenario: cluster + offered load + fault schedule.
@@ -223,6 +263,18 @@ impl Scenario {
                         deadline_s: s.deadline_s,
                     };
                     all.extend(MixedArrivals::new(vec![load], seed).trace(s.count));
+                }
+                StreamKind::Phased { ref phases } => {
+                    // Like on/off, `PhasedArrivals` realizes
+                    // Standard/no-SLO arrivals; stamp the stream's tier
+                    // and deadline on afterwards.
+                    let mut t =
+                        PhasedArrivals::new(phases.clone(), s.menu.clone(), seed).trace(s.count);
+                    for a in &mut t {
+                        a.class = s.class;
+                        a.deadline_s = s.deadline_s;
+                    }
+                    all.extend(t);
                 }
                 StreamKind::OnOff {
                     rate_on_rps,
@@ -288,16 +340,36 @@ impl Scenario {
     }
 
     /// Build the cluster and schedule the heap faults (crash, restart,
-    /// slowdown). Spikes live in [`Scenario::trace`] instead. The
-    /// returned cluster has no arrivals submitted yet.
+    /// slowdown, join, drain). Spikes live in [`Scenario::trace`]
+    /// instead. The returned cluster has no arrivals submitted yet.
+    ///
+    /// Joins are scheduled first so crash/restart/slow/drain faults may
+    /// target the shard indexes the joins will occupy
+    /// (`machines.len()..`); a fault that fires before its target has
+    /// joined is a deterministic no-op.
     pub fn build(&self) -> Cluster {
         let mut cluster = Cluster::from_machines(&self.machines, self.seed, self.opts.clone());
+        let mut join_ordinal = 0u64;
+        for f in &self.faults {
+            if let Fault::Join { at, machine, seed } = f {
+                // Default profiling seed: domain-separated from both the
+                // construction-time shards (seed + i) and earlier joins.
+                let profile_seed = seed.unwrap_or_else(|| {
+                    self.seed
+                        .wrapping_add(self.machines.len() as u64)
+                        .wrapping_add(join_ordinal)
+                });
+                join_ordinal += 1;
+                cluster.inject_join(*at, machine.clone(), profile_seed);
+            }
+        }
         for f in &self.faults {
             match f {
                 Fault::Crash { at, shard } => cluster.inject_crash(*at, *shard),
                 Fault::Restart { at, shard } => cluster.inject_restart(*at, *shard),
                 Fault::Slow { at, shard, factor } => cluster.inject_slowdown(*at, *shard, *factor),
-                Fault::Spike { .. } => {}
+                Fault::Drain { at, shard } => cluster.inject_drain(*at, *shard),
+                Fault::Spike { .. } | Fault::Join { .. } => {}
             }
         }
         cluster
@@ -399,6 +471,62 @@ mod tests {
         let mut t2 = two.trace();
         t2.retain(|a| a.class == QosClass::Standard);
         assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn phased_stream_realizes_with_class_and_slo() {
+        let text = r#"
+            name = "phased"
+            seed = 3
+            [[shard]]
+            preset = "mach1"
+            [[arrivals]]
+            process = "phased"
+            phases = "20.0:0.5, 2.0:0.5"
+            class = "batch"
+            deadline_s = 4.0
+            count = 12
+            menu = "128"
+        "#;
+        let sc: Scenario = text.parse().unwrap();
+        assert!(matches!(
+            sc.streams[0].kind,
+            StreamKind::Phased { ref phases } if phases.len() == 2
+        ));
+        let t1 = sc.trace();
+        assert_eq!(t1.len(), 12);
+        assert!(t1
+            .iter()
+            .all(|a| a.class == QosClass::Batch && a.deadline_s == Some(4.0)));
+        assert_eq!(t1, sc.trace());
+    }
+
+    #[test]
+    fn membership_faults_schedule_and_conserve_requests() {
+        let text = r#"
+            name = "elastic"
+            seed = 9
+            [[shard]]
+            preset = "mach1"
+            [[arrivals]]
+            rate_rps = 200.0
+            count = 24
+            menu = "128, 192"
+            [[fault]]
+            kind = "join"
+            at = 0.0
+            preset = "mach2"
+            [[fault]]
+            kind = "drain"
+            at = 0.05
+            shard = 0
+        "#;
+        let sc: Scenario = text.parse().unwrap();
+        assert!(matches!(sc.faults[0], Fault::Join { seed: None, .. }));
+        assert!(matches!(sc.faults[1], Fault::Drain { shard: 0, .. }));
+        let report = sc.run();
+        // Every arrival is accounted for despite the membership churn.
+        assert_eq!(report.served.len(), 24);
     }
 
     #[test]

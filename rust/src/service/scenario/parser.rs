@@ -2,21 +2,23 @@
 //!
 //! Reuses [`crate::config::parser`]'s splitter so scenarios get the
 //! exact comment/string/number handling of machine configs, with the
-//! section headers `[[shard]]`, `[[arrivals]]`, `[[request]]` and
-//! `[[fault]]`. See `docs/scenarios.md` for the full schema and a
-//! worked example.
+//! section headers `[[shard]]`, `[[arrivals]]`, `[[request]]`,
+//! `[[fault]]` and `[[autoscaler]]`. See `docs/scenarios.md` for the
+//! full schema and a worked example.
 
 use super::{Fault, FixedRequest, Scenario, StreamKind, StreamSpec};
 use crate::config::parser::{get, num_or, req, split_sections, Section};
 use crate::config::{presets, MachineConfig};
 use crate::error::{Error, Result};
+use crate::service::arrivals::Phase;
 use crate::service::batch::{BatchPolicy, BatchWindow};
 use crate::service::cluster::{ClusterOptions, GatePolicy};
+use crate::service::elastic::AutoscalerPolicy;
 use crate::service::qos::{DeadlinePolicy, QosClass};
 use crate::service::queue::QueuePolicy;
 use crate::workload::GemmSize;
 
-const HEADERS: [&str; 4] = ["shard", "arrivals", "request", "fault"];
+const HEADERS: [&str; 5] = ["shard", "arrivals", "request", "fault", "autoscaler"];
 
 /// Parse one scenario document.
 pub(super) fn parse_scenario(text: &str) -> Result<Scenario> {
@@ -30,7 +32,7 @@ pub(super) fn parse_scenario(text: &str) -> Result<Scenario> {
         Some(v) => v.as_u64("seed")?,
         None => 0,
     };
-    let opts = parse_options(&top)?;
+    let mut opts = parse_options(&top)?;
 
     let mut machines = Vec::new();
     let mut streams = Vec::new();
@@ -42,6 +44,14 @@ pub(super) fn parse_scenario(text: &str) -> Result<Scenario> {
             "arrivals" => streams.push(parse_arrivals(sec)?),
             "request" => requests.push(parse_request(sec)?),
             "fault" => faults.push(parse_fault(sec)?),
+            "autoscaler" => {
+                if opts.autoscaler.is_some() {
+                    return Err(Error::Config(format!(
+                        "scenario `{name}`: at most one [[autoscaler]] table"
+                    )));
+                }
+                opts.autoscaler = Some(parse_autoscaler(sec)?);
+            }
             _ => unreachable!("split_sections only yields accepted headers"),
         }
     }
@@ -50,17 +60,23 @@ pub(super) fn parse_scenario(text: &str) -> Result<Scenario> {
             "scenario `{name}`: needs at least one [[shard]] table"
         )));
     }
+    // Faults may address shards the `[[fault]]` joins will create
+    // (numbered after the construction-time ones), so the bound
+    // includes the scheduled joins.
+    let addressable = machines.len()
+        + faults.iter().filter(|f| matches!(f, Fault::Join { .. })).count();
     for f in &faults {
         let shard = match f {
             Fault::Crash { shard, .. }
             | Fault::Restart { shard, .. }
-            | Fault::Slow { shard, .. } => *shard,
-            Fault::Spike { .. } => continue,
+            | Fault::Slow { shard, .. }
+            | Fault::Drain { shard, .. } => *shard,
+            Fault::Spike { .. } | Fault::Join { .. } => continue,
         };
-        if shard >= machines.len() {
+        if shard >= addressable {
             return Err(Error::Config(format!(
-                "scenario `{name}`: fault targets shard {shard} but the cluster has {} shards",
-                machines.len()
+                "scenario `{name}`: fault targets shard {shard} but the cluster has only \
+                 {addressable} addressable shards (including scheduled joins)"
             )));
         }
     }
@@ -161,7 +177,7 @@ fn parse_options(top: &Section) -> Result<ClusterOptions> {
     Ok(opts)
 }
 
-fn preset_config(name: &str) -> Result<MachineConfig> {
+fn preset_config(name: &str, what: &str) -> Result<MachineConfig> {
     match name {
         "mach1" => Ok(presets::mach1()),
         "mach2" => Ok(presets::mach2()),
@@ -169,7 +185,7 @@ fn preset_config(name: &str) -> Result<MachineConfig> {
         "cpu_node" => Ok(presets::cpu_node()),
         "xpu_node" => Ok(presets::xpu_node()),
         other => Err(Error::Config(format!(
-            "[[shard]]: unknown preset \"{other}\" (expected mach1, mach2, gpu_node, cpu_node \
+            "{what}: unknown preset \"{other}\" (expected mach1, mach2, gpu_node, cpu_node \
              or xpu_node)"
         ))),
     }
@@ -185,9 +201,86 @@ fn parse_shard(sec: &Section, machines: &mut Vec<MachineConfig>) -> Result<()> {
         return Err(Error::Config("[[shard]]: `count` must be >= 1".into()));
     }
     for _ in 0..count {
-        machines.push(preset_config(preset)?);
+        machines.push(preset_config(preset, "[[shard]]")?);
     }
     Ok(())
+}
+
+/// The pool DSL: comma-separated `preset*count` items, count
+/// defaulting to 1 — same shape as the menu DSL, over machine presets.
+fn parse_pool(raw: &str, what: &str) -> Result<Vec<MachineConfig>> {
+    let mut pool = Vec::new();
+    for item in raw.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        let (name, count) = match item.split_once('*') {
+            Some((n, c)) => {
+                let count = c.trim().parse::<usize>().map_err(|_| {
+                    Error::Config(format!("{what}: bad count `{c}` in pool item `{item}`"))
+                })?;
+                (n.trim(), count)
+            }
+            None => (item, 1),
+        };
+        if count == 0 {
+            return Err(Error::Config(format!(
+                "{what}: count must be >= 1 in pool item `{item}`"
+            )));
+        }
+        for _ in 0..count {
+            pool.push(preset_config(name, what)?);
+        }
+    }
+    if pool.is_empty() {
+        return Err(Error::Config(format!("{what}: `pool` must not be empty")));
+    }
+    Ok(pool)
+}
+
+fn parse_autoscaler(sec: &Section) -> Result<AutoscalerPolicy> {
+    const WHAT: &str = "[[autoscaler]]";
+    let pool = parse_pool(req(sec, "pool", WHAT)?.as_str("pool")?, WHAT)?;
+    let mut policy = AutoscalerPolicy::new(pool);
+    policy.eval_interval_s = num_or(sec, "eval_interval_s", policy.eval_interval_s)?;
+    policy.scale_up_pressure_s = num_or(sec, "scale_up_pressure_s", policy.scale_up_pressure_s)?;
+    policy.scale_down_pressure_s =
+        num_or(sec, "scale_down_pressure_s", policy.scale_down_pressure_s)?;
+    if let Some(v) = get(sec, "scale_down_evals") {
+        policy.scale_down_evals = v.as_u64("scale_down_evals")? as u32;
+    }
+    if let Some(v) = get(sec, "profile_seed") {
+        policy.profile_seed = v.as_u64("profile_seed")?;
+    }
+    if !(policy.eval_interval_s.is_finite() && policy.eval_interval_s > 0.0) {
+        return Err(Error::Config(format!(
+            "{WHAT}: `eval_interval_s` must be finite and positive, got {}",
+            policy.eval_interval_s
+        )));
+    }
+    if !(policy.scale_up_pressure_s.is_finite() && policy.scale_up_pressure_s > 0.0) {
+        return Err(Error::Config(format!(
+            "{WHAT}: `scale_up_pressure_s` must be finite and positive, got {}",
+            policy.scale_up_pressure_s
+        )));
+    }
+    if !(policy.scale_down_pressure_s.is_finite()
+        && policy.scale_down_pressure_s >= 0.0
+        && policy.scale_down_pressure_s < policy.scale_up_pressure_s)
+    {
+        return Err(Error::Config(format!(
+            "{WHAT}: `scale_down_pressure_s` must be finite, non-negative and below \
+             `scale_up_pressure_s`, got {}",
+            policy.scale_down_pressure_s
+        )));
+    }
+    if policy.scale_down_evals == 0 {
+        return Err(Error::Config(format!(
+            "{WHAT}: `scale_down_evals` must be >= 1"
+        )));
+    }
+    Ok(policy)
 }
 
 fn parse_class(sec: &Section, what: &str) -> Result<QosClass> {
@@ -288,6 +381,42 @@ fn parse_positive(sec: &Section, key: &str, what: &str) -> Result<f64> {
     Ok(v)
 }
 
+/// The phases DSL: comma-separated `rate_rps:dur_s` items, both finite
+/// and positive.
+fn parse_phases(raw: &str, what: &str) -> Result<Vec<Phase>> {
+    let mut phases = Vec::new();
+    for item in raw.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        let (rate, dur) = item.split_once(':').ok_or_else(|| {
+            Error::Config(format!(
+                "{what}: phase must be `rate_rps:dur_s`, got `{item}`"
+            ))
+        })?;
+        let field = |tok: &str, name: &str| -> Result<f64> {
+            let v = tok.trim().parse::<f64>().map_err(|_| {
+                Error::Config(format!("{what}: bad {name} `{tok}` in phase `{item}`"))
+            })?;
+            if !(v.is_finite() && v > 0.0) {
+                return Err(Error::Config(format!(
+                    "{what}: {name} must be finite and positive in phase `{item}`"
+                )));
+            }
+            Ok(v)
+        };
+        phases.push(Phase {
+            rate_rps: field(rate, "rate")?,
+            dur_s: field(dur, "duration")?,
+        });
+    }
+    if phases.is_empty() {
+        return Err(Error::Config(format!("{what}: `phases` must not be empty")));
+    }
+    Ok(phases)
+}
+
 fn parse_arrivals(sec: &Section) -> Result<StreamSpec> {
     const WHAT: &str = "[[arrivals]]";
     let process = match get(sec, "process") {
@@ -314,9 +443,12 @@ fn parse_arrivals(sec: &Section) -> Result<StreamSpec> {
                 mean_off_s: parse_positive(sec, "mean_off_s", WHAT)?,
             }
         }
+        "phased" => StreamKind::Phased {
+            phases: parse_phases(req(sec, "phases", WHAT)?.as_str("phases")?, WHAT)?,
+        },
         other => {
             return Err(Error::Config(format!(
-                "{WHAT}: `process` must be \"poisson\" or \"onoff\", got \"{other}\""
+                "{WHAT}: `process` must be \"poisson\", \"onoff\" or \"phased\", got \"{other}\""
             )))
         }
     };
@@ -396,9 +528,21 @@ fn parse_fault(sec: &Section) -> Result<Fault> {
                 menu: parse_menu(req(sec, "menu", WHAT)?.as_str("menu")?, WHAT)?,
             })
         }
+        "join" => Ok(Fault::Join {
+            at,
+            machine: preset_config(req(sec, "preset", WHAT)?.as_str("preset")?, WHAT)?,
+            seed: match get(sec, "seed") {
+                Some(v) => Some(v.as_u64("seed")?),
+                None => None,
+            },
+        }),
+        "drain" => Ok(Fault::Drain {
+            at,
+            shard: shard(sec)?,
+        }),
         other => Err(Error::Config(format!(
-            "{WHAT}: `kind` must be \"crash\", \"restart\", \"slow\" or \"spike\", \
-             got \"{other}\""
+            "{WHAT}: `kind` must be \"crash\", \"restart\", \"slow\", \"spike\", \"join\" or \
+             \"drain\", got \"{other}\""
         ))),
     }
 }
@@ -475,6 +619,56 @@ mod tests {
     }
 
     #[test]
+    fn parses_phased_autoscaler_and_membership_faults() {
+        let sc = parse(
+            r#"
+            name = "elastic"
+            [[shard]]
+            preset = "mach1"
+
+            [[autoscaler]]
+            pool = "mach2*2, gpu_node"
+            eval_interval_s = 0.5
+            scale_up_pressure_s = 1.5
+            scale_down_pressure_s = 0.1
+            scale_down_evals = 2
+            profile_seed = 99
+
+            [[arrivals]]
+            process = "phased"
+            phases = "8.0:2.0, 0.5:2.0"
+            count = 10
+            menu = "64"
+
+            [[fault]]
+            kind = "join"
+            at = 1.0
+            preset = "cpu_node"
+            seed = 7
+
+            [[fault]]
+            kind = "drain"
+            at = 3.0
+            shard = 1
+        "#,
+        )
+        .expect("parse");
+        let scaler = sc.opts.autoscaler.as_ref().expect("autoscaler policy");
+        assert_eq!(scaler.pool.len(), 3);
+        assert_eq!(scaler.eval_interval_s, 0.5);
+        assert_eq!(scaler.scale_down_evals, 2);
+        assert_eq!(scaler.profile_seed, 99);
+        assert!(matches!(
+            sc.streams[0].kind,
+            StreamKind::Phased { ref phases }
+                if phases.len() == 2 && phases[0].rate_rps == 8.0 && phases[1].dur_s == 2.0
+        ));
+        assert!(matches!(sc.faults[0], Fault::Join { seed: Some(7), .. }));
+        // Shard 1 only exists after the join: the bound counts it.
+        assert!(matches!(sc.faults[1], Fault::Drain { shard: 1, .. }));
+    }
+
+    #[test]
     fn menu_dsl_parses_squares_and_triples() {
         let menu = parse_menu("256*4, 512x256x128, 64 * 2", "test").unwrap();
         assert_eq!(menu[0], (GemmSize::new(256, 256, 256), 4));
@@ -509,5 +703,24 @@ mod tests {
         assert!(parse_size("0x2x3", "test").is_err());
         // Empty menu.
         assert!(parse_menu(" , ", "test").is_err());
+        // Drain beyond machines + scheduled joins.
+        assert!(parse(
+            "name = \"x\"\n[[shard]]\npreset = \"mach1\"\n[[fault]]\nkind = \"join\"\npreset = \"mach2\"\n[[fault]]\nkind = \"drain\"\nat = 1.0\nshard = 2"
+        )
+        .is_err());
+        // Second [[autoscaler]] table.
+        assert!(parse(
+            "name = \"x\"\n[[shard]]\npreset = \"mach1\"\n[[autoscaler]]\npool = \"mach2\"\n[[autoscaler]]\npool = \"mach2\""
+        )
+        .is_err());
+        // Autoscaler with an unknown pool preset.
+        assert!(parse(
+            "name = \"x\"\n[[shard]]\npreset = \"mach1\"\n[[autoscaler]]\npool = \"warp_drive\""
+        )
+        .is_err());
+        // Phase items must be rate:dur pairs.
+        assert!(parse_phases("4.0", "test").is_err());
+        assert!(parse_phases("4.0:0", "test").is_err());
+        assert!(parse_phases(" , ", "test").is_err());
     }
 }

@@ -79,6 +79,18 @@ pub struct ExecutorShard {
     /// Sum of realized execution seconds over the same requests
     /// (placement-quality numerator).
     realized_sum_s: f64,
+    /// Virtual instant this shard's machine was provisioned (0 for
+    /// construction-time shards; the join instant for scale-outs).
+    provisioned_at: f64,
+    /// Virtual instant the machine was handed back after a graceful
+    /// drain (`None` while provisioned). The machine-seconds meter
+    /// stops here, not at the drain event: an in-flight execution runs
+    /// to its finish before the machine can be released.
+    retired_at: Option<f64>,
+    /// Machine-seconds accumulated over *earlier* provisioned spans
+    /// (a drained shard the autoscaler later revives starts a fresh
+    /// span; the old one is folded in here).
+    provisioned_s_prior: f64,
 }
 
 impl ExecutorShard {
@@ -113,10 +125,71 @@ impl ExecutorShard {
             requeued: 0,
             predicted_sum_s: 0.0,
             realized_sum_s: 0.0,
+            provisioned_at: 0.0,
+            retired_at: None,
+            provisioned_s_prior: 0.0,
             dynsched,
             opts: opts.clone(),
             model,
         }
+    }
+
+    /// Mark this shard as provisioned at virtual time `now`: the
+    /// machine-seconds meter starts here and the machine is idle (a
+    /// freshly joined shard has no history, so `free_at` snaps to the
+    /// join instant instead of 0).
+    pub fn provision(&mut self, now: f64) {
+        self.provisioned_at = now;
+        self.retired_at = None;
+        self.free_at = now;
+    }
+
+    /// Stop the machine-seconds meter for a graceful drain issued at
+    /// `now`. The machine is released only once its in-flight execution
+    /// (if any) finishes, so the meter runs to `free_at` when that lies
+    /// beyond the drain instant — a drain displaces zero in-flight
+    /// work, and the machine-seconds bill reflects that.
+    pub fn retire(&mut self, now: f64) {
+        self.retired_at = Some(self.free_at.max(now));
+    }
+
+    /// Revive a drained shard at `now`: the retired span is folded into
+    /// the prior-span accumulator and a fresh provisioned span begins.
+    /// No-op when the shard was never retired.
+    pub fn unretire(&mut self, now: f64) {
+        if let Some(end) = self.retired_at.take() {
+            self.provisioned_s_prior += (end - self.provisioned_at).max(0.0);
+            self.provisioned_at = now;
+            self.free_at = self.free_at.max(now);
+        }
+    }
+
+    /// Machine-seconds this shard was provisioned for, with the current
+    /// span closed at `end` (the report clock) unless a drain already
+    /// closed it earlier.
+    pub fn provisioned_s(&self, end: f64) -> f64 {
+        let span_end = self.retired_at.unwrap_or(end).max(self.provisioned_at);
+        self.provisioned_s_prior + (span_end - self.provisioned_at)
+    }
+
+    /// True once a graceful drain retired this shard (and no revival
+    /// followed).
+    pub fn is_retired(&self) -> bool {
+        self.retired_at.is_some()
+    }
+
+    /// Drain and return every *queued* request (in the order the
+    /// shard's own policy would have dispatched them — deterministic)
+    /// without touching the execution clocks: unlike
+    /// [`ExecutorShard::crash`], a graceful drain leaves the in-flight
+    /// execution (everything up to `free_at`) untouched, so `busy_s`
+    /// and `free_at` keep their honest values.
+    pub fn drain_queue(&mut self) -> Vec<QueuedRequest> {
+        let mut drained = Vec::new();
+        while let Some(q) = self.queue.pop_next() {
+            drained.push(q);
+        }
+        drained
     }
 
     /// Pending request count on this shard's queue.
@@ -191,6 +264,9 @@ impl ExecutorShard {
             model_fp: self.model.fingerprint(),
             predicted_s: self.predicted_sum_s,
             realized_s: self.realized_sum_s,
+            // Closed at `free_at` when the caller has no better clock;
+            // the cluster report re-closes the span at its own clock.
+            provisioned_s: self.provisioned_s(self.free_at),
         }
     }
 

@@ -833,6 +833,147 @@ fn prop_fault_scenario_replay_is_deterministic() {
 }
 
 // ---------------------------------------------------------------------
+// Elastic membership: drain conservation, replay byte-identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_graceful_drain_conserves_and_displaces_no_inflight() {
+    use poas::config::presets;
+    use poas::coordinator::Pipeline;
+    use poas::service::{Cluster, ClusterOptions, PoissonArrivals};
+
+    // Profile once; each case clones the pipelines so both runs of a
+    // case start from identical installation state.
+    let pipes: Vec<Pipeline> = (0..3u64)
+        .map(|i| Pipeline::for_simulated_machine(&presets::mach2(), 130 + i))
+        .collect();
+    let menu = vec![(GemmSize::square(16_000), 2), (GemmSize::square(12_000), 2)];
+
+    prop("graceful drain conservation", 5, |rng, _| {
+        let rate = rng.range(0.5, 3.0);
+        let seed = rng.below(1 << 20);
+        let victim = rng.below(3) as usize;
+        let drain_at = rng.range(0.1, 2.0);
+        let n = 10;
+        let trace = PoissonArrivals::new(rate, menu.clone(), seed).trace(n);
+        let run = || {
+            let mut cluster = Cluster::from_pipelines(
+                pipes.clone(),
+                ClusterOptions {
+                    work_stealing: true,
+                    ..Default::default()
+                },
+            );
+            cluster.inject_drain(drain_at, victim);
+            cluster.submit_trace(&trace);
+            cluster.run_to_completion()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "drain replay must be identical");
+        // Conservation: one record per arrival — served, denied and
+        // rejected together, nothing lost, nothing duplicated.
+        assert_eq!(a.served.len(), n);
+        let mut ids: Vec<u64> = a.served.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "a drain may not lose or duplicate requests");
+        assert_eq!(
+            a.denied,
+            a.served.iter().filter(|r| r.mode.is_denied()).count()
+        );
+        assert_eq!(
+            a.rejected,
+            a.served.iter().filter(|r| r.mode.is_rejected()).count()
+        );
+        // Zero in-flight displacement: anything that executed on the
+        // drained shard was dispatched strictly before the drain fired
+        // (the drain is injected first, so it wins same-instant ties).
+        for r in &a.served {
+            if r.shard == Some(victim) {
+                assert!(
+                    r.start < drain_at,
+                    "request {} dispatched on the drained shard at {}",
+                    r.id,
+                    r.start
+                );
+            }
+        }
+        // Billing reconciles: the drained shard's span is closed, every
+        // span fits the session, and the report sums them.
+        let sum: f64 = a.shards.iter().map(|s| s.provisioned_s).sum();
+        assert!((a.machine_seconds - sum).abs() < 1e-9);
+        assert!(a.machine_seconds <= 3.0 * a.makespan + 1e-9);
+    });
+}
+
+#[test]
+fn prop_elastic_membership_replay_is_byte_identical() {
+    use poas::config::presets;
+    use poas::coordinator::Pipeline;
+    use poas::service::scenario::digest;
+    use poas::service::{
+        AutoscalerPolicy, Cluster, ClusterOptions, PoissonArrivals, RoutePolicy,
+    };
+
+    // Two static shards under sampled routing (the rejection-sampling
+    // path stays live as the membership grows), plus a scheduled join,
+    // a scheduled drain and an autoscaler over a one-entry pool: the
+    // full elastic machinery must replay to byte-identical reports.
+    let pipes: Vec<Pipeline> = (0..2u64)
+        .map(|i| Pipeline::for_simulated_machine(&presets::mach2(), 150 + i))
+        .collect();
+    let menu = vec![(GemmSize::square(16_000), 2), (GemmSize::square(12_000), 2)];
+
+    prop("elastic membership replay", 3, |rng, _| {
+        let rate = rng.range(1.0, 4.0);
+        let seed = rng.below(1 << 20);
+        let join_at = rng.range(0.1, 1.5);
+        let drain_at = join_at + rng.range(0.5, 2.0);
+        let n = 10;
+        let trace = PoissonArrivals::new(rate, menu.clone(), seed).trace(n);
+        let mut policy = AutoscalerPolicy::new(vec![presets::mach2()]);
+        policy.eval_interval_s = rng.range(0.5, 1.5);
+        let run = || {
+            let mut cluster = Cluster::from_pipelines(
+                pipes.clone(),
+                ClusterOptions {
+                    route: RoutePolicy::Sampled { d: 2 },
+                    work_stealing: true,
+                    autoscaler: Some(policy.clone()),
+                    ..Default::default()
+                },
+            );
+            cluster.inject_join(join_at, presets::mach1(), 160);
+            cluster.inject_drain(drain_at, 0);
+            cluster.submit_trace(&trace);
+            cluster.run_to_completion()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "membership replay must be identical");
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "membership replay must be byte-identical"
+        );
+        assert_eq!(digest(&a), digest(&b), "and digest-deterministic");
+        // Conservation across join + drain + autoscaler.
+        assert_eq!(a.served.len(), n);
+        let mut ids: Vec<u64> = a.served.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+        // The scheduled join materialized as shard 2, billed only from
+        // its provision time.
+        assert!(a.shards.len() >= 3, "the join must add a shard");
+        assert!(a.shards[2].provisioned_s <= a.shards[1].provisioned_s + 1e-9);
+        let sum: f64 = a.shards.iter().map(|s| s.provisioned_s).sum();
+        assert!((a.machine_seconds - sum).abs() < 1e-9);
+    });
+}
+
+// ---------------------------------------------------------------------
 // Sampled routing: exactness at full coverage, determinism under faults
 // ---------------------------------------------------------------------
 

@@ -1,0 +1,331 @@
+//! Elastic membership on the serving cluster: scale-out joins,
+//! graceful drains and the autoscaler policy (PR 8 tentpole).
+//!
+//! The contract under test, against the crash path of
+//! `service_faults.rs`: a *graceful* drain displaces zero in-flight
+//! work — the running execution finishes on the leaving shard and only
+//! its queue redistributes through front-end admission — while a join
+//! inserts a freshly profiled shard whose machine-seconds meter starts
+//! at provision time. The companion replay/conservation properties
+//! live in `prop_invariants.rs`.
+
+use poas::config::presets;
+use poas::service::{AutoscalerPolicy, Cluster, ClusterOptions, GemmRequest, QosClass};
+use poas::workload::GemmSize;
+
+fn heavy() -> GemmSize {
+    GemmSize::square(16_000)
+}
+
+/// Virtual seconds one heavy request takes on an idle mach2 shard —
+/// the service-time unit the elasticity loads are phrased in.
+fn unit() -> f64 {
+    let mut c = Cluster::new(&presets::mach2(), 7, ClusterOptions::default());
+    c.submit(heavy(), 2);
+    c.run_to_completion().makespan
+}
+
+// ---------------------------------------------------------------------
+// Graceful drain: zero in-flight displacement
+// ---------------------------------------------------------------------
+
+#[test]
+fn drain_finishes_inflight_on_the_leaving_shard_and_requeues_only_its_queue() {
+    // Two identical shards, six heavy requests at t = 0 — routing
+    // splits them three and three, each shard dispatching one
+    // immediately — then shard 1 drains long before anything can
+    // finish. The in-flight execution must complete *on shard 1*; only
+    // the queued remainder redistributes.
+    let mut c = Cluster::from_machines(
+        &[presets::mach1(), presets::mach1()],
+        9,
+        ClusterOptions::default(),
+    );
+    for _ in 0..6 {
+        c.submit(heavy(), 2);
+    }
+    c.inject_drain(0.01, 1);
+    let report = c.run_to_completion();
+
+    // Exactly once each: nothing lost, nothing duplicated.
+    assert_eq!(report.served.len(), 6);
+    let mut ids: Vec<u64> = report.served.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 6);
+
+    // The drain displaced shard 1's queue — and only its queue. The
+    // in-flight dispatch survives: exactly one record finishes on the
+    // leaving shard, dispatched before the drain fired.
+    let on_drained: Vec<_> = report
+        .served
+        .iter()
+        .filter(|r| r.shard == Some(1))
+        .collect();
+    assert_eq!(
+        on_drained.len(),
+        1,
+        "exactly the in-flight request finishes on the draining shard"
+    );
+    assert!(on_drained[0].start < 0.01, "it was dispatched pre-drain");
+    assert!(!on_drained[0].mode.is_unserved());
+    assert_eq!(report.shards[1].served_by_class.iter().sum::<usize>(), 1);
+    assert_eq!(report.requeued, 2, "the two queued requests redistribute");
+    assert_eq!(report.shards[1].requeued, 2);
+    assert_eq!(report.shards[0].requeued, 0);
+    for r in &report.served {
+        assert!(!r.mode.is_unserved());
+        assert_eq!(r.arrival, 0.0, "requeue keeps the original arrival");
+        if r.shard != Some(1) {
+            assert_eq!(r.shard, Some(0));
+        }
+    }
+
+    // Billing: the drained shard retires when its in-flight execution
+    // ends, so its span is shorter than the survivor's full session.
+    assert!(report.shards[1].provisioned_s < report.shards[0].provisioned_s);
+    let sum: f64 = report.shards.iter().map(|s| s.provisioned_s).sum();
+    assert!((report.machine_seconds - sum).abs() < 1e-9);
+    let util = report.utilization();
+    assert!(util > 0.0 && util <= 1.0 + 1e-9, "utilization {util}");
+}
+
+#[test]
+fn drain_then_restart_revives_the_shard_and_bills_both_spans() {
+    // Shard 1 drains at t = 0.01 (its queue redistributes), comes back
+    // mid-run, and serves again: the machine-seconds meter folds the
+    // first span and reopens at the restart, so the revived shard is
+    // never billed for the gap it sat retired.
+    let u = unit();
+    let mut c = Cluster::from_machines(
+        &[presets::mach1(), presets::mach1()],
+        9,
+        ClusterOptions::default(),
+    );
+    for _ in 0..4 {
+        c.submit(heavy(), 2);
+    }
+    c.inject_drain(0.01, 1);
+    let back_at = 6.0 * u;
+    c.inject_restart(back_at, 1);
+    for i in 0..4 {
+        c.submit_request_at(back_at, GemmRequest::new(100 + i, heavy(), 2));
+    }
+    let report = c.run_to_completion();
+
+    assert_eq!(report.served.len(), 8);
+    assert!(
+        report
+            .served
+            .iter()
+            .any(|r| r.shard == Some(1) && r.start >= back_at),
+        "the revived shard must serve again"
+    );
+    // The gap is not billed: shard 1's two spans are both shorter than
+    // the wall-clock session, and the sum still reconciles.
+    assert!(report.shards[1].provisioned_s < report.shards[0].provisioned_s);
+    let sum: f64 = report.shards.iter().map(|s| s.provisioned_s).sum();
+    assert!((report.machine_seconds - sum).abs() < 1e-9);
+}
+
+#[test]
+fn draining_an_idle_shard_retires_it_immediately() {
+    let mut c = Cluster::from_machines(
+        &[presets::mach1(), presets::mach1()],
+        11,
+        ClusterOptions::default(),
+    );
+    c.inject_drain(0.5, 1);
+    c.submit_request_at(1.0, GemmRequest::new(0, heavy(), 2));
+    let report = c.run_to_completion();
+
+    assert_eq!(report.served.len(), 1);
+    assert_eq!(report.request(0).unwrap().shard, Some(0));
+    assert_eq!(report.requeued, 0, "an idle drain displaces nothing");
+    // The idle shard's bill stops at the drain instant.
+    assert!((report.shards[1].provisioned_s - 0.5).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------
+// Scale-out joins
+// ---------------------------------------------------------------------
+
+#[test]
+fn joined_shard_serves_and_is_billed_from_provision_time() {
+    // One shard takes a burst; a second machine joins mid-backlog and
+    // picks up later arrivals (or steals queued work). Its bill starts
+    // at the join, not at t = 0.
+    let u = unit();
+    let mut c = Cluster::new(&presets::mach2(), 13, ClusterOptions::default());
+    for _ in 0..4 {
+        c.submit(heavy(), 2);
+    }
+    let join_at = 0.5 * u;
+    c.inject_join(join_at, presets::mach2(), 77);
+    for i in 0..4 {
+        c.submit_request_at(join_at + 0.1 * u, GemmRequest::new(100 + i, heavy(), 2));
+    }
+    let report = c.run_to_completion();
+
+    assert_eq!(report.served.len(), 8);
+    assert_eq!(report.shards.len(), 2, "the join adds a shard to the report");
+    assert!(
+        report.shards[1].dispatches > 0,
+        "the joined shard must take work"
+    );
+    for r in &report.served {
+        assert!(!r.mode.is_unserved());
+        if r.shard == Some(1) {
+            assert!(r.start >= join_at, "nothing runs on a shard before it joins");
+        }
+    }
+    // Billed from provision time: shorter span than the founding shard,
+    // and the total reconciles.
+    assert!(report.shards[1].provisioned_s < report.shards[0].provisioned_s);
+    let sum: f64 = report.shards.iter().map(|s| s.provisioned_s).sum();
+    assert!((report.machine_seconds - sum).abs() < 1e-9);
+}
+
+#[test]
+fn join_ends_a_total_outage_like_a_restart() {
+    // The only shard crashes with work parked at the front door; a new
+    // machine joining must re-admit the parked arrivals the way a
+    // restart does.
+    let mut c = Cluster::new(&presets::mach1(), 17, ClusterOptions::default());
+    c.inject_crash(0.0, 0);
+    c.submit_request_at(0.1, GemmRequest::new(0, heavy(), 2));
+    c.inject_join(1.0, presets::mach1(), 99);
+    let report = c.run_to_completion();
+
+    assert_eq!(report.served.len(), 1);
+    let r = report.request(0).unwrap();
+    assert!(!r.mode.is_unserved());
+    assert_eq!(r.shard, Some(1), "the parked request runs on the joiner");
+    assert!(r.start >= 1.0);
+    assert_eq!(r.arrival, 0.1, "parking keeps the original arrival");
+}
+
+// ---------------------------------------------------------------------
+// Autoscaler: flash crowd
+// ---------------------------------------------------------------------
+
+#[test]
+fn autoscaler_rides_a_flash_crowd_without_deadline_loss() {
+    // Twelve SLO-bound requests arrive every quarter-unit — far beyond
+    // one shard's capacity, comfortable for three. Three builds:
+    //
+    // * `base`: one static shard — admission must start denying SLOs
+    //   once the predicted sojourn overflows the budget;
+    // * `autoscaled`: the same shard plus a two-entry pool — pressure
+    //   (and the deadline-risk signal) pulls capacity in while the
+    //   crowd builds;
+    // * `static3`: three always-on shards — the overprovisioned
+    //   reference.
+    //
+    // The autoscaled build must match the overprovisioned deadline
+    // outcome (no denials, same hit rate within a point) at a smaller
+    // machine-seconds bill than three always-on shards.
+    let u = unit();
+    let deadline = 4.0 * u;
+    let submit_crowd = |c: &mut Cluster| {
+        for i in 0..12u64 {
+            c.submit_request_at(
+                0.25 * u * i as f64,
+                GemmRequest::new(i, heavy(), 2)
+                    .with_class(QosClass::Interactive)
+                    .with_deadline(deadline),
+            );
+        }
+    };
+    let pool_policy = || {
+        let mut p = AutoscalerPolicy::new(vec![presets::mach2(), presets::mach2()]);
+        p.eval_interval_s = 0.5 * u;
+        p.scale_up_pressure_s = 1.5 * u;
+        p.scale_down_pressure_s = 0.25 * u;
+        p.scale_down_evals = 2;
+        p
+    };
+
+    let mut base = Cluster::new(&presets::mach2(), 19, ClusterOptions::default());
+    submit_crowd(&mut base);
+    let base = base.run_to_completion();
+
+    let mut autoscaled = Cluster::new(
+        &presets::mach2(),
+        19,
+        ClusterOptions {
+            autoscaler: Some(pool_policy()),
+            ..Default::default()
+        },
+    );
+    submit_crowd(&mut autoscaled);
+    let autoscaled = autoscaled.run_to_completion();
+
+    let mut static3 = Cluster::from_machines(
+        &[presets::mach2(), presets::mach2(), presets::mach2()],
+        19,
+        ClusterOptions::default(),
+    );
+    submit_crowd(&mut static3);
+    let static3 = static3.run_to_completion();
+
+    // The single static shard drowns: deadline admission turns SLOs
+    // away. The autoscaled cluster rides the crowd like the
+    // overprovisioned one.
+    assert!(base.denied > 0, "one shard must deny under the crowd");
+    assert_eq!(static3.denied, 0, "three shards absorb it");
+    assert!(
+        autoscaled.denied < base.denied,
+        "scaling out must shed denials: {} vs {}",
+        autoscaled.denied,
+        base.denied
+    );
+    assert!(
+        autoscaled.shards.len() > 1,
+        "the pool must actually provision"
+    );
+    assert!(
+        autoscaled.deadline_hit_rate() >= static3.deadline_hit_rate() - 0.01,
+        "autoscaled hit rate {} fell below the overprovisioned {}",
+        autoscaled.deadline_hit_rate(),
+        static3.deadline_hit_rate()
+    );
+    // And the bill: pool shards join late (and drain once the crowd
+    // passes), so the autoscaled build pays fewer machine-seconds than
+    // three always-on shards.
+    assert!(
+        autoscaled.machine_seconds < static3.machine_seconds,
+        "autoscaled bill {} not below static {}",
+        autoscaled.machine_seconds,
+        static3.machine_seconds
+    );
+    // Conservation on all three builds.
+    for r in [&base, &autoscaled, &static3] {
+        assert_eq!(r.served.len(), 12);
+        assert_eq!(
+            r.denied,
+            r.served.iter().filter(|s| s.mode.is_denied()).count()
+        );
+    }
+}
+
+#[test]
+fn autoscaler_without_load_never_provisions() {
+    // Two light requests on an idle cluster: pressure never crosses the
+    // threshold, no denials — the pool must stay untouched and the run
+    // must terminate (the evaluation event re-arms only while work
+    // remains).
+    let mut c = Cluster::new(
+        &presets::mach2(),
+        23,
+        ClusterOptions {
+            autoscaler: Some(AutoscalerPolicy::new(vec![presets::mach2()])),
+            ..Default::default()
+        },
+    );
+    c.submit(GemmSize::square(2_000), 1);
+    c.submit_request_at(5.0, GemmRequest::new(1, GemmSize::square(2_000), 1));
+    let report = c.run_to_completion();
+    assert_eq!(report.served.len(), 2);
+    assert_eq!(report.shards.len(), 1, "no pool shard may join idle");
+}
