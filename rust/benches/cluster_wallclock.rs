@@ -1,0 +1,176 @@
+//! Wall-clock driver scaling: sustained arrivals/sec and p99 sojourn
+//! versus shard count when every dispatch really runs on a worker
+//! thread.
+//!
+//! The virtual driver measures *modelled* time; this regenerator
+//! measures the actor-per-shard wall-clock driver itself — the cost of
+//! mirroring the deterministic core onto real threads, bounded command
+//! channels and a unified completion stream. Executors are simulated
+//! (each unit sleeps its virtual service time scaled down to a few
+//! milliseconds), so elapsed time is sleep-bound and throughput tracks
+//! the shard count, not the host's core count: a 2-core CI runner can
+//! still drive 64 sleeping shards in parallel, which is what makes the
+//! >= 4x scaling floor safe to gate on small runners.
+//!
+//! One burst of identical heavy requests per configuration (1, 4, 16
+//! and 64 shards, the per-shard load held constant); the driver's
+//! conservation counters (`forwarded == completed + dropped`, zero
+//! lost, zero duplicated) ride along into the JSON so CI gates
+//! exactly-once accounting together with the scaling floor
+//! (`ci/wallclock_floor.json`, checked by `ci/check_bench.py`).
+//!
+//! Environment knobs (the CI bench-smoke gate sets both):
+//!
+//! * `POAS_BENCH_SMOKE=1` — fewer requests and a smaller wall-time
+//!   scale so the regenerator finishes in seconds on a CI runner;
+//! * `POAS_BENCH_JSON=<path>` — merge a `"wallclock"` section into the
+//!   summary JSON (appending to the earlier bench legs' output when
+//!   the file already exists, standalone otherwise).
+
+use poas::config::presets;
+use poas::coordinator::Pipeline;
+use poas::report::{rate, secs, Table};
+use poas::service::{
+    Cluster, ClusterOptions, Server, ServerOptions, WallClockDriver, WallClockOptions,
+    WallClockStats,
+};
+use poas::workload::GemmSize;
+
+struct WallRow {
+    shards: usize,
+    requests: usize,
+    stats: WallClockStats,
+}
+
+fn main() {
+    let smoke = std::env::var("POAS_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    let cfg = presets::mach2();
+    let heavy = GemmSize::square(12_000);
+
+    // Calibrate the virtual service-time unit: one heavy request served
+    // alone. The wall-time scale maps that unit onto a few milliseconds
+    // of real sleep, so a full configuration sweep stays in seconds.
+    let unit = {
+        let mut srv = Server::new(&cfg, 0, ServerOptions::default());
+        srv.submit(heavy, 2);
+        srv.run_to_completion().makespan
+    };
+    let target_unit_wall = if smoke { 2e-3 } else { 4e-3 };
+    let time_scale = target_unit_wall / unit;
+    let per_shard = if smoke { 10usize } else { 16 };
+
+    // Profile the machine once and clone the fitted pipeline per shard:
+    // every configuration starts from identical models, and the bench
+    // pays install-time profiling once instead of 85 times.
+    let pipe = Pipeline::for_simulated_machine(&cfg, 0);
+    let opts = WallClockOptions {
+        time_scale,
+        ..Default::default()
+    };
+
+    let mut rows: Vec<WallRow> = Vec::new();
+    for shards in [1usize, 4, 16, 64] {
+        let n = shards * per_shard;
+        let mut cluster =
+            Cluster::from_pipelines(vec![pipe.clone(); shards], ClusterOptions::default());
+        for _ in 0..n {
+            cluster.submit(heavy, 2);
+        }
+        let (report, stats) = WallClockDriver::with_options(cluster, opts).run_measured();
+        assert_eq!(report.served.len(), n, "burst must be fully accounted");
+        rows.push(WallRow {
+            shards,
+            requests: n,
+            stats,
+        });
+    }
+
+    let mut table = Table::new(
+        &format!(
+            "wall-clock driver, {per_shard} heavy requests per shard \
+             (unit ~{} scaled to {}{})",
+            secs(unit),
+            secs(target_unit_wall),
+            if smoke { ", smoke" } else { "" }
+        ),
+        &[
+            "shards",
+            "requests",
+            "elapsed",
+            "arrivals/s",
+            "p99 sojourn",
+            "forwarded",
+            "completed",
+            "lost",
+            "dup",
+        ],
+    );
+    for r in &rows {
+        table.row(&[
+            r.shards.to_string(),
+            r.requests.to_string(),
+            secs(r.stats.elapsed_s),
+            rate(r.requests as f64 / r.stats.elapsed_s),
+            secs(r.stats.p99_sojourn_s()),
+            r.stats.forwarded.to_string(),
+            r.stats.completed.to_string(),
+            r.stats.lost.to_string(),
+            r.stats.duplicated.to_string(),
+        ]);
+    }
+    table.print();
+    let arrivals = |r: &WallRow| r.requests as f64 / r.stats.elapsed_s;
+    let s1 = rows.iter().find(|r| r.shards == 1).expect("1-shard row");
+    let s16 = rows.iter().find(|r| r.shards == 16).expect("16-shard row");
+    println!(
+        "targets: 16-shard sustained arrivals/sec >= 4x the 1-shard rate \
+         ({} vs {}); zero lost, zero duplicated completions everywhere.",
+        rate(arrivals(s16)),
+        rate(arrivals(s1)),
+    );
+
+    // ---- Perf-trajectory artifact: merge into the shared summary.
+    if let Ok(path) = std::env::var("POAS_BENCH_JSON") {
+        let mut section = String::from("  \"wallclock\": {\n");
+        section.push_str(&format!("    \"smoke\": {smoke},\n"));
+        section.push_str(&format!("    \"time_scale\": {time_scale},\n"));
+        for (i, r) in rows.iter().enumerate() {
+            section.push_str(&format!(
+                "    \"s{}\": {{\"shards\": {}, \"requests\": {}, \"elapsed_s\": {}, \
+                 \"arrivals_per_s\": {}, \"p99_sojourn_s\": {}, \"forwarded\": {}, \
+                 \"completed\": {}, \"dropped\": {}, \"lost\": {}, \
+                 \"duplicated\": {}}}{}\n",
+                r.shards,
+                r.shards,
+                r.requests,
+                r.stats.elapsed_s,
+                arrivals(r),
+                r.stats.p99_sojourn_s(),
+                r.stats.forwarded,
+                r.stats.completed,
+                r.stats.dropped,
+                r.stats.lost,
+                r.stats.duplicated,
+                if i + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        section.push_str("  }\n}\n");
+        // Earlier bench legs write the summary first in CI; splice the
+        // wallclock section into it rather than clobbering, so one JSON
+        // artifact carries every bench leg. Standalone runs (file
+        // absent) still produce a valid summary.
+        let json = match std::fs::read_to_string(&path) {
+            Ok(existing) => {
+                let trimmed = existing.trim_end();
+                let base = trimmed
+                    .strip_suffix('}')
+                    .expect("existing bench summary ends with '}'")
+                    .trim_end();
+                format!("{base},\n{section}")
+            }
+            Err(_) => format!("{{\n  \"bench\": \"cluster_wallclock\",\n{section}"),
+        };
+        std::fs::write(&path, json).expect("write POAS_BENCH_JSON summary");
+        println!("wrote {path}");
+    }
+}

@@ -1,14 +1,19 @@
 //! Run the committed scenario corpus and emit per-scenario digests.
 //!
 //! ```text
-//! scenario_runner [--out FILE] [PATH ...]
+//! scenario_runner [--out FILE] [--jobs N] [PATH ...]
 //! ```
 //!
 //! Each `PATH` is a scenario file or a directory (expanded to its
 //! `*.toml` entries, sorted by file name); with no paths the runner
 //! looks for `scenarios/`, falling back to `../scenarios/` so
-//! `cargo run --bin scenario_runner` works from `rust/` too. The
-//! output is one JSON object mapping scenario name to its digest (see
+//! `cargo run --bin scenario_runner` works from `rust/` too. Scenarios
+//! execute on a scoped thread pool of `--jobs` workers (default: the
+//! machine's available parallelism) — each scenario is deterministic
+//! in isolation and the output is assembled in sorted order from a
+//! per-scenario slot, so the JSON is **byte-identical to a serial
+//! run** regardless of the job count. The output is one JSON object
+//! mapping scenario name to its digest (see
 //! [`poas::service::scenario::digest`]), keys sorted, one digest per
 //! line — CI diffs it against the blessed `ci/scenario_digests.json`
 //! (see `docs/scenarios.md` for the blessing workflow). Any parse or
@@ -16,6 +21,8 @@
 
 use poas::service::scenario::{digest, Scenario};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -27,6 +34,7 @@ fn main() {
 
 fn run(args: &[String]) -> Result<(), String> {
     let mut out: Option<PathBuf> = None;
+    let mut jobs: Option<usize> = None;
     let mut paths: Vec<PathBuf> = Vec::new();
     let mut it = args.iter();
     while let Some(arg) = it.next() {
@@ -35,8 +43,18 @@ fn run(args: &[String]) -> Result<(), String> {
                 let f = it.next().ok_or("--out needs a file argument")?;
                 out = Some(PathBuf::from(f));
             }
+            "--jobs" => {
+                let n = it.next().ok_or("--jobs needs a count argument")?;
+                let n = n
+                    .parse::<usize>()
+                    .map_err(|_| format!("--jobs: bad count `{n}`"))?;
+                if n == 0 {
+                    return Err("--jobs must be >= 1".into());
+                }
+                jobs = Some(n);
+            }
             "--help" | "-h" => {
-                println!("usage: scenario_runner [--out FILE] [PATH ...]");
+                println!("usage: scenario_runner [--out FILE] [--jobs N] [PATH ...]");
                 return Ok(());
             }
             other if other.starts_with('-') => {
@@ -79,20 +97,58 @@ fn run(args: &[String]) -> Result<(), String> {
         ));
     }
 
-    let mut entries: Vec<(String, String)> = Vec::new();
+    // Parse everything up front, serially: the duplicate-name check
+    // stays deterministic in file order, and only the (expensive,
+    // independent) runs go to the pool.
+    let mut scenarios: Vec<Scenario> = Vec::new();
     for file in &files {
         let sc = Scenario::from_file(file).map_err(|e| e.to_string())?;
-        if entries.iter().any(|(name, _)| *name == sc.name) {
+        if scenarios.iter().any(|s| s.name == sc.name) {
             return Err(format!(
                 "duplicate scenario name `{}` (second copy in {})",
                 sc.name,
                 file.display()
             ));
         }
-        eprintln!("running {} ({})", sc.name, file.display());
-        let report = sc.run();
-        entries.push((sc.name, digest(&report)));
+        scenarios.push(sc);
     }
+
+    let jobs = jobs
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(usize::from)
+                .unwrap_or(1)
+        })
+        .min(scenarios.len());
+    // One result slot per scenario: workers pull the next unclaimed
+    // index and write into their own slot, so the assembled output is
+    // independent of scheduling order.
+    let slots: Vec<Mutex<Option<String>>> = scenarios.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(sc) = scenarios.get(i) else { break };
+                eprintln!("running {} ({})", sc.name, files[i].display());
+                let report = sc.run();
+                *slots[i].lock().expect("result slot") = Some(digest(&report));
+            });
+        }
+    });
+
+    let mut entries: Vec<(String, String)> = scenarios
+        .iter()
+        .zip(&slots)
+        .map(|(sc, slot)| {
+            let d = slot
+                .lock()
+                .expect("result slot")
+                .take()
+                .expect("every scenario ran");
+            (sc.name.clone(), d)
+        })
+        .collect();
     entries.sort_by(|a, b| a.0.cmp(&b.0));
 
     let mut json = String::from("{\n");

@@ -1,0 +1,117 @@
+//! Time, abstracted: the seam between the deterministic scheduling
+//! core and the driver that advances it.
+//!
+//! The cluster core never asks the operating system what time it is.
+//! It reads a [`Clock`], and the *driver* decides what that clock
+//! means:
+//!
+//! * [`VirtualClock`] — simulated service time. The virtual driver
+//!   (and the classic in-process event loop) advances it monotonically
+//!   to each popped event's timestamp, so identical construction and
+//!   trace replay byte-identically.
+//! * [`MonotonicClock`] — real elapsed seconds since an origin
+//!   `Instant`. The wall-clock driver hands one shared origin to every
+//!   shard worker so their timestamps are mutually comparable.
+//!
+//! Both clocks report `f64` seconds, the unit every queue-depth,
+//! deadline, and sojourn computation in the serving layer already
+//! uses.
+
+use std::time::Instant;
+
+/// A monotonically non-decreasing source of seconds.
+pub trait Clock {
+    /// The current time, in seconds. Successive calls never go
+    /// backwards.
+    fn now(&self) -> f64;
+}
+
+/// Simulated service time: advances only when the event loop says so.
+///
+/// This is the clock the deterministic core owns. `advance_to` is
+/// monotonic by construction (a stale timestamp is ignored), which is
+/// exactly the `clock = clock.max(event.time)` idiom the event loop
+/// used before the seam existed.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    /// A virtual clock at time zero.
+    pub fn new() -> Self {
+        VirtualClock { now: 0.0 }
+    }
+
+    /// Advance to `t` if `t` is later than the current reading;
+    /// otherwise leave the clock untouched.
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.now
+    }
+}
+
+/// Real elapsed seconds since a fixed origin.
+///
+/// `Copy`, deliberately: the wall-clock driver creates *one* origin
+/// and copies it into every shard worker, so `now()` readings taken
+/// on different threads share a timeline and can be subtracted
+/// meaningfully.
+#[derive(Debug, Clone, Copy)]
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    /// A wall clock whose zero is "now".
+    pub fn new() -> Self {
+        MonotonicClock {
+            origin: Instant::now(),
+        }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_monotonic() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(1.5);
+        assert_eq!(c.now(), 1.5);
+        c.advance_to(0.5); // stale timestamps are ignored
+        assert_eq!(c.now(), 1.5);
+        c.advance_to(2.0);
+        assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    fn monotonic_clock_moves_forward() {
+        let c = MonotonicClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+}

@@ -106,6 +106,7 @@
 use super::admission::{Admission, GateVerdict};
 use super::arrivals::Arrival;
 use super::batch::{BatchFormer, BatchPolicy, FusedBatch, JoinOutcome};
+use super::clock::{Clock, VirtualClock};
 use super::elastic::{Autoscaler, AutoscalerPolicy};
 use super::index::{Ranking, TournamentTree};
 use super::qos::{DeadlinePolicy, QosClass};
@@ -303,6 +304,66 @@ impl Ord for Event {
     }
 }
 
+/// One core dispatch, as mirrored to the wall-clock driver's tap (see
+/// [`TapAction::Dispatch`]).
+#[derive(Debug, Clone)]
+pub struct DispatchNote {
+    /// Dispatch ordinal, assigned in decision order — the exactly-once
+    /// accounting key the wall-clock driver tracks terminal events by.
+    pub unit: u64,
+    /// The shard the unit was dispatched on.
+    pub shard: usize,
+    /// Virtual instant execution started.
+    pub start: f64,
+    /// Virtual instant execution finishes.
+    pub finish: f64,
+    /// Virtual execution seconds charged (`finish - start`).
+    pub exec_s: f64,
+    /// Ids of the completion records this dispatch wrote (several for
+    /// a fused batch, including any [`ExecMode::Rejected`] members).
+    pub records: Vec<u64>,
+}
+
+/// One entry in the core's action tap: the stream of externally
+/// visible decisions a wall-clock driver mirrors onto real worker
+/// threads (see [`super::driver::wall_clock`]). Appended in decision
+/// order, and **only** while the tap is enabled ([`Cluster::set_tap`])
+/// — with the tap off (the default, and always under the virtual
+/// driver) none of this machinery runs, keeping the virtual path
+/// byte-identical to the pre-tap code.
+#[derive(Debug, Clone)]
+pub enum TapAction {
+    /// A work unit was dispatched on a shard.
+    Dispatch(DispatchNote),
+    /// An idle `thief` stole the head of `victim`'s queue.
+    Steal {
+        /// The stealing shard.
+        thief: usize,
+        /// The shard it stole from.
+        victim: usize,
+    },
+    /// The shard crashed: its queued mirror backlog is invalid.
+    Crash {
+        /// The crashed shard.
+        shard: usize,
+    },
+    /// The shard started a graceful drain (in-flight work finishes).
+    Drain {
+        /// The draining shard.
+        shard: usize,
+    },
+    /// A shard joined (a fresh index) or revived (an existing one).
+    Join {
+        /// The joining shard's index.
+        shard: usize,
+    },
+    /// A crashed or drained shard came back.
+    Restart {
+        /// The restarted shard.
+        shard: usize,
+    },
+}
+
 /// Assemble a [`Cluster`] from *distinct* machine configs — the
 /// heterogeneous construction path. Each machine becomes one shard,
 /// profiled independently at install time (simulator seeded
@@ -384,7 +445,7 @@ pub struct Cluster {
     /// steady-state event path performs no per-event allocation.
     drain: VecDeque<Event>,
     seq: u64,
-    clock: f64,
+    clock: VirtualClock,
     served: Vec<ServedRequest>,
     /// All-time completion-record count. Tracks `served.len()` while
     /// records accumulate, but survives [`Cluster::run_to_completion`]
@@ -423,6 +484,15 @@ pub struct Cluster {
     /// Autoscaler runtime state (see [`super::elastic`]); `None`
     /// without a configured policy.
     scaler: Option<Autoscaler>,
+    /// When true, externally visible actions (dispatches, steals,
+    /// faults, membership moves) are also appended to `tap_log` for a
+    /// driver to mirror. Off by default; every tap site is guarded, so
+    /// the untapped event loop is byte-identical to the pre-tap code.
+    tap: bool,
+    /// The pending tap entries, drained by [`Cluster::drain_tap`].
+    tap_log: Vec<TapAction>,
+    /// Next dispatch ordinal handed to the tap.
+    tap_units: u64,
 }
 
 impl Cluster {
@@ -498,7 +568,7 @@ impl Cluster {
             events: BinaryHeap::new(),
             drain: VecDeque::new(),
             seq: 0,
-            clock: 0.0,
+            clock: VirtualClock::new(),
             served: Vec::new(),
             finished: 0,
             next_id: 0,
@@ -511,6 +581,9 @@ impl Cluster {
             requeued: 0,
             joins_scheduled: 0,
             scaler,
+            tap: false,
+            tap_log: Vec::new(),
+            tap_units: 0,
         };
         if let Some(scaler) = &cluster.scaler {
             let first = scaler.policy.eval_interval_s;
@@ -581,7 +654,25 @@ impl Cluster {
 
     /// Current virtual service time (the latest processed event).
     pub fn now(&self) -> f64 {
-        self.clock
+        self.clock.now()
+    }
+
+    /// Enable (or disable) the action tap — the stream of dispatches,
+    /// steals, faults and membership moves a wall-clock driver mirrors
+    /// onto worker threads (see [`super::driver::wall_clock`]). Off by
+    /// default; scheduling decisions are identical either way, the tap
+    /// only *records* them.
+    pub fn set_tap(&mut self, on: bool) {
+        self.tap = on;
+        if !on {
+            self.tap_log.clear();
+        }
+    }
+
+    /// Move every pending tap entry into `out` (appending, in decision
+    /// order). Drivers call this between [`Cluster::step_event`] steps.
+    pub fn drain_tap(&mut self, out: &mut Vec<TapAction>) {
+        out.append(&mut self.tap_log);
     }
 
     /// Number of shards.
@@ -671,14 +762,14 @@ impl Cluster {
     /// Submit a caller-identified request arriving at the current
     /// virtual time.
     pub fn submit_request(&mut self, req: GemmRequest) {
-        self.submit_request_at(self.clock, req);
+        self.submit_request_at(self.clock.now(), req);
     }
 
     /// Submit a caller-identified request arriving at virtual time `at`
     /// (clamped to the present — the past is already simulated).
     pub fn submit_request_at(&mut self, at: f64, req: GemmRequest) {
         self.next_id = self.next_id.max(req.id + 1);
-        self.push_event(at.max(self.clock), EventKind::Arrival(req));
+        self.push_event(at.max(self.clock.now()), EventKind::Arrival(req));
     }
 
     /// Schedule a whole arrival trace (see [`super::arrivals`]);
@@ -723,7 +814,7 @@ impl Cluster {
     /// [`Cluster::inject_join`] is scheduled but has not fired yet.
     pub fn inject_crash(&mut self, at: f64, shard: usize) {
         assert!(shard < self.addressable_shards(), "no shard {shard}");
-        self.push_event(at.max(self.clock), EventKind::Crash(shard));
+        self.push_event(at.max(self.clock.now()), EventKind::Crash(shard));
     }
 
     /// Schedule shard `shard` to restart at virtual time `at` (no-op if
@@ -732,7 +823,7 @@ impl Cluster {
     /// machine-seconds meter and routing resumes.
     pub fn inject_restart(&mut self, at: f64, shard: usize) {
         assert!(shard < self.addressable_shards(), "no shard {shard}");
-        self.push_event(at.max(self.clock), EventKind::Restart(shard));
+        self.push_event(at.max(self.clock.now()), EventKind::Restart(shard));
     }
 
     /// Schedule shard `shard`'s machine to change speed at virtual time
@@ -746,7 +837,10 @@ impl Cluster {
             factor.is_finite() && factor > 0.0,
             "rate factor must be finite and positive, got {factor}"
         );
-        self.push_event(at.max(self.clock), EventKind::RateScale(shard, factor));
+        self.push_event(
+            at.max(self.clock.now()),
+            EventKind::RateScale(shard, factor),
+        );
     }
 
     /// Schedule a new shard running `cfg` to join the cluster at
@@ -757,7 +851,7 @@ impl Cluster {
     pub fn inject_join(&mut self, at: f64, cfg: MachineConfig, profile_seed: u64) {
         self.joins_scheduled += 1;
         self.push_event(
-            at.max(self.clock),
+            at.max(self.clock.now()),
             EventKind::Join(Box::new(cfg), profile_seed),
         );
     }
@@ -770,7 +864,7 @@ impl Cluster {
     /// may name a scheduled-but-not-yet-fired join.
     pub fn inject_drain(&mut self, at: f64, shard: usize) {
         assert!(shard < self.addressable_shards(), "no shard {shard}");
-        self.push_event(at.max(self.clock), EventKind::Drain(shard));
+        self.push_event(at.max(self.clock.now()), EventKind::Drain(shard));
     }
 
     /// Gate one work unit — a plain request (`members == 1`) or a fused
@@ -941,7 +1035,7 @@ impl Cluster {
     /// diagnostics. Under [`RoutePolicy::Sampled`] it consumes the
     /// router stream just like a real admission.
     pub fn probe_route(&mut self, req: &GemmRequest) -> Option<(usize, f64)> {
-        self.route(self.clock, req, 1, false)
+        self.route(self.clock.now(), req, 1, false)
             .map(|r| (r.shard, r.finish))
     }
 
@@ -1272,6 +1366,9 @@ impl Cluster {
         }
         self.down[s] = true;
         self.reindex(s);
+        if self.tap {
+            self.tap_log.push(TapAction::Crash { shard: s });
+        }
         let mut aborted = Vec::new();
         let mut kept = Vec::with_capacity(self.served.len());
         for r in std::mem::take(&mut self.served) {
@@ -1333,6 +1430,9 @@ impl Cluster {
         self.down[s] = false;
         self.shards[s].unretire(now);
         self.reindex(s);
+        if self.tap {
+            self.tap_log.push(TapAction::Restart { shard: s });
+        }
         for (req, arrival) in std::mem::take(&mut self.parked) {
             self.admit_request(now, req, arrival);
         }
@@ -1373,6 +1473,9 @@ impl Cluster {
         for s in 0..n {
             self.reindex(s);
         }
+        if self.tap {
+            self.tap_log.push(TapAction::Join { shard: idx });
+        }
         for (req, arrival) in std::mem::take(&mut self.parked) {
             self.admit_request(now, req, arrival);
         }
@@ -1399,6 +1502,9 @@ impl Cluster {
         self.down[s] = true;
         self.shards[s].retire(now);
         self.reindex(s);
+        if self.tap {
+            self.tap_log.push(TapAction::Drain { shard: s });
+        }
         let drained = self.shards[s].drain_queue();
         let displaced: usize = drained
             .iter()
@@ -1509,6 +1615,18 @@ impl Cluster {
         let start = self.shards[s].free_at().max(at);
         let before = self.served.len();
         if let Some(res) = self.shards[s].dispatch_next(start, &mut self.served) {
+            if self.tap {
+                let unit = self.tap_units;
+                self.tap_units += 1;
+                self.tap_log.push(TapAction::Dispatch(DispatchNote {
+                    unit,
+                    shard: s,
+                    start,
+                    finish: res.finish,
+                    exec_s: res.finish - start,
+                    records: self.served[before..].iter().map(|r| r.id).collect(),
+                }));
+            }
             if res.replanned {
                 // This shard observed drift and refreshed its model:
                 // *its* gate adopts it so future admissions (and their
@@ -1566,7 +1684,7 @@ impl Cluster {
             // virtual clock — the flush they were armed for already
             // happened at an earlier instant.
             if self.former.has_window(window) {
-                self.clock = self.clock.max(ev.time);
+                self.clock.advance_to(ev.time);
                 self.flush_window(ev.time, window);
             }
             return true;
@@ -1582,7 +1700,7 @@ impl Cluster {
             if idle {
                 return true;
             }
-            self.clock = self.clock.max(ev.time);
+            self.clock.advance_to(ev.time);
             self.autoscale_eval(ev.time);
             if let Some(scaler) = &self.scaler {
                 let next = ev.time + scaler.policy.eval_interval_s;
@@ -1590,7 +1708,7 @@ impl Cluster {
             }
             return true;
         }
-        self.clock = self.clock.max(ev.time);
+        self.clock.advance_to(ev.time);
         match ev.kind {
             EventKind::Arrival(req) => {
                 // Small standalone-bound arrivals visit the batch
@@ -1707,6 +1825,9 @@ impl Cluster {
                                 q.predicted_s = predicted_s;
                                 self.reindex(victim);
                                 self.shards[s].note_steal();
+                                if self.tap {
+                                    self.tap_log.push(TapAction::Steal { thief: s, victim });
+                                }
                                 self.shards[s].enqueue(q);
                                 self.reindex(s);
                                 self.dispatch_on(s, ev.time);
@@ -1744,7 +1865,7 @@ impl Cluster {
         let rejected = served.iter().filter(|r| r.mode.is_rejected()).count();
         let mut report = ServiceReport {
             served,
-            makespan: self.clock,
+            makespan: self.clock.now(),
             cache_hits: 0,
             cache_misses: 0,
             epoch_bumps: 0,
@@ -1763,7 +1884,7 @@ impl Cluster {
             // Close every still-provisioned span at the report clock
             // (shard-local stats closed it at the shard's own free_at,
             // which undercounts idle tails).
-            let provisioned = s.provisioned_s(self.clock);
+            let provisioned = s.provisioned_s(self.clock.now());
             report.shards[i].provisioned_s = provisioned;
             report.machine_seconds += provisioned;
         }

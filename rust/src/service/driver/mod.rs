@@ -1,0 +1,57 @@
+//! Drivers: the two ways to advance a [`Cluster`] through its trace.
+//!
+//! The cluster is a driver-agnostic scheduling core — admission,
+//! routing, QoS queueing, batching, stealing, faults, and the
+//! autoscaler all read only deterministic cluster state at the
+//! core's [`super::clock::VirtualClock`]. A *driver* owns the core
+//! and decides how its event loop relates to real time:
+//!
+//! * [`VirtualDriver`] ([`virtual_time`]) — the classic in-process
+//!   binary-heap loop, byte-identical to driving the cluster
+//!   directly. Fast-forwards through idle time; the replay /
+//!   determinism contract every existing test pins.
+//! * [`WallClockDriver`] ([`wall_clock`]) — actor-per-shard real
+//!   concurrency. The core still makes every decision (so decisions
+//!   match the virtual driver exactly — property-tested); each
+//!   dispatch is mirrored to a per-shard worker thread over a bounded
+//!   command channel and executed against a real [`wall_clock::Executor`],
+//!   with completions flowing back on one unified MPSC event stream.
+//!
+//! Scenarios pick a driver with the `driver = "virtual" | "wallclock"`
+//! knob ([`super::scenario`]); both produce the same
+//! [`ServiceReport`], because the report is the core's deterministic
+//! accounting — the wall-clock driver *additionally* returns real
+//! measurements ([`wall_clock::WallClockStats`]).
+
+pub mod virtual_time;
+pub mod wall_clock;
+
+pub use virtual_time::VirtualDriver;
+pub use wall_clock::{
+    Executor, ExecutorFactory, ShardEvent, SimulatedExecutor, WallClockDriver, WallClockOptions,
+    WallClockStats, WorkUnit,
+};
+
+use super::cluster::Cluster;
+use super::request::ServiceReport;
+
+/// Which driver a scenario (or caller) wants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DriverKind {
+    /// The deterministic virtual-time heap loop (the default).
+    #[default]
+    Virtual,
+    /// Actor-per-shard wall-clock execution with simulated executors.
+    WallClock,
+}
+
+/// Something that can run a cluster's submitted trace to completion.
+pub trait Driver {
+    /// The core being driven.
+    fn cluster(&self) -> &Cluster;
+    /// Mutable access to the core (e.g. to submit more work before
+    /// running).
+    fn cluster_mut(&mut self) -> &mut Cluster;
+    /// Drain every pending event and build the final report.
+    fn run_to_completion(&mut self) -> ServiceReport;
+}

@@ -1,0 +1,50 @@
+//! The virtual-time driver: a thin name for the loop the cluster has
+//! always run.
+//!
+//! [`VirtualDriver`] delegates straight to
+//! [`Cluster::run_to_completion`] — no tap, no threads, no wall time.
+//! It exists so call sites (scenarios, benches, tests) can select a
+//! driver uniformly; driving the cluster directly remains supported
+//! and byte-identical.
+
+use super::super::cluster::Cluster;
+use super::super::request::ServiceReport;
+use super::Driver;
+
+/// The deterministic binary-heap event loop, packaged as a driver.
+#[derive(Debug, Clone)]
+pub struct VirtualDriver {
+    cluster: Cluster,
+}
+
+impl VirtualDriver {
+    /// Wrap a cluster (typically with a trace already submitted).
+    pub fn new(cluster: Cluster) -> Self {
+        VirtualDriver { cluster }
+    }
+
+    /// Drain the event heap and build the report — exactly
+    /// [`Cluster::run_to_completion`].
+    pub fn run_to_completion(&mut self) -> ServiceReport {
+        self.cluster.run_to_completion()
+    }
+
+    /// Recover the cluster (e.g. to inspect state after a run).
+    pub fn into_cluster(self) -> Cluster {
+        self.cluster
+    }
+}
+
+impl Driver for VirtualDriver {
+    fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    fn cluster_mut(&mut self) -> &mut Cluster {
+        &mut self.cluster
+    }
+
+    fn run_to_completion(&mut self) -> ServiceReport {
+        VirtualDriver::run_to_completion(self)
+    }
+}

@@ -1,0 +1,617 @@
+//! The wall-clock driver: actor-per-shard execution mirrored off the
+//! deterministic core.
+//!
+//! # Control plane vs data plane
+//!
+//! Every scheduling *decision* — admission verdict, batch membership,
+//! routed shard, steal victim, fault handling, autoscaler move — is
+//! still made by the deterministic core ([`Cluster`]) on its virtual
+//! clock, which is why decisions are identical across drivers by
+//! construction (and why the wall-clock driver's [`ServiceReport`]
+//! digests equal the virtual driver's). What this driver adds is a
+//! *data plane*: the core's dispatch/steal/fault stream (its tap,
+//! [`TapAction`]) is mirrored in decision order to one worker thread
+//! per shard, where an [`Executor`] really runs each unit — so shard
+//! service, plan-cache hits, and completion fan-out genuinely overlap
+//! across cores.
+//!
+//! # The actor protocol
+//!
+//! Each shard worker owns a **bounded** command channel
+//! (`Dispatch` / `StealOffer` / `Drain` / `Crash` / `Shutdown`). The
+//! bound is the backpressure: when a shard's mirror queue fills, the
+//! core's forwarding loop blocks on `send` until the worker catches
+//! up — the front-end cannot run unboundedly ahead of execution.
+//! Workers report back on one unified unbounded MPSC event stream
+//! ([`ShardEvent`]); the front-end folds that stream between core
+//! steps and at shutdown, keyed by the unit ordinal the core assigned
+//! at dispatch time — unit ordinals are allocated in decision order,
+//! so the accounting is independent of thread interleaving.
+//!
+//! # Faults and exactly-once accounting
+//!
+//! A core crash displaces the shard's queued work *and* aborts its
+//! in-flight record; the mirror matches that with a per-shard crash
+//! **epoch** (an `Arc<AtomicU64>` the driver bumps *before* sending
+//! `Crash`): any dispatch still sitting in the command channel from an
+//! older epoch is acknowledged as [`ShardEvent::Dropped`], and a unit
+//! already executing finishes as wasted work. Either way every
+//! forwarded unit produces exactly one terminal event — `Completion`
+//! or `Dropped` — which is the invariant
+//! [`WallClockStats::lost`] / [`WallClockStats::duplicated`] count
+//! violations of (both CI-gated at zero). Note the exactly-once
+//! contract is per *unit*: a request displaced by a crash is
+//! re-admitted by the core and may legitimately appear in a second
+//! unit; the first execution was wasted work, exactly as in the
+//! virtual model.
+//!
+//! Wall timings ([`WallClockStats`] sojourns, elapsed seconds) are
+//! measurements, not replayable state: they vary run to run. The
+//! core's report is the reproducible artifact.
+//!
+//! [`SimulatedExecutor`] sleeps each unit's virtual execution time
+//! scaled by [`WallClockOptions::time_scale`]; a real PJRT-backed
+//! executor plugs in through [`WallClockDriver::with_executors`]
+//! without touching the core.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use super::super::clock::{Clock, MonotonicClock};
+use super::super::cluster::{Cluster, DispatchNote, TapAction};
+use super::super::request::ServiceReport;
+use super::Driver;
+
+/// One mirrored dispatch: everything a worker needs to execute the
+/// unit and everything the front-end needs to account for it.
+#[derive(Debug, Clone)]
+pub struct WorkUnit {
+    /// Ordinal assigned by the core in decision order; the key the
+    /// front-end tracks terminal events under.
+    pub unit: u64,
+    /// Shard the core dispatched this unit on.
+    pub shard: usize,
+    /// The shard's crash epoch at forwarding time; workers drop units
+    /// from older epochs.
+    pub epoch: u64,
+    /// Virtual execution seconds the core charged for this unit.
+    pub exec_s: f64,
+    /// Core (virtual) start instant.
+    pub virtual_start: f64,
+    /// Core (virtual) finish instant.
+    pub virtual_finish: f64,
+    /// Request ids completed by this unit (a fused batch completes
+    /// several).
+    pub records: Vec<u64>,
+    /// Wall instant the front-end forwarded the unit (queueing-delay
+    /// baseline).
+    pub forwarded_s: f64,
+}
+
+/// Commands on a shard worker's bounded channel.
+enum Command {
+    Dispatch(WorkUnit),
+    StealOffer { victim: usize },
+    Drain,
+    Crash,
+    Shutdown,
+}
+
+/// What shard workers report on the unified event stream.
+#[derive(Debug, Clone)]
+pub enum ShardEvent {
+    /// A unit executed to completion.
+    Completion {
+        /// The unit's ordinal.
+        unit: u64,
+        /// Executing shard.
+        shard: usize,
+        /// Request ids the unit completed.
+        records: Vec<u64>,
+        /// Wall instant execution started.
+        started_s: f64,
+        /// Wall instant execution finished.
+        finished_s: f64,
+        /// Wall seconds the unit waited in the command channel.
+        queued_s: f64,
+    },
+    /// A unit from a pre-crash epoch was discarded without executing.
+    Dropped {
+        /// The unit's ordinal.
+        unit: u64,
+        /// Discarding shard.
+        shard: usize,
+    },
+    /// Acknowledgement of a mirrored steal decision.
+    Stole {
+        /// The thief shard.
+        shard: usize,
+        /// The shard the core stole from.
+        victim: usize,
+    },
+    /// Acknowledgement of a mirrored graceful drain.
+    Drained {
+        /// The draining shard.
+        shard: usize,
+    },
+    /// Acknowledgement of a mirrored crash.
+    Crashed {
+        /// The crashed shard.
+        shard: usize,
+        /// The epoch now current on that shard.
+        epoch: u64,
+    },
+    /// The worker's last word before its thread exits.
+    Stopped {
+        /// The stopping shard.
+        shard: usize,
+        /// Units it executed over its lifetime.
+        executed: u64,
+    },
+}
+
+/// Executes one mirrored unit on a worker thread. Implement this to
+/// plug real execution (e.g. the PJRT runtime) into the wall-clock
+/// driver; the core's scheduling is untouched.
+pub trait Executor: Send {
+    /// Run the unit. Called on the shard's worker thread; blocking
+    /// here is exactly what occupies the shard.
+    fn execute(&mut self, unit: &WorkUnit);
+}
+
+/// The default executor: sleeps each unit's virtual execution time
+/// scaled by a constant, so wall-clock runs are sleep-bound (shard
+/// scaling tracks shard count, not host core count).
+#[derive(Debug, Clone, Copy)]
+pub struct SimulatedExecutor {
+    /// Wall seconds slept per virtual second of execution; `0.0`
+    /// executes instantly (pure protocol overhead).
+    pub time_scale: f64,
+}
+
+impl Executor for SimulatedExecutor {
+    fn execute(&mut self, unit: &WorkUnit) {
+        let wall = unit.exec_s * self.time_scale;
+        if wall > 0.0 {
+            thread::sleep(Duration::from_secs_f64(wall));
+        }
+    }
+}
+
+/// Builds one [`Executor`] per shard index (shards may get
+/// heterogeneous executors, mirroring heterogeneous machines).
+pub type ExecutorFactory = Box<dyn Fn(usize) -> Box<dyn Executor>>;
+
+/// Wall-clock driver knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct WallClockOptions {
+    /// Wall seconds per virtual execution second for the default
+    /// [`SimulatedExecutor`] (ignored once a custom factory is
+    /// installed).
+    pub time_scale: f64,
+    /// Bound of each shard's command channel (>= 1). Smaller bounds
+    /// mean tighter backpressure on the front-end.
+    pub channel_capacity: usize,
+}
+
+impl Default for WallClockOptions {
+    fn default() -> Self {
+        WallClockOptions {
+            time_scale: 0.0,
+            channel_capacity: 2,
+        }
+    }
+}
+
+/// Real measurements from one wall-clock run (the reproducible
+/// decisions live in the core's [`ServiceReport`]).
+#[derive(Debug, Clone, Default)]
+pub struct WallClockStats {
+    /// Wall seconds from driver start to shutdown.
+    pub elapsed_s: f64,
+    /// Units forwarded to workers.
+    pub forwarded: u64,
+    /// Units that reported `Completion`.
+    pub completed: u64,
+    /// Units discarded by the crash-epoch check.
+    pub dropped: u64,
+    /// Forwarded units with **no** terminal event — must be zero.
+    pub lost: u64,
+    /// Terminal events for already-settled units — must be zero.
+    pub duplicated: u64,
+    /// Steal acknowledgements observed.
+    pub steals: u64,
+    /// Per-record wall sojourn (command-channel wait + execution).
+    pub sojourns_s: Vec<f64>,
+}
+
+impl WallClockStats {
+    /// 99th-percentile wall sojourn, nearest-rank; `0.0` when empty.
+    pub fn p99_sojourn_s(&self) -> f64 {
+        if self.sojourns_s.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.sojourns_s.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((v.len() - 1) as f64 * 0.99).round() as usize;
+        v[idx]
+    }
+}
+
+/// Handle to one shard's worker thread.
+struct ShardWorker {
+    tx: SyncSender<Command>,
+    /// Shared with the worker; the driver is the sole bumper.
+    epoch: Arc<AtomicU64>,
+    /// The driver-side copy of the current epoch (stamped onto units).
+    current_epoch: u64,
+    handle: thread::JoinHandle<()>,
+}
+
+fn spawn_worker(
+    shard: usize,
+    clock: MonotonicClock,
+    capacity: usize,
+    event_tx: Sender<ShardEvent>,
+    mut exec: Box<dyn Executor>,
+) -> ShardWorker {
+    let (tx, rx) = sync_channel::<Command>(capacity);
+    let epoch = Arc::new(AtomicU64::new(0));
+    let worker_epoch = Arc::clone(&epoch);
+    let handle = thread::Builder::new()
+        .name(format!("poas-shard-{shard}"))
+        .spawn(move || {
+            let mut executed = 0u64;
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    Command::Dispatch(unit) => {
+                        if unit.epoch < worker_epoch.load(Ordering::Acquire) {
+                            let _ = event_tx.send(ShardEvent::Dropped {
+                                unit: unit.unit,
+                                shard,
+                            });
+                            continue;
+                        }
+                        let started_s = clock.now();
+                        exec.execute(&unit);
+                        let finished_s = clock.now();
+                        executed += 1;
+                        let WorkUnit {
+                            unit: ordinal,
+                            records,
+                            forwarded_s,
+                            ..
+                        } = unit;
+                        let _ = event_tx.send(ShardEvent::Completion {
+                            unit: ordinal,
+                            shard,
+                            records,
+                            started_s,
+                            finished_s,
+                            queued_s: (started_s - forwarded_s).max(0.0),
+                        });
+                    }
+                    Command::StealOffer { victim } => {
+                        let _ = event_tx.send(ShardEvent::Stole { shard, victim });
+                    }
+                    Command::Drain => {
+                        let _ = event_tx.send(ShardEvent::Drained { shard });
+                    }
+                    Command::Crash => {
+                        let _ = event_tx.send(ShardEvent::Crashed {
+                            shard,
+                            epoch: worker_epoch.load(Ordering::Acquire),
+                        });
+                    }
+                    Command::Shutdown => break,
+                }
+            }
+            let _ = event_tx.send(ShardEvent::Stopped { shard, executed });
+        })
+        .expect("spawn shard worker thread");
+    ShardWorker {
+        tx,
+        epoch,
+        current_epoch: 0,
+        handle,
+    }
+}
+
+/// The per-run thread fleet: one worker per shard plus the shared
+/// clock origin and event-stream sender used to spawn late joiners.
+struct Fleet {
+    clock: MonotonicClock,
+    capacity: usize,
+    workers: Vec<ShardWorker>,
+    event_tx: Sender<ShardEvent>,
+}
+
+impl Fleet {
+    /// Mirror one core tap action onto the worker fleet.
+    fn forward(
+        &mut self,
+        action: TapAction,
+        make_executor: &ExecutorFactory,
+        stats: &mut WallClockStats,
+        terminal: &mut Vec<Option<bool>>,
+    ) {
+        match action {
+            TapAction::Dispatch(note) => {
+                let DispatchNote {
+                    unit,
+                    shard,
+                    start,
+                    finish,
+                    exec_s,
+                    records,
+                } = note;
+                debug_assert_eq!(unit as usize, terminal.len());
+                terminal.push(None);
+                let w = &self.workers[shard];
+                let work = WorkUnit {
+                    unit,
+                    shard,
+                    epoch: w.current_epoch,
+                    exec_s,
+                    virtual_start: start,
+                    virtual_finish: finish,
+                    records,
+                    forwarded_s: self.clock.now(),
+                };
+                stats.forwarded += 1;
+                // The blocking send on a bounded channel IS the
+                // backpressure: a full mirror queue stalls the core's
+                // loop here until the worker catches up.
+                w.tx.send(Command::Dispatch(work)).expect("shard worker alive");
+            }
+            TapAction::Steal { thief, victim } => {
+                self.workers[thief]
+                    .tx
+                    .send(Command::StealOffer { victim })
+                    .expect("shard worker alive");
+            }
+            TapAction::Crash { shard } => {
+                // Bump the epoch BEFORE the command so every stale unit
+                // already in the channel fails the check.
+                let w = &mut self.workers[shard];
+                w.current_epoch += 1;
+                w.epoch.store(w.current_epoch, Ordering::Release);
+                w.tx.send(Command::Crash).expect("shard worker alive");
+            }
+            TapAction::Drain { shard } => {
+                self.workers[shard]
+                    .tx
+                    .send(Command::Drain)
+                    .expect("shard worker alive");
+            }
+            TapAction::Restart { .. } => {
+                // The worker outlived the crash; displaced work comes
+                // back as fresh units via the core's re-admission.
+            }
+            TapAction::Join { shard } => {
+                // Tap order guarantees a fresh join precedes any
+                // dispatch onto the new index; a revival reuses an
+                // existing index whose worker never exited.
+                debug_assert!(shard <= self.workers.len());
+                if shard == self.workers.len() {
+                    let exec = make_executor(shard);
+                    self.workers.push(spawn_worker(
+                        shard,
+                        self.clock,
+                        self.capacity,
+                        self.event_tx.clone(),
+                        exec,
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn fold_event(ev: ShardEvent, stats: &mut WallClockStats, terminal: &mut [Option<bool>]) {
+    match ev {
+        ShardEvent::Completion {
+            unit,
+            records,
+            started_s,
+            finished_s,
+            queued_s,
+            ..
+        } => match terminal.get_mut(unit as usize) {
+            Some(slot) if slot.is_none() => {
+                *slot = Some(true);
+                stats.completed += 1;
+                let service = (finished_s - started_s).max(0.0);
+                for _ in &records {
+                    stats.sojourns_s.push(queued_s + service);
+                }
+            }
+            _ => stats.duplicated += 1,
+        },
+        ShardEvent::Dropped { unit, .. } => match terminal.get_mut(unit as usize) {
+            Some(slot) if slot.is_none() => {
+                *slot = Some(false);
+                stats.dropped += 1;
+            }
+            _ => stats.duplicated += 1,
+        },
+        ShardEvent::Stole { .. } => stats.steals += 1,
+        ShardEvent::Drained { .. } | ShardEvent::Crashed { .. } | ShardEvent::Stopped { .. } => {}
+    }
+}
+
+/// Actor-per-shard driver over the deterministic core. See the module
+/// docs for the control-plane / data-plane split.
+pub struct WallClockDriver {
+    cluster: Cluster,
+    opts: WallClockOptions,
+    make_executor: ExecutorFactory,
+}
+
+impl WallClockDriver {
+    /// Wrap a cluster with default options ([`SimulatedExecutor`] at
+    /// `time_scale = 0.0`).
+    pub fn new(cluster: Cluster) -> Self {
+        WallClockDriver::with_options(cluster, WallClockOptions::default())
+    }
+
+    /// Wrap a cluster with explicit options.
+    pub fn with_options(cluster: Cluster, opts: WallClockOptions) -> Self {
+        assert!(opts.channel_capacity >= 1, "channel_capacity must be >= 1");
+        assert!(
+            opts.time_scale.is_finite() && opts.time_scale >= 0.0,
+            "time_scale must be finite and non-negative"
+        );
+        let time_scale = opts.time_scale;
+        let make_executor: ExecutorFactory =
+            Box::new(move |_shard| Box::new(SimulatedExecutor { time_scale }));
+        WallClockDriver::with_executors(cluster, opts, make_executor)
+    }
+
+    /// Wrap a cluster with a custom per-shard executor factory — the
+    /// seam where real (e.g. PJRT-backed) execution plugs in.
+    pub fn with_executors(
+        mut cluster: Cluster,
+        opts: WallClockOptions,
+        make_executor: ExecutorFactory,
+    ) -> Self {
+        assert!(opts.channel_capacity >= 1, "channel_capacity must be >= 1");
+        cluster.set_tap(true);
+        WallClockDriver {
+            cluster,
+            opts,
+            make_executor,
+        }
+    }
+
+    /// Recover the core (e.g. to inspect state after a run).
+    pub fn into_cluster(self) -> Cluster {
+        self.cluster
+    }
+
+    /// Run the submitted trace to completion, mirroring every dispatch
+    /// onto the worker fleet; returns the core's deterministic report
+    /// plus this run's wall measurements.
+    pub fn run_measured(&mut self) -> (ServiceReport, WallClockStats) {
+        let clock = MonotonicClock::new();
+        let (event_tx, event_rx) = channel::<ShardEvent>();
+        let mut fleet = Fleet {
+            clock,
+            capacity: self.opts.channel_capacity,
+            workers: Vec::new(),
+            event_tx,
+        };
+        for s in 0..self.cluster.num_shards() {
+            let exec = (self.make_executor)(s);
+            fleet.workers.push(spawn_worker(
+                s,
+                clock,
+                self.opts.channel_capacity,
+                fleet.event_tx.clone(),
+                exec,
+            ));
+        }
+
+        let mut stats = WallClockStats::default();
+        // One slot per forwarded unit: None = pending, Some(true) =
+        // completed, Some(false) = dropped.
+        let mut terminal: Vec<Option<bool>> = Vec::new();
+        let mut taps: Vec<TapAction> = Vec::new();
+
+        loop {
+            self.cluster.drain_tap(&mut taps);
+            for action in taps.drain(..) {
+                fleet.forward(action, &self.make_executor, &mut stats, &mut terminal);
+            }
+            while let Ok(ev) = event_rx.try_recv() {
+                fold_event(ev, &mut stats, &mut terminal);
+            }
+            if !self.cluster.step_event() {
+                break;
+            }
+        }
+        // Flush taps from the final processed event, then shut down.
+        self.cluster.drain_tap(&mut taps);
+        for action in taps.drain(..) {
+            fleet.forward(action, &self.make_executor, &mut stats, &mut terminal);
+        }
+        for w in &fleet.workers {
+            let _ = w.tx.send(Command::Shutdown);
+        }
+        let Fleet {
+            workers, event_tx, ..
+        } = fleet;
+        drop(event_tx);
+        let mut stopped = 0usize;
+        while stopped < workers.len() {
+            match event_rx.recv() {
+                Ok(ShardEvent::Stopped { .. }) => stopped += 1,
+                Ok(ev) => fold_event(ev, &mut stats, &mut terminal),
+                Err(_) => break,
+            }
+        }
+        for w in workers {
+            let _ = w.handle.join();
+        }
+
+        stats.lost = terminal.iter().filter(|t| t.is_none()).count() as u64;
+        stats.elapsed_s = clock.now();
+        // The heap is already drained; this just builds the core's
+        // deterministic report.
+        let report = self.cluster.run_to_completion();
+        (report, stats)
+    }
+
+    /// [`Self::run_measured`], discarding the wall measurements.
+    pub fn run_to_completion(&mut self) -> ServiceReport {
+        self.run_measured().0
+    }
+}
+
+impl Driver for WallClockDriver {
+    fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    fn cluster_mut(&mut self) -> &mut Cluster {
+        &mut self.cluster
+    }
+
+    fn run_to_completion(&mut self) -> ServiceReport {
+        WallClockDriver::run_to_completion(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p99_is_nearest_rank() {
+        let stats = WallClockStats {
+            sojourns_s: (1..=100).map(|i| i as f64).collect(),
+            ..WallClockStats::default()
+        };
+        assert_eq!(stats.p99_sojourn_s(), 99.0);
+        assert_eq!(WallClockStats::default().p99_sojourn_s(), 0.0);
+    }
+
+    #[test]
+    fn simulated_executor_zero_scale_is_instant() {
+        let mut exec = SimulatedExecutor { time_scale: 0.0 };
+        let unit = WorkUnit {
+            unit: 0,
+            shard: 0,
+            epoch: 0,
+            exec_s: 1e9, // would sleep ~32 years at scale 1.0
+            virtual_start: 0.0,
+            virtual_finish: 1e9,
+            records: vec![1],
+            forwarded_s: 0.0,
+        };
+        exec.execute(&unit); // returns immediately
+    }
+}

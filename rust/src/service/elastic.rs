@@ -36,6 +36,13 @@
 //! `ci/elasticity_floor.json` gates in CI (autoscaled must match the
 //! statically-overprovisioned hit rate at materially fewer
 //! machine-seconds on the diurnal trace).
+//!
+//! Membership changes are driver-transparent: a join, drain or revival
+//! the policy triggers is mirrored through the cluster's tap under the
+//! wall-clock driver ([`super::driver::WallClockDriver`]) — a join
+//! spawns the new shard's worker thread, a drain winds it down to
+//! idle, a revival reuses the still-running worker — so autoscaled
+//! runs make identical decisions on both drivers.
 
 use crate::config::MachineConfig;
 

@@ -34,6 +34,17 @@
 //!   pairing and per-tenant completion attribution) is shard-local, and
 //!   an infeasible plan completes as [`ExecMode::Rejected`] instead of
 //!   panicking;
+//! * [`clock`] — time, abstracted: the [`Clock`] trait with the
+//!   core-owned [`VirtualClock`] (simulated service time, advanced by
+//!   the event loop) and the shared-origin [`MonotonicClock`] (real
+//!   elapsed seconds) the wall-clock driver hands its workers;
+//! * [`driver`] — the two ways to advance the core: the
+//!   [`VirtualDriver`] (the deterministic heap loop, byte-identical to
+//!   driving the cluster directly) and the [`WallClockDriver`]
+//!   (actor-per-shard worker threads fed by the core's decision tap
+//!   over bounded command channels, reporting on one unified event
+//!   stream — same decisions, really concurrent execution; the seam
+//!   where a PJRT-backed [`driver::wall_clock::Executor`] plugs in);
 //! * [`cluster`] — the [`Cluster`] front-end: N shards (possibly over
 //!   *different* machines — see [`HeterogeneousSpec`],
 //!   [`Cluster::from_machines`] and the node presets in
@@ -111,7 +122,9 @@ pub mod admission;
 pub mod arrivals;
 pub mod batch;
 pub mod cache;
+pub mod clock;
 pub mod cluster;
+pub mod driver;
 pub mod elastic;
 pub mod index;
 pub mod qos;
@@ -128,7 +141,14 @@ pub use arrivals::{
 };
 pub use batch::{BatchFormer, BatchMember, BatchPolicy, BatchWindow, FusedBatch, ShapeClass};
 pub use cache::{LruMap, PlanCache};
-pub use cluster::{Cluster, ClusterOptions, GatePolicy, HeterogeneousSpec, RoutePolicy};
+pub use clock::{Clock, MonotonicClock, VirtualClock};
+pub use cluster::{
+    Cluster, ClusterOptions, DispatchNote, GatePolicy, HeterogeneousSpec, RoutePolicy, TapAction,
+};
+pub use driver::{
+    Driver, DriverKind, SimulatedExecutor, VirtualDriver, WallClockDriver, WallClockOptions,
+    WallClockStats,
+};
 pub use elastic::AutoscalerPolicy;
 pub use index::{Ranking, TournamentTree};
 pub use qos::{DeadlinePolicy, QosClass};

@@ -22,7 +22,14 @@
 //! * **the autoscaler** — an optional `[[autoscaler]]` table arming
 //!   the elastic policy of [`crate::service::elastic`] with a preset
 //!   machine pool and pressure thresholds, so membership follows the
-//!   offered load instead of a fixed schedule.
+//!   offered load instead of a fixed schedule;
+//! * **the driver** — an optional top-level `driver = "virtual" |
+//!   "wallclock"` knob. `"virtual"` (the default) is the deterministic
+//!   heap loop; `"wallclock"` executes the same scenario through the
+//!   actor-per-shard [`WallClockDriver`] with simulated executors.
+//!   Decisions — and therefore the digest — are identical either way
+//!   (the report is the core's deterministic accounting); what changes
+//!   is that execution really runs on one thread per shard.
 //!
 //! [`Scenario::run`] realizes the streams into one merged arrival
 //! trace, builds the [`Cluster`] and executes everything on the same
@@ -59,6 +66,7 @@ use crate::service::arrivals::{
     Arrival, ClassLoad, MixedArrivals, OnOffArrivals, Phase, PhasedArrivals,
 };
 use crate::service::cluster::{Cluster, ClusterOptions};
+use crate::service::driver::{DriverKind, WallClockDriver};
 use crate::service::qos::QosClass;
 use crate::service::request::ServiceReport;
 use crate::workload::GemmSize;
@@ -222,6 +230,10 @@ pub struct Scenario {
     pub requests: Vec<FixedRequest>,
     /// Scheduled faults, document order.
     pub faults: Vec<Fault>,
+    /// Which driver executes the run (top-level `driver` key;
+    /// [`DriverKind::Virtual`] when absent). The report — and thus the
+    /// digest — is identical under both; see [`Scenario::run`].
+    pub driver: DriverKind,
 }
 
 /// Seed for stream `index`: domain-separated from the master seed so
@@ -376,12 +388,18 @@ impl Scenario {
     }
 
     /// Execute the scenario to completion: build, submit the realized
-    /// trace, drain the event loop. Deterministic: same file, same
-    /// seed, same report.
+    /// trace, drain the event loop under the configured driver.
+    /// Deterministic: same file, same seed, same report — under
+    /// **either** driver, since every decision (and the report) comes
+    /// from the shared core; the wall-clock driver only adds real
+    /// per-shard execution threads.
     pub fn run(&self) -> ServiceReport {
         let mut cluster = self.build();
         cluster.submit_trace(&self.trace());
-        cluster.run_to_completion()
+        match self.driver {
+            DriverKind::Virtual => cluster.run_to_completion(),
+            DriverKind::WallClock => WallClockDriver::new(cluster).run_to_completion(),
+        }
     }
 }
 
@@ -419,6 +437,7 @@ mod tests {
         assert_eq!(sc.seed, 7);
         assert_eq!(sc.machines.len(), 1);
         assert_eq!(sc.streams.len(), 1);
+        assert_eq!(sc.driver, DriverKind::Virtual);
         assert_eq!(sc.trace().len(), 4);
         let report = sc.run();
         assert_eq!(report.served.len(), 4);

@@ -13,6 +13,7 @@ use crate::error::{Error, Result};
 use crate::service::arrivals::Phase;
 use crate::service::batch::{BatchPolicy, BatchWindow};
 use crate::service::cluster::{ClusterOptions, GatePolicy};
+use crate::service::driver::DriverKind;
 use crate::service::elastic::AutoscalerPolicy;
 use crate::service::qos::{DeadlinePolicy, QosClass};
 use crate::service::queue::QueuePolicy;
@@ -33,6 +34,18 @@ pub(super) fn parse_scenario(text: &str) -> Result<Scenario> {
         None => 0,
     };
     let mut opts = parse_options(&top)?;
+    let driver = match get(&top, "driver") {
+        None => DriverKind::Virtual,
+        Some(v) => match v.as_str("driver")? {
+            "virtual" => DriverKind::Virtual,
+            "wallclock" => DriverKind::WallClock,
+            other => {
+                return Err(Error::Config(format!(
+                    "`driver` must be \"virtual\" or \"wallclock\", got \"{other}\""
+                )))
+            }
+        },
+    };
 
     let mut machines = Vec::new();
     let mut streams = Vec::new();
@@ -89,6 +102,7 @@ pub(super) fn parse_scenario(text: &str) -> Result<Scenario> {
         streams,
         requests,
         faults,
+        driver,
     })
 }
 
@@ -561,6 +575,7 @@ mod tests {
             r#"
             name = "everything"
             seed = 42
+            driver = "wallclock"
             queue = "spjf"
             gate = "per_shard"
             work_stealing = 1
@@ -605,6 +620,7 @@ mod tests {
         )
         .expect("parse");
         assert_eq!(sc.machines.len(), 3);
+        assert_eq!(sc.driver, DriverKind::WallClock);
         assert_eq!(sc.opts.shard.policy, QueuePolicy::Spjf);
         assert_eq!(sc.opts.shard.deadline_policy, DeadlinePolicy::Downclass);
         assert!(sc.opts.shard.dynamic);
@@ -722,5 +738,9 @@ mod tests {
         assert!(parse_phases("4.0", "test").is_err());
         assert!(parse_phases("4.0:0", "test").is_err());
         assert!(parse_phases(" , ", "test").is_err());
+        // Unknown driver.
+        assert!(
+            parse("name = \"x\"\ndriver = \"sundial\"\n[[shard]]\npreset = \"mach1\"").is_err()
+        );
     }
 }

@@ -13,6 +13,14 @@
 //! A request whose plan turns out to be infeasible completes with an
 //! [`ExecMode::Rejected`] record (zero execution time, empty shares)
 //! instead of propagating a panic out of the serving loop.
+//!
+//! A shard models execution in virtual time; it never talks to a real
+//! device. Under the wall-clock driver
+//! ([`super::driver::WallClockDriver`]) each shard's dispatches are
+//! additionally mirrored — via the cluster's tap — onto a dedicated
+//! worker thread whose [`super::driver::Executor`] really spends wall
+//! time, but every scheduling decision still comes from the state
+//! here.
 
 use super::batch::{BatchMember, FusedBatch};
 use super::cache::PlanCache;

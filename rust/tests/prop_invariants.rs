@@ -832,6 +832,93 @@ fn prop_fault_scenario_replay_is_deterministic() {
     });
 }
 
+#[test]
+fn prop_wallclock_driver_matches_virtual_decisions() {
+    use poas::service::driver::DriverKind;
+    use poas::service::scenario::Scenario;
+
+    // The wall-clock driver mirrors the deterministic core onto real
+    // worker threads; it must not perturb a single scheduling decision.
+    // Replay random scenarios — fault-free and faulted — through both
+    // drivers and demand identical admission verdicts, routed shards
+    // and execution modes for every request.
+    prop("wallclock matches virtual decisions", 4, |rng, case| {
+        let seed = rng.below(1 << 16);
+        let rate = rng.range(20.0, 80.0);
+        let count = 8 + rng.below(17);
+        let shards = 1 + rng.below(3);
+        let faults = if case % 2 == 1 && shards > 1 {
+            r#"
+            [[fault]]
+            kind = "crash"
+            at = 0.05
+            shard = 0
+
+            [[fault]]
+            kind = "restart"
+            at = 0.4
+            shard = 0
+
+            [[fault]]
+            kind = "join"
+            at = 0.1
+            preset = "mach2"
+
+            [[fault]]
+            kind = "drain"
+            at = 0.3
+            shard = 1
+            "#
+        } else {
+            ""
+        };
+        let text = format!(
+            r#"
+            name = "driver_equiv"
+            seed = {seed}
+            work_stealing = 1
+
+            [[shard]]
+            preset = "mach1"
+            count = {shards}
+
+            [[arrivals]]
+            process = "poisson"
+            class = "standard"
+            rate_rps = {rate}
+            count = {count}
+            menu = "128, 256*2, 512x256x128"
+
+            [[arrivals]]
+            process = "poisson"
+            class = "interactive"
+            rate_rps = 10.0
+            count = 4
+            deadline_s = 30.0
+            menu = "256*2"
+            {faults}
+            "#
+        );
+        let mut sc: Scenario = text.parse().expect("scenario parses");
+        assert_eq!(sc.driver, DriverKind::Virtual);
+        let virt = sc.run();
+        sc.driver = DriverKind::WallClock;
+        let wall = sc.run();
+
+        assert_eq!(
+            virt.served.len(),
+            wall.served.len(),
+            "drivers disagree on how many requests completed"
+        );
+        let key = |r: &poas::service::ServedRequest| (r.id, r.mode, r.shard);
+        let mut a: Vec<_> = virt.served.iter().map(key).collect();
+        let mut b: Vec<_> = wall.served.iter().map(key).collect();
+        a.sort_by_key(|t| t.0);
+        b.sort_by_key(|t| t.0);
+        assert_eq!(a, b, "per-request decisions drifted across drivers");
+    });
+}
+
 // ---------------------------------------------------------------------
 // Elastic membership: drain conservation, replay byte-identity
 // ---------------------------------------------------------------------

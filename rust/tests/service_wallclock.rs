@@ -1,0 +1,152 @@
+//! Wall-clock driver smoke tests: bounded-channel backpressure, clean
+//! shutdown, exactly-once completion accounting under crashes and
+//! drains, and decision equivalence with the virtual driver.
+//!
+//! Wall *timings* are non-deterministic by nature, so these tests
+//! assert only on the core's deterministic report and on the driver's
+//! conservation counters (`forwarded == completed + dropped`,
+//! `lost == duplicated == 0`) — never on elapsed seconds.
+
+use poas::config::presets;
+use poas::service::request::ExecMode;
+use poas::service::scenario::{digest, Scenario};
+use poas::service::{Cluster, ClusterOptions, QosClass, WallClockDriver, WallClockOptions};
+use poas::workload::GemmSize;
+
+fn cluster(shards: usize, seed: u64) -> Cluster {
+    let opts = ClusterOptions {
+        shards,
+        ..Default::default()
+    };
+    Cluster::new(&presets::mach2(), seed, opts)
+}
+
+/// Submit a deterministic mixed burst and return how many requests it
+/// placed.
+fn submit_burst(c: &mut Cluster, n: usize) -> usize {
+    for i in 0..n {
+        let size = match i % 3 {
+            0 => GemmSize::square(12_000),
+            1 => GemmSize::square(16_000),
+            _ => GemmSize::new(14_000, 10_000, 12_000),
+        };
+        let (class, deadline) = match i % 4 {
+            0 => (QosClass::Interactive, Some(120.0)),
+            1 => (QosClass::Batch, None),
+            _ => (QosClass::Standard, None),
+        };
+        c.submit_qos(size, 1 + (i % 2) as u32, class, deadline);
+    }
+    n
+}
+
+#[test]
+fn burst_completes_exactly_once() {
+    let mut c = cluster(4, 11);
+    let n = submit_burst(&mut c, 32);
+    let mut driver = WallClockDriver::new(c);
+    let (report, stats) = driver.run_measured();
+    assert_eq!(report.served.len(), n);
+    assert!(stats.forwarded > 0, "burst must really dispatch");
+    assert_eq!(stats.completed, stats.forwarded);
+    assert_eq!(stats.dropped, 0);
+    assert_eq!(stats.lost, 0, "every forwarded unit needs a terminal event");
+    assert_eq!(stats.duplicated, 0);
+    // One wall sojourn per *executed* record (denied/rejected requests
+    // never reach a worker).
+    let executed = report.served.iter().filter(|r| !r.mode.is_unserved()).count();
+    assert_eq!(stats.sojourns_s.len(), executed);
+    assert!(stats.p99_sojourn_s() >= 0.0);
+}
+
+#[test]
+fn decisions_match_the_virtual_driver() {
+    let build = |seed| {
+        let mut c = cluster(3, seed);
+        submit_burst(&mut c, 24);
+        c
+    };
+    let virt = build(5).run_to_completion();
+    let (wall, stats) = WallClockDriver::new(build(5)).run_measured();
+    assert_eq!(stats.lost, 0);
+    assert_eq!(virt.served.len(), wall.served.len());
+    let key = |r: &poas::service::ServedRequest| (r.id, r.mode, r.shard);
+    let mut a: Vec<_> = virt.served.iter().map(key).collect();
+    let mut b: Vec<_> = wall.served.iter().map(key).collect();
+    a.sort_by_key(|t| t.0);
+    b.sort_by_key(|t| t.0);
+    assert_eq!(a, b, "admission/routing decisions must match across drivers");
+    assert!(a.iter().any(|(_, mode, _)| *mode != ExecMode::Denied));
+}
+
+#[test]
+fn tight_channel_backpressure_still_drains() {
+    let mut c = cluster(2, 3);
+    let n = submit_burst(&mut c, 12);
+    // Capacity 1 with real (scaled) execution: the core's forwarding
+    // loop must block on the full channel and resume, not deadlock or
+    // lose units.
+    let opts = WallClockOptions {
+        time_scale: 1e-3,
+        channel_capacity: 1,
+    };
+    let (report, stats) = WallClockDriver::with_options(c, opts).run_measured();
+    assert_eq!(report.served.len(), n);
+    assert_eq!(stats.completed, stats.forwarded);
+    assert_eq!(stats.lost, 0);
+    assert_eq!(stats.duplicated, 0);
+}
+
+#[test]
+fn crash_and_drain_conserve_every_unit() {
+    let mut c = cluster(3, 9);
+    let n = submit_burst(&mut c, 40);
+    c.inject_crash(0.02, 0);
+    c.inject_restart(0.5, 0);
+    c.inject_drain(0.3, 1);
+    let opts = WallClockOptions {
+        time_scale: 1e-4,
+        channel_capacity: 1,
+    };
+    let (report, stats) = WallClockDriver::with_options(c, opts).run_measured();
+    // The core conserves requests (every submission gets exactly one
+    // record) and the mirror conserves units: a crashed shard's stale
+    // dispatches are dropped, never lost, and nothing settles twice.
+    assert_eq!(report.served.len(), n);
+    assert_eq!(stats.forwarded, stats.completed + stats.dropped);
+    assert_eq!(stats.lost, 0);
+    assert_eq!(stats.duplicated, 0);
+}
+
+#[test]
+fn scenario_digest_is_driver_independent() {
+    let base = r#"
+        name = "driver_equiv"
+        seed = 21
+        [[shard]]
+        preset = "mach2"
+        count = 2
+        [[arrivals]]
+        process = "poisson"
+        rate_rps = 4.0
+        count = 8
+        menu = "12000*2, 10000x14000x8000"
+        [[fault]]
+        kind = "crash"
+        at = 0.4
+        shard = 1
+        [[fault]]
+        kind = "restart"
+        at = 2.0
+        shard = 1
+    "#;
+    let virt: Scenario = base.parse().expect("parse virtual");
+    let wall: Scenario = format!("driver = \"wallclock\"\n{base}")
+        .parse()
+        .expect("parse wallclock");
+    assert_eq!(
+        digest(&virt.run()),
+        digest(&wall.run()),
+        "the report is the core's deterministic accounting under both drivers"
+    );
+}
