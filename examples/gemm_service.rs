@@ -33,7 +33,7 @@
 //! met — the per-class table shows p50/p99 sojourn per tier and the
 //! deadline-hit rate of everything admission let through.
 //!
-//! Part 4 goes heterogeneous: a `HeterogeneousSpec` assembles a cluster
+//! Part 4 goes heterogeneous: `Cluster::builder()` assembles a cluster
 //! from three *different* machines (GPU-heavy, CPU-only, single-XPU),
 //! each profiled independently with its own admission gate, and a
 //! bursty Markov-modulated on/off stream arrives. Routing consults each
@@ -62,8 +62,8 @@ use poas::config::presets;
 use poas::report::secs;
 use poas::rng::Rng;
 use poas::service::{
-    BatchPolicy, BatchWindow, ClassLoad, Cluster, ClusterOptions, GemmRequest, HeterogeneousSpec,
-    MixedArrivals, OnOffArrivals, PoissonArrivals, QosClass, QueuePolicy, Server, ServerOptions,
+    BatchPolicy, BatchWindow, ClassLoad, Cluster, ClusterOptions, GemmRequest, MixedArrivals,
+    OnOffArrivals, PoissonArrivals, QosClass, QueuePolicy, Server, ServerOptions,
 };
 use poas::workload::GemmSize;
 use std::sync::mpsc;
@@ -155,19 +155,17 @@ fn main() {
         (GemmSize::square(512), 10),
     ];
     let trace = PoissonArrivals::new(offered_rps, menu, 7).trace(12);
-    let mut cluster = Cluster::new(
-        &cfg,
-        0,
-        ClusterOptions {
-            shards: 2,
+    let mut cluster = Cluster::builder()
+        .replicas(&cfg, 2)
+        .options(ClusterOptions {
             shard: ServerOptions {
                 standalone_bypass: true,
                 ..Default::default()
             },
             work_stealing: true,
             ..Default::default()
-        },
-    );
+        })
+        .build();
     let ids = cluster.submit_trace(&trace);
     let creport = cluster.run_to_completion();
     println!();
@@ -222,14 +220,7 @@ fn main() {
         ],
         21,
     );
-    let mut qos_cluster = Cluster::new(
-        &cfg,
-        0,
-        ClusterOptions {
-            shards: 2,
-            ..Default::default()
-        },
-    );
+    let mut qos_cluster = Cluster::builder().replicas(&cfg, 2).build();
     let qos_ids = qos_cluster.submit_trace(&mix.trace(12));
     let qreport = qos_cluster.run_to_completion();
     println!();
@@ -259,10 +250,11 @@ fn main() {
     // shard table shows the per-shard model fingerprints and placement
     // quality (realized / predicted service time): near 1.0 means the
     // machines honour the predictions that routed the work.
-    let mut hetero = HeterogeneousSpec::new(31)
-        .machine(presets::gpu_node())
-        .machine(presets::cpu_node())
-        .machine(presets::xpu_node())
+    let mut hetero = Cluster::builder()
+        .machine(&presets::gpu_node())
+        .machine(&presets::cpu_node())
+        .machine(&presets::xpu_node())
+        .seed(31)
         .build();
     let bursty = OnOffArrivals::new(
         3.0 / unit, // burst: ~3 heavy requests per service time
@@ -315,15 +307,15 @@ fn main() {
     )
     .trace(48);
     let run_batching = |batching: BatchPolicy| {
-        let mut c = Cluster::from_machines(
-            &presets::hetero_mix(),
-            41,
-            ClusterOptions {
+        let mut c = Cluster::builder()
+            .machines(&presets::hetero_mix())
+            .seed(41)
+            .options(ClusterOptions {
                 batching,
                 work_stealing: false,
                 ..Default::default()
-            },
-        );
+            })
+            .build();
         c.submit_trace(&flood);
         c.run_to_completion()
     };

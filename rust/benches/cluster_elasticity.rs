@@ -32,8 +32,8 @@
 use poas::config::presets;
 use poas::report::{secs, Table};
 use poas::service::{
-    AutoscalerPolicy, Cluster, ClusterOptions, GemmRequest, Phase, PhasedArrivals, QosClass,
-    Server, ServerOptions, ServiceReport,
+    AutoscalerPolicy, Cluster, GemmRequest, Phase, PhasedArrivals, QosClass, Server,
+    ServerOptions, ServiceReport,
 };
 use poas::workload::GemmSize;
 
@@ -87,11 +87,7 @@ fn main() {
     };
 
     // Leg 1: statically overprovisioned for the day phase.
-    let static3 = replay(Cluster::from_machines(
-        &[presets::mach2(), presets::mach2(), presets::mach2()],
-        5,
-        ClusterOptions::default(),
-    ));
+    let static3 = replay(Cluster::builder().replicas(&cfg, 3).seed(5).build());
 
     // Leg 2: one always-on shard plus a two-entry autoscaler pool.
     let mut policy = AutoscalerPolicy::new(vec![presets::mach2(), presets::mach2()]);
@@ -99,14 +95,13 @@ fn main() {
     policy.scale_up_pressure_s = 1.5 * unit;
     policy.scale_down_pressure_s = 0.25 * unit;
     policy.scale_down_evals = 2;
-    let autoscaled = replay(Cluster::new(
-        &cfg,
-        5,
-        ClusterOptions {
-            autoscaler: Some(policy),
-            ..Default::default()
-        },
-    ));
+    let autoscaled = replay(
+        Cluster::builder()
+            .machine(&cfg)
+            .seed(5)
+            .autoscaler(policy)
+            .build(),
+    );
 
     let mut table = Table::new(
         &format!(

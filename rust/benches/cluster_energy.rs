@@ -1,0 +1,164 @@
+//! Energy: what does joules-aware routing buy on a mixed-efficiency
+//! cluster?
+//!
+//! The ALP framing (PAPER.md) treats the accelerator pool as one
+//! schedulable resource; PR 10 extends the cluster's objective from
+//! latency alone to predicted energy (see `docs/energy.md`). This
+//! regenerator measures the trade on a hand-rolled harness (no
+//! criterion — the offline build has no dependencies): a steady
+//! SLO-bound trace of heavy GEMMs replayed on one cluster of two
+//! efficient shards plus two same-speed shards drawing 5x the active
+//! watts, under two routing objectives —
+//!
+//! * **latency_route** — [`RouteObjective::Latency`]: earliest
+//!   predicted finish, blind to watts, so the burst load-balances onto
+//!   the hot shards too;
+//! * **energy_route** — [`RouteObjective::EnergyAware`]: among shards
+//!   whose predicted finish stays inside the slack envelope, take the
+//!   fewest predicted joules — work packs onto the efficient shards
+//!   while SLO headroom lasts.
+//!
+//! The CI gate (`ci/energy_floor.json`, checked by
+//! `ci/check_bench.py`) holds the energy objective to at most 90% of
+//! the latency objective's total joules at a deadline-hit rate no
+//! worse — the savings must be real and must not cost SLOs.
+//!
+//! Environment knobs (the CI bench-smoke gate sets both):
+//!
+//! * `POAS_BENCH_SMOKE=1` — a shorter trace so the regenerator
+//!   finishes in seconds on a CI runner;
+//! * `POAS_BENCH_JSON=<path>` — merge an `"energy"` section into the
+//!   summary JSON (appending to the earlier bench legs' output when
+//!   the file already exists, standalone otherwise).
+
+use poas::config::presets;
+use poas::report::{secs, Table};
+use poas::service::{
+    Cluster, GemmRequest, PoissonArrivals, QosClass, RouteObjective, Server, ServerOptions,
+    ServiceReport,
+};
+use poas::workload::GemmSize;
+
+fn main() {
+    let smoke = std::env::var("POAS_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    let cfg = presets::mach2();
+    let heavy = GemmSize::square(16_000);
+
+    // Calibrate the service-time unit: one heavy request served alone.
+    let unit = {
+        let mut srv = Server::new(&cfg, 0, ServerOptions::default());
+        srv.submit(heavy, 2);
+        srv.run_to_completion().makespan
+    };
+
+    // A steady Poisson trace offering one unit of work per unit of
+    // time: two efficient shards carry it with headroom, so the energy
+    // objective has real slack to spend. Every request gets an 8-unit
+    // sojourn SLO.
+    let n = if smoke { 48 } else { 192 };
+    let trace = PoissonArrivals::new(1.0 / unit, vec![(heavy, 2)], 517).trace(n);
+    let deadline = 8.0 * unit;
+
+    // Two efficient shards plus two same-speed shards drawing 5x the
+    // active watts (idle draw unchanged): the energy split is entirely
+    // a routing decision, never a speed trade.
+    let mut hot = cfg.clone();
+    for d in &mut hot.devices {
+        d.active_w *= 5.0;
+    }
+    let build = |objective| {
+        Cluster::builder()
+            .replicas(&cfg, 2)
+            .replicas(&hot, 2)
+            .seed(5)
+            .objective(objective)
+            .build()
+    };
+    let replay = |mut c: Cluster| -> ServiceReport {
+        for (i, a) in trace.iter().enumerate() {
+            c.submit_request_at(
+                a.at,
+                GemmRequest::new(i as u64, a.size, a.reps)
+                    .with_class(QosClass::Interactive)
+                    .with_deadline(deadline),
+            );
+        }
+        c.run_to_completion()
+    };
+
+    let lat = replay(build(RouteObjective::Latency));
+    let eco = replay(build(RouteObjective::EnergyAware { slack: 3.0 }));
+
+    let mut table = Table::new(
+        &format!(
+            "{n}-request SLO trace on 2 efficient + 2 hot shards: \
+             earliest-finish vs energy-aware routing"
+        ),
+        &[
+            "objective",
+            "joules",
+            "active J",
+            "idle J",
+            "deadline hits",
+            "denied",
+            "machine-seconds",
+        ],
+    );
+    for (label, r) in [("latency", &lat), ("energy-aware", &eco)] {
+        table.row(&[
+            label.to_string(),
+            format!("{:.0}", r.total_joules()),
+            format!("{:.0}", r.joules_active),
+            format!("{:.0}", r.joules_idle),
+            format!("{:.0}%", 100.0 * r.deadline_hit_rate()),
+            r.denied.to_string(),
+            secs(r.machine_seconds),
+        ]);
+    }
+    table.print();
+    println!(
+        "targets: energy-aware routing at <= 90% of the latency objective's \
+         joules, deadline-hit rate no worse."
+    );
+
+    // ---- Perf-trajectory artifact: merge into the shared summary.
+    if let Ok(path) = std::env::var("POAS_BENCH_JSON") {
+        let leg = |r: &ServiceReport| {
+            format!(
+                "{{\"joules\": {}, \"joules_active\": {}, \"joules_idle\": {}, \
+                 \"deadline_hit_rate\": {}, \"denied\": {}, \
+                 \"machine_seconds\": {}, \"makespan_s\": {}}}",
+                r.total_joules(),
+                r.joules_active,
+                r.joules_idle,
+                r.deadline_hit_rate(),
+                r.denied,
+                r.machine_seconds,
+                r.makespan
+            )
+        };
+        let mut section = String::from("  \"energy\": {\n");
+        section.push_str(&format!("    \"smoke\": {smoke},\n"));
+        section.push_str(&format!("    \"arrivals\": {n},\n"));
+        section.push_str(&format!("    \"latency_route\": {},\n", leg(&lat)));
+        section.push_str(&format!("    \"energy_route\": {}\n", leg(&eco)));
+        section.push_str("  }\n}\n");
+        // Earlier bench legs write the summary first in CI; splice the
+        // energy section into it rather than clobbering, so one JSON
+        // artifact carries every bench leg. Standalone runs (file
+        // absent) still produce a valid summary.
+        let json = match std::fs::read_to_string(&path) {
+            Ok(existing) => {
+                let trimmed = existing.trim_end();
+                let base = trimmed
+                    .strip_suffix('}')
+                    .expect("existing bench summary ends with '}'")
+                    .trim_end();
+                format!("{base},\n{section}")
+            }
+            Err(_) => format!("{{\n  \"bench\": \"cluster_energy\",\n{section}"),
+        };
+        std::fs::write(&path, json).expect("write POAS_BENCH_JSON summary");
+        println!("wrote {path}");
+    }
+}

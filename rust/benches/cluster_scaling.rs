@@ -96,14 +96,7 @@ fn main() {
 
     let mut rows: Vec<ScaleRow> = Vec::new();
     for shards in [1usize, 2, 4] {
-        let mut cluster = Cluster::new(
-            &cfg,
-            0,
-            ClusterOptions {
-                shards,
-                ..Default::default()
-            },
-        );
+        let mut cluster = Cluster::builder().replicas(&cfg, shards).build();
         cluster.submit_trace(&trace);
         let report = cluster.run_to_completion();
         assert_eq!(report.served.len(), n);
@@ -153,14 +146,7 @@ fn main() {
         ],
         17,
     );
-    let mut cluster = Cluster::new(
-        &cfg,
-        0,
-        ClusterOptions {
-            shards: 2,
-            ..Default::default()
-        },
-    );
+    let mut cluster = Cluster::builder().replicas(&cfg, 2).build();
     cluster.submit_trace(&mix.trace(per_class));
     let qos = cluster.run_to_completion();
     qos.class_table(&format!(

@@ -182,6 +182,52 @@ pub enum RoutePolicy {
     },
 }
 
+/// What the router optimizes when several shards can take a work unit.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum RouteObjective {
+    /// Earliest class-weighted predicted finish — the latency-first
+    /// pick, and the default (byte-identical to every pre-energy run).
+    #[default]
+    Latency,
+    /// Prefer the feasible shard with the lowest predicted joules for
+    /// this unit, as long as its predicted finish stays within `slack`
+    /// times the latency winner's — under pressure (no candidate within
+    /// the band) the pick falls back to earliest-predicted-finish. For
+    /// a deadline-bound unit the band is additionally clamped to the
+    /// admission slack guard, so energy-awareness never converts an
+    /// admit into a denial. See `docs/energy.md`.
+    EnergyAware {
+        /// Latency-stretch tolerance, `>= 1.0`: how many times the
+        /// latency winner's predicted sojourn an energy-cheaper shard
+        /// may cost before it stops being acceptable.
+        slack: f64,
+    },
+}
+
+/// Cluster-level power management knobs (see `docs/energy.md`).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerOptions {
+    /// Cluster-wide power cap in watts, enforced at admission: an
+    /// arrival whose marginal draw would push the predicted aggregate
+    /// draw over the cap is denied (or demoted, per
+    /// [`super::DeadlinePolicy`]) like a deadline-infeasible one.
+    /// `None` (the default) enforces nothing.
+    pub cap_w: Option<f64>,
+    /// Fraction of a machine's idle watts it keeps drawing while
+    /// parked (drained by the autoscaler or a scenario fault) — the
+    /// low-power state that makes scale-down actually save energy.
+    pub parked_frac: f64,
+}
+
+impl Default for PowerOptions {
+    fn default() -> Self {
+        PowerOptions {
+            cap_w: None,
+            parked_frac: 0.1,
+        }
+    }
+}
+
 /// Cluster construction options.
 #[derive(Debug, Clone)]
 pub struct ClusterOptions {
@@ -210,6 +256,12 @@ pub struct ClusterOptions {
     /// deadline-risk. `None` (the default) arms nothing and reproduces
     /// fixed membership exactly.
     pub autoscaler: Option<AutoscalerPolicy>,
+    /// Routing objective (see [`RouteObjective`]; default
+    /// [`RouteObjective::Latency`], the pre-energy behaviour exactly).
+    pub objective: RouteObjective,
+    /// Power-management knobs: cluster-wide cap and the parked idle
+    /// rate (see [`PowerOptions`]).
+    pub power: PowerOptions,
 }
 
 impl Default for ClusterOptions {
@@ -222,6 +274,8 @@ impl Default for ClusterOptions {
             batching: BatchPolicy::Off,
             route: RoutePolicy::Full,
             autoscaler: None,
+            objective: RouteObjective::default(),
+            power: PowerOptions::default(),
         }
     }
 }
@@ -274,6 +328,10 @@ enum EventKind {
     /// every machine idle — must not advance the virtual clock, so the
     /// makespan stays the instant real work last moved.
     AutoscaleEval,
+    /// Injected power event: the cluster-wide cap changes to the
+    /// carried value (`None` removes it) from this instant on. The cap
+    /// gates *admissions*; already-queued work is never revisited.
+    PowerCap(Option<f64>),
 }
 
 #[derive(Debug, Clone)]
@@ -364,22 +422,114 @@ pub enum TapAction {
     },
 }
 
-/// Assemble a [`Cluster`] from *distinct* machine configs — the
-/// heterogeneous construction path. Each machine becomes one shard,
-/// profiled independently at install time (simulator seeded
-/// `seed + shard index`), so the per-shard admission gates genuinely
-/// disagree wherever the hardware does.
+/// Fluent construction of a [`Cluster`] — the one supported
+/// construction path, consolidating the old `new` / `from_machines` /
+/// `HeterogeneousSpec` trio (each still available as a thin
+/// `#[deprecated]` shim). Machines are appended in shard-index order;
+/// shard `i` profiles at install time on a simulator seeded
+/// `seed + i`, so the per-shard admission gates genuinely disagree
+/// wherever the hardware does.
 ///
 /// ```no_run
 /// use poas::config::presets;
-/// use poas::service::HeterogeneousSpec;
+/// use poas::service::{Cluster, PowerOptions, RouteObjective};
 ///
-/// let cluster = HeterogeneousSpec::new(7)
-///     .machine(presets::gpu_node())
-///     .machines(presets::cpu_node(), 2)
+/// let cluster = Cluster::builder()
+///     .machine(&presets::gpu_node())
+///     .replicas(&presets::cpu_node(), 2)
+///     .seed(7)
+///     .objective(RouteObjective::EnergyAware { slack: 2.0 })
+///     .power(PowerOptions {
+///         cap_w: Some(900.0),
+///         ..Default::default()
+///     })
 ///     .build();
 /// assert_eq!(cluster.num_shards(), 3);
 /// ```
+#[derive(Debug, Clone, Default)]
+pub struct ClusterBuilder {
+    machines: Vec<MachineConfig>,
+    seed: u64,
+    opts: ClusterOptions,
+}
+
+impl ClusterBuilder {
+    /// Append one shard running `cfg`.
+    pub fn machine(mut self, cfg: &MachineConfig) -> Self {
+        self.machines.push(cfg.clone());
+        self
+    }
+
+    /// Append one shard per config, in order.
+    pub fn machines(mut self, cfgs: &[MachineConfig]) -> Self {
+        self.machines.extend(cfgs.iter().cloned());
+        self
+    }
+
+    /// Append `count` shards all running `cfg` (each still profiles on
+    /// its own seed, so their fitted models differ by profiling noise).
+    pub fn replicas(mut self, cfg: &MachineConfig, count: usize) -> Self {
+        for _ in 0..count {
+            self.machines.push(cfg.clone());
+        }
+        self
+    }
+
+    /// Base profiling seed (default 0): shard `i` profiles on
+    /// `seed + i`.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Replace the serving options wholesale. The shard count is taken
+    /// from the machine list, never from `opts.shards`. Call this
+    /// *before* the field-level setters below — it overwrites them.
+    pub fn options(mut self, opts: ClusterOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Arm an autoscaler policy (see [`super::elastic`]).
+    pub fn autoscaler(mut self, policy: AutoscalerPolicy) -> Self {
+        self.opts.autoscaler = Some(policy);
+        self
+    }
+
+    /// Set the power-management knobs (see [`PowerOptions`]).
+    pub fn power(mut self, power: PowerOptions) -> Self {
+        self.opts.power = power;
+        self
+    }
+
+    /// Set the routing objective (see [`RouteObjective`]).
+    pub fn objective(mut self, objective: RouteObjective) -> Self {
+        self.opts.objective = objective;
+        self
+    }
+
+    /// Profile every machine and build the cluster. Panics when no
+    /// machine was added.
+    pub fn build(self) -> Cluster {
+        assert!(
+            !self.machines.is_empty(),
+            "Cluster::builder() needs at least one machine"
+        );
+        let pipelines = self
+            .machines
+            .iter()
+            .enumerate()
+            .map(|(i, cfg)| Pipeline::for_simulated_machine(cfg, self.seed.wrapping_add(i as u64)))
+            .collect();
+        Cluster::from_pipelines(pipelines, self.opts)
+    }
+}
+
+/// Assemble a [`Cluster`] from *distinct* machine configs — the old
+/// heterogeneous construction path, superseded by [`ClusterBuilder`]
+/// (`Cluster::builder()`), which covers the same ground plus seeds,
+/// autoscaler, power and objective in one fluent chain.
+#[deprecated(note = "use Cluster::builder()")]
 #[derive(Debug, Clone)]
 pub struct HeterogeneousSpec {
     machines: Vec<MachineConfig>,
@@ -387,6 +537,7 @@ pub struct HeterogeneousSpec {
     opts: ClusterOptions,
 }
 
+#[allow(deprecated)]
 impl HeterogeneousSpec {
     /// An empty spec; shard `i` will profile on a simulator seeded
     /// `seed + i`.
@@ -423,7 +574,11 @@ impl HeterogeneousSpec {
     /// Profile every machine and build the cluster. Panics when no
     /// machine was added.
     pub fn build(self) -> Cluster {
-        Cluster::from_machines(&self.machines, self.seed, self.opts)
+        Cluster::builder()
+            .machines(&self.machines)
+            .seed(self.seed)
+            .options(self.opts)
+            .build()
     }
 }
 
@@ -460,6 +615,12 @@ pub struct Cluster {
     /// work (empty or down shards are disabled); serves steal-victim
     /// selection in O(log shards).
     steal_idx: TournamentTree,
+    /// Min-tree over each live shard's static joules-per-op figure
+    /// (active watts over fitted throughput — see
+    /// [`ExecutorShard::joules_per_op`]), refreshed when a shard
+    /// replans; under [`RouteObjective::EnergyAware`] it seeds the
+    /// sampled router's candidate set with the energy-cheapest shard.
+    energy_idx: TournamentTree,
     /// Deterministic candidate-sampling stream (see
     /// [`ROUTER_RNG_SEED`]).
     router_rng: Rng,
@@ -496,10 +657,17 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// Start a fluent [`ClusterBuilder`] — the one supported
+    /// construction path.
+    pub fn builder() -> ClusterBuilder {
+        ClusterBuilder::default()
+    }
+
     /// Build a homogeneous cluster of `opts.shards` machines from
     /// `cfg`: shard `i` is profiled at installation time on its own
     /// simulator seeded `seed + i`, and every shard gets its own
     /// admission gate over its own fitted profile.
+    #[deprecated(note = "use Cluster::builder().replicas(cfg, n)")]
     pub fn new(cfg: &MachineConfig, seed: u64, opts: ClusterOptions) -> Self {
         let n = opts.shards.max(1);
         let pipelines = (0..n)
@@ -510,7 +678,8 @@ impl Cluster {
 
     /// Build a heterogeneous cluster: one shard per machine config,
     /// each profiled at install time on its own simulator seeded
-    /// `seed + shard index` (see also [`HeterogeneousSpec`]).
+    /// `seed + shard index`.
+    #[deprecated(note = "use Cluster::builder().machines(cfgs)")]
     pub fn from_machines(cfgs: &[MachineConfig], seed: u64, opts: ClusterOptions) -> Self {
         assert!(!cfgs.is_empty(), "cluster needs at least one machine");
         let pipelines = cfgs
@@ -530,6 +699,23 @@ impl Cluster {
             "deadline_slack must be in (0, 1], got {}",
             opts.shard.deadline_slack
         );
+        assert!(
+            opts.power.parked_frac >= 0.0 && opts.power.parked_frac <= 1.0,
+            "parked_frac must be in [0, 1], got {}",
+            opts.power.parked_frac
+        );
+        if let Some(w) = opts.power.cap_w {
+            assert!(
+                w.is_finite() && w > 0.0,
+                "power cap must be finite and positive, got {w}"
+            );
+        }
+        if let RouteObjective::EnergyAware { slack } = opts.objective {
+            assert!(
+                slack.is_finite() && slack >= 1.0,
+                "energy slack must be finite and >= 1, got {slack}"
+            );
+        }
         // One source of truth for the shard count.
         opts.shards = pipelines.len();
         let shards: Vec<ExecutorShard> = pipelines
@@ -559,6 +745,10 @@ impl Cluster {
         }
         // Nothing is queued yet, so every steal leaf starts disabled.
         let steal_idx = TournamentTree::new(n, Ranking::Max);
+        let mut energy_idx = TournamentTree::new(n, Ranking::Min);
+        for (i, s) in shards.iter().enumerate() {
+            energy_idx.update(i, s.joules_per_op());
+        }
         let scaler = opts.autoscaler.clone().map(Autoscaler::new);
         let mut cluster = Cluster {
             shards,
@@ -574,6 +764,7 @@ impl Cluster {
             next_id: 0,
             route_idx,
             steal_idx,
+            energy_idx,
             router_rng: Rng::new(ROUTER_RNG_SEED),
             cand_buf: Vec::new(),
             down,
@@ -601,10 +792,12 @@ impl Cluster {
         if self.down[s] {
             self.route_idx.disable(s);
             self.steal_idx.disable(s);
+            self.energy_idx.disable(s);
             return;
         }
         let sh = &self.shards[s];
         self.route_idx.update(s, sh.free_at() + sh.backlog_s());
+        self.energy_idx.update(s, sh.joules_per_op());
         if sh.pending() > 0 {
             self.steal_idx.update(s, sh.weighted_backlog());
         } else {
@@ -623,12 +816,21 @@ impl Cluster {
             if self.down[s] {
                 debug_assert!(!self.route_idx.is_enabled(s), "down shard {s} routable");
                 debug_assert!(!self.steal_idx.is_enabled(s), "down shard {s} stealable");
+                debug_assert!(
+                    !self.energy_idx.is_enabled(s),
+                    "down shard {s} energy-routable"
+                );
                 continue;
             }
             debug_assert_eq!(
                 self.route_idx.key(s),
                 sh.free_at() + sh.backlog_s(),
                 "stale route key for shard {s}"
+            );
+            debug_assert_eq!(
+                self.energy_idx.key(s),
+                sh.joules_per_op(),
+                "stale energy key for shard {s}"
             );
             if sh.pending() > 0 {
                 debug_assert_eq!(
@@ -642,6 +844,7 @@ impl Cluster {
         }
         debug_assert_eq!(self.route_idx.winner(), self.route_idx.scan_winner());
         debug_assert_eq!(self.steal_idx.winner(), self.steal_idx.scan_winner());
+        debug_assert_eq!(self.energy_idx.winner(), self.energy_idx.scan_winner());
     }
 
     /// Index into `admissions` of the gate that predicts for `shard`.
@@ -867,6 +1070,22 @@ impl Cluster {
         self.push_event(at.max(self.clock.now()), EventKind::Drain(shard));
     }
 
+    /// Schedule the cluster-wide power cap to change at virtual time
+    /// `at`: `Some(watts)` sets (tightens or relaxes) the cap enforced
+    /// at admission from that instant on, `None` removes it. The cap
+    /// gates arrivals only — work already queued or executing is never
+    /// revisited, so a mid-run tightening sheds load rather than
+    /// preempting it.
+    pub fn inject_power_cap(&mut self, at: f64, cap_w: Option<f64>) {
+        if let Some(w) = cap_w {
+            assert!(
+                w.is_finite() && w > 0.0,
+                "power cap must be finite and positive, got {w}"
+            );
+        }
+        self.push_event(at.max(self.clock.now()), EventKind::PowerCap(cap_w));
+    }
+
     /// Gate one work unit — a plain request (`members == 1`) or a fused
     /// batch of `members` — on shard `s`'s own admission gate and,
     /// under the legacy [`GatePolicy::Shard0`] ablation, clamp the
@@ -937,6 +1156,17 @@ impl Cluster {
         if let Some(w) = self.route_idx.winner() {
             cands.push(w);
         }
+        if let RouteObjective::EnergyAware { .. } = self.opts.objective {
+            // The energy-cheapest live shard is always a candidate too
+            // (the energy pass needs its best case on the table), so an
+            // energy-aware sample scores up to d + 1 shards when the
+            // two index winners differ.
+            if let Some(w) = self.energy_idx.winner() {
+                if !cands.contains(&w) {
+                    cands.push(w);
+                }
+            }
+        }
         while cands.len() < d {
             let i = self.router_rng.below(n as u64) as usize;
             if !self.down[i] && !cands.contains(&i) {
@@ -982,7 +1212,136 @@ impl Cluster {
                 }
             }
         }
+        if let (Some(b), RouteObjective::EnergyAware { slack }) = (best, self.opts.objective) {
+            best = Some(self.energy_refine(now, req, members, deadline_only, cands, b, slack));
+        }
         best
+    }
+
+    /// Second routing pass under [`RouteObjective::EnergyAware`]: among
+    /// the *same* candidates, pick the lowest predicted-joules shard
+    /// whose predicted finish stays inside the latency band around the
+    /// latency winner (`now + slack * winner sojourn`; ties to the
+    /// lowest index). Gate verdicts are memoized, so this pass re-reads
+    /// them for free. When no candidate fits the band — pressure — the
+    /// latency winner stands.
+    #[allow(clippy::too_many_arguments)]
+    fn energy_refine(
+        &mut self,
+        now: f64,
+        req: &GemmRequest,
+        members: u32,
+        deadline_only: bool,
+        cands: Option<&[usize]>,
+        latency_best: Routed,
+        slack: f64,
+    ) -> Routed {
+        let mut threshold = now + slack * (latency_best.finish - now).max(0.0);
+        if deadline_only {
+            // Deadline admission accepts the returned pick only inside
+            // its own slack band; clamping the energy band to it keeps
+            // energy-awareness from ever converting an admit into a
+            // denial (`req.deadline_s` is the remaining budget here).
+            let deadline_s = req.deadline_s.expect("deadline_only needs an SLO");
+            threshold = threshold.min(now + self.opts.shard.deadline_slack * deadline_s);
+        }
+        let mut pick: Option<Routed> = None;
+        let mut pick_joules = f64::INFINITY;
+        match cands {
+            Some(list) => {
+                for &i in list {
+                    self.consider_energy(
+                        now,
+                        req,
+                        members,
+                        deadline_only,
+                        threshold,
+                        i,
+                        &mut pick,
+                        &mut pick_joules,
+                    );
+                }
+            }
+            None => {
+                for i in 0..self.shards.len() {
+                    self.consider_energy(
+                        now,
+                        req,
+                        members,
+                        deadline_only,
+                        threshold,
+                        i,
+                        &mut pick,
+                        &mut pick_joules,
+                    );
+                }
+            }
+        }
+        pick.unwrap_or(latency_best)
+    }
+
+    /// Score shard `i` for the energy pass: skip down or
+    /// deadline-infeasible shards and anything finishing past
+    /// `threshold`, then fold the lowest predicted joules into `pick`
+    /// (strict `<`, candidates visited in ascending index order, so
+    /// ties break to the lowest index like every other scan).
+    #[allow(clippy::too_many_arguments)]
+    fn consider_energy(
+        &mut self,
+        now: f64,
+        req: &GemmRequest,
+        members: u32,
+        deadline_only: bool,
+        threshold: f64,
+        i: usize,
+        pick: &mut Option<Routed>,
+        pick_joules: &mut f64,
+    ) {
+        if self.down[i] {
+            return;
+        }
+        let verdict = self.gate_on(i, req.size, req.reps, members);
+        if deadline_only {
+            let deadline_s = req.deadline_s.expect("deadline_only needs an SLO");
+            let g = self.gate_idx(i);
+            if !self.admissions[g].deadline_feasible(
+                verdict.0,
+                verdict.2,
+                req.size,
+                req.reps,
+                deadline_s,
+            ) {
+                return;
+            }
+        }
+        let finish = self.shards[i].predicted_finish_for(now, verdict.2, req.class);
+        if finish > threshold {
+            return;
+        }
+        let joules = self.predicted_joules(i, verdict);
+        if joules < *pick_joules {
+            *pick = Some(Routed {
+                shard: i,
+                verdict,
+                finish,
+            });
+            *pick_joules = joules;
+        }
+    }
+
+    /// Predicted joules shard `i` would spend executing one work unit
+    /// under its gate verdict: the service prediction times the active
+    /// watts of the devices the verdict engages (every device when
+    /// co-executing, the best device alone otherwise).
+    fn predicted_joules(&self, i: usize, verdict: GateVerdict) -> f64 {
+        let (co_execute, best_device, predicted_s) = verdict;
+        let sh = &self.shards[i];
+        let watts = if co_execute {
+            sh.active_w_total()
+        } else {
+            sh.device_power()[best_device].active_w
+        };
+        predicted_s * watts
     }
 
     /// Score shard `i` for `req` and fold it into `best` (smallest
@@ -1061,6 +1420,43 @@ impl Cluster {
         (0..self.shards.len())
             .map(|i| self.gate_on(i, size, reps, members).2)
             .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Predicted aggregate cluster draw at `now`, in watts — the figure
+    /// the admission-time power cap compares against. Engaged shards
+    /// (executing, or idle with queued work) bill their full active
+    /// watts, idle live shards their idle watts, parked (drained)
+    /// shards the parked fraction of idle watts, and crashed machines
+    /// nothing. Only computed while a cap is armed.
+    fn predicted_draw(&self, now: f64) -> f64 {
+        let mut draw = 0.0;
+        for (s, sh) in self.shards.iter().enumerate() {
+            if sh.is_retired() {
+                draw += sh.idle_w_total() * self.opts.power.parked_frac;
+            } else if self.down[s] {
+                // Crashed: the machine is gone until its restart.
+            } else if sh.free_at() > now || sh.pending() > 0 {
+                draw += sh.active_w_total();
+            } else {
+                draw += sh.idle_w_total();
+            }
+        }
+        draw
+    }
+
+    /// The idle-to-active draw delta of admitting one unit onto idle
+    /// shard `target` under its gate verdict: the devices the verdict
+    /// engages (all of them when co-executing, the best device alone
+    /// otherwise) switch from their idle to their active watts; the
+    /// rest keep idling, already counted in [`Cluster::predicted_draw`].
+    fn marginal_draw(&self, target: usize, co_execute: bool, best_device: usize) -> f64 {
+        let sh = &self.shards[target];
+        if co_execute {
+            sh.active_w_total() - sh.idle_w_total()
+        } else {
+            let p = sh.device_power()[best_device];
+            p.active_w - p.idle_w
+        }
     }
 
     /// The steal victim for idle `thief`: the shard with the largest
@@ -1256,6 +1652,37 @@ impl Cluster {
                 .route(now, &req, 1, false)
                 .expect("a cluster has at least one shard"),
         };
+        // Cluster-wide power cap: waking an idle shard raises the
+        // predicted aggregate draw by the idle-to-active delta of the
+        // devices this unit engages (the shard's idle watts are already
+        // in the aggregate). An arrival whose marginal draw would cross
+        // the cap is turned away like a deadline-infeasible one — or,
+        // under [`DeadlinePolicy::Downclass`], demoted to best-effort
+        // batch and admitted at the same placement (a *soft* cap that
+        // sheds SLO guarantees first). Work landing on an
+        // already-engaged shard adds no marginal draw and always
+        // passes.
+        if let Some(cap_w) = self.opts.power.cap_w {
+            let sh = &self.shards[target];
+            let engaged = sh.free_at() > now || sh.pending() > 0;
+            if !engaged {
+                let marginal = self.marginal_draw(target, co_execute, best_device);
+                if self.predicted_draw(now) + marginal > cap_w {
+                    match self.opts.shard.deadline_policy {
+                        DeadlinePolicy::Reject => {
+                            let denied_pred =
+                                self.best_service_prediction(req.size, req.reps, 1);
+                            self.deny(now, req, arrival, denied_pred);
+                            return;
+                        }
+                        DeadlinePolicy::Downclass => {
+                            req.class = QosClass::Batch;
+                            req.deadline_s = None;
+                        }
+                    }
+                }
+            }
+        }
         self.shards[target].enqueue(QueuedRequest {
             req,
             arrival,
@@ -1326,6 +1753,22 @@ impl Cluster {
                 .route(now, &carrier, members, false)
                 .expect("a cluster has at least one shard"),
         };
+        // The power cap sees a fused batch as one unit. An over-cap
+        // batch disbands so each member faces the cap — and the
+        // configured over-cap policy — solo.
+        if let Some(cap_w) = self.opts.power.cap_w {
+            let sh = &self.shards[target];
+            let engaged = sh.free_at() > now || sh.pending() > 0;
+            let marginal = self.marginal_draw(target, co_execute, best_device);
+            if !engaged && self.predicted_draw(now) + marginal > cap_w {
+                let freed = std::mem::take(&mut batch.members);
+                for m in &freed {
+                    self.admit_request(now, m.req, m.arrival);
+                }
+                self.former.recycle(freed);
+                return;
+            }
+        }
         self.shards[target].enqueue(QueuedRequest {
             req: carrier,
             arrival: now,
@@ -1470,6 +1913,7 @@ impl Cluster {
         let n = self.shards.len();
         self.route_idx = TournamentTree::new(n, Ranking::Min);
         self.steal_idx = TournamentTree::new(n, Ranking::Max);
+        self.energy_idx = TournamentTree::new(n, Ranking::Min);
         for s in 0..n {
             self.reindex(s);
         }
@@ -1639,6 +2083,10 @@ impl Cluster {
                 let model = self.shards[s].model.clone();
                 let g = self.gate_idx(s);
                 self.admissions[g].refresh(model);
+                // The refreshed model moves this shard's joules-per-op
+                // figure too; the reindex below carries it into the
+                // energy tree.
+                self.shards[s].refresh_energy_cost();
             }
             self.push_event(res.finish, EventKind::ShardFree(s));
         }
@@ -1749,6 +2197,9 @@ impl Cluster {
                 if s < self.shards.len() {
                     self.drain_shard(s, ev.time);
                 }
+            }
+            EventKind::PowerCap(cap_w) => {
+                self.opts.power.cap_w = cap_w;
             }
             EventKind::Wake(s) => {
                 if !self.down[s]
@@ -1874,6 +2325,10 @@ impl Cluster {
             rejected,
             requeued: self.requeued,
             machine_seconds: 0.0,
+            joules_active: 0.0,
+            joules_idle: 0.0,
+            joules_parked: 0.0,
+            joules_by_class: [0.0; super::qos::NUM_CLASSES],
             shards: self.shards.iter().map(|s| s.stats()).collect(),
         };
         for (i, s) in self.shards.iter().enumerate() {
@@ -1888,6 +2343,42 @@ impl Cluster {
             report.shards[i].provisioned_s = provisioned;
             report.machine_seconds += provisioned;
         }
+        // Energy accounting (see `docs/energy.md`). Active joules are
+        // attributed per completion record — execution seconds times
+        // the active watts of the devices the record occupied — so the
+        // per-class and per-shard breakdowns are two partitions of the
+        // *same* sum and the conservation law holds by construction.
+        // Idle joules close each shard's provisioned-but-not-busy span
+        // at the report clock; parked (drained) spans bill the
+        // configured fraction of idle watts.
+        let now = self.clock.now();
+        for (i, sh) in self.shards.iter().enumerate() {
+            let st = &mut report.shards[i];
+            st.joules_idle = sh.idle_w_total() * (st.provisioned_s - st.busy_s).max(0.0);
+            st.joules_parked = sh.idle_w_total() * self.opts.power.parked_frac * sh.parked_s(now);
+        }
+        for k in 0..report.served.len() {
+            let (s, joules, class) = {
+                let r = &report.served[k];
+                let Some(s) = r.shard else { continue };
+                if r.mode.is_unserved() {
+                    continue;
+                }
+                let watts: f64 = r
+                    .shares
+                    .iter()
+                    .zip(self.shards[s].device_power())
+                    .filter(|(share, _)| **share > 0.0)
+                    .map(|(_, p)| p.active_w)
+                    .sum();
+                (s, r.exec_s * watts, r.class.index())
+            };
+            report.shards[s].joules_active += joules;
+            report.joules_by_class[class] += joules;
+        }
+        report.joules_active = report.shards.iter().map(|s| s.joules_active).sum();
+        report.joules_idle = report.shards.iter().map(|s| s.joules_idle).sum();
+        report.joules_parked = report.shards.iter().map(|s| s.joules_parked).sum();
         report
     }
 }
@@ -1904,7 +2395,7 @@ mod tests {
 
     #[test]
     fn one_shard_cluster_serves_like_a_server() {
-        let mut c = Cluster::new(&presets::mach2(), 0, ClusterOptions::default());
+        let mut c = Cluster::builder().machine(&presets::mach2()).build();
         assert_eq!(c.num_shards(), 1);
         let b = c.submit(big(), 3);
         let s = c.submit(GemmSize::square(300), 3);
@@ -1935,7 +2426,11 @@ mod tests {
             },
             ..Default::default()
         };
-        let mut c = Cluster::new(&presets::mach2(), 1, opts);
+        let mut c = Cluster::builder()
+            .machine(&presets::mach2())
+            .seed(1)
+            .options(opts)
+            .build();
         let slow = c.submit(GemmSize::square(24_000), 3);
         let fast = c.submit(GemmSize::square(16_000), 3);
         let report = c.run_to_completion();
@@ -1946,11 +2441,7 @@ mod tests {
 
     #[test]
     fn two_shards_split_a_burst_across_machines() {
-        let opts = ClusterOptions {
-            shards: 2,
-            ..Default::default()
-        };
-        let mut c = Cluster::new(&presets::mach2(), 0, opts);
+        let mut c = Cluster::builder().replicas(&presets::mach2(), 2).build();
         for _ in 0..4 {
             c.submit(big(), 2);
         }
@@ -1980,11 +2471,14 @@ mod tests {
     ///   ~51p — while the throttled long job still runs until ~55p.
     fn steal_scenario(stealing: bool) -> ServiceReport {
         let opts = ClusterOptions {
-            shards: 2,
             work_stealing: stealing,
             ..Default::default()
         };
-        let mut c = Cluster::new(&presets::mach1(), 5, opts);
+        let mut c = Cluster::builder()
+            .replicas(&presets::mach1(), 2)
+            .seed(5)
+            .options(opts)
+            .build();
         c.submit(big(), 50);
         for _ in 0..18 {
             c.submit(big(), 3);
@@ -2007,11 +2501,10 @@ mod tests {
 
     #[test]
     fn per_shard_gates_route_by_each_shards_own_predictions() {
-        let mut c = Cluster::from_machines(
-            &[presets::gpu_node(), presets::cpu_node()],
-            0,
-            ClusterOptions::default(),
-        );
+        let mut c = Cluster::builder()
+            .machine(&presets::gpu_node())
+            .machine(&presets::cpu_node())
+            .build();
         assert_eq!(c.num_shards(), 2);
         assert_ne!(
             c.admission_for(0).model().fingerprint(),
@@ -2053,7 +2546,11 @@ mod tests {
             gate: GatePolicy::Shard0,
             ..Default::default()
         };
-        let mut c = Cluster::from_machines(&[presets::gpu_node(), presets::cpu_node()], 1, opts);
+        let mut c = Cluster::builder()
+            .machines(&[presets::gpu_node(), presets::cpu_node()])
+            .seed(1)
+            .options(opts)
+            .build();
         // One legacy gate, mapped to every shard.
         assert_eq!(
             c.admission_for(0).model().fingerprint(),
@@ -2078,7 +2575,7 @@ mod tests {
 
     #[test]
     fn impossible_slo_is_denied_under_reject_policy() {
-        let mut c = Cluster::new(&presets::mach2(), 0, ClusterOptions::default());
+        let mut c = Cluster::builder().machine(&presets::mach2()).build();
         // A deadline tighter than any split can run: denied at arrival.
         let doomed = c.submit_qos(big(), 3, QosClass::Interactive, Some(1e-9));
         // A deadline-free neighbour is untouched.
@@ -2106,7 +2603,10 @@ mod tests {
             },
             ..Default::default()
         };
-        let mut c = Cluster::new(&presets::mach2(), 0, opts);
+        let mut c = Cluster::builder()
+            .machine(&presets::mach2())
+            .options(opts)
+            .build();
         let demoted = c.submit_qos(big(), 3, QosClass::Interactive, Some(1e-9));
         let report = c.run_to_completion();
         let r = report.request(demoted).unwrap();
@@ -2120,7 +2620,7 @@ mod tests {
 
     #[test]
     fn generous_slo_is_admitted_and_met() {
-        let mut c = Cluster::new(&presets::mach2(), 3, ClusterOptions::default());
+        let mut c = Cluster::builder().machine(&presets::mach2()).seed(3).build();
         let id = c.submit_qos(big(), 2, QosClass::Interactive, Some(1e6));
         let report = c.run_to_completion();
         let r = report.request(id).unwrap();
@@ -2136,7 +2636,7 @@ mod tests {
         // One shard, a simultaneous burst: 2 batch + 1 interactive.
         // The interactive request must start before the second batch
         // request despite arriving last.
-        let mut c = Cluster::new(&presets::mach2(), 4, ClusterOptions::default());
+        let mut c = Cluster::builder().machine(&presets::mach2()).seed(4).build();
         let b0 = c.submit_qos(big(), 2, QosClass::Batch, None);
         let b1 = c.submit_qos(big(), 2, QosClass::Batch, None);
         let i0 = c.submit_qos(big(), 2, QosClass::Interactive, None);
@@ -2166,14 +2666,14 @@ mod tests {
         // so 1024^3 is a standalone-bound batching candidate by every
         // verdict.
         let run = |batching: BatchPolicy| {
-            let mut c = Cluster::new(
-                &presets::gpu_node(),
-                6,
-                ClusterOptions {
+            let mut c = Cluster::builder()
+                .machine(&presets::gpu_node())
+                .seed(6)
+                .options(ClusterOptions {
                     batching,
                     ..Default::default()
-                },
-            );
+                })
+                .build();
             for _ in 0..8 {
                 c.submit(GemmSize::square(1024), 2);
             }
@@ -2220,17 +2720,17 @@ mod tests {
     #[test]
     fn lone_candidate_flushes_on_the_window_timer_and_serves_solo() {
         use crate::service::batch::{BatchPolicy, BatchWindow};
-        let mut c = Cluster::new(
-            &presets::gpu_node(),
-            6,
-            ClusterOptions {
+        let mut c = Cluster::builder()
+            .machine(&presets::gpu_node())
+            .seed(6)
+            .options(ClusterOptions {
                 batching: BatchPolicy::Windowed(BatchWindow {
                     window_s: 0.25,
                     ..Default::default()
                 }),
                 ..Default::default()
-            },
-        );
+            })
+            .build();
         let id = c.submit(GemmSize::square(1024), 2);
         assert_eq!(c.pending(), 1, "window members count as pending");
         let report = c.run_to_completion();
@@ -2246,14 +2746,14 @@ mod tests {
     #[test]
     fn co_executable_requests_never_wait_for_a_window() {
         use crate::service::batch::BatchPolicy;
-        let mut c = Cluster::new(
-            &presets::gpu_node(),
-            6,
-            ClusterOptions {
+        let mut c = Cluster::builder()
+            .machine(&presets::gpu_node())
+            .seed(6)
+            .options(ClusterOptions {
                 batching: BatchPolicy::windowed(),
                 ..Default::default()
-            },
-        );
+            })
+            .build();
         let id = c.submit(big(), 2);
         let report = c.run_to_completion();
         let r = report.request(id).unwrap();
@@ -2285,11 +2785,14 @@ mod tests {
         // `Full`, denials and SLO decisions included.
         let run = |route: RoutePolicy| {
             let opts = ClusterOptions {
-                shards: 4,
                 route,
                 ..Default::default()
             };
-            let mut c = Cluster::new(&presets::mach2(), 9, opts);
+            let mut c = Cluster::builder()
+                .replicas(&presets::mach2(), 4)
+                .seed(9)
+                .options(opts)
+                .build();
             mixed_trace(&mut c);
             c.run_to_completion()
         };
@@ -2303,11 +2806,14 @@ mod tests {
     fn sampled_routing_with_small_d_serves_everything_deterministically() {
         let run = || {
             let opts = ClusterOptions {
-                shards: 8,
                 route: RoutePolicy::Sampled { d: 2 },
                 ..Default::default()
             };
-            let mut c = Cluster::new(&presets::mach2(), 11, opts);
+            let mut c = Cluster::builder()
+                .replicas(&presets::mach2(), 8)
+                .seed(11)
+                .options(opts)
+                .build();
             mixed_trace(&mut c);
             c.run_to_completion()
         };
@@ -2327,11 +2833,7 @@ mod tests {
 
     #[test]
     fn probe_route_inspects_without_admitting() {
-        let opts = ClusterOptions {
-            shards: 2,
-            ..Default::default()
-        };
-        let mut c = Cluster::new(&presets::mach2(), 0, opts);
+        let mut c = Cluster::builder().replicas(&presets::mach2(), 2).build();
         let req = GemmRequest::new(0, big(), 2);
         let (shard, finish) = c.probe_route(&req).unwrap();
         assert!(shard < 2);
@@ -2347,7 +2849,7 @@ mod tests {
 
     #[test]
     fn end_of_run_report_moves_records_and_keeps_counters() {
-        let mut c = Cluster::new(&presets::mach2(), 0, ClusterOptions::default());
+        let mut c = Cluster::builder().machine(&presets::mach2()).build();
         c.submit(big(), 2);
         let report = c.run_to_completion();
         assert_eq!(report.served.len(), 1);
@@ -2367,11 +2869,10 @@ mod tests {
         // shard 2 holds a big GEMM the CPU planned slowly but the GPU
         // thief would serve far faster. The affinity tilt must send
         // the thief to shard 2.
-        let mut c = Cluster::from_machines(
-            &[presets::gpu_node(), presets::cpu_node(), presets::cpu_node()],
-            0,
-            ClusterOptions::default(),
-        );
+        let mut c = Cluster::builder()
+            .machine(&presets::gpu_node())
+            .replicas(&presets::cpu_node(), 2)
+            .build();
         let tiny = GemmSize::square(300);
         let tiny_pred = c.gate_on(1, tiny, 1, 1).2;
         let (big_co, big_dev, big_pred) = c.gate_on(2, big(), 1, 1);
@@ -2411,11 +2912,10 @@ mod tests {
         // Three clone shards: the thief's affinity for both victims'
         // heads differs only by profiling noise, far inside the tilt
         // margin — the class-weighted backlog winner must stand.
-        let opts = ClusterOptions {
-            shards: 3,
-            ..Default::default()
-        };
-        let mut c = Cluster::new(&presets::mach2(), 2, opts);
+        let mut c = Cluster::builder()
+            .replicas(&presets::mach2(), 3)
+            .seed(2)
+            .build();
         for victim in [1usize, 2] {
             let (co, dev, pred) = c.gate_on(victim, big(), 2, 1);
             let depth = if victim == 1 { 2 } else { 1 };
@@ -2449,4 +2949,122 @@ mod tests {
             "stealing must not increase mean queueing delay: {waits_with} vs {waits_without}"
         );
     }
-}
+
+    /// The deprecated constructors are thin shims over the builder:
+    /// same machines + same seeds must yield the same fitted models.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructors_match_the_builder() {
+        let old = Cluster::new(
+            &presets::mach2(),
+            0,
+            ClusterOptions {
+                shards: 2,
+                ..Default::default()
+            },
+        );
+        let new = Cluster::builder().replicas(&presets::mach2(), 2).build();
+        assert_eq!(old.num_shards(), new.num_shards());
+        assert_eq!(
+            old.shard(1).model.fingerprint(),
+            new.shard(1).model.fingerprint()
+        );
+        let spec = HeterogeneousSpec::new(7)
+            .machine(presets::gpu_node())
+            .machines(presets::cpu_node(), 2)
+            .build();
+        let built = Cluster::builder()
+            .machine(&presets::gpu_node())
+            .replicas(&presets::cpu_node(), 2)
+            .seed(7)
+            .build();
+        assert_eq!(spec.num_shards(), built.num_shards());
+        assert_eq!(
+            spec.shard(2).model.fingerprint(),
+            built.shard(2).model.fingerprint(),
+            "same machines, same seeds, same fitted models"
+        );
+        let from = Cluster::from_machines(
+            &[presets::gpu_node(), presets::cpu_node()],
+            3,
+            ClusterOptions::default(),
+        );
+        let machines = Cluster::builder()
+            .machines(&[presets::gpu_node(), presets::cpu_node()])
+            .seed(3)
+            .build();
+        assert_eq!(
+            from.shard(0).model.fingerprint(),
+            machines.shard(0).model.fingerprint()
+        );
+    }
+
+    #[test]
+    fn energy_objective_prefers_the_cheaper_shard_when_slack_allows() {
+        // Two same-speed machines, one drawing ~8x the active watts:
+        // with generous slack the energy pass must route the whole
+        // burst to the cheap shard; under Latency it load-balances.
+        let mut hot = presets::mach2();
+        for d in &mut hot.devices {
+            d.active_w *= 8.0;
+        }
+        let build = |objective: RouteObjective| {
+            Cluster::builder()
+                .machine(&presets::mach2())
+                .machine(&hot)
+                .objective(objective)
+                .build()
+        };
+        let mut lat = build(RouteObjective::Latency);
+        let mut eco = build(RouteObjective::EnergyAware { slack: 50.0 });
+        for c in [&mut lat, &mut eco] {
+            for _ in 0..4 {
+                c.submit(big(), 2);
+            }
+        }
+        let lat_report = lat.run_to_completion();
+        let eco_report = eco.run_to_completion();
+        assert_eq!(eco_report.served.len(), 4);
+        assert_eq!(
+            eco_report.shards[1].dispatches, 0,
+            "with slack to spare, nothing should land on the hot shard"
+        );
+        assert!(lat_report.shards[1].dispatches > 0, "Latency load-balances");
+        assert!(
+            eco_report.joules_active < lat_report.joules_active,
+            "energy-aware routing must cut active joules: {} vs {}",
+            eco_report.joules_active,
+            lat_report.joules_active
+        );
+        // Conservation: per-class and per-shard actives partition the
+        // same sum.
+        let by_class: f64 = eco_report.joules_by_class.iter().sum();
+        assert!((by_class - eco_report.joules_active).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_cap_denies_the_arrival_that_would_cross_it() {
+        // mach2 idles at 61 W and draws 565 W fully engaged. With two
+        // shards a 700 W cap admits the first co-exec arrival
+        // (122 -> 626 W predicted) and must deny the simultaneous
+        // second (626 + 504 would cross it); uncapping re-opens
+        // admission.
+        let mut c = Cluster::builder()
+            .replicas(&presets::mach2(), 2)
+            .power(PowerOptions {
+                cap_w: Some(700.0),
+                ..Default::default()
+            })
+            .build();
+        c.submit(big(), 2);
+        c.submit(big(), 2);
+        c.inject_power_cap(1e6, None);
+        let late = GemmRequest::new(9, big(), 2);
+        c.submit_request_at(2e6, late);
+        let report = c.run_to_completion();
+        assert_eq!(report.denied, 1, "the over-cap arrival is turned away");
+        assert!(
+            !report.request(9).unwrap().mode.is_denied(),
+            "after the uncap event admission re-opens"
+        );
+    }

@@ -46,8 +46,8 @@
 //!   stream — same decisions, really concurrent execution; the seam
 //!   where a PJRT-backed [`driver::wall_clock::Executor`] plugs in);
 //! * [`cluster`] — the [`Cluster`] front-end: N shards (possibly over
-//!   *different* machines — see [`HeterogeneousSpec`],
-//!   [`Cluster::from_machines`] and the node presets in
+//!   *different* machines — built through the fluent [`ClusterBuilder`]
+//!   via [`Cluster::builder`] with the node presets in
 //!   [`crate::config::presets`]) driven by an event-driven virtual-time
 //!   loop (a binary heap of arrival / wake / shard-free events),
 //!   deadline-admitting SLO-bound arrivals against the predicted
@@ -55,7 +55,12 @@
 //!   accepted request to the shard with the earliest class-weighted
 //!   predicted finish *under that shard's own gate verdict* (exact
 //!   full scan by default, or sampled power-of-d-choices routing via
-//!   [`RoutePolicy::Sampled`] at scale — see `docs/hotpath.md`), and
+//!   [`RoutePolicy::Sampled`] at scale — see `docs/hotpath.md`;
+//!   [`RouteObjective::EnergyAware`] instead prefers the cheapest
+//!   predicted-joules shard whose finish stays inside the SLO slack,
+//!   and [`PowerOptions`] meters per-shard watts, enforces a
+//!   cluster-wide power cap at admission and bills drained shards at a
+//!   low-power parked rate — see `docs/energy.md`), and
 //!   letting idle shards steal queued work from the shard with the
 //!   largest class-weighted backlog (stolen requests are re-gated under
 //!   the thief's model, and thieves prefer work their own hardware
@@ -143,8 +148,11 @@ pub use batch::{BatchFormer, BatchMember, BatchPolicy, BatchWindow, FusedBatch, 
 pub use cache::{LruMap, PlanCache};
 pub use clock::{Clock, MonotonicClock, VirtualClock};
 pub use cluster::{
-    Cluster, ClusterOptions, DispatchNote, GatePolicy, HeterogeneousSpec, RoutePolicy, TapAction,
+    Cluster, ClusterBuilder, ClusterOptions, DispatchNote, GatePolicy, PowerOptions, RouteObjective,
+    RoutePolicy, TapAction,
 };
+#[allow(deprecated)]
+pub use cluster::HeterogeneousSpec;
 pub use driver::{
     Driver, DriverKind, SimulatedExecutor, VirtualDriver, WallClockDriver, WallClockOptions,
     WallClockStats,

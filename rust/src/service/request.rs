@@ -266,6 +266,18 @@ pub struct ShardStats {
     /// statically-overprovisioned cluster pays for and an autoscaled
     /// one saves.
     pub provisioned_s: f64,
+    /// Joules this shard's devices spent executing: each completion
+    /// record is billed `exec_s` × the active watts of the devices it
+    /// occupied (see `docs/energy.md`). Filled at report time by the
+    /// cluster, which owns the completion records.
+    pub joules_active: f64,
+    /// Joules spent provisioned-but-idle: the machine's Σ idle watts
+    /// over its provisioned span minus its busy seconds.
+    pub joules_idle: f64,
+    /// Joules spent parked after a graceful drain: idle watts scaled by
+    /// the cluster's parked fraction over the retired span — what
+    /// autoscaler scale-down actually saves.
+    pub joules_parked: f64,
 }
 
 impl ShardStats {
@@ -280,6 +292,12 @@ impl ShardStats {
         } else {
             None
         }
+    }
+
+    /// Total joules this shard drew over the session: active + idle +
+    /// parked.
+    pub fn total_joules(&self) -> f64 {
+        self.joules_active + self.joules_idle + self.joules_parked
     }
 }
 
@@ -308,6 +326,18 @@ pub struct ClassBreakdown {
 }
 
 /// Aggregate outcome of a service session.
+///
+/// # Read surface
+///
+/// The report follows one convention throughout: **raw, digestable
+/// accounting lives in public fields** (these are what
+/// [`super::scenario::digest`] serializes and `PartialEq` compares —
+/// byte-stable across replays), while **derived statistics live in
+/// methods** (`throughput_rps`, `utilization`, `deadline_hit_rate`,
+/// `total_joules`, the percentile helpers, …) computed on demand from
+/// the fields. Rendering helpers (`table`, `class_table`,
+/// `shard_table`, `summary`) sit on top of both and never feed back
+/// into the accounting.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServiceReport {
     /// Every completed request, in dispatch order (per-shard dispatches
@@ -345,6 +375,20 @@ pub struct ServiceReport {
     /// this is what the cluster *pays for*; [`ShardStats::busy_s`] is
     /// what it *uses* — see [`ServiceReport::utilization`].
     pub machine_seconds: f64,
+    /// Joules spent executing across all shards (the sum of
+    /// [`ShardStats::joules_active`]).
+    pub joules_active: f64,
+    /// Joules spent provisioned-but-idle across all shards (the sum of
+    /// [`ShardStats::joules_idle`]).
+    pub joules_idle: f64,
+    /// Joules spent parked after graceful drains across all shards
+    /// (the sum of [`ShardStats::joules_parked`]).
+    pub joules_parked: f64,
+    /// Active joules attributed per QoS class ([`QosClass::index`]
+    /// order): each executed record bills its energy to the class it
+    /// was served under. Sums to `joules_active` exactly — the
+    /// conservation law the energy tests pin.
+    pub joules_by_class: [f64; super::qos::NUM_CLASSES],
     /// Per-shard accounting (shard order; one entry for the classic
     /// single-machine [`super::Server`]).
     pub shards: Vec<ShardStats>,
@@ -413,6 +457,17 @@ impl ServiceReport {
         } else {
             self.shards.iter().map(|s| s.busy_s).sum::<f64>() / self.machine_seconds
         }
+    }
+
+    /// Total joules the cluster drew over the session: active + idle +
+    /// parked, across every shard.
+    pub fn total_joules(&self) -> f64 {
+        self.joules_active + self.joules_idle + self.joules_parked
+    }
+
+    /// Active joules billed to one QoS class.
+    pub fn class_joules(&self, class: QosClass) -> f64 {
+        self.joules_by_class[class.index()]
     }
 
     /// Fraction of co-exec plans answered from the cache.
@@ -715,6 +770,10 @@ mod tests {
             rejected: 0,
             requeued: 0,
             machine_seconds: 3.0,
+            joules_active: 90.0,
+            joules_idle: 10.0,
+            joules_parked: 2.0,
+            joules_by_class: [0.0, 90.0, 0.0],
             shards: vec![ShardStats {
                 dispatches: 2,
                 busy_s: 3.0,
@@ -728,6 +787,9 @@ mod tests {
                 predicted_s: 2.5,
                 realized_s: 3.0,
                 provisioned_s: 3.0,
+                joules_active: 90.0,
+                joules_idle: 10.0,
+                joules_parked: 2.0,
             }],
         }
     }
@@ -898,6 +960,19 @@ mod tests {
         assert!(rendered.contains("00000000deadbeef"));
         assert!(rendered.contains("1.200"));
         assert!(rendered.contains('-'));
+    }
+
+    #[test]
+    fn joules_accessors_sum_the_components() {
+        let r = report();
+        assert!((r.total_joules() - 102.0).abs() < 1e-12);
+        assert!((r.class_joules(QosClass::Standard) - 90.0).abs() < 1e-12);
+        assert_eq!(r.class_joules(QosClass::Interactive), 0.0);
+        assert!((r.shards[0].total_joules() - 102.0).abs() < 1e-12);
+        // The conservation law the report-time accounting maintains.
+        let by_class: f64 = r.joules_by_class.iter().sum();
+        assert!((by_class - r.joules_active).abs() < 1e-12);
+        assert_eq!(ServiceReport::default().total_joules(), 0.0);
     }
 
     #[test]

@@ -55,6 +55,10 @@ pub fn digest(report: &ServiceReport) -> String {
         num(report.machine_seconds)
     ));
     out.push_str(&format!(",\"utilization\":{}", num(report.utilization())));
+    out.push_str(&format!(",\"joules\":{}", num(report.total_joules())));
+    out.push_str(&format!(",\"joules_active\":{}", num(report.joules_active)));
+    out.push_str(&format!(",\"joules_idle\":{}", num(report.joules_idle)));
+    out.push_str(&format!(",\"joules_parked\":{}", num(report.joules_parked)));
     out.push_str(&format!(",\"replans\":{}", report.replans));
     out.push_str(&format!(",\"epoch_bumps\":{}", report.epoch_bumps));
 
@@ -66,7 +70,8 @@ pub fn digest(report: &ServiceReport) -> String {
         }
         out.push_str(&format!(
             "\"{}\":{{\"executed\":{},\"p50_sojourn_s\":{},\"p99_sojourn_s\":{},\
-             \"deadline_hits\":{},\"deadline_bound\":{},\"denied\":{},\"rejected\":{}}}",
+             \"deadline_hits\":{},\"deadline_bound\":{},\"denied\":{},\"rejected\":{},\
+             \"joules\":{}}}",
             class.label(),
             b.executed,
             num(b.p50_sojourn),
@@ -75,6 +80,7 @@ pub fn digest(report: &ServiceReport) -> String {
             b.deadline_bound,
             b.denied,
             b.rejected,
+            num(report.class_joules(class)),
         ));
     }
     out.push('}');
@@ -87,7 +93,8 @@ pub fn digest(report: &ServiceReport) -> String {
         let served: usize = s.served_by_class.iter().sum();
         out.push_str(&format!(
             "{{\"dispatches\":{},\"served\":{},\"stolen\":{},\"batches\":{},\
-             \"rejected\":{},\"requeued\":{},\"busy_s\":{},\"provisioned_s\":{}}}",
+             \"rejected\":{},\"requeued\":{},\"busy_s\":{},\"provisioned_s\":{},\
+             \"joules_active\":{},\"joules_idle\":{},\"joules_parked\":{}}}",
             s.dispatches,
             served,
             s.stolen,
@@ -96,6 +103,9 @@ pub fn digest(report: &ServiceReport) -> String {
             s.requeued,
             num(s.busy_s),
             num(s.provisioned_s),
+            num(s.joules_active),
+            num(s.joules_idle),
+            num(s.joules_parked),
         ));
     }
     out.push_str("]}");
@@ -119,6 +129,8 @@ mod tests {
         assert!(d.contains("\"served\":0"));
         assert!(d.contains("\"machine_seconds\":0.000000"));
         assert!(d.contains("\"utilization\":0.000000"));
+        assert!(d.contains("\"joules\":0.000000"));
+        assert!(d.contains("\"joules_parked\":0.000000"));
         assert!(d.contains("\"classes\":{\"interactive\":"));
         assert!(d.contains("\"shards\":[]"));
     }

@@ -3,8 +3,8 @@
 //! Reuses [`crate::config::parser`]'s splitter so scenarios get the
 //! exact comment/string/number handling of machine configs, with the
 //! section headers `[[shard]]`, `[[arrivals]]`, `[[request]]`,
-//! `[[fault]]` and `[[autoscaler]]`. See `docs/scenarios.md` for the
-//! full schema and a worked example.
+//! `[[fault]]`, `[[autoscaler]]` and `[[power]]`. See
+//! `docs/scenarios.md` for the full schema and a worked example.
 
 use super::{Fault, FixedRequest, Scenario, StreamKind, StreamSpec};
 use crate::config::parser::{get, num_or, req, split_sections, Section};
@@ -12,14 +12,14 @@ use crate::config::{presets, MachineConfig};
 use crate::error::{Error, Result};
 use crate::service::arrivals::Phase;
 use crate::service::batch::{BatchPolicy, BatchWindow};
-use crate::service::cluster::{ClusterOptions, GatePolicy};
+use crate::service::cluster::{ClusterOptions, GatePolicy, RouteObjective};
 use crate::service::driver::DriverKind;
 use crate::service::elastic::AutoscalerPolicy;
 use crate::service::qos::{DeadlinePolicy, QosClass};
 use crate::service::queue::QueuePolicy;
 use crate::workload::GemmSize;
 
-const HEADERS: [&str; 5] = ["shard", "arrivals", "request", "fault", "autoscaler"];
+const HEADERS: [&str; 6] = ["shard", "arrivals", "request", "fault", "autoscaler", "power"];
 
 /// Parse one scenario document.
 pub(super) fn parse_scenario(text: &str) -> Result<Scenario> {
@@ -51,6 +51,7 @@ pub(super) fn parse_scenario(text: &str) -> Result<Scenario> {
     let mut streams = Vec::new();
     let mut requests = Vec::new();
     let mut faults = Vec::new();
+    let mut saw_power = false;
     for (header, sec) in &tables {
         match header.as_str() {
             "shard" => parse_shard(sec, &mut machines)?,
@@ -64,6 +65,15 @@ pub(super) fn parse_scenario(text: &str) -> Result<Scenario> {
                     )));
                 }
                 opts.autoscaler = Some(parse_autoscaler(sec)?);
+            }
+            "power" => {
+                if saw_power {
+                    return Err(Error::Config(format!(
+                        "scenario `{name}`: at most one [[power]] table"
+                    )));
+                }
+                saw_power = true;
+                parse_power(sec, &mut opts)?;
             }
             _ => unreachable!("split_sections only yields accepted headers"),
         }
@@ -84,7 +94,7 @@ pub(super) fn parse_scenario(text: &str) -> Result<Scenario> {
             | Fault::Restart { shard, .. }
             | Fault::Slow { shard, .. }
             | Fault::Drain { shard, .. } => *shard,
-            Fault::Spike { .. } | Fault::Join { .. } => continue,
+            Fault::Spike { .. } | Fault::Join { .. } | Fault::PowerCap { .. } => continue,
         };
         if shard >= addressable {
             return Err(Error::Config(format!(
@@ -295,6 +305,55 @@ fn parse_autoscaler(sec: &Section) -> Result<AutoscalerPolicy> {
         )));
     }
     Ok(policy)
+}
+
+/// The `[[power]]` table: cluster-wide cap, parked rate and routing
+/// objective (see [`crate::service::cluster::PowerOptions`] and
+/// [`crate::service::cluster::RouteObjective`]).
+fn parse_power(sec: &Section, opts: &mut ClusterOptions) -> Result<()> {
+    const WHAT: &str = "[[power]]";
+    if get(sec, "cap_w").is_some() {
+        let cap_w = parse_positive(sec, "cap_w", WHAT)?;
+        opts.power.cap_w = Some(cap_w);
+    }
+    opts.power.parked_frac = num_or(sec, "parked_frac", opts.power.parked_frac)?;
+    if !(opts.power.parked_frac.is_finite()
+        && (0.0..=1.0).contains(&opts.power.parked_frac))
+    {
+        return Err(Error::Config(format!(
+            "{WHAT}: `parked_frac` must be in [0, 1], got {}",
+            opts.power.parked_frac
+        )));
+    }
+    let objective = match get(sec, "objective") {
+        None => "latency",
+        Some(v) => v.as_str("objective")?,
+    };
+    match objective {
+        "latency" => {
+            if get(sec, "slack").is_some() {
+                return Err(Error::Config(format!(
+                    "{WHAT}: `slack` only applies to objective = \"energy\""
+                )));
+            }
+            opts.objective = RouteObjective::Latency;
+        }
+        "energy" => {
+            let slack = num_or(sec, "slack", 1.5)?;
+            if !(slack.is_finite() && slack >= 1.0) {
+                return Err(Error::Config(format!(
+                    "{WHAT}: `slack` must be finite and >= 1, got {slack}"
+                )));
+            }
+            opts.objective = RouteObjective::EnergyAware { slack };
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "{WHAT}: `objective` must be \"latency\" or \"energy\", got \"{other}\""
+            )))
+        }
+    }
+    Ok(())
 }
 
 fn parse_class(sec: &Section, what: &str) -> Result<QosClass> {
@@ -554,9 +613,17 @@ fn parse_fault(sec: &Section) -> Result<Fault> {
             at,
             shard: shard(sec)?,
         }),
+        "cap" => Ok(Fault::PowerCap {
+            at,
+            // Absent `cap_w` lifts the cap.
+            cap_w: match get(sec, "cap_w") {
+                Some(_) => Some(parse_positive(sec, "cap_w", WHAT)?),
+                None => None,
+            },
+        }),
         other => Err(Error::Config(format!(
-            "{WHAT}: `kind` must be \"crash\", \"restart\", \"slow\", \"spike\", \"join\" or \
-             \"drain\", got \"{other}\""
+            "{WHAT}: `kind` must be \"crash\", \"restart\", \"slow\", \"spike\", \"join\", \
+             \"drain\" or \"cap\", got \"{other}\""
         ))),
     }
 }
@@ -682,6 +749,70 @@ mod tests {
         assert!(matches!(sc.faults[0], Fault::Join { seed: Some(7), .. }));
         // Shard 1 only exists after the join: the bound counts it.
         assert!(matches!(sc.faults[1], Fault::Drain { shard: 1, .. }));
+    }
+
+    #[test]
+    fn parses_power_table_and_cap_fault() {
+        let sc = parse(
+            r#"
+            name = "powered"
+            [[shard]]
+            preset = "mach2"
+            count = 2
+
+            [[power]]
+            cap_w = 900.0
+            parked_frac = 0.25
+            objective = "energy"
+            slack = 2.0
+
+            [[fault]]
+            kind = "cap"
+            at = 1.0
+            cap_w = 600.0
+
+            [[fault]]
+            kind = "cap"
+            at = 2.0
+        "#,
+        )
+        .expect("parse");
+        assert_eq!(sc.opts.power.cap_w, Some(900.0));
+        assert_eq!(sc.opts.power.parked_frac, 0.25);
+        assert_eq!(sc.opts.objective, RouteObjective::EnergyAware { slack: 2.0 });
+        assert!(matches!(
+            sc.faults[0],
+            Fault::PowerCap {
+                cap_w: Some(c), ..
+            } if c == 600.0
+        ));
+        // A `cap` fault with no `cap_w` lifts the cap.
+        assert!(matches!(sc.faults[1], Fault::PowerCap { cap_w: None, .. }));
+    }
+
+    #[test]
+    fn rejects_bad_power_tables() {
+        let with_power = |body: &str| {
+            parse(&format!(
+                "name = \"x\"\n[[shard]]\npreset = \"mach1\"\n[[power]]\n{body}"
+            ))
+        };
+        // Defaults alone are fine (latency objective, no cap).
+        let sc = with_power("").expect("empty power table");
+        assert_eq!(sc.opts.objective, RouteObjective::Latency);
+        assert_eq!(sc.opts.power.cap_w, None);
+        // Out-of-range knobs.
+        assert!(with_power("cap_w = 0.0").is_err());
+        assert!(with_power("parked_frac = 1.5").is_err());
+        assert!(with_power("objective = \"energy\"\nslack = 0.5").is_err());
+        assert!(with_power("objective = \"thermal\"").is_err());
+        // `slack` is an energy-objective knob.
+        assert!(with_power("objective = \"latency\"\nslack = 2.0").is_err());
+        // At most one [[power]] table.
+        assert!(parse(
+            "name = \"x\"\n[[shard]]\npreset = \"mach1\"\n[[power]]\ncap_w = 100.0\n[[power]]\ncap_w = 200.0"
+        )
+        .is_err());
     }
 
     #[test]

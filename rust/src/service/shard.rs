@@ -32,6 +32,7 @@ use crate::adapt::AdaptRules;
 use crate::baselines;
 use crate::coordinator::Pipeline;
 use crate::error::{Error, Result};
+use crate::optimize::energy::DevicePower;
 use crate::predict::PerfModel;
 use crate::schedule::suitability::predicted_standalone;
 use crate::schedule::{build_plan_excluding, DynamicScheduler, PlanOptions, SchedulePlan};
@@ -99,6 +100,24 @@ pub struct ExecutorShard {
     /// (a drained shard the autoscaler later revives starts a fresh
     /// span; the old one is folded in here).
     provisioned_s_prior: f64,
+    /// Seconds spent in the parked (drained) low-power state over
+    /// *earlier* retire-to-revive spans; the open parked span, if any,
+    /// runs from `retired_at` to the report clock.
+    parked_s_prior: f64,
+    /// Per-device power model (active/idle watts), copied from the
+    /// machine config at provision time.
+    power: Vec<DevicePower>,
+    /// Cached Σ active watts across devices — the draw of a full
+    /// co-execution on this machine.
+    active_w_total: f64,
+    /// Cached Σ idle watts across devices — the draw of a provisioned
+    /// machine with nothing running.
+    idle_w_total: f64,
+    /// Static energy cost of routing work here: predicted joules per
+    /// unit of work at full co-execution (Σ active watts over the
+    /// machine's aggregate throughput under the live model). The
+    /// cluster's energy index ranks shards by this.
+    joules_per_op: f64,
 }
 
 impl ExecutorShard {
@@ -116,6 +135,18 @@ impl ExecutorShard {
         } else {
             None
         };
+        let power: Vec<DevicePower> = sim
+            .config()
+            .devices
+            .iter()
+            .map(|d| DevicePower {
+                active_w: d.active_w,
+                idle_w: d.idle_w,
+            })
+            .collect();
+        let active_w_total: f64 = power.iter().map(|p| p.active_w).sum();
+        let idle_w_total: f64 = power.iter().map(|p| p.idle_w).sum();
+        let joules_per_op = Self::joules_per_unit(active_w_total, &model);
         ExecutorShard {
             id,
             sim,
@@ -136,6 +167,11 @@ impl ExecutorShard {
             provisioned_at: 0.0,
             retired_at: None,
             provisioned_s_prior: 0.0,
+            parked_s_prior: 0.0,
+            power,
+            active_w_total,
+            idle_w_total,
+            joules_per_op,
             dynsched,
             opts: opts.clone(),
             model,
@@ -167,6 +203,7 @@ impl ExecutorShard {
     pub fn unretire(&mut self, now: f64) {
         if let Some(end) = self.retired_at.take() {
             self.provisioned_s_prior += (end - self.provisioned_at).max(0.0);
+            self.parked_s_prior += (now - end).max(0.0);
             self.provisioned_at = now;
             self.free_at = self.free_at.max(now);
         }
@@ -180,10 +217,65 @@ impl ExecutorShard {
         self.provisioned_s_prior + (span_end - self.provisioned_at)
     }
 
+    /// Seconds this shard has spent parked — drained, with the machine
+    /// held at the low-power parked rate — with the open parked span
+    /// (if any) closed at `end` (the report clock).
+    pub fn parked_s(&self, end: f64) -> f64 {
+        self.parked_s_prior + self.retired_at.map_or(0.0, |r| (end - r).max(0.0))
+    }
+
     /// True once a graceful drain retired this shard (and no revival
     /// followed).
     pub fn is_retired(&self) -> bool {
         self.retired_at.is_some()
+    }
+
+    /// Per-device power model (active/idle watts), as provisioned.
+    pub fn device_power(&self) -> &[DevicePower] {
+        &self.power
+    }
+
+    /// Σ active watts across this shard's devices — the draw of a full
+    /// co-execution.
+    pub fn active_w_total(&self) -> f64 {
+        self.active_w_total
+    }
+
+    /// Σ idle watts across this shard's devices — the draw of a
+    /// provisioned machine with nothing running.
+    pub fn idle_w_total(&self) -> f64 {
+        self.idle_w_total
+    }
+
+    /// Predicted joules per unit of work at full co-execution under the
+    /// live model — the static key the cluster's energy index ranks
+    /// shards by.
+    pub fn joules_per_op(&self) -> f64 {
+        self.joules_per_op
+    }
+
+    /// Re-derive the energy cost key from the live model (the cluster
+    /// calls this whenever a dispatch re-planned and refreshed the
+    /// shard's model).
+    pub fn refresh_energy_cost(&mut self) {
+        self.joules_per_op = Self::joules_per_unit(self.active_w_total, &self.model);
+    }
+
+    /// Σ active watts divided by the machine's aggregate throughput
+    /// (Σ 1/slope): watts × seconds-per-op = joules per op. Falls back
+    /// to the raw watt total for a degenerate (zero-throughput) model
+    /// so the key stays finite and orderable.
+    fn joules_per_unit(active_w_total: f64, model: &PerfModel) -> f64 {
+        let throughput: f64 = model
+            .devices
+            .iter()
+            .map(|d| if d.a > 0.0 { 1.0 / d.a } else { 0.0 })
+            .sum();
+        if throughput > 0.0 {
+            active_w_total / throughput
+        } else {
+            active_w_total
+        }
     }
 
     /// Drain and return every *queued* request (in the order the
@@ -275,6 +367,11 @@ impl ExecutorShard {
             // Closed at `free_at` when the caller has no better clock;
             // the cluster report re-closes the span at its own clock.
             provisioned_s: self.provisioned_s(self.free_at),
+            // Energy is attributed at report time by the cluster, which
+            // owns the completion records and the parked-rate option.
+            joules_active: 0.0,
+            joules_idle: 0.0,
+            joules_parked: 0.0,
         }
     }
 

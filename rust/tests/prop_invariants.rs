@@ -760,7 +760,11 @@ fn prop_faultfree_scenario_equals_direct_cluster() {
         assert!(sc.faults.is_empty());
 
         let via_scenario = sc.run();
-        let mut direct = Cluster::from_machines(&sc.machines, sc.seed, sc.opts.clone());
+        let mut direct = Cluster::builder()
+            .machines(&sc.machines)
+            .seed(sc.seed)
+            .options(sc.opts.clone())
+            .build();
         direct.submit_trace(&sc.trace());
         let via_cluster = direct.run_to_completion();
 

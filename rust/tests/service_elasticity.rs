@@ -10,7 +10,7 @@
 //! live in `prop_invariants.rs`.
 
 use poas::config::presets;
-use poas::service::{AutoscalerPolicy, Cluster, ClusterOptions, GemmRequest, QosClass};
+use poas::service::{AutoscalerPolicy, Cluster, GemmRequest, QosClass};
 use poas::workload::GemmSize;
 
 fn heavy() -> GemmSize {
@@ -20,7 +20,7 @@ fn heavy() -> GemmSize {
 /// Virtual seconds one heavy request takes on an idle mach2 shard —
 /// the service-time unit the elasticity loads are phrased in.
 fn unit() -> f64 {
-    let mut c = Cluster::new(&presets::mach2(), 7, ClusterOptions::default());
+    let mut c = Cluster::builder().machine(&presets::mach2()).seed(7).build();
     c.submit(heavy(), 2);
     c.run_to_completion().makespan
 }
@@ -36,11 +36,7 @@ fn drain_finishes_inflight_on_the_leaving_shard_and_requeues_only_its_queue() {
     // immediately — then shard 1 drains long before anything can
     // finish. The in-flight execution must complete *on shard 1*; only
     // the queued remainder redistributes.
-    let mut c = Cluster::from_machines(
-        &[presets::mach1(), presets::mach1()],
-        9,
-        ClusterOptions::default(),
-    );
+    let mut c = Cluster::builder().replicas(&presets::mach1(), 2).seed(9).build();
     for _ in 0..6 {
         c.submit(heavy(), 2);
     }
@@ -97,11 +93,7 @@ fn drain_then_restart_revives_the_shard_and_bills_both_spans() {
     // first span and reopens at the restart, so the revived shard is
     // never billed for the gap it sat retired.
     let u = unit();
-    let mut c = Cluster::from_machines(
-        &[presets::mach1(), presets::mach1()],
-        9,
-        ClusterOptions::default(),
-    );
+    let mut c = Cluster::builder().replicas(&presets::mach1(), 2).seed(9).build();
     for _ in 0..4 {
         c.submit(heavy(), 2);
     }
@@ -130,11 +122,7 @@ fn drain_then_restart_revives_the_shard_and_bills_both_spans() {
 
 #[test]
 fn draining_an_idle_shard_retires_it_immediately() {
-    let mut c = Cluster::from_machines(
-        &[presets::mach1(), presets::mach1()],
-        11,
-        ClusterOptions::default(),
-    );
+    let mut c = Cluster::builder().replicas(&presets::mach1(), 2).seed(11).build();
     c.inject_drain(0.5, 1);
     c.submit_request_at(1.0, GemmRequest::new(0, heavy(), 2));
     let report = c.run_to_completion();
@@ -156,7 +144,7 @@ fn joined_shard_serves_and_is_billed_from_provision_time() {
     // picks up later arrivals (or steals queued work). Its bill starts
     // at the join, not at t = 0.
     let u = unit();
-    let mut c = Cluster::new(&presets::mach2(), 13, ClusterOptions::default());
+    let mut c = Cluster::builder().machine(&presets::mach2()).seed(13).build();
     for _ in 0..4 {
         c.submit(heavy(), 2);
     }
@@ -191,7 +179,7 @@ fn join_ends_a_total_outage_like_a_restart() {
     // The only shard crashes with work parked at the front door; a new
     // machine joining must re-admit the parked arrivals the way a
     // restart does.
-    let mut c = Cluster::new(&presets::mach1(), 17, ClusterOptions::default());
+    let mut c = Cluster::builder().machine(&presets::mach1()).seed(17).build();
     c.inject_crash(0.0, 0);
     c.submit_request_at(0.1, GemmRequest::new(0, heavy(), 2));
     c.inject_join(1.0, presets::mach1(), 99);
@@ -246,26 +234,19 @@ fn autoscaler_rides_a_flash_crowd_without_deadline_loss() {
         p
     };
 
-    let mut base = Cluster::new(&presets::mach2(), 19, ClusterOptions::default());
+    let mut base = Cluster::builder().machine(&presets::mach2()).seed(19).build();
     submit_crowd(&mut base);
     let base = base.run_to_completion();
 
-    let mut autoscaled = Cluster::new(
-        &presets::mach2(),
-        19,
-        ClusterOptions {
-            autoscaler: Some(pool_policy()),
-            ..Default::default()
-        },
-    );
+    let mut autoscaled = Cluster::builder()
+        .machine(&presets::mach2())
+        .seed(19)
+        .autoscaler(pool_policy())
+        .build();
     submit_crowd(&mut autoscaled);
     let autoscaled = autoscaled.run_to_completion();
 
-    let mut static3 = Cluster::from_machines(
-        &[presets::mach2(), presets::mach2(), presets::mach2()],
-        19,
-        ClusterOptions::default(),
-    );
+    let mut static3 = Cluster::builder().replicas(&presets::mach2(), 3).seed(19).build();
     submit_crowd(&mut static3);
     let static3 = static3.run_to_completion();
 
@@ -315,14 +296,11 @@ fn autoscaler_without_load_never_provisions() {
     // threshold, no denials — the pool must stay untouched and the run
     // must terminate (the evaluation event re-arms only while work
     // remains).
-    let mut c = Cluster::new(
-        &presets::mach2(),
-        23,
-        ClusterOptions {
-            autoscaler: Some(AutoscalerPolicy::new(vec![presets::mach2()])),
-            ..Default::default()
-        },
-    );
+    let mut c = Cluster::builder()
+        .machine(&presets::mach2())
+        .seed(23)
+        .autoscaler(AutoscalerPolicy::new(vec![presets::mach2()]))
+        .build();
     c.submit(GemmSize::square(2_000), 1);
     c.submit_request_at(5.0, GemmRequest::new(1, GemmSize::square(2_000), 1));
     let report = c.run_to_completion();

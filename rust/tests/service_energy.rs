@@ -1,0 +1,250 @@
+//! Energy accounting on the serving cluster (PR 10 tentpole):
+//! conservation of joules across the per-class, per-shard and
+//! cluster-total views under crash / drain / join faults,
+//! byte-identical replay of the energy-aware objective, the routing
+//! savings contract, the Downclass soft power cap and the low-power
+//! parked meter. The scenario-level determinism companion lives in the
+//! scenario module's own tests.
+
+use poas::config::presets;
+use poas::service::scenario::digest;
+use poas::service::{
+    Cluster, ClusterOptions, DeadlinePolicy, GemmRequest, PowerOptions, QosClass, RouteObjective,
+    ServerOptions, ServiceReport,
+};
+use poas::workload::GemmSize;
+
+fn heavy() -> GemmSize {
+    GemmSize::square(16_000)
+}
+
+/// Relative-tolerance equality: joule totals reach watt x virtual-second
+/// magnitudes where a fixed epsilon would be meaninglessly tight.
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+/// The conservation identity every report must satisfy: the three
+/// meters partition the total, the per-class lanes partition the active
+/// meter, and the per-shard meters sum to the cluster figures
+/// component by component.
+fn assert_conserved(report: &ServiceReport) {
+    assert!(close(
+        report.total_joules(),
+        report.joules_active + report.joules_idle + report.joules_parked
+    ));
+    let by_class: f64 = report.joules_by_class.iter().sum();
+    assert!(
+        close(by_class, report.joules_active),
+        "class lanes {} must partition the active meter {}",
+        by_class,
+        report.joules_active
+    );
+    let active: f64 = report.shards.iter().map(|s| s.joules_active).sum();
+    let idle: f64 = report.shards.iter().map(|s| s.joules_idle).sum();
+    let parked: f64 = report.shards.iter().map(|s| s.joules_parked).sum();
+    assert!(close(active, report.joules_active));
+    assert!(close(idle, report.joules_idle));
+    assert!(close(parked, report.joules_parked));
+    let per_shard: f64 = report.shards.iter().map(|s| s.total_joules()).sum();
+    assert!(close(per_shard, report.total_joules()));
+    for s in &report.shards {
+        assert!(s.joules_active >= 0.0 && s.joules_idle >= 0.0 && s.joules_parked >= 0.0);
+    }
+}
+
+#[test]
+fn joules_are_conserved_under_crash_drain_and_join() {
+    // A three-shard cluster losing one shard to a crash (later
+    // restarted), gracefully draining another and admitting a joiner
+    // mid-run: whatever the displacement story, the energy ledger must
+    // still balance on every axis.
+    for seed in [3u64, 11, 29] {
+        let mut c = Cluster::builder()
+            .replicas(&presets::mach2(), 2)
+            .machine(&presets::gpu_node())
+            .seed(seed)
+            .build();
+        for i in 0..10u64 {
+            let class = match i % 3 {
+                0 => QosClass::Interactive,
+                1 => QosClass::Standard,
+                _ => QosClass::Batch,
+            };
+            let deadline = (class == QosClass::Interactive).then_some(1e4);
+            c.submit_qos(heavy(), 2, class, deadline);
+        }
+        c.inject_crash(0.2, 0);
+        c.inject_restart(5.0, 0);
+        c.inject_drain(0.4, 1);
+        c.inject_join(2.0, presets::cpu_node(), 91);
+        let report = c.run_to_completion();
+        assert_eq!(report.served.len(), 10, "seed {seed}");
+        assert!(report.joules_active > 0.0);
+        assert!(report.joules_idle > 0.0);
+        assert!(
+            report.joules_parked > 0.0,
+            "the drained shard must meter parked energy (seed {seed})"
+        );
+        assert_conserved(&report);
+    }
+}
+
+#[test]
+fn energy_accounting_replays_byte_identically() {
+    // Same construction, same arrivals, same fault schedule — including
+    // a brown-out cap that tightens and later lifts — must reproduce
+    // the exact report and the exact digest bytes.
+    let build = || {
+        let mut c = Cluster::builder()
+            .replicas(&presets::mach2(), 2)
+            .seed(17)
+            .objective(RouteObjective::EnergyAware { slack: 2.0 })
+            .power(PowerOptions {
+                cap_w: Some(1200.0),
+                ..Default::default()
+            })
+            .build();
+        for i in 0..8u64 {
+            c.submit_request_at(0.1 * i as f64, GemmRequest::new(i, heavy(), 2));
+        }
+        c.inject_power_cap(0.3, Some(650.0));
+        c.inject_power_cap(2.5, None);
+        c.inject_crash(0.5, 1);
+        c.inject_restart(4.0, 1);
+        c
+    };
+    let r1 = build().run_to_completion();
+    let r2 = build().run_to_completion();
+    assert_eq!(r1, r2, "energy metering must be deterministic");
+    assert_eq!(digest(&r1), digest(&r2));
+    assert!(digest(&r1).contains("\"joules\":"));
+    assert_conserved(&r1);
+}
+
+#[test]
+fn energy_aware_routing_saves_joules_without_deadline_loss() {
+    // Two same-speed machines, one drawing 6x the active watts. Under
+    // Latency the burst load-balances onto both; with SLO slack to
+    // spare the energy objective keeps work on the efficient shard and
+    // must cut total joules without giving up a single deadline.
+    let mut hot = presets::mach2();
+    for d in &mut hot.devices {
+        d.active_w *= 6.0;
+    }
+    let build = |objective| {
+        Cluster::builder()
+            .machine(&presets::mach2())
+            .machine(&hot)
+            .seed(7)
+            .objective(objective)
+            .build()
+    };
+    let submit = |c: &mut Cluster| {
+        for i in 0..6u64 {
+            c.submit_request_at(
+                0.5 * i as f64,
+                GemmRequest::new(i, heavy(), 2)
+                    .with_class(QosClass::Interactive)
+                    .with_deadline(1e4),
+            );
+        }
+    };
+    let mut lat = build(RouteObjective::Latency);
+    let mut eco = build(RouteObjective::EnergyAware { slack: 20.0 });
+    submit(&mut lat);
+    submit(&mut eco);
+    let lat = lat.run_to_completion();
+    let eco = eco.run_to_completion();
+    assert_eq!(eco.served.len(), 6);
+    assert_eq!(eco.denied, 0, "generous SLOs stay feasible under the energy pass");
+    assert!(eco.deadline_hit_rate() >= lat.deadline_hit_rate());
+    assert!(
+        eco.total_joules() < lat.total_joules(),
+        "energy routing must save joules: {} vs {}",
+        eco.total_joules(),
+        lat.total_joules()
+    );
+    assert_conserved(&lat);
+    assert_conserved(&eco);
+}
+
+#[test]
+fn power_cap_downclasses_instead_of_denying_under_soft_policy() {
+    // Two simultaneous arrivals against a 700 W cap on a cluster that
+    // idles at 122 W: the first engagement predicts 626 W, the second
+    // would cross the cap. Reject turns it away; Downclass admits it
+    // demoted to best-effort Batch — a soft cap that sheds SLO
+    // guarantees, never work.
+    let build = |policy| {
+        Cluster::builder()
+            .replicas(&presets::mach2(), 2)
+            .seed(5)
+            .options(ClusterOptions {
+                shard: ServerOptions {
+                    deadline_policy: policy,
+                    ..Default::default()
+                },
+                power: PowerOptions {
+                    cap_w: Some(700.0),
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .build()
+    };
+
+    let mut rej = build(DeadlinePolicy::Reject);
+    rej.submit(heavy(), 2);
+    rej.submit(heavy(), 2);
+    let rej = rej.run_to_completion();
+    assert_eq!(rej.denied, 1, "the hard cap turns the second arrival away");
+
+    let mut soft = build(DeadlinePolicy::Downclass);
+    soft.submit(heavy(), 2);
+    soft.submit(heavy(), 2);
+    let soft = soft.run_to_completion();
+    assert_eq!(soft.denied, 0, "the soft cap never denies");
+    let demoted: Vec<_> = soft
+        .served
+        .iter()
+        .filter(|r| r.class == QosClass::Batch)
+        .collect();
+    assert_eq!(demoted.len(), 1, "exactly the over-cap arrival is demoted");
+    assert!(!demoted[0].mode.is_unserved(), "demoted work still executes");
+    assert!(demoted[0].deadline_s.is_none());
+    assert_conserved(&soft);
+}
+
+#[test]
+fn parked_shards_meter_low_power_idle_separately() {
+    // Shard 1 idles for half a second at full idle watts, drains, and
+    // then sits parked at `parked_frac` of its idle draw until the
+    // survivor finishes the late request. The parked meter must cover
+    // exactly that retired span at exactly the discounted rate.
+    let mut c = Cluster::builder()
+        .replicas(&presets::mach2(), 2)
+        .seed(13)
+        .build();
+    c.inject_drain(0.5, 1);
+    c.submit_request_at(1.0, GemmRequest::new(0, heavy(), 2));
+    let report = c.run_to_completion();
+
+    assert_eq!(report.served.len(), 1);
+    assert_eq!(report.shards[1].joules_active, 0.0);
+    assert_eq!(report.shards[0].joules_parked, 0.0);
+    // Idle span 0.5 s recovers the shard's idle watts; the retired span
+    // runs from the drain to the end of the session.
+    let idle_w = report.shards[1].joules_idle / 0.5;
+    assert!(idle_w > 0.0);
+    let parked_s = report.makespan - 0.5;
+    assert!(parked_s > 0.0);
+    let expected = idle_w * 0.1 * parked_s;
+    assert!(
+        close(report.shards[1].joules_parked, expected),
+        "parked meter {} vs expected {}",
+        report.shards[1].joules_parked,
+        expected
+    );
+    assert_conserved(&report);
+}

@@ -27,11 +27,7 @@ fn crash_requeues_onto_surviving_shard_with_original_arrival() {
     // routing splits them — then shard 1 dies long before anything
     // heavy can finish. Every displaced request (its in-flight job and
     // its queue) must re-enter admission and complete on shard 0.
-    let mut c = Cluster::from_machines(
-        &[presets::mach1(), presets::mach1()],
-        9,
-        ClusterOptions::default(),
-    );
+    let mut c = Cluster::builder().replicas(&presets::mach1(), 2).seed(9).build();
     let slo = 1e6;
     let ids: Vec<u64> = (0..5).map(|_| c.submit(heavy(), 2)).collect();
     let bound = c.submit_qos(heavy(), 2, QosClass::Interactive, Some(slo));
@@ -74,7 +70,7 @@ fn total_outage_parks_arrivals_and_restart_readmits_once() {
     // One shard: three requests at t = 0 (one dispatches, two queue),
     // the shard crashes at 0.01, a fourth request arrives while the
     // whole cluster is down, and the shard returns at 0.5.
-    let mut c = Cluster::new(&presets::mach1(), 12, ClusterOptions::default());
+    let mut c = Cluster::builder().machine(&presets::mach1()).seed(12).build();
     for _ in 0..3 {
         c.submit(heavy(), 2);
     }
@@ -121,18 +117,18 @@ fn crash_mid_flight_disbands_batch_and_members_readmit_solo() {
     // so the in-flight `ExecMode::Batched` records must be aborted and
     // every member re-admitted *solo* on the survivor.
     let build = || {
-        let mut c = Cluster::from_machines(
-            &[presets::gpu_node(), presets::gpu_node()],
-            21,
-            ClusterOptions {
+        let mut c = Cluster::builder()
+            .replicas(&presets::gpu_node(), 2)
+            .seed(21)
+            .options(ClusterOptions {
                 batching: BatchPolicy::Windowed(BatchWindow {
                     window_s: 0.05,
                     max_members: 4,
                     ..Default::default()
                 }),
                 ..Default::default()
-            },
-        );
+            })
+            .build();
         for _ in 0..4 {
             c.submit(GemmSize::square(1024), 2);
         }
@@ -195,17 +191,17 @@ fn slowdown_drift_triggers_replan_and_gate_epoch_bump() {
     // placement quality recovers toward 1. The static ablation keeps
     // predicting with the stale model and stays near 2.5.
     let run = |dynamic: bool| {
-        let mut c = Cluster::new(
-            &presets::mach1(),
-            31,
-            ClusterOptions {
+        let mut c = Cluster::builder()
+            .machine(&presets::mach1())
+            .seed(31)
+            .options(ClusterOptions {
                 shard: ServerOptions {
                     dynamic,
                     ..Default::default()
                 },
                 ..Default::default()
-            },
-        );
+            })
+            .build();
         let epoch_before = c.admission_for(0).epoch();
         c.inject_slowdown(0.0, 0, 0.4);
         for _ in 0..8 {
@@ -250,17 +246,17 @@ fn deadline_policy_is_honored_under_drift() {
     // Downclass must demote it to best-effort Batch instead — denial
     // is impossible under Downclass, drift or not.
     let run = |policy: DeadlinePolicy| {
-        let mut c = Cluster::new(
-            &presets::mach2(),
-            41,
-            ClusterOptions {
+        let mut c = Cluster::builder()
+            .machine(&presets::mach2())
+            .seed(41)
+            .options(ClusterOptions {
                 shard: ServerOptions {
                     deadline_policy: policy,
                     ..Default::default()
                 },
                 ..Default::default()
-            },
-        );
+            })
+            .build();
         c.inject_slowdown(0.0, 0, 0.3);
         let ok = c.submit(heavy(), 2);
         let tight = c.submit_qos(heavy(), 2, QosClass::Interactive, Some(1e-3));

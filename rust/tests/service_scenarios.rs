@@ -350,14 +350,7 @@ fn serve_trace(
     seed: u64,
     menu: Vec<(GemmSize, u32)>,
 ) -> ServiceReport {
-    let mut cluster = Cluster::new(
-        &presets::mach2(),
-        0,
-        ClusterOptions {
-            shards,
-            ..Default::default()
-        },
-    );
+    let mut cluster = Cluster::builder().replicas(&presets::mach2(), shards).build();
     let trace = PoissonArrivals::new(rate_rps, menu, seed).trace(n);
     let ids = cluster.submit_trace(&trace);
     assert_eq!(ids.len(), n);
@@ -475,14 +468,7 @@ fn qos_overload_report(seed: u64) -> ServiceReport {
         ],
         seed,
     );
-    let mut cluster = Cluster::new(
-        &presets::mach2(),
-        0,
-        ClusterOptions {
-            shards: 2,
-            ..Default::default()
-        },
-    );
+    let mut cluster = Cluster::builder().replicas(&presets::mach2(), 2).build();
     cluster.submit_trace(&mix.trace(16));
     cluster.run_to_completion()
 }
@@ -565,7 +551,7 @@ fn hetero_cluster_routes_large_to_gpu_shard_and_tiny_to_cpu_shard() {
     // shard 2 = single-XPU. Submitted tiny-first onto an idle cluster,
     // so both placements are decided purely by each shard's own
     // admission predictions — no backlog involved.
-    let mut c = Cluster::from_machines(&presets::hetero_mix(), 5, ClusterOptions::default());
+    let mut c = Cluster::builder().machines(&presets::hetero_mix()).seed(5).build();
     assert_eq!(c.num_shards(), 3);
     let tiny = c.submit(GemmSize::square(320), 2);
     let big = c.submit(GemmSize::square(20_000), 2);
@@ -606,7 +592,12 @@ fn hetero_acceptance_report(gate: GatePolicy) -> ServiceReport {
         work_stealing: false,
         ..Default::default()
     };
-    let mut cluster = Cluster::from_machines(&[presets::mach2(), presets::mach1()], 3, opts);
+    let mut cluster = Cluster::builder()
+        .machine(&presets::mach2())
+        .machine(&presets::mach1())
+        .seed(3)
+        .options(opts)
+        .build();
     for _ in 0..12 {
         cluster.submit(GemmSize::square(20_000), 2);
     }
@@ -661,11 +652,11 @@ fn steal_cannot_move_an_slo_request_onto_a_shard_that_would_miss_it() {
     // cannot meet a 2 s SLO on a heavy GEMM (it needs ~27 s), so the
     // steal must be vetoed and the request served on the GPU node
     // within its deadline.
-    let mut c = Cluster::from_machines(
-        &[presets::gpu_node(), presets::cpu_node()],
-        7,
-        ClusterOptions::default(),
-    );
+    let mut c = Cluster::builder()
+        .machine(&presets::gpu_node())
+        .machine(&presets::cpu_node())
+        .seed(7)
+        .build();
     let tiny = c.submit(GemmSize::square(320), 2);
     let i1 = c.submit_qos(GemmSize::square(20_000), 2, QosClass::Interactive, Some(2.0));
     let i2 = c.submit_qos(GemmSize::square(20_000), 2, QosClass::Interactive, Some(2.0));
@@ -697,7 +688,7 @@ fn hetero_cluster_steals_are_replanned_under_the_thief() {
     // request still completes exactly once, wherever it ends up, and
     // stolen requests execute fine on machines with different device
     // counts (the thief re-gates them under its own model).
-    let mut c = Cluster::from_machines(&presets::hetero_mix(), 9, ClusterOptions::default());
+    let mut c = Cluster::builder().machines(&presets::hetero_mix()).seed(9).build();
     for i in 0..10u64 {
         if i % 3 == 0 {
             c.submit(GemmSize::square(400), 2);
@@ -773,18 +764,18 @@ fn batching_trace(n_small: usize, n_int: usize) -> Vec<Arrival> {
 }
 
 fn batching_report(batching: BatchPolicy, trace: &[Arrival]) -> ServiceReport {
-    let mut cluster = Cluster::from_machines(
-        &presets::hetero_mix(),
-        19,
-        ClusterOptions {
+    let mut cluster = Cluster::builder()
+        .machines(&presets::hetero_mix())
+        .seed(19)
+        .options(ClusterOptions {
             batching,
             // Stealing off: the comparison isolates what fusion does to
             // throughput, not what a slow node stealing a whole batch
             // does to the tail.
             work_stealing: false,
             ..Default::default()
-        },
-    );
+        })
+        .build();
     cluster.submit_trace(trace);
     cluster.run_to_completion()
 }
@@ -847,10 +838,10 @@ fn windowed_batching_beats_off_by_ten_percent_throughput_on_hetero_mix() {
 /// flush-on-deadline-pressure can save the request.
 #[test]
 fn batch_window_never_delays_an_slo_request_past_its_deadline() {
-    let mut c = Cluster::new(
-        &presets::gpu_node(),
-        11,
-        ClusterOptions {
+    let mut c = Cluster::builder()
+        .machine(&presets::gpu_node())
+        .seed(11)
+        .options(ClusterOptions {
             batching: BatchPolicy::Windowed(BatchWindow {
                 window_s: 10.0,
                 max_members: 8,
@@ -858,8 +849,8 @@ fn batch_window_never_delays_an_slo_request_past_its_deadline() {
             }),
             work_stealing: false,
             ..Default::default()
-        },
-    );
+        })
+        .build();
     // Three deadline-free smalls open a window...
     for _ in 0..3 {
         c.submit(GemmSize::square(1024), 2);

@@ -10,15 +10,14 @@
 use poas::config::presets;
 use poas::service::request::ExecMode;
 use poas::service::scenario::{digest, Scenario};
-use poas::service::{Cluster, ClusterOptions, QosClass, WallClockDriver, WallClockOptions};
+use poas::service::{Cluster, QosClass, WallClockDriver, WallClockOptions};
 use poas::workload::GemmSize;
 
 fn cluster(shards: usize, seed: u64) -> Cluster {
-    let opts = ClusterOptions {
-        shards,
-        ..Default::default()
-    };
-    Cluster::new(&presets::mach2(), seed, opts)
+    Cluster::builder()
+        .replicas(&presets::mach2(), shards)
+        .seed(seed)
+        .build()
 }
 
 /// Submit a deterministic mixed burst and return how many requests it
